@@ -1,0 +1,69 @@
+//! Quickstart: the whole `mcomm` pipeline on one page.
+//!
+//! Build a cluster of multi-core machines, construct broadcast schedules
+//! with a classic and a multi-core-aware algorithm, *prove* both correct
+//! symbolically, price them under the paper's model, time them in the
+//! continuous simulator, and finally push real bytes through the threaded
+//! cluster executor.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mcomm::collectives::TargetHeuristic;
+use mcomm::coordinator::{BroadcastAlgo, Communicator};
+use mcomm::exec::{initial_inputs, ExecParams};
+use mcomm::model::{legalize, Multicore};
+use mcomm::sched::{symexec, Chunk};
+use mcomm::sim::SimParams;
+use mcomm::topology::switched;
+use mcomm::util::table::{ftime, Table};
+
+fn main() -> mcomm::Result<()> {
+    // 8 machines x 8 cores, 2 NICs each, on a non-blocking switch.
+    let comm = Communicator::block(switched(8, 8, 2));
+    println!(
+        "cluster: {} machines, {} ranks\n",
+        comm.cluster.num_machines(),
+        comm.num_ranks()
+    );
+
+    let model = Multicore::default();
+    let flat = comm.broadcast(BroadcastAlgo::Binomial, 0);
+    // Flat algorithms oversubscribe NICs; legalize serializes them the
+    // way a real cluster would.
+    let flat = legalize(&model, &comm.cluster, &comm.placement, &flat);
+    let mc = comm.broadcast(BroadcastAlgo::McAware(TargetHeuristic::CoverageAware), 0);
+
+    let mut table = Table::new(vec![
+        "algorithm", "verified", "ext rounds", "int units", "sim (64 KiB)", "real exec",
+    ]);
+    for s in [&flat, &mc] {
+        // 1. Prove the schedule implements broadcast semantics.
+        symexec::verify(s)?;
+        // 2. Price it under the paper's model.
+        let cost = model.cost_detail(&comm.cluster, &comm.placement, s)?;
+        // 3. Time it on the simulated testbed.
+        let sim = comm.simulate(s, &SimParams::lan_cluster(64 << 10))?;
+        // 4. Move real bytes through real threads.
+        let inputs = initial_inputs(s, |_r, _c| vec![42.0f32; 1024]);
+        let rep = comm.execute(s, inputs, &ExecParams::zero())?;
+        // Every rank must now hold the root's value.
+        for r in 0..comm.num_ranks() {
+            assert_eq!(rep.outputs[r].value(Chunk(0)).unwrap()[0], 42.0);
+        }
+        table.row(vec![
+            s.algo.clone(),
+            "yes".to_string(),
+            cost.ext_rounds.to_string(),
+            cost.int_units.to_string(),
+            ftime(sim.t_end),
+            ftime(rep.wall.as_secs_f64()),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nThe mc-aware schedule exploits all three of the paper's rules: \
+         one write informs a machine (R1), local work hides inside network \
+         rounds (R2), and every NIC sends in parallel (R3)."
+    );
+    Ok(())
+}

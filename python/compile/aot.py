@@ -1,0 +1,97 @@
+"""AOT lowering driver: JAX/Pallas -> HLO text artifacts for the Rust
+runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (``make artifacts`` -> artifacts/):
+  grad.hlo.txt     (params f32[P], tokens i32[B,T+1]) -> (loss, grads)
+  apply.hlo.txt    (params f32[P], grads f32[P], lr f32[]) -> params
+  combine.hlo.txt  (stack f32[K,P]) -> f32[P]      [L1 Pallas kernel]
+  pack.hlo.txt     (x f32[R,C]) -> f32[C,R]        [L1 Pallas kernel]
+  meta.json        shapes + model config for the Rust loader
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.pack import pack
+from .model import Config, apply_fn, combine_fn, grad_fn, num_params
+
+# Fixed AOT shapes (the Rust loader reads them from meta.json).
+BATCH = 16
+WORKERS = 8
+PACK_ROWS = 64
+PACK_COLS = 4096
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(cfg: Config):
+    p = num_params(cfg)
+    f32 = jnp.float32
+    params = jax.ShapeDtypeStruct((p,), f32)
+    tokens = jax.ShapeDtypeStruct((BATCH, cfg.seq_len + 1), jnp.int32)
+    grads = jax.ShapeDtypeStruct((p,), f32)
+    lr = jax.ShapeDtypeStruct((), f32)
+    stack = jax.ShapeDtypeStruct((WORKERS, p), f32)
+    packx = jax.ShapeDtypeStruct((PACK_ROWS, PACK_COLS), f32)
+
+    return {
+        "grad": jax.jit(lambda f, t: grad_fn(cfg, f, t)).lower(params, tokens),
+        "apply": jax.jit(apply_fn).lower(params, grads, lr),
+        "combine": jax.jit(lambda s: (combine_fn(s),)).lower(stack),
+        "pack": jax.jit(lambda x: (pack(x),)).lower(packx),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = Config()
+    p = num_params(cfg)
+    print(f"model: {p} parameters, cfg={cfg}")
+
+    for name, lowered in lower_all(cfg).items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "num_params": p,
+        "batch": BATCH,
+        "seq_len": cfg.seq_len,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers,
+        "d_ff": cfg.d_ff,
+        "workers": WORKERS,
+        "pack_rows": PACK_ROWS,
+        "pack_cols": PACK_COLS,
+    }
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

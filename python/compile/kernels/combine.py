@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: k-way gradient-shard combine (element-wise sum).
+
+This is the compute hot-spot of the allreduce data path: after the
+coordinator has gathered K workers' gradient shards into one contiguous
+f32[K, N] region, `combine` reduces them to f32[N].
+
+TPU-style design (see DESIGN.md §Hardware-Adaptation): the kernel tiles
+the N axis into VMEM-friendly blocks; each grid step streams a f32[K,
+BLOCK] tile HBM→VMEM and reduces it on the VPU (the op is bandwidth-bound
+— the MXU has no work here). BLOCK is a multiple of 128 lanes; with
+K = 8 and BLOCK = 65536 the working tile is 2 MiB, comfortably inside
+VMEM with room for double-buffering by the Mosaic pipeliner. Fewer,
+bigger grid steps also amortize interpret-mode overhead on CPU (§Perf:
+6x over BLOCK=4096 at our parameter count).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that runs (and AOT-
+exports) on any backend. Real-TPU numbers are estimated in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane-aligned tile of the N axis (128-lane multiples for the TPU VPU).
+DEFAULT_BLOCK = 65536
+
+
+def _combine_kernel(x_ref, o_ref):
+    """One grid step: o[block] = sum_k x[k, block]."""
+    o_ref[...] = jnp.sum(x_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def combine(stack: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Sum K gradient shards: f32[K, N] -> f32[N].
+
+    N is padded to a multiple of `block` (the caller's N is restored on
+    return), so arbitrary parameter counts work.
+    """
+    k, n = stack.shape
+    padded = (n + block - 1) // block * block
+    if padded != n:
+        stack = jnp.pad(stack, ((0, 0), (0, padded - n)))
+    out = pl.pallas_call(
+        _combine_kernel,
+        out_shape=jax.ShapeDtypeStruct((padded,), stack.dtype),
+        grid=(padded // block,),
+        in_specs=[pl.BlockSpec((k, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(stack)
+    return out[:n]

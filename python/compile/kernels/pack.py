@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: all-to-all send-buffer pack (block transpose).
+
+The leader-aggregated all-to-all (Kumar et al. [3], experiment E5) needs
+each machine's outgoing data regrouped from (destination, payload) layout
+to (payload, destination) so that per-destination aggregates are
+contiguous before hitting the NIC. That regroup is a transpose — pure
+data movement, the memory-bound twin of `combine`.
+
+TPU-style design: square VMEM tiles (TILE×TILE, 128-lane aligned); each
+grid step (i, j) reads tile (i, j) and writes tile (j, i). interpret=True
+for CPU-PJRT executability (see combine.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 256
+
+
+def _pack_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def pack(x: jnp.ndarray, tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    """Transpose f32[R, C] -> f32[C, R] with square VMEM tiles."""
+    r, c = x.shape
+    pr = (r + tile - 1) // tile * tile
+    pc = (c + tile - 1) // tile * tile
+    if (pr, pc) != (r, c):
+        x = jnp.pad(x, ((0, pr - r), (0, pc - c)))
+    out = pl.pallas_call(
+        _pack_kernel,
+        out_shape=jax.ShapeDtypeStruct((pc, pr), x.dtype),
+        grid=(pr // tile, pc // tile),
+        in_specs=[pl.BlockSpec((tile, tile), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (j, i)),
+        interpret=True,
+    )(x)
+    return out[:c, :r]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package is
+checked against its reference with pytest + hypothesis across shapes and
+dtypes (python/tests/test_kernels.py). They are also what the L2 model
+would use if Pallas were unavailable -- keeping them importable keeps the
+whole compile path testable without Pallas.
+"""
+
+import jax.numpy as jnp
+
+
+def combine_ref(stack: jnp.ndarray) -> jnp.ndarray:
+    """Element-wise sum over the leading (worker) axis.
+
+    stack: f32[K, N] -- K workers' gradient shards of length N.
+    returns: f32[N] -- the combined (summed) gradient.
+    """
+    return jnp.sum(stack, axis=0)
+
+
+def pack_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Block transpose: the all-to-all send-buffer assembly primitive.
+
+    x: f32[R, C] laid out by (destination, payload) -- returns f32[C, R]
+    laid out by (payload, destination) so per-destination aggregates are
+    contiguous.
+    """
+    return x.T

@@ -1,0 +1,158 @@
+"""L2: byte-level transformer language model for the end-to-end driver.
+
+The whole model state is one flat f32 vector at the Rust/JAX boundary —
+exactly the object the coordinator's collectives move. Three exported
+computations (lowered by aot.py):
+
+  * ``grad_fn(params, tokens) -> (loss, grads)`` — fwd/bwd of one
+    data-parallel training step on a token batch.
+  * ``apply_fn(params, grads, lr) -> params`` — SGD update.
+  * ``combine_fn(stack) -> grads`` — K-way gradient combine, implemented
+    by the L1 Pallas kernel (kernels/combine.py) so the kernel lowers
+    into the exported HLO.
+
+Architecture (defaults): vocab 256 (raw bytes), d_model 128, 2 blocks of
+(pre-LN multi-head attention + pre-LN GELU MLP), learned positional
+embeddings, untied output head. ~0.5 M parameters — small enough to train
+a few hundred steps on CPU-PJRT in seconds, big enough that the gradient
+vector meaningfully exercises the collectives.
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.combine import combine as pallas_combine
+
+
+@dataclass(frozen=True)
+class Config:
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    seq_len: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def param_spec(cfg: Config) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat layout."""
+    spec = [
+        ("tok_embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.seq_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.ln1.g", (cfg.d_model,)),
+            (f"l{i}.ln1.b", (cfg.d_model,)),
+            (f"l{i}.attn.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.attn.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.attn.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.attn.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2.g", (cfg.d_model,)),
+            (f"l{i}.ln2.b", (cfg.d_model,)),
+            (f"l{i}.mlp.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.mlp.b1", (cfg.d_ff,)),
+            (f"l{i}.mlp.w2", (cfg.d_ff, cfg.d_model)),
+            (f"l{i}.mlp.b2", (cfg.d_model,)),
+        ]
+    spec += [
+        ("ln_f.g", (cfg.d_model,)),
+        ("ln_f.b", (cfg.d_model,)),
+        ("head", (cfg.d_model, cfg.vocab)),
+    ]
+    return spec
+
+
+def num_params(cfg: Config) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_spec(cfg))
+
+
+def unflatten(cfg: Config, flat: jnp.ndarray) -> dict:
+    out, off = {}, 0
+    for name, shape in param_spec(cfg):
+        size = 1
+        for d in shape:
+            size *= d
+        out[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+def init_params(cfg: Config, key: jax.Array) -> jnp.ndarray:
+    """Flat parameter vector, scaled-normal init."""
+    parts = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".g",)):
+            parts.append(jnp.ones(shape).reshape(-1))
+        elif name.endswith((".b", ".b1", ".b2")):
+            parts.append(jnp.zeros(shape).reshape(-1))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            w = jax.random.normal(sub, shape) * (fan_in**-0.5)
+            parts.append(w.reshape(-1))
+    return jnp.concatenate(parts).astype(jnp.float32)
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def forward(cfg: Config, flat: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Logits f32[B, T, vocab] for token ids i32[B, T]."""
+    p = unflatten(cfg, flat)
+    b, t = tokens.shape
+    x = p["tok_embed"][tokens] + p["pos_embed"][:t]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, p[f"l{i}.ln1.g"], p[f"l{i}.ln1.b"])
+        q = h @ p[f"l{i}.attn.wq"]
+        k = h @ p[f"l{i}.attn.wk"]
+        v = h @ p[f"l{i}.attn.wv"]
+        q = q.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        k = k.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        v = v.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        att = (q @ k.transpose(0, 1, 3, 2)) * (cfg.head_dim**-0.5)
+        att = jnp.where(mask, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        x = x + o @ p[f"l{i}.attn.wo"]
+        h = _layer_norm(x, p[f"l{i}.ln2.g"], p[f"l{i}.ln2.b"])
+        h = jax.nn.gelu(h @ p[f"l{i}.mlp.w1"] + p[f"l{i}.mlp.b1"])
+        x = x + h @ p[f"l{i}.mlp.w2"] + p[f"l{i}.mlp.b2"]
+    x = _layer_norm(x, p["ln_f.g"], p["ln_f.b"])
+    return x @ p["head"]
+
+
+def loss_fn(cfg: Config, flat: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-byte cross-entropy. tokens: i32[B, T+1]."""
+    x, y = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def grad_fn(cfg: Config, flat: jnp.ndarray, tokens: jnp.ndarray):
+    """(loss, grads) of one step — the exported training computation."""
+    loss, grads = jax.value_and_grad(lambda f: loss_fn(cfg, f, tokens))(flat)
+    return loss, grads
+
+
+def apply_fn(flat: jnp.ndarray, grads: jnp.ndarray, lr: jnp.ndarray) -> jnp.ndarray:
+    """Plain SGD (lr is a scalar input so one artifact serves any lr)."""
+    return flat - lr * grads
+
+
+def combine_fn(stack: jnp.ndarray) -> jnp.ndarray:
+    """K-way gradient combine via the L1 Pallas kernel."""
+    return pallas_combine(stack)

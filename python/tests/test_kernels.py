@@ -1,0 +1,103 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and values; fixed cases pin the block-boundary
+edge cases (N < block, N == block, N a non-multiple of block).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.combine import combine
+from compile.kernels.pack import pack
+from compile.kernels.ref import combine_ref, pack_ref
+
+
+def rand(shape, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- combine
+@pytest.mark.parametrize(
+    "k,n,block",
+    [
+        (1, 8, 128),
+        (2, 128, 128),
+        (4, 4096, 4096),
+        (8, 4097, 4096),       # one element over a block boundary
+        (8, 12_345, 4096),     # non-multiple
+        (3, 100, 4096),        # N < block
+        (64, 256, 128),        # many workers
+    ],
+)
+def test_combine_matches_ref(k, n, block):
+    x = rand((k, n), seed=k * 1000 + n)
+    got = combine(x, block=block)
+    want = combine_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=16),
+    n=st.integers(min_value=1, max_value=2048),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_combine_hypothesis(k, n, seed):
+    x = rand((k, n), seed=seed)
+    got = combine(x, block=256)
+    want = combine_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-5)
+
+
+def test_combine_preserves_dtype_and_shape():
+    x = rand((4, 1000), seed=7)
+    out = combine(x)
+    assert out.shape == (1000,)
+    assert out.dtype == jnp.float32
+
+
+def test_combine_zeros_and_extremes():
+    x = jnp.zeros((5, 300), dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(combine(x, block=128)), np.zeros(300))
+    x = jnp.full((2, 130), 3e37, dtype=jnp.float32)
+    got = combine(x, block=128)
+    np.testing.assert_allclose(np.asarray(got), np.full(130, 6e37), rtol=1e-6)
+
+
+# ------------------------------------------------------------------- pack
+@pytest.mark.parametrize(
+    "r,c,tile",
+    [
+        (1, 1, 256),
+        (64, 4096, 256),
+        (257, 513, 256),       # non-multiples
+        (256, 256, 256),       # exact tile
+        (300, 5, 128),         # skinny
+    ],
+)
+def test_pack_matches_ref(r, c, tile):
+    x = rand((r, c), seed=r * 7 + c)
+    got = pack(x, tile=tile)
+    want = pack_ref(x)
+    assert got.shape == (c, r)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.integers(min_value=1, max_value=300),
+    c=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pack_hypothesis(r, c, seed):
+    x = rand((r, c), seed=seed)
+    got = pack(x, tile=128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(pack_ref(x)))
+
+
+def test_pack_roundtrip():
+    x = rand((37, 91), seed=3)
+    np.testing.assert_array_equal(np.asarray(pack(pack(x, tile=64), tile=64)), np.asarray(x))

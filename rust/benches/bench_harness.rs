@@ -1,0 +1,63 @@
+//! Minimal criterion-style bench harness (the offline build has no
+//! criterion crate — see Cargo.toml). Provides warmup + timed iterations
+//! with mean/median/p95 reporting, and a `bench_table` helper for the
+//! experiment benches that regenerate the paper's tables.
+
+use std::time::{Duration, Instant};
+
+/// Measure `f` and print criterion-like statistics.
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(name: &str, mut f: F) {
+    // Warmup ~0.5 s.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_start.elapsed() < Duration::from_millis(500) {
+        f();
+        warm_iters += 1;
+    }
+    let per_iter = warm_start.elapsed() / warm_iters.max(1) as u32;
+    // Target ~2 s of measurement, 10..=1000 samples.
+    let samples = ((Duration::from_secs(2).as_nanos()
+        / per_iter.as_nanos().max(1)) as usize)
+        .clamp(10, 1000);
+
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean: f64 = times.iter().sum::<f64>() / times.len() as f64;
+    let median = times[times.len() / 2];
+    let p95 = times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)];
+    println!(
+        "{name:<44} mean {:>12} | median {:>12} | p95 {:>12} | n={}",
+        fmt(mean),
+        fmt(median),
+        fmt(p95),
+        times.len()
+    );
+}
+
+#[allow(dead_code)]
+fn fmt(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Time one invocation (for expensive whole-experiment benches).
+#[allow(dead_code)]
+pub fn bench_once<F: FnOnce() -> R, R>(name: &str, f: F) -> R {
+    let t = Instant::now();
+    let out = f();
+    println!("{name:<44} single run {:>12}", fmt(t.elapsed().as_secs_f64()));
+    out
+}

@@ -1,0 +1,24 @@
+//! Bench E1: regenerate the broadcast table (full sweep) and time the
+//! mc-aware builder + simulator on the largest configuration.
+#[path = "bench_harness.rs"]
+mod bench_harness;
+use bench_harness::{bench, bench_once};
+use mcomm::collectives::{broadcast, TargetHeuristic};
+use mcomm::sim::{simulate, SimParams};
+use mcomm::topology::{switched, Placement};
+
+fn main() {
+    bench_once("E1 full table", || {
+        mcomm::experiments::e1_broadcast::run(false).expect("e1")
+    });
+    let cl = switched(64, 8, 2);
+    let pl = Placement::block(&cl);
+    bench("mc_aware broadcast build (64x8)", || {
+        std::hint::black_box(broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit));
+    });
+    let s = broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit);
+    let params = SimParams::lan_cluster(64 << 10);
+    bench("simulate mc broadcast (64x8)", || {
+        std::hint::black_box(simulate(&cl, &pl, &s, &params).unwrap());
+    });
+}

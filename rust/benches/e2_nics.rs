@@ -1,0 +1,10 @@
+//! Bench E2: the parallel-NIC sweep (full size).
+#[path = "bench_harness.rs"]
+mod bench_harness;
+use bench_harness::bench_once;
+
+fn main() {
+    bench_once("E2 full table", || {
+        mcomm::experiments::e2_nics::run(false).expect("e2")
+    });
+}

@@ -1,0 +1,17 @@
+//! Bench E3: gather-vs-broadcast asymmetry table + gather builder timing.
+#[path = "bench_harness.rs"]
+mod bench_harness;
+use bench_harness::{bench, bench_once};
+use mcomm::collectives::gather;
+use mcomm::topology::{switched, Placement};
+
+fn main() {
+    bench_once("E3 full table", || {
+        mcomm::experiments::e3_gather::run(false).expect("e3")
+    });
+    let cl = switched(16, 16, 2);
+    let pl = Placement::block(&cl);
+    bench("mc_aware gather build (16x16)", || {
+        std::hint::black_box(gather::mc_aware(&cl, &pl, 0));
+    });
+}

@@ -1,0 +1,10 @@
+//! Bench E4: the heuristic study over community topologies (full sweep).
+#[path = "bench_harness.rs"]
+mod bench_harness;
+use bench_harness::bench_once;
+
+fn main() {
+    bench_once("E4 full table", || {
+        mcomm::experiments::e4_heuristics::run(false).expect("e4")
+    });
+}

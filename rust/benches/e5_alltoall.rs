@@ -1,0 +1,21 @@
+//! Bench E5: the Kumar-style all-to-all comparison (full sweep) plus
+//! builder timing for the biggest exchange.
+#[path = "bench_harness.rs"]
+mod bench_harness;
+use bench_harness::{bench, bench_once};
+use mcomm::collectives::alltoall;
+use mcomm::topology::{switched, Placement};
+
+fn main() {
+    bench_once("E5 full table", || {
+        mcomm::experiments::e5_alltoall::run(false).expect("e5")
+    });
+    let cl = switched(8, 8, 2);
+    let pl = Placement::block(&cl);
+    bench("leader_aggregated build (8x8)", || {
+        std::hint::black_box(alltoall::leader_aggregated(&cl, &pl, 2));
+    });
+    bench("bruck build (8x8)", || {
+        std::hint::black_box(alltoall::bruck(&pl));
+    });
+}

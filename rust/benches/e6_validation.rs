@@ -1,0 +1,10 @@
+//! Bench E6: the three-way model/simulator/executor validation (full).
+#[path = "bench_harness.rs"]
+mod bench_harness;
+use bench_harness::bench_once;
+
+fn main() {
+    bench_once("E6 full table", || {
+        mcomm::experiments::e6_validation::run(false).expect("e6")
+    });
+}

@@ -1,0 +1,20 @@
+//! Bench E7: allreduce sweep (full) plus schedule-builder timings.
+#[path = "bench_harness.rs"]
+mod bench_harness;
+use bench_harness::{bench, bench_once};
+use mcomm::collectives::allreduce;
+use mcomm::topology::{switched, Placement};
+
+fn main() {
+    bench_once("E7 full table", || {
+        mcomm::experiments::e7_allreduce::run(false).expect("e7")
+    });
+    let cl = switched(8, 8, 2);
+    let pl = Placement::block(&cl);
+    bench("ring allreduce build (8x8)", || {
+        std::hint::black_box(allreduce::ring(&pl));
+    });
+    bench("hierarchical_mc build (8x8)", || {
+        std::hint::black_box(allreduce::hierarchical_mc(&cl, &pl));
+    });
+}

@@ -1,0 +1,17 @@
+//! Bench E8: the end-to-end training comparison (quick steps — grad
+//! compute dominates; the full 200-step run lives in
+//! examples/train_e2e.rs and EXPERIMENTS.md).
+#[path = "bench_harness.rs"]
+mod bench_harness;
+use bench_harness::bench_once;
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("meta.json").exists() {
+        eprintln!("skipping e8 bench: run `make artifacts` first");
+        return;
+    }
+    bench_once("E8 train (quick: 12 steps x 2 algos)", || {
+        mcomm::experiments::e8_train::run(true, dir).expect("e8")
+    });
+}

@@ -1,0 +1,76 @@
+//! Hot-path microbenchmarks for the performance pass (§Perf in
+//! EXPERIMENTS.md): schedule building, symbolic verification, the
+//! continuous simulator's event throughput, legalization, and the real
+//! executor's per-round overhead.
+
+#[path = "bench_harness.rs"]
+mod bench_harness;
+use bench_harness::bench;
+
+use mcomm::collectives::{allreduce, alltoall, broadcast, TargetHeuristic};
+use mcomm::exec::{self, ExecParams};
+use mcomm::model::{legalize, CostModel, Multicore};
+use mcomm::sched::symexec;
+use mcomm::sim::{simulate, SimParams};
+use mcomm::topology::{switched, Placement};
+
+fn main() {
+    let cl = switched(16, 8, 2);
+    let pl = Placement::block(&cl);
+    let model = Multicore::default();
+
+    // Schedule builders.
+    bench("build: binomial broadcast (128 ranks)", || {
+        std::hint::black_box(broadcast::binomial(&pl, 0));
+    });
+    bench("build: mc-aware broadcast (128 ranks)", || {
+        std::hint::black_box(broadcast::mc_aware(
+            &cl,
+            &pl,
+            0,
+            TargetHeuristic::CoverageAware,
+        ));
+    });
+    bench("build: ring allreduce (128 ranks)", || {
+        std::hint::black_box(allreduce::ring(&pl));
+    });
+    bench("build: hierarchical-mc allreduce (128)", || {
+        std::hint::black_box(allreduce::hierarchical_mc(&cl, &pl));
+    });
+    bench("build: bruck alltoall (128 ranks)", || {
+        std::hint::black_box(alltoall::bruck(&pl));
+    });
+
+    // Verification + validation + costing.
+    let ring = allreduce::ring(&pl);
+    bench("symexec: verify ring allreduce (128)", || {
+        symexec::verify(&ring).unwrap();
+    });
+    let pairwise = alltoall::pairwise(&pl);
+    bench("legalize: pairwise alltoall (128)", || {
+        std::hint::black_box(legalize(&model, &cl, &pl, &pairwise));
+    });
+    let mc = broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit);
+    bench("model cost: mc broadcast (128)", || {
+        std::hint::black_box(model.cost(&cl, &pl, &mc).unwrap());
+    });
+
+    // Simulator throughput: transfers per second on a big schedule.
+    let params = SimParams::lan_cluster(4 << 10);
+    let total_xfers = ring.total_xfers();
+    println!("(ring schedule: {total_xfers} transfers)");
+    bench("simulate: ring allreduce (128 ranks)", || {
+        std::hint::black_box(simulate(&cl, &pl, &ring, &params).unwrap());
+    });
+
+    // Real executor: per-round overhead with zero injected cost.
+    let small = switched(2, 4, 2);
+    let small_pl = Placement::block(&small);
+    let bcast = broadcast::mc_aware(&small, &small_pl, 0, TargetHeuristic::FirstFit);
+    bench("exec: 8-rank broadcast, zero-cost", || {
+        let inputs = exec::initial_inputs(&bcast, |_r, _c| vec![0.0f32; 256]);
+        std::hint::black_box(
+            exec::run(&small, &small_pl, &bcast, inputs, &ExecParams::zero()).unwrap(),
+        );
+    });
+}

@@ -1,0 +1,485 @@
+//! Allreduce schedule builders — the data path of data-parallel training
+//! (E7, E8).
+//!
+//! * [`ring`] — bandwidth-optimal flat ring: `2(P-1)` rounds over `P`
+//!   chunks (reduce-scatter then allgather). Multi-core oblivious, but
+//!   with block placement most hops are intra-machine.
+//! * [`recursive_doubling`] — latency-optimal flat butterfly: `log2 P`
+//!   rounds exchanging full vectors (power-of-two ranks).
+//! * [`rabenseifner`] — reduce-scatter by recursive halving + allgather by
+//!   recursive doubling (power-of-two ranks): bandwidth-optimal at
+//!   `log2 P` round pairs.
+//! * [`hierarchical_mc`] — the multi-core-aware composition: local
+//!   tree-merge into the leader (R1 reads), one shared-memory publication
+//!   to `S = min(k, cores)` *plane* processes, `S` parallel inter-machine
+//!   rings on disjoint chunk ranges driving all NICs (R3), and a final
+//!   one-write-per-plane local broadcast (R1).
+
+use crate::sched::{Chunk, CollectiveOp, ContribSet, Payload, Round, Schedule, Xfer};
+use crate::topology::{Cluster, Placement};
+use crate::Rank;
+
+use super::helpers::pt2pt;
+
+/// Flat ring allreduce over `P` chunks.
+pub fn ring(placement: &Placement) -> Schedule {
+    let n = placement.num_ranks();
+    let op = CollectiveOp::Allreduce { chunks: n as u32 };
+    let mut s = Schedule::new(op, n, "ring");
+    if n == 1 {
+        return s;
+    }
+    // Contribution tracking: contrib[c][i] = set folded into rank i's copy
+    // of chunk c.
+    let mut contrib: Vec<Vec<ContribSet>> = (0..n)
+        .map(|_| (0..n).map(ContribSet::singleton).collect())
+        .collect();
+
+    // Reduce-scatter: step t, rank i sends chunk (i - t) mod P to i + 1.
+    for t in 0..n - 1 {
+        let mut xfers = Vec::new();
+        let mut updates = Vec::new();
+        for i in 0..n {
+            let c = (i + n - t) % n;
+            let dst = (i + 1) % n;
+            let payload = Payload::one(Chunk(c as u32), contrib[c][i].clone());
+            xfers.push(pt2pt(placement, i, dst, payload));
+            updates.push((c, dst, contrib[c][i].clone()));
+        }
+        s.push_round(Round { xfers });
+        for (c, dst, inc) in updates {
+            contrib[c][dst].union_with(&inc);
+        }
+    }
+
+    // Allgather: step t, rank i sends chunk (i + 1 - t) mod P to i + 1.
+    for t in 0..n - 1 {
+        let mut xfers = Vec::new();
+        let mut updates = Vec::new();
+        for i in 0..n {
+            let c = (i + 1 + n - t) % n;
+            let dst = (i + 1) % n;
+            let payload = Payload::one(Chunk(c as u32), contrib[c][i].clone());
+            xfers.push(pt2pt(placement, i, dst, payload));
+            updates.push((c, dst, contrib[c][i].clone()));
+        }
+        s.push_round(Round { xfers });
+        for (c, dst, inc) in updates {
+            contrib[c][dst] = inc; // overwrite with the full sum
+        }
+    }
+    s
+}
+
+/// Recursive doubling (requires power-of-two ranks): round `k`, rank `i`
+/// exchanges its full accumulated vector with `i ^ 2^k`.
+pub fn recursive_doubling(placement: &Placement) -> crate::Result<Schedule> {
+    let n = placement.num_ranks();
+    if !n.is_power_of_two() {
+        anyhow::bail!("recursive_doubling requires power-of-two ranks, got {n}");
+    }
+    let op = CollectiveOp::Allreduce { chunks: 1 };
+    let mut s = Schedule::new(op, n, "recursive-doubling");
+    let mut contrib: Vec<ContribSet> = (0..n).map(ContribSet::singleton).collect();
+    let mut k = 1usize;
+    while k < n {
+        let mut xfers = Vec::new();
+        let mut next = contrib.clone();
+        for i in 0..n {
+            let peer = i ^ k;
+            xfers.push(pt2pt(
+                placement,
+                i,
+                peer,
+                Payload::one(Chunk(0), contrib[i].clone()),
+            ));
+            next[peer].union_with(&contrib[i]);
+        }
+        s.push_round(Round { xfers });
+        contrib = next;
+        k <<= 1;
+    }
+    Ok(s)
+}
+
+/// Rabenseifner: reduce-scatter by recursive halving, then allgather by
+/// recursive doubling. Power-of-two ranks; `P` chunks.
+pub fn rabenseifner(placement: &Placement) -> crate::Result<Schedule> {
+    let n = placement.num_ranks();
+    if !n.is_power_of_two() {
+        anyhow::bail!("rabenseifner requires power-of-two ranks, got {n}");
+    }
+    let op = CollectiveOp::Allreduce { chunks: n as u32 };
+    let mut s = Schedule::new(op, n, "rabenseifner");
+    if n == 1 {
+        return Ok(s);
+    }
+    let kbits = n.trailing_zeros() as usize;
+    let mut contrib: Vec<Vec<ContribSet>> = (0..n)
+        .map(|_| (0..n).map(ContribSet::singleton).collect())
+        .collect();
+
+    // Reduce-scatter by halving: round k, partner differs in bit
+    // (kbits-1-k); rank i ships the half of its current chunk range whose
+    // bit matches the partner.
+    for k in 0..kbits {
+        let bit = kbits - 1 - k;
+        let dist = 1usize << bit;
+        let mut xfers = Vec::new();
+        let mut updates = Vec::new();
+        for i in 0..n {
+            let peer = i ^ dist;
+            // Chunks still in i's range: agree with i on the top k bits
+            // (bits kbits-1 .. kbits-k); ship those matching peer's bit.
+            let items: Vec<(Chunk, ContribSet)> = (0..n)
+                .filter(|&c| {
+                    let top_match =
+                        (c >> (bit + 1)) == (i >> (bit + 1));
+                    let goes_to_peer = (c >> bit) & 1 == (peer >> bit) & 1;
+                    top_match && goes_to_peer
+                })
+                .map(|c| (Chunk(c as u32), contrib[c][i].clone()))
+                .collect();
+            for (c, inc) in &items {
+                updates.push((c.0 as usize, peer, inc.clone()));
+            }
+            xfers.push(pt2pt(placement, i, peer, Payload { items }));
+        }
+        s.push_round(Round { xfers });
+        for (c, dst, inc) in updates {
+            contrib[c][dst].union_with(&inc);
+        }
+    }
+
+    // Allgather by doubling: round k, partner = i ^ 2^k; ship all fully
+    // reduced chunks currently held.
+    let full = ContribSet::full(n);
+    let mut have: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+    for k in 0..kbits {
+        let dist = 1usize << k;
+        let mut xfers = Vec::new();
+        let mut next = have.clone();
+        for i in 0..n {
+            let peer = i ^ dist;
+            let items: Vec<(Chunk, ContribSet)> = have[i]
+                .iter()
+                .map(|&c| (Chunk(c as u32), full.clone()))
+                .collect();
+            xfers.push(pt2pt(placement, i, peer, Payload { items }));
+            let mut merged = next[peer].clone();
+            merged.extend(have[i].iter().copied());
+            next[peer] = merged;
+        }
+        s.push_round(Round { xfers });
+        have = next;
+    }
+    Ok(s)
+}
+
+/// Multi-core-aware hierarchical allreduce.
+///
+/// `S = max(1, min over machines of min(degree, cores))` parallel planes;
+/// `S*M` chunks (single-machine clusters use 1 chunk). See module docs.
+pub fn hierarchical_mc(cluster: &Cluster, placement: &Placement) -> Schedule {
+    let n = placement.num_ranks();
+    let m_count = cluster.num_machines();
+
+    if m_count == 1 {
+        // Local tree-merge into the leader + one publication write.
+        let op = CollectiveOp::Allreduce { chunks: 1 };
+        let mut s = Schedule::new(op, n, "hierarchical-mc");
+        let mut contrib: Vec<ContribSet> = (0..n).map(ContribSet::singleton).collect();
+        local_tree_merge(placement, 0, &mut s, &mut contrib, &[Chunk(0)]);
+        let leader = placement.machine_leader(0);
+        let dsts: Vec<Rank> = (0..n).filter(|&r| r != leader).collect();
+        if !dsts.is_empty() {
+            s.push_round(Round {
+                xfers: vec![Xfer::local_write(
+                    leader,
+                    dsts,
+                    Payload::one(Chunk(0), ContribSet::full(n)),
+                )],
+            });
+        }
+        return s;
+    }
+
+    let slots = (0..m_count)
+        .map(|m| cluster.degree(m).min(placement.ranks_on(m).len()))
+        .min()
+        .unwrap()
+        .max(1);
+    let chunks = slots * m_count;
+    let op = CollectiveOp::Allreduce { chunks: chunks as u32 };
+    let mut s = Schedule::new(op, n, format!("hierarchical-mc/slots={slots}"));
+    let all_chunks: Vec<Chunk> = (0..chunks).map(|c| Chunk(c as u32)).collect();
+
+    // Phase 1: local tree-merge of every chunk into each machine's leader.
+    // contrib[r] tracks rank r's contribution set (same for all chunks
+    // during the local phase).
+    let mut contrib: Vec<ContribSet> = (0..n).map(ContribSet::singleton).collect();
+    for m in 0..m_count {
+        // merged per machine below (parallel rounds built jointly)
+        let _ = m;
+    }
+    local_tree_merge_all(placement, &mut s, &mut contrib, &all_chunks);
+
+    // Phase 2: leaders publish the local sums to the plane procs.
+    let mut xfers = Vec::new();
+    for m in 0..m_count {
+        let leader = placement.machine_leader(m);
+        let planes: Vec<Rank> = placement.ranks_on(m)[..slots]
+            .iter()
+            .copied()
+            .filter(|&r| r != leader)
+            .collect();
+        if planes.is_empty() {
+            continue;
+        }
+        let payload = Payload {
+            items: all_chunks
+                .iter()
+                .map(|&c| (c, contrib[leader].clone()))
+                .collect(),
+        };
+        xfers.push(Xfer::local_write(leader, planes, payload));
+    }
+    s.push_round(Round { xfers });
+
+    // Plane procs now hold the machine-local sum for every chunk.
+    let machine_sum: Vec<ContribSet> = (0..m_count)
+        .map(|m| contrib[placement.machine_leader(m)].clone())
+        .collect();
+
+    // Phase 3: S parallel rings over machines; ring j owns chunk range
+    // [j*M, (j+1)*M), participant of machine m is plane proc j.
+    // ring_contrib[j][local_chunk][machine]
+    let mut ring_contrib: Vec<Vec<Vec<ContribSet>>> = (0..slots)
+        .map(|_| {
+            (0..m_count)
+                .map(|_| machine_sum.clone())
+                .collect()
+        })
+        .collect();
+    // Reduce-scatter.
+    for t in 0..m_count - 1 {
+        let mut xfers = Vec::new();
+        let mut updates = Vec::new();
+        for j in 0..slots {
+            for m in 0..m_count {
+                let lc = (m + m_count - t) % m_count; // local chunk index
+                let global = Chunk((j * m_count + lc) as u32);
+                let src = placement.ranks_on(m)[j];
+                let dstm = (m + 1) % m_count;
+                let dst = placement.ranks_on(dstm)[j];
+                let payload = Payload::one(global, ring_contrib[j][lc][m].clone());
+                xfers.push(Xfer::external(src, dst, payload));
+                updates.push((j, lc, dstm, ring_contrib[j][lc][m].clone()));
+            }
+        }
+        s.push_round(Round { xfers });
+        for (j, lc, dstm, inc) in updates {
+            ring_contrib[j][lc][dstm].union_with(&inc);
+        }
+    }
+    // Allgather.
+    for t in 0..m_count - 1 {
+        let mut xfers = Vec::new();
+        let mut updates = Vec::new();
+        for j in 0..slots {
+            for m in 0..m_count {
+                let lc = (m + 1 + m_count - t) % m_count;
+                let global = Chunk((j * m_count + lc) as u32);
+                let src = placement.ranks_on(m)[j];
+                let dstm = (m + 1) % m_count;
+                let dst = placement.ranks_on(dstm)[j];
+                let payload = Payload::one(global, ring_contrib[j][lc][m].clone());
+                xfers.push(Xfer::external(src, dst, payload));
+                updates.push((j, lc, dstm, ring_contrib[j][lc][m].clone()));
+            }
+        }
+        s.push_round(Round { xfers });
+        for (j, lc, dstm, inc) in updates {
+            ring_contrib[j][lc][dstm] = inc;
+        }
+    }
+
+    // Phase 4: each plane proc publishes its fully-reduced range.
+    let full = ContribSet::full(n);
+    let mut xfers = Vec::new();
+    for m in 0..m_count {
+        for j in 0..slots {
+            let src = placement.ranks_on(m)[j];
+            let dsts: Vec<Rank> = placement
+                .ranks_on(m)
+                .iter()
+                .copied()
+                .filter(|&r| r != src)
+                .collect();
+            if dsts.is_empty() {
+                continue;
+            }
+            let payload = Payload {
+                items: (0..m_count)
+                    .map(|lc| (Chunk((j * m_count + lc) as u32), full.clone()))
+                    .collect(),
+            };
+            xfers.push(Xfer::local_write(src, dsts, payload));
+        }
+    }
+    s.push_round(Round { xfers });
+    s
+}
+
+/// Pair-merge every machine's ranks into its leader with local reads (all
+/// machines progress in the same rounds). `contrib[r]` is updated.
+fn local_tree_merge_all(
+    placement: &Placement,
+    s: &mut Schedule,
+    contrib: &mut [ContribSet],
+    chunks: &[Chunk],
+) {
+    let m_count = {
+        // number of machines = max machine id + 1
+        (0..placement.num_ranks())
+            .map(|r| placement.machine_of(r))
+            .max()
+            .unwrap_or(0)
+            + 1
+    };
+    let mut active: Vec<Vec<Rank>> =
+        (0..m_count).map(|m| placement.ranks_on(m).to_vec()).collect();
+    loop {
+        let mut xfers = Vec::new();
+        for act in active.iter_mut() {
+            if act.len() <= 1 {
+                continue;
+            }
+            let half = act.len().div_ceil(2);
+            let mut next = Vec::with_capacity(half);
+            for i in 0..half {
+                next.push(act[i]);
+                if i + half < act.len() {
+                    let victim = act[i + half];
+                    let payload = Payload {
+                        items: chunks
+                            .iter()
+                            .map(|&c| (c, contrib[victim].clone()))
+                            .collect(),
+                    };
+                    xfers.push(Xfer::local_read(victim, act[i], payload));
+                    let inc = contrib[victim].clone();
+                    contrib[act[i]].union_with(&inc);
+                }
+            }
+            *act = next;
+        }
+        if xfers.is_empty() {
+            break;
+        }
+        s.push_round(Round { xfers });
+    }
+}
+
+/// Single-machine variant of [`local_tree_merge_all`].
+fn local_tree_merge(
+    placement: &Placement,
+    _machine: usize,
+    s: &mut Schedule,
+    contrib: &mut [ContribSet],
+    chunks: &[Chunk],
+) {
+    local_tree_merge_all(placement, s, contrib, chunks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CostModel, Multicore};
+    use crate::sched::symexec;
+    use crate::topology::{switched, Placement};
+
+    #[test]
+    fn ring_verifies_various_sizes() {
+        for (m, c) in [(1usize, 2usize), (2, 2), (2, 3), (4, 2), (1, 7)] {
+            let cl = switched(m, c, 1);
+            let p = Placement::block(&cl);
+            let s = ring(&p);
+            symexec::verify(&s).unwrap();
+            let n = m * c;
+            assert_eq!(s.num_rounds(), 2 * (n - 1), "P={n}");
+        }
+    }
+
+    #[test]
+    fn ring_is_nic_legal_with_block_placement() {
+        // Ring along block placement: one boundary send per machine per
+        // round — legal even with a single NIC.
+        let cl = switched(4, 4, 1);
+        let p = Placement::block(&cl);
+        let s = ring(&p);
+        Multicore::default().validate(&cl, &p, &s).unwrap();
+    }
+
+    #[test]
+    fn recursive_doubling_verifies() {
+        let cl = switched(2, 4, 4);
+        let p = Placement::block(&cl);
+        let s = recursive_doubling(&p).unwrap();
+        symexec::verify(&s).unwrap();
+        assert_eq!(s.num_rounds(), 3);
+        assert!(recursive_doubling(&Placement::block(&switched(1, 6, 1))).is_err());
+    }
+
+    #[test]
+    fn rabenseifner_verifies() {
+        for (m, c) in [(2usize, 4usize), (4, 2), (1, 8), (2, 2)] {
+            let cl = switched(m, c, 2);
+            let p = Placement::block(&cl);
+            let s = rabenseifner(&p).unwrap();
+            symexec::verify(&s).unwrap();
+            let n = m * c;
+            assert_eq!(s.num_rounds() as u32, 2 * n.trailing_zeros(), "P={n}");
+        }
+        assert!(rabenseifner(&Placement::block(&switched(1, 6, 1))).is_err());
+    }
+
+    #[test]
+    fn hierarchical_mc_verifies() {
+        for (m, c, k) in [(2usize, 4usize, 2usize), (4, 4, 2), (3, 2, 1), (4, 8, 4)] {
+            let cl = switched(m, c, k);
+            let p = Placement::block(&cl);
+            let s = hierarchical_mc(&cl, &p);
+            symexec::verify(&s).unwrap();
+            Multicore::default().validate(&cl, &p, &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn hierarchical_mc_single_machine() {
+        let cl = switched(1, 8, 1);
+        let p = Placement::block(&cl);
+        let s = hierarchical_mc(&cl, &p);
+        symexec::verify(&s).unwrap();
+        assert_eq!(s.external_messages(), 0);
+    }
+
+    #[test]
+    fn hierarchical_mc_fewer_ext_rounds_than_flat_ring() {
+        let cl = switched(4, 8, 4);
+        let p = Placement::block(&cl);
+        let model = Multicore::default();
+        let h = hierarchical_mc(&cl, &p);
+        let r = ring(&p);
+        let ch = model.cost_detail(&cl, &p, &h).unwrap();
+        let cr = model.cost_detail(&cl, &p, &r).unwrap();
+        // Flat ring: 2(P-1) = 62 rounds, every round crossing machine
+        // boundaries. Hierarchical: 2(M-1) = 6 external rounds.
+        assert!(
+            ch.ext_rounds < cr.ext_rounds / 4,
+            "hier {:?} vs ring {:?}",
+            ch,
+            cr
+        );
+    }
+}

@@ -1,0 +1,292 @@
+//! All-to-all (personalized exchange) schedule builders.
+//!
+//! The paper cites Kumar et al. [3], whose shared-memory-aggregated
+//! all-to-all beat classic algorithms by ≈55 % on multi-core clusters.
+//! Experiment E5 reproduces that comparison:
+//!
+//! * [`pairwise`] — the classic ring-offset exchange: `P-1` rounds, round
+//!   `t` has rank `i` send its block to `(i+t) mod P`. Multi-core
+//!   oblivious; on a cluster it floods the NICs with `c²` per-machine-pair
+//!   messages.
+//! * [`bruck`] — the log-round store-and-forward algorithm: `ceil(log2 P)`
+//!   rounds, each rank ships all blocks whose relative destination offset
+//!   has bit `k` set to rank `i + 2^k`. Fewer, bigger messages; still
+//!   multi-core oblivious.
+//! * [`leader_aggregated`] — Kumar-style multi-core-aware exchange:
+//!   blocks are published in shared memory (R1), `slots ≤ min(k, cores)`
+//!   processes per machine drive machine-level pairwise exchanges of
+//!   *aggregated* buffers in parallel (R3), and arriving aggregates are
+//!   published locally with one write. `slots = 1` degenerates to the
+//!   hierarchical leader-only scheme; `slots = k` is the full algorithm.
+
+use crate::sched::{Chunk, CollectiveOp, ContribSet, Payload, Round, Schedule, Xfer};
+use crate::topology::{Cluster, Placement};
+use crate::Rank;
+
+/// Chunk id of the block rank `s` sends to rank `d`.
+#[inline]
+pub fn block(s: Rank, d: Rank, n: usize) -> Chunk {
+    Chunk((s * n + d) as u32)
+}
+
+fn payload_blocks<I: IntoIterator<Item = (Rank, Rank)>>(pairs: I, n: usize) -> Payload {
+    Payload {
+        items: pairs
+            .into_iter()
+            .map(|(s, d)| (block(s, d, n), ContribSet::singleton(s)))
+            .collect(),
+    }
+}
+
+/// Classic pairwise (ring-offset) exchange: round `t ∈ 1..P`, rank `i`
+/// sends block `(i, i+t)` to `(i+t) mod P` and receives from `(i-t) mod P`.
+pub fn pairwise(placement: &Placement) -> Schedule {
+    let n = placement.num_ranks();
+    let mut s = Schedule::new(CollectiveOp::AllToAll, n, "pairwise");
+    for t in 1..n {
+        let mut xfers = Vec::new();
+        for i in 0..n {
+            let d = (i + t) % n;
+            xfers.push(super::helpers::pt2pt(
+                placement,
+                i,
+                d,
+                payload_blocks([(i, d)], n),
+            ));
+        }
+        s.push_round(Round { xfers });
+    }
+    s
+}
+
+/// Bruck's algorithm: `ceil(log2 P)` store-and-forward rounds.
+///
+/// Each block `(s, d)` sits at holder `h`; its remaining offset is
+/// `(d - h) mod P`. In round `k`, every rank forwards all blocks whose
+/// offset has bit `k` set to `(h + 2^k) mod P`.
+pub fn bruck(placement: &Placement) -> Schedule {
+    let n = placement.num_ranks();
+    let mut s = Schedule::new(CollectiveOp::AllToAll, n, "bruck");
+    // holder of each block (s, d), indexed s * n + d.
+    let mut holder: Vec<Rank> = (0..n * n).map(|b| b / n).collect();
+    let rounds = super::helpers::ceil_log2(n);
+    for k in 0..rounds {
+        let stride = 1usize << k;
+        let mut outgoing: Vec<Vec<(Rank, Rank)>> = vec![Vec::new(); n];
+        for sblk in 0..n {
+            for dblk in 0..n {
+                let h = holder[sblk * n + dblk];
+                let off = (dblk + n - h) % n;
+                if off & stride != 0 {
+                    outgoing[h].push((sblk, dblk));
+                }
+            }
+        }
+        let mut xfers = Vec::new();
+        for h in 0..n {
+            if outgoing[h].is_empty() {
+                continue;
+            }
+            let dst = (h + stride) % n;
+            xfers.push(super::helpers::pt2pt(
+                placement,
+                h,
+                dst,
+                payload_blocks(outgoing[h].iter().copied(), n),
+            ));
+            for &(sblk, dblk) in &outgoing[h] {
+                holder[sblk * n + dblk] = dst;
+            }
+        }
+        s.push_round(Round { xfers });
+    }
+    s
+}
+
+/// Kumar-style shared-memory-aggregated all-to-all.
+///
+/// Phase 1 (1 internal round): every process publishes its `P` blocks
+/// with one local write — after this, every process on a machine can
+/// forward any local block (R1).
+///
+/// Phase 2 (`ceil((M-1)/slots)` external rounds): machine-level pairwise
+/// exchange. In round `r`, machine `m` sends its aggregate for machine
+/// `(m + t) mod M` (for the `slots` offsets `t` of that round) and
+/// symmetrically receives; exchange `t` is driven by slot process
+/// `t mod slots` on both sides, so sends and receives land on distinct
+/// processes and at most `slots ≤ k` NICs are busy per direction (R3).
+///
+/// Phase 3 (1 internal round per receive round, piggybacked): the landing
+/// process publishes the received aggregate with one local write.
+pub fn leader_aggregated(
+    cluster: &Cluster,
+    placement: &Placement,
+    slots: usize,
+) -> Schedule {
+    let n = placement.num_ranks();
+    let m_count = cluster.num_machines();
+    let mut s = Schedule::new(
+        CollectiveOp::AllToAll,
+        n,
+        format!("leader-aggregated/slots={slots}"),
+    );
+
+    // Phase 1: publish local blocks (skip blocks whose destination is the
+    // same rank — those are already in place).
+    let mut xfers = Vec::new();
+    for m in 0..m_count {
+        let locals = placement.ranks_on(m);
+        for &r in locals {
+            let dsts: Vec<Rank> = locals.iter().copied().filter(|&x| x != r).collect();
+            if dsts.is_empty() {
+                continue;
+            }
+            xfers.push(Xfer::local_write(
+                r,
+                dsts,
+                payload_blocks((0..n).map(|d| (r, d)), n),
+            ));
+        }
+    }
+    s.push_round(Round { xfers });
+
+    // Phase 2 + 3: machine-pairwise exchange of aggregates.
+    if m_count > 1 {
+        let offsets: Vec<usize> = (1..m_count).collect();
+        for batch in offsets.chunks(slots.max(1)) {
+            let mut ext = Vec::new();
+            let mut publishes: Vec<(Rank, usize, Payload)> = Vec::new();
+            for (slot, &t) in batch.iter().enumerate() {
+                for m in 0..m_count {
+                    let target = (m + t) % m_count;
+                    if target == m {
+                        continue;
+                    }
+                    let senders = placement.ranks_on(m);
+                    let receivers = placement.ranks_on(target);
+                    let src = senders[slot % senders.len()];
+                    let dst = receivers[slot % receivers.len()];
+                    // Aggregate: every block from a rank on m to a rank on
+                    // target.
+                    let pairs: Vec<(Rank, Rank)> = senders
+                        .iter()
+                        .flat_map(|&a| receivers.iter().map(move |&b| (a, b)))
+                        .collect();
+                    let payload = payload_blocks(pairs, n);
+                    ext.push(Xfer::external(src, dst, payload.clone()));
+                    publishes.push((dst, target, payload));
+                }
+            }
+            s.push_round(Round { xfers: ext });
+            // Publish arrivals (one write per landing proc).
+            let mut pub_xfers = Vec::new();
+            for (dst, target, payload) in publishes {
+                let dsts: Vec<Rank> = placement
+                    .ranks_on(target)
+                    .iter()
+                    .copied()
+                    .filter(|&x| x != dst)
+                    .collect();
+                if !dsts.is_empty() {
+                    pub_xfers.push(Xfer::local_write(dst, dsts, payload));
+                }
+            }
+            s.push_round(Round { xfers: pub_xfers });
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CostModel, Multicore};
+    use crate::sched::symexec;
+    use crate::topology::{switched, Placement};
+
+    #[test]
+    fn pairwise_verifies() {
+        let c = switched(2, 3, 1);
+        let p = Placement::block(&c);
+        let s = pairwise(&p);
+        symexec::verify(&s).unwrap();
+        assert_eq!(s.num_rounds(), 5);
+    }
+
+    #[test]
+    fn bruck_verifies_pow2_and_non_pow2() {
+        for (machines, cores) in [(2usize, 4usize), (1, 6), (3, 2)] {
+            let c = switched(machines, cores, 2);
+            let p = Placement::block(&c);
+            let s = bruck(&p);
+            symexec::verify(&s).unwrap();
+            let n = machines * cores;
+            assert_eq!(
+                s.num_rounds() as u32,
+                super::super::helpers::ceil_log2(n),
+                "P={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn leader_aggregated_verifies_and_is_legal() {
+        let c = switched(4, 4, 2);
+        let p = Placement::block(&c);
+        for slots in [1, 2] {
+            let s = leader_aggregated(&c, &p, slots);
+            symexec::verify(&s).unwrap();
+            Multicore::default().validate(&c, &p, &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn leader_aggregated_single_machine() {
+        let c = switched(1, 4, 1);
+        let p = Placement::block(&c);
+        let s = leader_aggregated(&c, &p, 1);
+        symexec::verify(&s).unwrap();
+        assert_eq!(s.external_messages(), 0);
+    }
+
+    #[test]
+    fn leader_aggregated_fewer_messages_than_pairwise() {
+        let c = switched(4, 4, 2);
+        let p = Placement::block(&c);
+        let model = Multicore::default();
+        let lead = leader_aggregated(&c, &p, 2);
+        let pw = pairwise(&p);
+        let pw_legal = crate::model::legalize(&model, &c, &p, &pw);
+        symexec::verify(&pw_legal).unwrap();
+        let cl = model.cost_detail(&c, &p, &lead).unwrap();
+        let cp = model.cost_detail(&c, &p, &pw_legal).unwrap();
+        assert!(
+            cl.ext_messages < cp.ext_messages,
+            "aggregated {} vs pairwise {}",
+            cl.ext_messages,
+            cp.ext_messages
+        );
+        assert!(
+            cl.ext_rounds < cp.ext_rounds,
+            "aggregated rounds {} vs pairwise rounds {}",
+            cl.ext_rounds,
+            cp.ext_rounds
+        );
+    }
+
+    #[test]
+    fn slots_scale_external_rounds() {
+        let c = switched(9, 4, 4);
+        let p = Placement::block(&c);
+        let s1 = leader_aggregated(&c, &p, 1);
+        let s4 = leader_aggregated(&c, &p, 4);
+        symexec::verify(&s1).unwrap();
+        symexec::verify(&s4).unwrap();
+        let m = Multicore::default();
+        let c1 = m.cost_detail(&c, &p, &s1).unwrap();
+        let c4 = m.cost_detail(&c, &p, &s4).unwrap();
+        assert_eq!(c1.ext_rounds, 8); // M-1
+        assert_eq!(c4.ext_rounds, 2); // ceil(8/4)
+        assert!(c4.total(0.1) < c1.total(0.1));
+    }
+}

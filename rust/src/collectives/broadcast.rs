@@ -1,0 +1,503 @@
+//! Broadcast schedule builders.
+//!
+//! * [`flat_tree`] — root sends to every other rank point-to-point, one
+//!   message per round (the naive baseline).
+//! * [`binomial`] — classic binomial tree over *ranks*, multi-core
+//!   oblivious: `ceil(log2 P)` rounds of doubling. Optimal in the
+//!   telephone model, far from optimal on multi-core clusters (E1).
+//! * [`hierarchical`] — the "previous approaches" scheme the paper cites:
+//!   machines are single nodes; binomial tree over machine leaders using
+//!   one NIC each, then one shared-memory write per machine.
+//! * [`mc_aware`] — designed for the paper's model: every informed
+//!   *process* helps, machines drive all their NICs in parallel (R3), and
+//!   each machine is covered by a single constant-time write (R1). On a
+//!   switch of `M` machines with `k ≤ cores` NICs this disseminates to
+//!   machines roughly as `(k+1)^t` instead of `2^t`.
+//!
+//! [`mc_aware`] takes a [`TargetHeuristic`] deciding *which* uninformed
+//! machine each available sender targets — this powers the paper's
+//! heuristic discussion (E4): "fastest node first" is good on
+//! heterogeneous clusters; "highest degree first" is poor on non-sparse
+//! multi-core graphs because high-degree neighbors have overlapping
+//! neighborhoods; a coverage-aware greedy fixes that.
+
+use crate::sched::{CollectiveOp, Payload, Round, Schedule, Xfer};
+use crate::topology::{Cluster, Placement};
+use crate::Rank;
+
+use super::helpers::{ceil_log2, pt2pt, Rooted};
+
+/// Target-selection policy for [`mc_aware`] dissemination on graphs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TargetHeuristic {
+    /// Lowest machine id first (arbitrary but deterministic).
+    FirstFit,
+    /// Prefer targets on faster machines (classic heterogeneous-cluster
+    /// heuristic; the paper calls it "fastest node first").
+    FastestNodeFirst,
+    /// Prefer targets with the highest degree — the heuristic the paper
+    /// argues is *poor* on non-sparse multi-core clusters.
+    HighestDegreeFirst,
+    /// Prefer targets that add the most not-yet-covered neighbors
+    /// (greedy set-cover flavor; the paper's suggested fix).
+    CoverageAware,
+}
+
+impl TargetHeuristic {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TargetHeuristic::FirstFit => "first-fit",
+            TargetHeuristic::FastestNodeFirst => "fastest-node-first",
+            TargetHeuristic::HighestDegreeFirst => "highest-degree-first",
+            TargetHeuristic::CoverageAware => "coverage-aware",
+        }
+    }
+}
+
+/// Flat tree: root sends `P-1` point-to-point messages, one per round.
+pub fn flat_tree(placement: &Placement, root: Rank) -> Schedule {
+    let n = placement.num_ranks();
+    let mut s = Schedule::new(CollectiveOp::Broadcast { root }, n, "flat-tree");
+    for r in 0..n {
+        if r == root {
+            continue;
+        }
+        s.push_round(Round {
+            xfers: vec![pt2pt(placement, root, r, Payload::single(0, root))],
+        });
+    }
+    s
+}
+
+/// Classic binomial tree over ranks (multi-core oblivious).
+///
+/// Round `k`: every informed virtual rank `v < 2^k` sends to `v + 2^k`.
+pub fn binomial(placement: &Placement, root: Rank) -> Schedule {
+    let n = placement.num_ranks();
+    let map = Rooted::new(root, n);
+    let mut s = Schedule::new(CollectiveOp::Broadcast { root }, n, "binomial");
+    for k in 0..ceil_log2(n) {
+        let stride = 1usize << k;
+        let mut xfers = Vec::new();
+        for v in 0..stride.min(n) {
+            let peer = v + stride;
+            if peer < n {
+                xfers.push(pt2pt(
+                    placement,
+                    map.real(v),
+                    map.real(peer),
+                    Payload::single(0, root),
+                ));
+            }
+        }
+        s.push_round(Round { xfers });
+    }
+    s
+}
+
+/// Hierarchical broadcast ("machines as nodes"): binomial over machine
+/// leaders, then one local write per machine.
+///
+/// On graph topologies the leader tree must follow machine edges; we relax
+/// to shortest-path-forwarding binomial only on switches and fall back to
+/// BFS level-order flooding on graphs (each informed machine informs one
+/// neighbor per round — still "one node, one NIC").
+pub fn hierarchical(cluster: &Cluster, placement: &Placement, root: Rank) -> Schedule {
+    let n = placement.num_ranks();
+    let mut s = Schedule::new(CollectiveOp::Broadcast { root }, n, "hierarchical");
+    let root_m = placement.machine_of(root);
+    let m_count = cluster.num_machines();
+    let payload = || Payload::single(0, root);
+
+    // Representative (entry point) per machine: the leader, except the
+    // root machine where it is the root itself.
+    let rep = |m: usize| -> Rank {
+        if m == root_m {
+            root
+        } else {
+            placement.machine_leader(m)
+        }
+    };
+
+    match &cluster.interconnect {
+        crate::topology::Interconnect::FullSwitch => {
+            // Binomial over machines, virtual machine order rotated to root.
+            let map = Rooted::new(root_m, m_count);
+            for k in 0..ceil_log2(m_count) {
+                let stride = 1usize << k;
+                let mut xfers = Vec::new();
+                for v in 0..stride.min(m_count) {
+                    let peer = v + stride;
+                    if peer < m_count {
+                        xfers.push(Xfer::external(
+                            rep(map.real(v)),
+                            rep(map.real(peer)),
+                            payload(),
+                        ));
+                    }
+                }
+                s.push_round(Round { xfers });
+            }
+        }
+        crate::topology::Interconnect::Graph { .. } => {
+            // Level-order flooding: each informed machine informs one
+            // uninformed neighbor per round (single NIC — machines are
+            // opaque nodes here).
+            let mut informed = vec![false; m_count];
+            informed[root_m] = true;
+            loop {
+                let mut xfers = Vec::new();
+                let mut newly = Vec::new();
+                let mut used_target = vec![false; m_count];
+                for m in 0..m_count {
+                    if !informed[m] {
+                        continue;
+                    }
+                    if let Some(t) = cluster
+                        .neighbors(m)
+                        .into_iter()
+                        .find(|&t| !informed[t] && !used_target[t])
+                    {
+                        used_target[t] = true;
+                        newly.push(t);
+                        xfers.push(Xfer::external(rep(m), rep(t), payload()));
+                    }
+                }
+                if xfers.is_empty() {
+                    break;
+                }
+                s.push_round(Round { xfers });
+                for t in newly {
+                    informed[t] = true;
+                }
+            }
+        }
+    }
+
+    // One constant-time write per machine (R1) — all in one internal round.
+    let mut xfers = Vec::new();
+    for m in 0..m_count {
+        let r = rep(m);
+        let dsts: Vec<Rank> = placement
+            .ranks_on(m)
+            .iter()
+            .copied()
+            .filter(|&x| x != r)
+            .collect();
+        if !dsts.is_empty() {
+            xfers.push(Xfer::local_write(r, dsts, payload()));
+        }
+    }
+    s.push_round(Round { xfers });
+    s
+}
+
+/// Multi-core-aware broadcast (the paper's algorithm).
+///
+/// Per external round, every process that holds the value and whose
+/// machine has a spare NIC sends to an uninformed machine chosen by
+/// `heuristic`. As soon as a machine receives the value, the receiving
+/// process publishes it with one local write (piggybacked into the next
+/// round — local work rides free, R2), after which *all* its processes
+/// are senders.
+pub fn mc_aware(
+    cluster: &Cluster,
+    placement: &Placement,
+    root: Rank,
+    heuristic: TargetHeuristic,
+) -> Schedule {
+    let n = placement.num_ranks();
+    let m_count = cluster.num_machines();
+    let mut s = Schedule::new(
+        CollectiveOp::Broadcast { root },
+        n,
+        format!("mc-aware/{}", heuristic.name()),
+    );
+    let payload = || Payload::single(0, root);
+
+    // informed_procs[m]: processes of machine m currently holding the
+    // value. A machine is "covered" once every proc holds it.
+    let mut holders: Vec<Vec<Rank>> = vec![Vec::new(); m_count];
+    let root_m = placement.machine_of(root);
+    holders[root_m].push(root);
+    let mut touched = vec![false; m_count]; // some proc holds the value
+    touched[root_m] = true;
+    let mut written = vec![false; m_count]; // local write already issued
+    // Entry proc for machines that just received (they publish next round).
+    let mut pending_write: Vec<(Rank, usize)> = vec![(root, root_m)];
+
+    loop {
+        let mut xfers: Vec<Xfer> = Vec::new();
+
+        // Publish on machines that received last round (R1: one write).
+        for &(entry, m) in &pending_write {
+            let dsts: Vec<Rank> = placement
+                .ranks_on(m)
+                .iter()
+                .copied()
+                .filter(|&x| x != entry)
+                .collect();
+            if !dsts.is_empty() {
+                xfers.push(Xfer::local_write(entry, dsts, payload()));
+            }
+            written[m] = true;
+        }
+        let published: Vec<(Rank, usize)> = pending_write.drain(..).collect();
+
+        // External sends: every holder may send, machine NIC budget k.
+        let mut newly: Vec<(Rank, usize)> = Vec::new(); // (entry proc, machine)
+        let mut recv_budget: Vec<usize> =
+            (0..m_count).map(|m| cluster.degree(m)).collect();
+        let mut targeted = vec![false; m_count];
+        for m in 0..m_count {
+            if !touched[m] {
+                continue;
+            }
+            let budget = cluster.degree(m).min(holders[m].len());
+            let mut senders = holders[m].clone();
+            senders.truncate(budget);
+            for src in senders {
+                // Candidate target machines: uninformed, reachable,
+                // not already targeted this round, with receive budget.
+                let mut cands: Vec<usize> = cluster
+                    .neighbors(m)
+                    .into_iter()
+                    .filter(|&t| !touched[t] && !targeted[t] && recv_budget[t] > 0)
+                    .collect();
+                if cands.is_empty() {
+                    continue;
+                }
+                rank_targets(cluster, &touched, &targeted, &mut cands, heuristic);
+                let t = cands[0];
+                targeted[t] = true;
+                recv_budget[t] -= 1;
+                // Receive at the target's leader proc.
+                let dst = placement.machine_leader(t);
+                xfers.push(Xfer::external(src, dst, payload()));
+                newly.push((dst, t));
+            }
+        }
+
+        if xfers.is_empty() {
+            break;
+        }
+        s.push_round(Round { xfers });
+
+        // State updates after the round completes.
+        for (entry, m) in published {
+            holders[m] = placement.ranks_on(m).to_vec();
+            let _ = entry;
+        }
+        for &(entry, m) in &newly {
+            touched[m] = true;
+            holders[m].push(entry);
+        }
+        pending_write.extend(
+            newly
+                .into_iter()
+                .filter(|&(_, m)| placement.ranks_on(m).len() > 1),
+        );
+    }
+
+    // Flush any outstanding local writes (last machines to receive).
+    let mut xfers = Vec::new();
+    for (entry, m) in pending_write {
+        let dsts: Vec<Rank> = placement
+            .ranks_on(m)
+            .iter()
+            .copied()
+            .filter(|&x| x != entry)
+            .collect();
+        if !dsts.is_empty() {
+            xfers.push(Xfer::local_write(entry, dsts, payload()));
+        }
+    }
+    s.push_round(Round { xfers });
+
+    // Machines never written (single-proc machines covered by externals,
+    // multi-proc machines whose write flushed above) need no more work.
+    s
+}
+
+/// Order candidate target machines per the heuristic (best first).
+fn rank_targets(
+    cluster: &Cluster,
+    touched: &[bool],
+    targeted: &[bool],
+    cands: &mut [usize],
+    heuristic: TargetHeuristic,
+) {
+    match heuristic {
+        TargetHeuristic::FirstFit => cands.sort_unstable(),
+        TargetHeuristic::FastestNodeFirst => {
+            cands.sort_by(|&a, &b| {
+                cluster.machines[b]
+                    .speed
+                    .partial_cmp(&cluster.machines[a].speed)
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+        }
+        TargetHeuristic::HighestDegreeFirst => {
+            // The paper's "degree" heuristic ranks by graph connectivity
+            // (neighbor count) — the naive reach-first policy it argues
+            // is poor when neighborhoods overlap.
+            cands.sort_by(|&a, &b| {
+                cluster
+                    .neighbors(b)
+                    .len()
+                    .cmp(&cluster.neighbors(a).len())
+                    .then(a.cmp(&b))
+            });
+        }
+        TargetHeuristic::CoverageAware => {
+            // Greedy: most *new* frontier — uninformed, untargeted
+            // neighbors the candidate would bring into reach.
+            let fresh = |m: usize| -> usize {
+                cluster
+                    .neighbors(m)
+                    .into_iter()
+                    .filter(|&t| !touched[t] && !targeted[t])
+                    .count()
+            };
+            cands.sort_by(|&a, &b| fresh(b).cmp(&fresh(a)).then(a.cmp(&b)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CostModel, Multicore, Telephone};
+    use crate::sched::symexec;
+    use crate::topology::{gnp, switched, Placement};
+
+    #[test]
+    fn flat_tree_verifies_and_counts() {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let s = flat_tree(&p, 1);
+        symexec::verify(&s).unwrap();
+        assert_eq!(s.num_rounds(), 3);
+        Multicore::default().validate(&c, &p, &s).unwrap();
+    }
+
+    #[test]
+    fn binomial_verifies_all_roots() {
+        let c = switched(2, 4, 1);
+        let p = Placement::block(&c);
+        for root in 0..8 {
+            let s = binomial(&p, root);
+            symexec::verify(&s).unwrap();
+            assert_eq!(s.num_rounds(), 3); // ceil(log2 8)
+            Telephone.validate(&c, &p, &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn binomial_non_power_of_two() {
+        let c = switched(1, 7, 1);
+        let p = Placement::block(&c);
+        let s = binomial(&p, 3);
+        symexec::verify(&s).unwrap();
+        assert_eq!(s.num_rounds(), 3); // ceil(log2 7)
+    }
+
+    #[test]
+    fn hierarchical_verifies_switch_and_graph() {
+        let c = switched(4, 4, 1);
+        let p = Placement::block(&c);
+        let s = hierarchical(&c, &p, 5);
+        symexec::verify(&s).unwrap();
+        Multicore::default().validate(&c, &p, &s).unwrap();
+        // ceil(log2 4) = 2 external rounds + 1 write round.
+        assert_eq!(s.external_rounds(), 2);
+        assert_eq!(s.internal_rounds(), 1);
+
+        let g = gnp(6, 0.5, 2, 1, 11);
+        let pg = Placement::block(&g);
+        let sg = hierarchical(&g, &pg, 0);
+        symexec::verify(&sg).unwrap();
+        Multicore::default().validate(&g, &pg, &sg).unwrap();
+    }
+
+    #[test]
+    fn mc_aware_verifies_and_beats_binomial_in_ext_rounds() {
+        let c = switched(16, 8, 4);
+        let p = Placement::block(&c);
+        let model = Multicore::default();
+
+        let mc = mc_aware(&c, &p, 0, TargetHeuristic::FirstFit);
+        symexec::verify(&mc).unwrap();
+        model.validate(&c, &p, &mc).unwrap();
+
+        let flat = binomial(&p, 0);
+        let legal = crate::model::legalize(&model, &c, &p, &flat);
+        symexec::verify(&legal).unwrap();
+
+        let mc_cost = model.cost_detail(&c, &p, &mc).unwrap();
+        let flat_cost = model.cost_detail(&c, &p, &legal).unwrap();
+        assert!(
+            mc_cost.ext_rounds < flat_cost.ext_rounds,
+            "mc {:?} should beat flat {:?}",
+            mc_cost,
+            flat_cost
+        );
+        // 16 machines, k=4: dissemination reaches all machines in
+        // ~log_5(16) + warmup rounds; must be well under binomial-over-
+        // 128-ranks legalized.
+        assert!(mc_cost.ext_rounds <= 4);
+    }
+
+    #[test]
+    fn mc_aware_single_machine_is_one_write() {
+        let c = switched(1, 8, 1);
+        let p = Placement::block(&c);
+        let s = mc_aware(&c, &p, 2, TargetHeuristic::FirstFit);
+        symexec::verify(&s).unwrap();
+        assert_eq!(s.external_rounds(), 0);
+        assert_eq!(s.num_rounds(), 1);
+    }
+
+    #[test]
+    fn mc_aware_all_heuristics_verify_on_graph() {
+        let g = gnp(10, 0.4, 4, 2, 99);
+        let p = Placement::block(&g);
+        for h in [
+            TargetHeuristic::FirstFit,
+            TargetHeuristic::FastestNodeFirst,
+            TargetHeuristic::HighestDegreeFirst,
+            TargetHeuristic::CoverageAware,
+        ] {
+            let s = mc_aware(&g, &p, 0, h);
+            symexec::verify(&s).unwrap();
+            Multicore::default().validate(&g, &p, &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn mc_aware_uses_parallel_nics() {
+        // One round should carry multiple sends from the root machine when
+        // it has multiple NICs and informed procs.
+        let c = switched(5, 4, 4);
+        let p = Placement::block(&c);
+        let s = mc_aware(&c, &p, 0, TargetHeuristic::FirstFit);
+        symexec::verify(&s).unwrap();
+        // Round 0: write. Round 1: root is the only holder (1 send).
+        // Round 2: all 4 root procs hold -> up to 4 parallel sends.
+        let ext_in_round: Vec<usize> = s
+            .rounds
+            .iter()
+            .map(|r| {
+                r.xfers
+                    .iter()
+                    .filter(|x| x.kind == crate::sched::XferKind::External)
+                    .count()
+            })
+            .collect();
+        assert!(
+            ext_in_round.iter().any(|&e| e >= 2),
+            "expected a round with parallel sends, got {ext_in_round:?}"
+        );
+    }
+}

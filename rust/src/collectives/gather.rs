@@ -1,0 +1,386 @@
+//! Gather schedule builders.
+//!
+//! The paper's sharpest observation lives here: **optimal gather trees are
+//! not the inverses of optimal broadcast trees** on multi-core clusters.
+//! Broadcasting *into* a machine is one constant-time write (R1), so a
+//! machine behaves like a single node; gathering *out of* a machine
+//! requires assembling a message from every process (the machine behaves
+//! like a clique), and a machine that is busy receiving from its `k`
+//! neighbors cannot simultaneously absorb its own processes' data into
+//! the root process for free.
+//!
+//! * [`flat_gather`] — every rank sends directly to the root (serializes
+//!   on the root's receive capacity).
+//! * [`inverse_binomial`] — the textbook "gather = reversed broadcast"
+//!   binomial tree, multi-core oblivious.
+//! * [`mc_aware`] — local tree-merge into each machine's leader (parallel
+//!   across machines, log₂(c) internal rounds of *reads* — the R1 cost the
+//!   paper highlights), then an inter-machine gather tree whose arity is
+//!   the receive budget `min(k, cores)` of each parent (R3: k parallel
+//!   incoming NICs, landing on distinct processes, merged locally).
+
+use crate::sched::{Chunk, CollectiveOp, ContribSet, Payload, Round, Schedule, Xfer};
+use crate::topology::{Cluster, Placement};
+use crate::Rank;
+
+use super::helpers::{ceil_log2, pt2pt, Rooted};
+
+/// Payload carrying the original data of `ranks` (one chunk per rank).
+fn chunks_of(ranks: &[Rank]) -> Payload {
+    Payload {
+        items: ranks
+            .iter()
+            .map(|&r| (Chunk(r as u32), ContribSet::singleton(r)))
+            .collect(),
+    }
+}
+
+/// Every rank sends its chunk straight to the root, one per round
+/// (the root can absorb at most one message per round).
+pub fn flat_gather(placement: &Placement, root: Rank) -> Schedule {
+    let n = placement.num_ranks();
+    let mut s = Schedule::new(CollectiveOp::Gather { root }, n, "flat");
+    for r in 0..n {
+        if r == root {
+            continue;
+        }
+        s.push_round(Round {
+            xfers: vec![pt2pt(placement, r, root, chunks_of(&[r]))],
+        });
+    }
+    s
+}
+
+/// Reversed binomial broadcast tree (multi-core oblivious): in round
+/// `K-1-k` (descending `k`), virtual rank `v + 2^k` ships its accumulated
+/// subtree to `v`.
+pub fn inverse_binomial(placement: &Placement, root: Rank) -> Schedule {
+    let n = placement.num_ranks();
+    let map = Rooted::new(root, n);
+    let mut s = Schedule::new(CollectiveOp::Gather { root }, n, "inverse-binomial");
+    // accum[v]: original ranks whose chunks virtual rank v currently holds.
+    let mut accum: Vec<Vec<Rank>> = (0..n).map(|v| vec![map.real(v)]).collect();
+    for k in (0..ceil_log2(n)).rev() {
+        let stride = 1usize << k;
+        let mut xfers = Vec::new();
+        for v in 0..stride.min(n) {
+            let peer = v + stride;
+            if peer < n {
+                let moved = std::mem::take(&mut accum[peer]);
+                xfers.push(pt2pt(
+                    placement,
+                    map.real(peer),
+                    map.real(v),
+                    chunks_of(&moved),
+                ));
+                accum[v].extend(moved);
+            }
+        }
+        s.push_round(Round { xfers });
+    }
+    s
+}
+
+/// Multi-core-aware gather.
+///
+/// Phase 1 (all machines in parallel): binary tree-merge of the machine's
+/// ranks into its leader via local reads — `ceil(log2 cores)` internal
+/// rounds, each read costing the assembling process one action (R1).
+///
+/// Phase 2: inter-machine gather over a tree rooted at the root's
+/// machine, built breadth-first with per-node arity `min(k, cores)`.
+/// Children at the deepest level send first; a parent absorbs up to its
+/// arity per round on *distinct* processes (one external receive per
+/// process per round), then merges those landings into its leader with
+/// local reads.
+pub fn mc_aware(cluster: &Cluster, placement: &Placement, root: Rank) -> Schedule {
+    let n = placement.num_ranks();
+    let m_count = cluster.num_machines();
+    let root_m = placement.machine_of(root);
+    let mut s = Schedule::new(CollectiveOp::Gather { root }, n, "mc-aware");
+
+    // holdings[r]: original ranks whose chunks rank r currently holds.
+    let mut holdings: Vec<Vec<Rank>> = (0..n).map(|r| vec![r]).collect();
+
+    // --- Phase 1: local merge into each machine's collection proc.
+    // On the root machine merge into `root` itself, elsewhere the leader.
+    let collector = |m: usize| -> Rank {
+        if m == root_m {
+            root
+        } else {
+            placement.machine_leader(m)
+        }
+    };
+    // Pair-merge: per machine, repeatedly halve the set of active holders.
+    let mut active: Vec<Vec<Rank>> = (0..m_count)
+        .map(|m| {
+            let mut v = placement.ranks_on(m).to_vec();
+            // Put the collector first so it survives the merge.
+            let c = collector(m);
+            v.retain(|&r| r != c);
+            v.insert(0, c);
+            v
+        })
+        .collect();
+    loop {
+        let mut xfers = Vec::new();
+        for act in active.iter_mut() {
+            if act.len() <= 1 {
+                continue;
+            }
+            // Pair up: survivor i absorbs victim i + half.
+            let half = act.len().div_ceil(2);
+            let mut next = Vec::with_capacity(half);
+            for i in 0..half {
+                next.push(act[i]);
+                if i + half < act.len() {
+                    let victim = act[i + half];
+                    let moved = std::mem::take(&mut holdings[victim]);
+                    xfers.push(Xfer::local_read(victim, act[i], chunks_of(&moved)));
+                    let dst = act[i];
+                    holdings[dst].extend(moved);
+                }
+            }
+            *act = next;
+        }
+        if xfers.is_empty() {
+            break;
+        }
+        s.push_round(Round { xfers });
+    }
+
+    // --- Phase 2 (switch): direct-to-root. Gather data is pure
+    // concatenation, so intermediate combining buys nothing on a
+    // non-blocking switch — every machine's aggregate flows straight to
+    // the root machine, `slots` per round on distinct landing processes
+    // (R3), and the collector's assembly reads (R1) ride inside the
+    // *next* network round (R2: local work is short).
+    if m_count > 1
+        && matches!(cluster.interconnect, crate::topology::Interconnect::FullSwitch)
+    {
+        let root_procs = placement.ranks_on(root_m);
+        let landing: Vec<Rank> =
+            root_procs.iter().copied().filter(|&r| r != root).collect();
+        let slots = cluster
+            .degree(root_m)
+            .min(landing.len().max(1))
+            .max(1);
+        let mut senders: Vec<usize> = (0..m_count).filter(|&m| m != root_m).collect();
+        senders.sort_unstable();
+        let mut pending_reads: Vec<(Rank, Vec<Rank>)> = Vec::new();
+        for batch in senders.chunks(slots) {
+            let mut xfers = Vec::new();
+            // Overlap: fold last round's landings into the collector.
+            for (dst, moved) in pending_reads.drain(..) {
+                xfers.push(Xfer::local_read(dst, root, chunks_of(&moved)));
+            }
+            for (i, &m) in batch.iter().enumerate() {
+                let src = collector(m);
+                let dst = if landing.is_empty() {
+                    root
+                } else {
+                    landing[i % landing.len()]
+                };
+                let moved = std::mem::take(&mut holdings[src]);
+                xfers.push(Xfer::external(src, dst, chunks_of(&moved)));
+                if dst != root {
+                    pending_reads.push((dst, moved.clone()));
+                }
+                holdings[root].extend(moved);
+            }
+            s.push_round(Round { xfers });
+        }
+        // Final assembly reads.
+        let mut xfers = Vec::new();
+        for (dst, moved) in pending_reads.drain(..) {
+            xfers.push(Xfer::local_read(dst, root, chunks_of(&moved)));
+        }
+        s.push_round(Round { xfers });
+        return s;
+    }
+
+    // --- Phase 2 (graph): inter-machine gather tree (multi-hop routing).
+    if m_count > 1 {
+        let (parent, order) = gather_tree(cluster, root_m);
+        // Depth of each machine.
+        let mut depth = vec![0usize; m_count];
+        for &m in &order {
+            if m != root_m {
+                depth[m] = depth[parent[m]] + 1;
+            }
+        }
+        let max_depth = depth.iter().copied().max().unwrap_or(0);
+
+        // Process levels bottom-up. All machines at the deepest level send
+        // to their parents; parents may need several rounds if they have
+        // more children at that level than receive slots.
+        for level in (1..=max_depth).rev() {
+            let mut senders: Vec<usize> =
+                (0..m_count).filter(|&m| depth[m] == level).collect();
+            senders.sort_unstable();
+            // Group by parent.
+            use std::collections::HashMap;
+            let mut by_parent: HashMap<usize, Vec<usize>> = HashMap::new();
+            for m in senders {
+                by_parent.entry(parent[m]).or_default().push(m);
+            }
+            let mut remaining = by_parent;
+            while remaining.values().any(|v| !v.is_empty()) {
+                let mut xfers = Vec::new();
+                let mut merges: Vec<(usize, Vec<(Rank, Vec<Rank>)>)> = Vec::new();
+                for (&pm, kids) in remaining.iter_mut() {
+                    if kids.is_empty() {
+                        continue;
+                    }
+                    let slots = cluster
+                        .degree(pm)
+                        .min(placement.ranks_on(pm).len())
+                        .max(1);
+                    let batch: Vec<usize> =
+                        kids.drain(..slots.min(kids.len())).collect();
+                    let landing_procs = placement.ranks_on(pm);
+                    let mut landings = Vec::new();
+                    for (i, child) in batch.into_iter().enumerate() {
+                        let src = collector(child);
+                        let dst = landing_procs[i % landing_procs.len()];
+                        let moved = std::mem::take(&mut holdings[src]);
+                        xfers.push(Xfer::external(src, dst, chunks_of(&moved)));
+                        landings.push((dst, moved));
+                    }
+                    merges.push((pm, landings));
+                }
+                s.push_round(Round { xfers });
+                // Merge landings into each parent's collector with local
+                // reads (one internal round; distinct landing procs are
+                // read sequentially by the collector — the R1 cost).
+                let mut merge_xfers = Vec::new();
+                for (pm, landings) in merges {
+                    let coll = collector(pm);
+                    for (dst, moved) in landings {
+                        if dst != coll {
+                            merge_xfers
+                                .push(Xfer::local_read(dst, coll, chunks_of(&moved)));
+                        }
+                        holdings[coll].extend(moved);
+                    }
+                }
+                s.push_round(Round { xfers: merge_xfers });
+            }
+        }
+    }
+    s
+}
+
+/// BFS tree over machines rooted at `root_m`; returns (parent, bfs order).
+fn gather_tree(cluster: &Cluster, root_m: usize) -> (Vec<usize>, Vec<usize>) {
+    let m_count = cluster.num_machines();
+    let mut parent = vec![usize::MAX; m_count];
+    let mut order = vec![root_m];
+    parent[root_m] = root_m;
+    let mut q = std::collections::VecDeque::from([root_m]);
+    while let Some(m) = q.pop_front() {
+        for t in cluster.neighbors(m) {
+            if parent[t] == usize::MAX {
+                parent[t] = m;
+                order.push(t);
+                q.push_back(t);
+            }
+        }
+    }
+    assert!(
+        order.len() == m_count,
+        "gather requires a connected cluster"
+    );
+    (parent, order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CostModel, Multicore};
+    use crate::sched::symexec;
+    use crate::topology::{gnp, switched, Placement};
+
+    #[test]
+    fn flat_gather_verifies() {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let s = flat_gather(&p, 1);
+        symexec::verify(&s).unwrap();
+        Multicore::default().validate(&c, &p, &s).unwrap();
+    }
+
+    #[test]
+    fn inverse_binomial_verifies_all_roots() {
+        let c = switched(2, 4, 2);
+        let p = Placement::block(&c);
+        for root in 0..8 {
+            let s = inverse_binomial(&p, root);
+            symexec::verify(&s).unwrap();
+        }
+    }
+
+    #[test]
+    fn inverse_binomial_non_power_of_two() {
+        let c = switched(1, 6, 1);
+        let p = Placement::block(&c);
+        let s = inverse_binomial(&p, 2);
+        symexec::verify(&s).unwrap();
+    }
+
+    #[test]
+    fn mc_aware_verifies_switch() {
+        let c = switched(4, 4, 2);
+        let p = Placement::block(&c);
+        for root in [0, 5, 15] {
+            let s = mc_aware(&c, &p, root);
+            symexec::verify(&s).unwrap();
+            Multicore::default().validate(&c, &p, &s).unwrap();
+        }
+    }
+
+    #[test]
+    fn mc_aware_verifies_graph() {
+        let g = gnp(7, 0.5, 3, 2, 5);
+        let p = Placement::block(&g);
+        let s = mc_aware(&g, &p, 2);
+        symexec::verify(&s).unwrap();
+        Multicore::default().validate(&g, &p, &s).unwrap();
+    }
+
+    #[test]
+    fn mc_aware_single_machine_logc_reads() {
+        let c = switched(1, 8, 1);
+        let p = Placement::block(&c);
+        let s = mc_aware(&c, &p, 0);
+        symexec::verify(&s).unwrap();
+        // 8 procs -> 3 pair-merge internal rounds, no externals.
+        assert_eq!(s.external_rounds(), 0);
+        assert_eq!(s.num_rounds(), 3);
+    }
+
+    /// The paper's asymmetry: gather needs strictly more internal work
+    /// than broadcast on the same cluster (reads are per-process, writes
+    /// are constant).
+    #[test]
+    fn gather_costs_more_internal_work_than_broadcast() {
+        let c = switched(4, 8, 2);
+        let p = Placement::block(&c);
+        let model = Multicore::default();
+        let b = super::super::broadcast::mc_aware(
+            &c,
+            &p,
+            0,
+            super::super::broadcast::TargetHeuristic::FirstFit,
+        );
+        let g = mc_aware(&c, &p, 0);
+        let cb = model.cost_detail(&c, &p, &b).unwrap();
+        let cg = model.cost_detail(&c, &p, &g).unwrap();
+        assert!(
+            cg.int_units > cb.int_units,
+            "gather int {} should exceed broadcast int {}",
+            cg.int_units,
+            cb.int_units
+        );
+    }
+}

@@ -1,0 +1,105 @@
+//! Shared building blocks for schedule builders.
+
+use crate::sched::{Payload, Xfer};
+use crate::topology::Placement;
+use crate::Rank;
+
+/// A point-to-point message as a *flat* (multi-core-oblivious) algorithm
+/// would issue it: the builder does not know about shared memory, so a
+/// co-located transfer is a local point-to-point read (the destination
+/// assembles one message — R1's expensive side), and a remote transfer is
+/// a network message.
+pub fn pt2pt(placement: &Placement, src: Rank, dst: Rank, payload: Payload) -> Xfer {
+    if placement.colocated(src, dst) {
+        Xfer::local_read(src, dst, payload)
+    } else {
+        Xfer::external(src, dst, payload)
+    }
+}
+
+/// Virtual rank mapping for rooted algorithms: rotate so the root is
+/// virtual rank 0.
+#[derive(Debug, Clone, Copy)]
+pub struct Rooted {
+    pub root: Rank,
+    pub n: usize,
+}
+
+impl Rooted {
+    pub fn new(root: Rank, n: usize) -> Self {
+        Self { root, n }
+    }
+
+    /// Real rank of virtual rank `v`.
+    #[inline]
+    pub fn real(&self, v: usize) -> Rank {
+        (v + self.root) % self.n
+    }
+
+    /// Virtual rank of real rank `r`.
+    #[inline]
+    pub fn virt(&self, r: Rank) -> usize {
+        (r + self.n - self.root) % self.n
+    }
+}
+
+/// `ceil(log2(n))` — rounds of a binomial tree over `n` nodes.
+pub fn ceil_log2(n: usize) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        usize::BITS - (n - 1).leading_zeros()
+    }
+}
+
+/// `ceil(log_{base}(n))` for `base >= 2` — rounds of a `base`-ary
+/// dissemination (each informed node informs `base - 1` others per round).
+pub fn ceil_log(base: usize, n: usize) -> u32 {
+    assert!(base >= 2);
+    let mut covered = 1usize;
+    let mut rounds = 0u32;
+    while covered < n {
+        covered = covered.saturating_mul(base);
+        rounds += 1;
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::XferKind;
+    use crate::topology::{switched, Placement};
+
+    #[test]
+    fn pt2pt_picks_kind_by_colocation() {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let x = pt2pt(&p, 0, 1, Payload::single(0, 0));
+        assert_eq!(x.kind, XferKind::LocalRead);
+        let y = pt2pt(&p, 0, 2, Payload::single(0, 0));
+        assert_eq!(y.kind, XferKind::External);
+    }
+
+    #[test]
+    fn rooted_roundtrip() {
+        let r = Rooted::new(3, 8);
+        for v in 0..8 {
+            assert_eq!(r.virt(r.real(v)), v);
+        }
+        assert_eq!(r.real(0), 3);
+        assert_eq!(r.virt(3), 0);
+    }
+
+    #[test]
+    fn logs() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log(2, 8), 3);
+        assert_eq!(ceil_log(3, 9), 2);
+        assert_eq!(ceil_log(3, 10), 3);
+        assert_eq!(ceil_log(5, 1), 0);
+    }
+}

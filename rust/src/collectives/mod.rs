@@ -1,0 +1,31 @@
+//! Collective-communication schedule builders.
+//!
+//! Every builder is a pure function `(Cluster, Placement, params) ->
+//! Schedule` and comes in (at least) two flavors:
+//!
+//! * **flat / classic** — the algorithm as designed for single-core
+//!   clusters under the telephone or LogP model (binomial broadcast,
+//!   pairwise all-to-all, ring allreduce, …). These treat co-located
+//!   processes as ordinary point-to-point peers ([`helpers::pt2pt`]) and
+//!   serve as the baselines the paper criticizes.
+//! * **hierarchical** — the "previous approaches" the paper cites:
+//!   machines as single nodes, a separate internal phase. Uses shared
+//!   memory but only one NIC per machine.
+//! * **mc-aware** — algorithms designed *for* the paper's model: one-write
+//!   local broadcast (R1), cheap local edges (R2) and all NICs driven in
+//!   parallel (R3).
+//!
+//! Every builder's output is symbolically verified
+//! ([`crate::sched::symexec`]) in this module's tests and hammered with
+//! randomized topologies in `rust/tests/prop_collectives.rs`.
+
+pub mod allgather;
+pub mod allreduce;
+pub mod alltoall;
+pub mod broadcast;
+pub mod gather;
+pub mod helpers;
+pub mod reduce;
+pub mod scatter;
+
+pub use broadcast::TargetHeuristic;

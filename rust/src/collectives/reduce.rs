@@ -1,0 +1,231 @@
+//! Reduce-to-root schedule builders.
+//!
+//! * [`binomial`] — reversed binomial broadcast with combining: disjoint
+//!   subtree partial sums merge on the way up (multi-core oblivious).
+//! * [`mc_aware`] — local tree-merge into each machine's collector (R1
+//!   reads), then an inter-machine reduce tree whose parents absorb
+//!   `min(k, cores)` children per round on distinct processes (R3) and
+//!   fold the landings into the collector locally.
+
+use crate::sched::{Chunk, CollectiveOp, ContribSet, Payload, Round, Schedule, Xfer};
+use crate::topology::{Cluster, Placement};
+use crate::Rank;
+
+use super::helpers::{ceil_log2, pt2pt, Rooted};
+
+fn payload(contrib: &ContribSet) -> Payload {
+    Payload::one(Chunk(0), contrib.clone())
+}
+
+/// Reversed binomial tree with combining (single chunk).
+pub fn binomial(placement: &Placement, root: Rank) -> Schedule {
+    let n = placement.num_ranks();
+    let map = Rooted::new(root, n);
+    let op = CollectiveOp::Reduce { root, chunks: 1 };
+    let mut s = Schedule::new(op, n, "binomial");
+    let mut contrib: Vec<ContribSet> = (0..n)
+        .map(|v| ContribSet::singleton(map.real(v)))
+        .collect();
+    for k in (0..ceil_log2(n)).rev() {
+        let stride = 1usize << k;
+        let mut xfers = Vec::new();
+        for v in 0..stride.min(n) {
+            let peer = v + stride;
+            if peer < n {
+                xfers.push(pt2pt(
+                    placement,
+                    map.real(peer),
+                    map.real(v),
+                    payload(&contrib[peer]),
+                ));
+                let inc = contrib[peer].clone();
+                contrib[v].union_with(&inc);
+            }
+        }
+        s.push_round(Round { xfers });
+    }
+    s
+}
+
+/// Multi-core-aware reduce (mirror of the mc-aware gather, with
+/// combining).
+pub fn mc_aware(cluster: &Cluster, placement: &Placement, root: Rank) -> Schedule {
+    let n = placement.num_ranks();
+    let m_count = cluster.num_machines();
+    let root_m = placement.machine_of(root);
+    let op = CollectiveOp::Reduce { root, chunks: 1 };
+    let mut s = Schedule::new(op, n, "mc-aware");
+
+    let collector = |m: usize| -> Rank {
+        if m == root_m {
+            root
+        } else {
+            placement.machine_leader(m)
+        }
+    };
+    let mut contrib: Vec<ContribSet> = (0..n).map(ContribSet::singleton).collect();
+
+    // Phase 1: local pair-merge into each machine's collector.
+    let mut active: Vec<Vec<Rank>> = (0..m_count)
+        .map(|m| {
+            let c = collector(m);
+            let mut v = placement.ranks_on(m).to_vec();
+            v.retain(|&r| r != c);
+            v.insert(0, c);
+            v
+        })
+        .collect();
+    loop {
+        let mut xfers = Vec::new();
+        for act in active.iter_mut() {
+            if act.len() <= 1 {
+                continue;
+            }
+            let half = act.len().div_ceil(2);
+            let mut next = Vec::with_capacity(half);
+            for i in 0..half {
+                next.push(act[i]);
+                if i + half < act.len() {
+                    let victim = act[i + half];
+                    xfers.push(Xfer::local_read(victim, act[i], payload(&contrib[victim])));
+                    let inc = contrib[victim].clone();
+                    contrib[act[i]].union_with(&inc);
+                }
+            }
+            *act = next;
+        }
+        if xfers.is_empty() {
+            break;
+        }
+        s.push_round(Round { xfers });
+    }
+
+    // Phase 2: inter-machine reduce along a BFS tree, deepest level first.
+    if m_count > 1 {
+        let (parent, order) = bfs_tree(cluster, root_m);
+        let mut depth = vec![0usize; m_count];
+        for &m in &order {
+            if m != root_m {
+                depth[m] = depth[parent[m]] + 1;
+            }
+        }
+        let max_depth = depth.iter().copied().max().unwrap_or(0);
+        for level in (1..=max_depth).rev() {
+            use std::collections::HashMap;
+            let mut by_parent: HashMap<usize, Vec<usize>> = HashMap::new();
+            let mut senders: Vec<usize> =
+                (0..m_count).filter(|&m| depth[m] == level).collect();
+            senders.sort_unstable();
+            for m in senders {
+                by_parent.entry(parent[m]).or_default().push(m);
+            }
+            while by_parent.values().any(|v| !v.is_empty()) {
+                let mut ext = Vec::new();
+                let mut folds: Vec<(usize, Vec<(Rank, ContribSet)>)> = Vec::new();
+                for (&pm, kids) in by_parent.iter_mut() {
+                    if kids.is_empty() {
+                        continue;
+                    }
+                    let slots = cluster
+                        .degree(pm)
+                        .min(placement.ranks_on(pm).len())
+                        .max(1);
+                    let batch: Vec<usize> = kids.drain(..slots.min(kids.len())).collect();
+                    let landing = placement.ranks_on(pm);
+                    let mut landed = Vec::new();
+                    for (i, child) in batch.into_iter().enumerate() {
+                        let src = collector(child);
+                        let dst = landing[i % landing.len()];
+                        ext.push(Xfer::external(src, dst, payload(&contrib[src])));
+                        landed.push((dst, contrib[src].clone()));
+                    }
+                    folds.push((pm, landed));
+                }
+                s.push_round(Round { xfers: ext });
+                // Fold landings into the collector (reads).
+                let mut reads = Vec::new();
+                for (pm, landed) in folds {
+                    let coll = collector(pm);
+                    for (dst, inc) in landed {
+                        if dst != coll {
+                            // Forward the arrival buffer as-is: the landing
+                            // proc's own contribution was already folded
+                            // into the collector in phase 1, so shipping
+                            // only the arrival keeps partial sums disjoint.
+                            reads.push(Xfer::local_read(
+                                dst,
+                                coll,
+                                Payload::one(Chunk(0), inc.clone()),
+                            ));
+                        }
+                        contrib[coll].union_with(&inc);
+                    }
+                }
+                s.push_round(Round { xfers: reads });
+            }
+        }
+    }
+    s
+}
+
+fn bfs_tree(cluster: &Cluster, root_m: usize) -> (Vec<usize>, Vec<usize>) {
+    let m_count = cluster.num_machines();
+    let mut parent = vec![usize::MAX; m_count];
+    let mut order = vec![root_m];
+    parent[root_m] = root_m;
+    let mut q = std::collections::VecDeque::from([root_m]);
+    while let Some(m) = q.pop_front() {
+        for t in cluster.neighbors(m) {
+            if parent[t] == usize::MAX {
+                parent[t] = m;
+                order.push(t);
+                q.push_back(t);
+            }
+        }
+    }
+    assert!(order.len() == m_count, "reduce requires a connected cluster");
+    (parent, order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CostModel, Multicore};
+    use crate::sched::symexec;
+    use crate::topology::{gnp, switched, Placement};
+
+    #[test]
+    fn binomial_verifies_all_roots() {
+        let c = switched(2, 3, 1);
+        let p = Placement::block(&c);
+        for root in 0..6 {
+            let s = binomial(&p, root);
+            symexec::verify(&s).unwrap();
+        }
+    }
+
+    #[test]
+    fn mc_aware_verifies_switch_and_graph() {
+        let c = switched(4, 4, 2);
+        let p = Placement::block(&c);
+        for root in [0, 7] {
+            let s = mc_aware(&c, &p, root);
+            symexec::verify(&s).unwrap();
+            Multicore::default().validate(&c, &p, &s).unwrap();
+        }
+        let g = gnp(6, 0.5, 3, 2, 3);
+        let pg = Placement::block(&g);
+        let sg = mc_aware(&g, &pg, 1);
+        symexec::verify(&sg).unwrap();
+        Multicore::default().validate(&g, &pg, &sg).unwrap();
+    }
+
+    #[test]
+    fn mc_aware_single_machine() {
+        let c = switched(1, 5, 1);
+        let p = Placement::block(&c);
+        let s = mc_aware(&c, &p, 3);
+        symexec::verify(&s).unwrap();
+        assert_eq!(s.external_messages(), 0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Scatter schedule builders.
+//!
+//! * [`flat_scatter`] — root sends each rank its chunk, one per round.
+//! * [`binomial`] — classic recursive halving: the root ships the far
+//!   half's chunks to the subtree head, recursively (multi-core
+//!   oblivious).
+//! * [`mc_aware`] — machine-level distribution tree: aggregates for a
+//!   whole subtree travel to each machine's leader, are published with a
+//!   single write (R1 — duplicate delivery of siblings' chunks is
+//!   harmless for data ops), and every informed machine forwards to
+//!   `min(k, cores)` children per round (R3).
+
+use crate::sched::{Chunk, CollectiveOp, ContribSet, Payload, Round, Schedule, Xfer};
+use crate::topology::{Cluster, Placement};
+use crate::Rank;
+
+use super::helpers::{ceil_log2, pt2pt, Rooted};
+
+fn chunks_for(ranks: &[Rank], root: Rank) -> Payload {
+    Payload {
+        items: ranks
+            .iter()
+            .map(|&r| (Chunk(r as u32), ContribSet::singleton(root)))
+            .collect(),
+    }
+}
+
+/// Root sends each rank its chunk point-to-point, one per round.
+pub fn flat_scatter(placement: &Placement, root: Rank) -> Schedule {
+    let n = placement.num_ranks();
+    let mut s = Schedule::new(CollectiveOp::Scatter { root }, n, "flat");
+    for r in 0..n {
+        if r == root {
+            continue;
+        }
+        s.push_round(Round {
+            xfers: vec![pt2pt(placement, root, r, chunks_for(&[r], root))],
+        });
+    }
+    s
+}
+
+/// Binomial (recursive-halving) scatter over virtual ranks.
+pub fn binomial(placement: &Placement, root: Rank) -> Schedule {
+    let n = placement.num_ranks();
+    let map = Rooted::new(root, n);
+    let mut s = Schedule::new(CollectiveOp::Scatter { root }, n, "binomial");
+    // held[v]: virtual ranks whose chunks v currently holds.
+    let mut held: Vec<Vec<usize>> = (0..n).map(|_| Vec::new()).collect();
+    held[0] = (0..n).collect();
+    for k in (0..ceil_log2(n)).rev() {
+        let stride = 1usize << k;
+        let mut xfers = Vec::new();
+        // Senders at this stride are multiples of 2*stride (the classic
+        // recursive-halving pattern).
+        for v in (0..n).step_by(2 * stride) {
+            let peer = v + stride;
+            if peer >= n || held[v].is_empty() {
+                continue;
+            }
+            // Ship the chunks belonging to [peer, peer + stride).
+            let (keep, give): (Vec<usize>, Vec<usize>) =
+                held[v].iter().partition(|&&c| c < peer || c >= peer + stride);
+            if give.is_empty() {
+                held[v] = keep;
+                continue;
+            }
+            let real_targets: Vec<Rank> = give.iter().map(|&c| map.real(c)).collect();
+            xfers.push(pt2pt(
+                placement,
+                map.real(v),
+                map.real(peer),
+                chunks_for(&real_targets, root),
+            ));
+            held[v] = keep;
+            held[peer] = give;
+        }
+        s.push_round(Round { xfers });
+    }
+    s
+}
+
+/// Multi-core-aware scatter down a machine-level BFS tree.
+pub fn mc_aware(cluster: &Cluster, placement: &Placement, root: Rank) -> Schedule {
+    let n = placement.num_ranks();
+    let m_count = cluster.num_machines();
+    let root_m = placement.machine_of(root);
+    let mut s = Schedule::new(CollectiveOp::Scatter { root }, n, "mc-aware");
+
+    // BFS tree and subtree rank sets.
+    let mut parent = vec![usize::MAX; m_count];
+    let mut order = vec![root_m];
+    parent[root_m] = root_m;
+    let mut q = std::collections::VecDeque::from([root_m]);
+    while let Some(m) = q.pop_front() {
+        for t in cluster.neighbors(m) {
+            if parent[t] == usize::MAX {
+                parent[t] = m;
+                order.push(t);
+                q.push_back(t);
+            }
+        }
+    }
+    assert!(order.len() == m_count, "scatter requires a connected cluster");
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); m_count];
+    for &m in &order {
+        if m != root_m {
+            children[parent[m]].push(m);
+        }
+    }
+    // subtree[m]: ranks living in machine m's subtree.
+    let mut subtree: Vec<Vec<Rank>> = vec![Vec::new(); m_count];
+    for &m in order.iter().rev() {
+        let mut ranks = placement.ranks_on(m).to_vec();
+        for &c in &children[m] {
+            let sub = subtree[c].clone();
+            ranks.extend(sub);
+        }
+        subtree[m] = ranks;
+    }
+
+    // Root publishes everything locally (its own procs read their chunks
+    // from the written aggregate — duplicate chunks are harmless).
+    {
+        let dsts: Vec<Rank> = placement
+            .ranks_on(root_m)
+            .iter()
+            .copied()
+            .filter(|&r| r != root)
+            .collect();
+        let mut xfers = Vec::new();
+        if !dsts.is_empty() {
+            xfers.push(Xfer::local_write(root, dsts, chunks_for(&subtree[root_m], root)));
+        }
+        s.push_round(Round { xfers });
+    }
+
+    // Wavefront: informed machines forward subtree aggregates to children,
+    // min(k, cores) children per round, sends from distinct procs.
+    let mut informed = vec![false; m_count];
+    informed[root_m] = true;
+    // pending[m]: children of m not yet served.
+    let mut pending: Vec<Vec<usize>> = children.clone();
+    loop {
+        let mut ext = Vec::new();
+        let mut writes = Vec::new();
+        let mut newly = Vec::new();
+        for m in 0..m_count {
+            if !informed[m] || pending[m].is_empty() {
+                continue;
+            }
+            let procs = placement.ranks_on(m);
+            let slots = cluster.degree(m).min(procs.len()).max(1);
+            let take = slots.min(pending[m].len());
+            let batch: Vec<usize> = pending[m].drain(..take).collect();
+            for (i, child) in batch.into_iter().enumerate() {
+                let src = procs[i % procs.len()];
+                let dst = placement.machine_leader(child);
+                ext.push(Xfer::external(src, dst, chunks_for(&subtree[child], root)));
+                // Child leader publishes on arrival (next round).
+                let dsts: Vec<Rank> = placement
+                    .ranks_on(child)
+                    .iter()
+                    .copied()
+                    .filter(|&r| r != dst)
+                    .collect();
+                if !dsts.is_empty() {
+                    writes.push(Xfer::local_write(
+                        dst,
+                        dsts,
+                        chunks_for(&subtree[child], root),
+                    ));
+                }
+                newly.push(child);
+            }
+        }
+        if ext.is_empty() {
+            break;
+        }
+        s.push_round(Round { xfers: ext });
+        s.push_round(Round { xfers: writes });
+        for c in newly {
+            informed[c] = true;
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CostModel, Multicore};
+    use crate::sched::symexec;
+    use crate::topology::{gnp, switched, Placement};
+
+    #[test]
+    fn flat_verifies() {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let s = flat_scatter(&p, 2);
+        symexec::verify(&s).unwrap();
+    }
+
+    #[test]
+    fn binomial_verifies_various() {
+        for (m, cores) in [(2usize, 4usize), (1, 6), (3, 3)] {
+            let c = switched(m, cores, 2);
+            let p = Placement::block(&c);
+            for root in [0, m * cores - 1] {
+                let s = binomial(&p, root);
+                symexec::verify(&s).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn mc_aware_verifies_switch_and_graph() {
+        let c = switched(4, 4, 2);
+        let p = Placement::block(&c);
+        let s = mc_aware(&c, &p, 5);
+        symexec::verify(&s).unwrap();
+        Multicore::default().validate(&c, &p, &s).unwrap();
+
+        let g = gnp(6, 0.5, 3, 2, 17);
+        let pg = Placement::block(&g);
+        let sg = mc_aware(&g, &pg, 0);
+        symexec::verify(&sg).unwrap();
+        Multicore::default().validate(&g, &pg, &sg).unwrap();
+    }
+}

@@ -1,0 +1,235 @@
+//! Communicator: algorithm-by-name collective schedule construction plus
+//! one-call costing/simulation/execution — the crate's public facade.
+
+use crate::collectives::{allgather, allreduce, alltoall, broadcast, gather, reduce, scatter};
+use crate::collectives::TargetHeuristic;
+use crate::exec::{self, BufferStore, ExecParams, ExecReport};
+use crate::model::CostModel;
+use crate::sched::Schedule;
+use crate::sim::{simulate, SimParams, SimReport};
+use crate::topology::{Cluster, Placement};
+use crate::Rank;
+
+/// Broadcast algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BroadcastAlgo {
+    FlatTree,
+    Binomial,
+    Hierarchical,
+    McAware(TargetHeuristic),
+}
+
+/// Gather algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GatherAlgo {
+    Flat,
+    InverseBinomial,
+    McAware,
+}
+
+/// All-to-all algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlltoallAlgo {
+    Pairwise,
+    Bruck,
+    /// Kumar-style aggregation with this many NIC slots per machine.
+    LeaderAggregated(usize),
+}
+
+/// Allreduce algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllreduceAlgo {
+    Ring,
+    RecursiveDoubling,
+    Rabenseifner,
+    HierarchicalMc,
+}
+
+/// Allgather algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllgatherAlgo {
+    Ring,
+    McAware(usize),
+}
+
+impl AllreduceAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllreduceAlgo::Ring => "ring",
+            AllreduceAlgo::RecursiveDoubling => "recursive-doubling",
+            AllreduceAlgo::Rabenseifner => "rabenseifner",
+            AllreduceAlgo::HierarchicalMc => "hierarchical-mc",
+        }
+    }
+}
+
+/// An MPI-like communicator bound to one cluster + placement.
+pub struct Communicator {
+    pub cluster: Cluster,
+    pub placement: Placement,
+}
+
+impl Communicator {
+    pub fn new(cluster: Cluster, placement: Placement) -> Self {
+        Self { cluster, placement }
+    }
+
+    /// One process per core, block placement.
+    pub fn block(cluster: Cluster) -> Self {
+        let placement = Placement::block(&cluster);
+        Self { cluster, placement }
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        self.placement.num_ranks()
+    }
+
+    // ---- schedule builders -------------------------------------------
+
+    pub fn broadcast(&self, algo: BroadcastAlgo, root: Rank) -> Schedule {
+        match algo {
+            BroadcastAlgo::FlatTree => broadcast::flat_tree(&self.placement, root),
+            BroadcastAlgo::Binomial => broadcast::binomial(&self.placement, root),
+            BroadcastAlgo::Hierarchical => {
+                broadcast::hierarchical(&self.cluster, &self.placement, root)
+            }
+            BroadcastAlgo::McAware(h) => {
+                broadcast::mc_aware(&self.cluster, &self.placement, root, h)
+            }
+        }
+    }
+
+    pub fn gather(&self, algo: GatherAlgo, root: Rank) -> Schedule {
+        match algo {
+            GatherAlgo::Flat => gather::flat_gather(&self.placement, root),
+            GatherAlgo::InverseBinomial => {
+                gather::inverse_binomial(&self.placement, root)
+            }
+            GatherAlgo::McAware => gather::mc_aware(&self.cluster, &self.placement, root),
+        }
+    }
+
+    pub fn alltoall(&self, algo: AlltoallAlgo) -> Schedule {
+        match algo {
+            AlltoallAlgo::Pairwise => alltoall::pairwise(&self.placement),
+            AlltoallAlgo::Bruck => alltoall::bruck(&self.placement),
+            AlltoallAlgo::LeaderAggregated(slots) => {
+                alltoall::leader_aggregated(&self.cluster, &self.placement, slots)
+            }
+        }
+    }
+
+    pub fn allreduce(&self, algo: AllreduceAlgo) -> crate::Result<Schedule> {
+        Ok(match algo {
+            AllreduceAlgo::Ring => allreduce::ring(&self.placement),
+            AllreduceAlgo::RecursiveDoubling => {
+                allreduce::recursive_doubling(&self.placement)?
+            }
+            AllreduceAlgo::Rabenseifner => allreduce::rabenseifner(&self.placement)?,
+            AllreduceAlgo::HierarchicalMc => {
+                allreduce::hierarchical_mc(&self.cluster, &self.placement)
+            }
+        })
+    }
+
+    pub fn allgather(&self, algo: AllgatherAlgo) -> Schedule {
+        match algo {
+            AllgatherAlgo::Ring => allgather::ring(&self.placement),
+            AllgatherAlgo::McAware(slots) => {
+                allgather::mc_aware(&self.cluster, &self.placement, slots)
+            }
+        }
+    }
+
+    pub fn reduce_binomial(&self, root: Rank) -> Schedule {
+        reduce::binomial(&self.placement, root)
+    }
+
+    pub fn reduce_mc(&self, root: Rank) -> Schedule {
+        reduce::mc_aware(&self.cluster, &self.placement, root)
+    }
+
+    pub fn scatter_binomial(&self, root: Rank) -> Schedule {
+        scatter::binomial(&self.placement, root)
+    }
+
+    pub fn scatter_mc(&self, root: Rank) -> Schedule {
+        scatter::mc_aware(&self.cluster, &self.placement, root)
+    }
+
+    // ---- evaluation ---------------------------------------------------
+
+    /// Price a schedule under a cost model.
+    pub fn cost(&self, model: &dyn CostModel, s: &Schedule) -> crate::Result<f64> {
+        model.cost(&self.cluster, &self.placement, s)
+    }
+
+    /// Run a schedule through the continuous-time simulator.
+    pub fn simulate(&self, s: &Schedule, params: &SimParams) -> crate::Result<SimReport> {
+        simulate(&self.cluster, &self.placement, s, params)
+    }
+
+    /// Execute a schedule over real bytes.
+    pub fn execute(
+        &self,
+        s: &Schedule,
+        inputs: Vec<BufferStore>,
+        params: &ExecParams,
+    ) -> crate::Result<ExecReport> {
+        exec::run(&self.cluster, &self.placement, s, inputs, params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Multicore;
+    use crate::sched::symexec;
+    use crate::topology::switched;
+
+    #[test]
+    fn facade_builds_and_verifies_everything() {
+        let comm = Communicator::block(switched(4, 4, 2));
+        let model = Multicore::default();
+        let mut schedules = vec![
+            comm.broadcast(BroadcastAlgo::Binomial, 0),
+            comm.broadcast(BroadcastAlgo::Hierarchical, 3),
+            comm.broadcast(BroadcastAlgo::McAware(TargetHeuristic::CoverageAware), 0),
+            comm.gather(GatherAlgo::InverseBinomial, 0),
+            comm.gather(GatherAlgo::McAware, 1),
+            comm.alltoall(AlltoallAlgo::Bruck),
+            comm.alltoall(AlltoallAlgo::LeaderAggregated(2)),
+            comm.allreduce(AllreduceAlgo::Ring).unwrap(),
+            comm.allreduce(AllreduceAlgo::RecursiveDoubling).unwrap(),
+            comm.allreduce(AllreduceAlgo::Rabenseifner).unwrap(),
+            comm.allreduce(AllreduceAlgo::HierarchicalMc).unwrap(),
+            comm.allgather(AllgatherAlgo::Ring),
+            comm.allgather(AllgatherAlgo::McAware(2)),
+            comm.reduce_binomial(0),
+            comm.reduce_mc(5),
+            comm.scatter_binomial(0),
+            comm.scatter_mc(2),
+        ];
+        for s in schedules.drain(..) {
+            symexec::verify(&s).unwrap_or_else(|e| panic!("{}: {e}", s.algo));
+            // All mc-aware/hierarchical schedules must be model-legal as
+            // built; flat ones legalize.
+            let legal = crate::model::legalize(&model, &comm.cluster, &comm.placement, &s);
+            model
+                .validate(&comm.cluster, &comm.placement, &legal)
+                .unwrap_or_else(|e| panic!("{}: {e}", s.algo));
+        }
+    }
+
+    #[test]
+    fn cost_and_simulate_through_facade() {
+        let comm = Communicator::block(switched(2, 2, 1));
+        let s = comm.broadcast(BroadcastAlgo::Hierarchical, 0);
+        let c = comm.cost(&Multicore::default(), &s).unwrap();
+        assert!(c >= 1.0);
+        let r = comm
+            .simulate(&s, &crate::sim::SimParams::lan_cluster(1024))
+            .unwrap();
+        assert!(r.t_end > 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! The deployable framework layer: an MPI-like communicator facade over
+//! the schedule builders, a synthetic-corpus generator, and the
+//! data-parallel trainer that composes everything (topology → schedules →
+//! real execution → PJRT compute) for the end-to-end experiment (E8).
+
+mod comm;
+mod data;
+mod trainer;
+
+pub use comm::{
+    AllgatherAlgo, AllreduceAlgo, AlltoallAlgo, BroadcastAlgo, Communicator, GatherAlgo,
+};
+pub use data::Corpus;
+pub use trainer::{TrainReport, Trainer, TrainerCfg};

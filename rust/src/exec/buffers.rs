@@ -1,0 +1,164 @@
+//! Real-data buffer stores mirroring the symbolic executor's semantics.
+//!
+//! A rank holds, per chunk, a set of *buffers*: each an `Arc<Vec<f32>>`
+//! tagged with the [`ContribSet`] it embodies. Delivery and assembly
+//! follow exactly the rules of [`crate::sched::symexec`] — subsumed
+//! buffers are overwritten, disjoint partial sums may be combined (summed
+//! element-wise) on the way out — so any schedule the symbolic executor
+//! accepts computes correct numbers here.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::sched::{Chunk, ContribSet};
+
+/// One tagged buffer.
+#[derive(Debug, Clone)]
+pub struct ChunkData {
+    pub contrib: ContribSet,
+    pub data: Arc<Vec<f32>>,
+}
+
+/// Per-rank buffer store.
+#[derive(Debug, Clone, Default)]
+pub struct BufferStore {
+    map: HashMap<Chunk, Vec<ChunkData>>,
+}
+
+impl BufferStore {
+    /// Seed an initial buffer (op initial state).
+    pub fn seed(&mut self, c: Chunk, contrib: ContribSet, data: Vec<f32>) {
+        self.map
+            .entry(c)
+            .or_default()
+            .push(ChunkData { contrib, data: Arc::new(data) });
+    }
+
+    /// Buffers held for a chunk.
+    pub fn buffers(&self, c: Chunk) -> &[ChunkData] {
+        self.map.get(&c).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Assemble exactly `want`: returns the matching buffer zero-copy, or
+    /// the element-wise sum of pairwise-disjoint sub-buffers.
+    pub fn assemble(&self, c: Chunk, want: &ContribSet) -> crate::Result<Arc<Vec<f32>>> {
+        let bufs = self.buffers(c);
+        if let Some(hit) = bufs.iter().find(|b| b.contrib == *want) {
+            return Ok(hit.data.clone());
+        }
+        // Greedy combine of subset buffers (mirrors symexec::can_assemble).
+        let mut acc_set = ContribSet::new();
+        let mut picked: Vec<&ChunkData> = Vec::new();
+        for b in bufs {
+            if b.contrib.is_subset(want) && !acc_set.intersects(&b.contrib) {
+                acc_set.union_with(&b.contrib);
+                picked.push(b);
+            }
+        }
+        if acc_set != *want {
+            anyhow::bail!(
+                "cannot assemble contrib {want} of chunk {c:?} from held \
+                 {:?}",
+                bufs.iter().map(|b| b.contrib.to_string()).collect::<Vec<_>>()
+            );
+        }
+        let len = picked[0].data.len();
+        let mut out = vec![0.0f32; len];
+        for b in &picked {
+            anyhow::ensure!(b.data.len() == len, "buffer length mismatch");
+            for (o, v) in out.iter_mut().zip(b.data.iter()) {
+                *o += v;
+            }
+        }
+        Ok(Arc::new(out))
+    }
+
+    /// Deliver a buffer: drop it if subsumed, absorb buffers it subsumes.
+    pub fn deliver(&mut self, c: Chunk, contrib: ContribSet, data: Arc<Vec<f32>>) {
+        let bufs = self.map.entry(c).or_default();
+        if bufs.iter().any(|b| contrib.is_subset(&b.contrib)) {
+            return; // stale duplicate
+        }
+        bufs.retain(|b| !b.contrib.is_subset(&contrib));
+        bufs.push(ChunkData { contrib, data });
+    }
+
+    /// For data ops: the value of a chunk (any buffer — they are identical
+    /// copies of the origin's data).
+    pub fn value(&self, c: Chunk) -> Option<&Vec<f32>> {
+        self.buffers(c).first().map(|b| b.data.as_ref())
+    }
+
+    /// For reduction ops over `n` ranks: the fully-reduced value of a
+    /// chunk, assembled from pairwise-disjoint buffers covering all ranks.
+    pub fn reduced_value(&self, c: Chunk, n: usize) -> Option<Vec<f32>> {
+        self.assemble(c, &ContribSet::full(n))
+            .ok()
+            .map(|a| a.as_ref().clone())
+    }
+
+    /// Chunks present in the store.
+    pub fn chunks(&self) -> impl Iterator<Item = Chunk> + '_ {
+        self.map.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_exact_is_zero_copy() {
+        let mut s = BufferStore::default();
+        s.seed(Chunk(0), ContribSet::singleton(1), vec![1.0, 2.0]);
+        let a = s.assemble(Chunk(0), &ContribSet::singleton(1)).unwrap();
+        assert!(Arc::ptr_eq(&a, &s.buffers(Chunk(0))[0].data));
+    }
+
+    #[test]
+    fn assemble_combines_disjoint() {
+        let mut s = BufferStore::default();
+        s.seed(Chunk(0), ContribSet::singleton(0), vec![1.0, 2.0]);
+        s.seed(Chunk(0), ContribSet::singleton(1), vec![10.0, 20.0]);
+        let a = s
+            .assemble(Chunk(0), &ContribSet::from_iter([0, 1]))
+            .unwrap();
+        assert_eq!(*a, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn assemble_rejects_overlap_or_missing() {
+        let mut s = BufferStore::default();
+        s.seed(Chunk(0), ContribSet::from_iter([0, 1]), vec![1.0]);
+        s.seed(Chunk(0), ContribSet::from_iter([1, 2]), vec![2.0]);
+        // {0,1,2} cannot be assembled from overlapping buffers.
+        assert!(s.assemble(Chunk(0), &ContribSet::from_iter([0, 1, 2])).is_err());
+        // Missing chunk.
+        assert!(s.assemble(Chunk(9), &ContribSet::singleton(0)).is_err());
+    }
+
+    #[test]
+    fn deliver_overwrites_subsumed() {
+        let mut s = BufferStore::default();
+        s.seed(Chunk(0), ContribSet::singleton(0), vec![1.0]);
+        s.deliver(
+            Chunk(0),
+            ContribSet::from_iter([0, 1]),
+            Arc::new(vec![3.0]),
+        );
+        assert_eq!(s.buffers(Chunk(0)).len(), 1);
+        assert_eq!(*s.buffers(Chunk(0))[0].data, vec![3.0]);
+        // Stale duplicate dropped.
+        s.deliver(Chunk(0), ContribSet::singleton(1), Arc::new(vec![9.0]));
+        assert_eq!(s.buffers(Chunk(0)).len(), 1);
+    }
+
+    #[test]
+    fn reduced_value_requires_full_coverage() {
+        let mut s = BufferStore::default();
+        s.seed(Chunk(0), ContribSet::singleton(0), vec![1.0]);
+        s.seed(Chunk(0), ContribSet::singleton(1), vec![2.0]);
+        assert_eq!(s.reduced_value(Chunk(0), 2).unwrap(), vec![3.0]);
+        assert!(s.reduced_value(Chunk(0), 3).is_none());
+    }
+}

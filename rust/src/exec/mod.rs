@@ -1,0 +1,481 @@
+//! Real in-process cluster executor: schedules run over real bytes.
+//!
+//! Machines become thread groups; every rank is an OS thread. Intra-
+//! machine transfers move `Arc`-shared buffers through a per-machine
+//! shared-memory board — a [`crate::sched::XferKind::LocalWrite`] really
+//! is one publication that any number of co-located readers consume
+//! zero-copy (rule R1 made physical) — while external transfers flow
+//! through channels with optional injected latency/bandwidth costs so
+//! that algorithmic differences show up in wall-clock time (E6, E8).
+//!
+//! Execution follows the schedule's round structure with two barriers per
+//! round: during *phase 1* every rank snapshots its pre-round state and
+//! posts sends/writes/reads; after the mid-round barrier, *phase 2*
+//! drains arrivals and applies all deliveries. This reproduces exactly
+//! the concurrency semantics the symbolic executor
+//! ([`crate::sched::symexec`]) verifies — `run` symbolically validates
+//! the schedule first, so threads never deadlock on an ill-formed plan —
+//! and the tests check the computed bytes against per-op references.
+
+mod buffers;
+mod params;
+
+pub use buffers::{BufferStore, ChunkData};
+pub use params::ExecParams;
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::sched::{symexec, Chunk, ContribSet, Schedule, XferKind};
+use crate::topology::{Cluster, Placement};
+use crate::Rank;
+
+/// One message on the wire: chunks with contribution metadata and data.
+struct Msg {
+    items: Vec<(Chunk, ContribSet, Arc<Vec<f32>>)>,
+    /// Earliest instant the receiver may consume it (injected latency).
+    available_at: Instant,
+}
+
+/// Execution result.
+pub struct ExecReport {
+    /// Final buffer stores per rank.
+    pub outputs: Vec<BufferStore>,
+    /// Wall-clock time of the whole collective (excluding thread spawn).
+    pub wall: std::time::Duration,
+}
+
+/// Per-rank work extracted from one schedule round.
+#[derive(Default, Clone)]
+struct RankRound {
+    /// External sends: (dst, payload chunks).
+    ext_sends: Vec<(Rank, Vec<(Chunk, ContribSet)>)>,
+    /// Number of external messages to drain this round.
+    ext_recvs: usize,
+    /// Shared-memory publications (board slot = (round, src)).
+    writes: Vec<Vec<(Chunk, ContribSet)>>,
+    /// Reads I must perform: (src, payload chunks).
+    reads: Vec<(Rank, Vec<(Chunk, ContribSet)>)>,
+    /// Write publications I must consume (by writer).
+    write_recvs: Vec<Rank>,
+}
+
+type BoardSlot = Arc<Vec<(Chunk, ContribSet, Arc<Vec<f32>>)>>;
+type Board = Mutex<HashMap<(usize, Rank), BoardSlot>>;
+
+/// Run `schedule` over real data. `inputs[r]` seeds rank `r`'s store (use
+/// [`initial_inputs`] for op-conformant seeding).
+pub fn run(
+    cluster: &Cluster,
+    placement: &Placement,
+    schedule: &Schedule,
+    inputs: Vec<BufferStore>,
+    params: &ExecParams,
+) -> crate::Result<ExecReport> {
+    schedule.check_shape(placement)?;
+    // Fail fast on data-flow errors so threads can't deadlock waiting for
+    // messages that will never be sent.
+    symexec::run(schedule)?;
+    let n = schedule.num_ranks;
+    anyhow::ensure!(inputs.len() == n, "need one input store per rank");
+
+    // Compile the schedule into per-rank round plans.
+    let rounds = schedule.rounds.len();
+    let mut plans: Vec<Vec<RankRound>> = vec![vec![RankRound::default(); rounds]; n];
+    for (ri, round) in schedule.rounds.iter().enumerate() {
+        for x in &round.xfers {
+            let payload: Vec<(Chunk, ContribSet)> = x.payload.items.clone();
+            match x.kind {
+                XferKind::External => {
+                    plans[x.src][ri].ext_sends.push((x.dsts[0], payload));
+                    plans[x.dsts[0]][ri].ext_recvs += 1;
+                }
+                XferKind::LocalWrite => {
+                    plans[x.src][ri].writes.push(payload);
+                    for &d in &x.dsts {
+                        plans[d][ri].write_recvs.push(x.src);
+                    }
+                }
+                XferKind::LocalRead => {
+                    plans[x.dsts[0]][ri].reads.push((x.src, payload));
+                }
+            }
+        }
+    }
+
+    // Shared state.
+    let stores: Vec<Arc<RwLock<BufferStore>>> = inputs
+        .into_iter()
+        .map(|s| Arc::new(RwLock::new(s)))
+        .collect();
+    let (txs, rxs): (Vec<_>, Vec<_>) = (0..n).map(|_| mpsc::channel::<Msg>()).unzip();
+    let rxs: Vec<Mutex<mpsc::Receiver<Msg>>> = rxs.into_iter().map(Mutex::new).collect();
+    let boards: Vec<Board> = (0..cluster.num_machines())
+        .map(|_| Mutex::new(HashMap::new()))
+        .collect();
+    let barrier = Barrier::new(n);
+    let failed: Mutex<Option<String>> = Mutex::new(None);
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for r in 0..n {
+            let plans = &plans;
+            let stores = &stores;
+            let txs = &txs;
+            let rxs = &rxs;
+            let boards = &boards;
+            let barrier = &barrier;
+            let failed = &failed;
+            let machine = placement.machine_of(r);
+            scope.spawn(move || {
+                let fail = |e: String| {
+                    let mut f = failed.lock().unwrap();
+                    if f.is_none() {
+                        *f = Some(e);
+                    }
+                };
+                for ri in 0..rounds {
+                    let plan = &plans[r][ri];
+                    barrier.wait(); // round start: all stores stable
+                    if failed.lock().unwrap().is_some() {
+                        barrier.wait();
+                        continue;
+                    }
+
+                    // ---- Phase 1: read pre-round state, post everything.
+                    let mut staged: Vec<(Chunk, ContribSet, Arc<Vec<f32>>)> = Vec::new();
+                    {
+                        let me = stores[r].read().unwrap();
+                        for (dst, payload) in &plan.ext_sends {
+                            let mut items = Vec::with_capacity(payload.len());
+                            let mut bytes = 0usize;
+                            let mut ok = true;
+                            for (c, contrib) in payload {
+                                match me.assemble(*c, contrib) {
+                                    Ok(data) => {
+                                        bytes += data.len() * 4;
+                                        items.push((*c, contrib.clone(), data));
+                                    }
+                                    Err(e) => {
+                                        fail(format!("rank {r} round {ri} send: {e}"));
+                                        ok = false;
+                                        break;
+                                    }
+                                }
+                            }
+                            if ok {
+                                params.spin_send(bytes);
+                                let _ = txs[*dst].send(Msg {
+                                    items,
+                                    available_at: Instant::now() + params.ext_latency,
+                                });
+                            }
+                        }
+                        for payload in &plan.writes {
+                            let mut items = Vec::with_capacity(payload.len());
+                            let mut ok = true;
+                            for (c, contrib) in payload {
+                                match me.assemble(*c, contrib) {
+                                    Ok(data) => items.push((*c, contrib.clone(), data)),
+                                    Err(e) => {
+                                        fail(format!("rank {r} round {ri} write: {e}"));
+                                        ok = false;
+                                        break;
+                                    }
+                                }
+                            }
+                            if ok {
+                                params.spin_write();
+                                boards[machine]
+                                    .lock()
+                                    .unwrap()
+                                    .insert((ri, r), Arc::new(items));
+                            }
+                        }
+                        for (src, payload) in &plan.reads {
+                            let peer = stores[*src].read().unwrap();
+                            for (c, contrib) in payload {
+                                match peer.assemble(*c, contrib) {
+                                    Ok(data) => {
+                                        params.spin_read(data.len() * 4);
+                                        staged.push((*c, contrib.clone(), data));
+                                    }
+                                    Err(e) => fail(format!(
+                                        "rank {r} round {ri} read from {src}: {e}"
+                                    )),
+                                }
+                            }
+                        }
+                    }
+
+                    barrier.wait(); // all posts visible, all reads done
+                    if failed.lock().unwrap().is_some() {
+                        continue;
+                    }
+
+                    // ---- Phase 2: drain arrivals, apply deliveries.
+                    for writer in &plan.write_recvs {
+                        let slot = boards[machine]
+                            .lock()
+                            .unwrap()
+                            .get(&(ri, *writer))
+                            .cloned();
+                        match slot {
+                            Some(items) => {
+                                for (c, contrib, data) in items.iter() {
+                                    staged.push((*c, contrib.clone(), data.clone()));
+                                }
+                            }
+                            None => fail(format!(
+                                "rank {r} round {ri}: publication from {writer} missing"
+                            )),
+                        }
+                    }
+                    for _ in 0..plan.ext_recvs {
+                        let res = {
+                            let rx = rxs[r].lock().unwrap();
+                            rx.recv_timeout(std::time::Duration::from_secs(10))
+                        };
+                        match res {
+                            Ok(msg) => {
+                                params.wait_until(msg.available_at);
+                                params.spin_recv();
+                                staged.extend(msg.items);
+                            }
+                            Err(e) => {
+                                fail(format!("rank {r} round {ri}: recv failed: {e}"));
+                                break;
+                            }
+                        }
+                    }
+                    if !staged.is_empty() {
+                        let mut me = stores[r].write().unwrap();
+                        for (c, contrib, data) in staged {
+                            me.deliver(c, contrib, data);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+
+    if let Some(e) = failed.lock().unwrap().take() {
+        anyhow::bail!("execution failed: {e}");
+    }
+    let outputs = stores
+        .into_iter()
+        .map(|s| {
+            Arc::try_unwrap(s)
+                .expect("threads joined")
+                .into_inner()
+                .expect("lock not poisoned")
+        })
+        .collect();
+    Ok(ExecReport { outputs, wall })
+}
+
+/// Seed stores per the op's initial-state semantics with caller-provided
+/// data: `data(rank, chunk)` returns the values rank `rank` contributes
+/// for `chunk`.
+pub fn initial_inputs(
+    schedule: &Schedule,
+    mut data: impl FnMut(Rank, Chunk) -> Vec<f32>,
+) -> Vec<BufferStore> {
+    use crate::sched::CollectiveOp as Op;
+    let n = schedule.num_ranks;
+    let mut stores: Vec<BufferStore> = (0..n).map(|_| BufferStore::default()).collect();
+    match schedule.op {
+        Op::Broadcast { root } => {
+            let d = data(root, Chunk(0));
+            stores[root].seed(Chunk(0), ContribSet::singleton(root), d);
+        }
+        Op::Gather { .. } | Op::Allgather => {
+            for r in 0..n {
+                let d = data(r, Chunk(r as u32));
+                stores[r].seed(Chunk(r as u32), ContribSet::singleton(r), d);
+            }
+        }
+        Op::Scatter { root } => {
+            for c in 0..n {
+                let d = data(root, Chunk(c as u32));
+                stores[root].seed(Chunk(c as u32), ContribSet::singleton(root), d);
+            }
+        }
+        Op::AllToAll => {
+            for s in 0..n {
+                for dch in 0..n {
+                    let c = Chunk((s * n + dch) as u32);
+                    let d = data(s, c);
+                    stores[s].seed(c, ContribSet::singleton(s), d);
+                }
+            }
+        }
+        Op::Reduce { chunks, .. } | Op::Allreduce { chunks } => {
+            for r in 0..n {
+                for c in 0..chunks {
+                    let d = data(r, Chunk(c));
+                    stores[r].seed(Chunk(c), ContribSet::singleton(r), d);
+                }
+            }
+        }
+        Op::ReduceScatter => {
+            for r in 0..n {
+                for c in 0..n {
+                    let d = data(r, Chunk(c as u32));
+                    stores[r].seed(Chunk(c as u32), ContribSet::singleton(r), d);
+                }
+            }
+        }
+    }
+    stores
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{allreduce, alltoall, broadcast, gather, scatter};
+    use crate::sched::CollectiveOp as Op;
+    use crate::topology::{switched, Placement};
+
+    /// Deterministic data pattern per (rank, chunk).
+    fn pat(r: Rank, c: Chunk) -> Vec<f32> {
+        (0..4)
+            .map(|i| (r as f32) * 100.0 + (c.0 as f32) * 10.0 + i as f32)
+            .collect()
+    }
+
+    #[test]
+    fn broadcast_delivers_root_data() {
+        let c = switched(2, 4, 2);
+        let p = Placement::block(&c);
+        let s = broadcast::mc_aware(
+            &c,
+            &p,
+            3,
+            crate::collectives::TargetHeuristic::FirstFit,
+        );
+        let rep = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
+        let want = pat(3, Chunk(0));
+        for r in 0..8 {
+            assert_eq!(*rep.outputs[r].value(Chunk(0)).expect("chunk"), want, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn gather_collects_everyone() {
+        let c = switched(2, 3, 1);
+        let p = Placement::block(&c);
+        let s = gather::mc_aware(&c, &p, 0);
+        let rep = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
+        for src in 0..6usize {
+            let ch = Chunk(src as u32);
+            assert_eq!(*rep.outputs[0].value(ch).expect("chunk"), pat(src, ch));
+        }
+    }
+
+    #[test]
+    fn scatter_mc_aware_distributes() {
+        let c = switched(3, 2, 1);
+        let p = Placement::block(&c);
+        let s = scatter::mc_aware(&c, &p, 4);
+        let rep = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
+        for r in 0..6usize {
+            let ch = Chunk(r as u32);
+            assert_eq!(*rep.outputs[r].value(ch).expect("chunk"), pat(4, ch));
+        }
+    }
+
+    #[test]
+    fn alltoall_leader_aggregated_moves_blocks() {
+        let c = switched(3, 2, 1);
+        let p = Placement::block(&c);
+        let s = alltoall::leader_aggregated(&c, &p, 1);
+        let n = 6usize;
+        let rep = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
+        for d in 0..n {
+            for src in 0..n {
+                let ch = Chunk((src * n + d) as u32);
+                assert_eq!(*rep.outputs[d].value(ch).expect("block"), pat(src, ch));
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_sums() {
+        let c = switched(2, 4, 1);
+        let p = Placement::block(&c);
+        let s = allreduce::ring(&p);
+        let n = 8usize;
+        let rep = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
+        for ch in 0..n as u32 {
+            let want: Vec<f32> = (0..4)
+                .map(|i| (0..n).map(|r| pat(r, Chunk(ch))[i]).sum())
+                .collect();
+            for r in 0..n {
+                let got = rep.outputs[r].reduced_value(Chunk(ch), n).expect("sum");
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-2, "rank {r} chunk {ch}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_mc_allreduce_sums() {
+        let c = switched(4, 4, 2);
+        let p = Placement::block(&c);
+        let s = allreduce::hierarchical_mc(&c, &p);
+        let n = 16usize;
+        let chunks = match s.op {
+            Op::Allreduce { chunks } => chunks,
+            _ => unreachable!(),
+        };
+        let rep = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
+        for ch in 0..chunks {
+            let want: Vec<f32> = (0..4)
+                .map(|i| (0..n).map(|r| pat(r, Chunk(ch))[i]).sum())
+                .collect();
+            for r in 0..n {
+                let got = rep.outputs[r].reduced_value(Chunk(ch), n).expect("sum");
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-2, "rank {r} chunk {ch}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn latency_injection_slows_execution() {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let s = broadcast::binomial(&p, 0);
+        let fast = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero())
+            .unwrap()
+            .wall;
+        let slow_params = ExecParams {
+            ext_latency: std::time::Duration::from_millis(20),
+            ..ExecParams::zero()
+        };
+        let slow = run(&c, &p, &s, initial_inputs(&s, pat), &slow_params)
+            .unwrap()
+            .wall;
+        assert!(slow > fast + std::time::Duration::from_millis(10));
+    }
+
+    #[test]
+    fn corrupted_schedule_fails_fast() {
+        use crate::sched::{Payload, Round, Schedule, Xfer};
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(Op::Broadcast { root: 0 }, 4, "bad");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(2, 1, Payload::single(0, 0))],
+        });
+        let t = Instant::now();
+        assert!(run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).is_err());
+        assert!(t.elapsed() < std::time::Duration::from_secs(1), "no deadlock");
+    }
+}

@@ -1,0 +1,119 @@
+//! Injected cost parameters for the in-process executor.
+//!
+//! Zero by default (pure correctness / raw-speed runs). Non-zero values
+//! emulate a network in wall-clock time so that algorithmic differences
+//! (flat ring vs. hierarchical-mc allreduce, E8) are visible on a single
+//! host. Delays are implemented as spin-waits: at the microsecond scale
+//! OS sleep granularity would swamp the signal.
+
+use std::time::{Duration, Instant};
+
+/// Cost injection for [`super::run`].
+#[derive(Debug, Clone)]
+pub struct ExecParams {
+    /// One-way latency added to every external message.
+    pub ext_latency: Duration,
+    /// Send-side CPU cost per external message.
+    pub o_send: Duration,
+    /// Serialization cost per byte on external sends.
+    pub ext_byte_time: Duration,
+    /// Receive-side CPU cost per external message.
+    pub o_recv: Duration,
+    /// Cost of one shared-memory publication (R1 write).
+    pub o_write: Duration,
+    /// Assembly cost per byte on local reads (R1 read).
+    pub int_byte_time: Duration,
+}
+
+impl ExecParams {
+    /// No injected costs: as fast as the machine goes.
+    pub fn zero() -> Self {
+        Self {
+            ext_latency: Duration::ZERO,
+            o_send: Duration::ZERO,
+            ext_byte_time: Duration::ZERO,
+            o_recv: Duration::ZERO,
+            o_write: Duration::ZERO,
+            int_byte_time: Duration::ZERO,
+        }
+    }
+
+    /// Emulate a 2008-class gigabit LAN, scaled down 10x so experiments
+    /// finish quickly while preserving the external:internal cost ratio
+    /// (what the paper's model is about).
+    pub fn lan_scaled() -> Self {
+        Self {
+            ext_latency: Duration::from_micros(50),
+            o_send: Duration::from_micros(2),
+            ext_byte_time: Duration::from_nanos(9), // ~110 MB/s
+            o_recv: Duration::from_micros(2),
+            o_write: Duration::from_micros(1),
+            int_byte_time: Duration::from_nanos(0),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn spin_send(&self, bytes: usize) {
+        let d = self.o_send + self.ext_byte_time * bytes as u32;
+        spin(d);
+    }
+
+    #[inline]
+    pub(crate) fn spin_recv(&self) {
+        spin(self.o_recv);
+    }
+
+    #[inline]
+    pub(crate) fn spin_write(&self) {
+        spin(self.o_write);
+    }
+
+    #[inline]
+    pub(crate) fn spin_read(&self, bytes: usize) {
+        spin(self.int_byte_time * bytes as u32);
+    }
+
+    #[inline]
+    pub(crate) fn wait_until(&self, t: Instant) {
+        while Instant::now() < t {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[inline]
+fn spin(d: Duration) {
+    if d.is_zero() {
+        return;
+    }
+    let end = Instant::now() + d;
+    while Instant::now() < end {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_is_free() {
+        let p = ExecParams::zero();
+        let t = Instant::now();
+        p.spin_send(1 << 20);
+        p.spin_recv();
+        p.spin_write();
+        assert!(t.elapsed() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn spin_waits() {
+        let p = ExecParams {
+            o_send: Duration::from_millis(5),
+            ..ExecParams::zero()
+        };
+        let t = Instant::now();
+        p.spin_send(0);
+        assert!(t.elapsed() >= Duration::from_millis(5));
+    }
+}

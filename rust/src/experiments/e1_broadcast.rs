@@ -1,0 +1,119 @@
+//! E1 — "Broadcast to n processes traditionally requires O(log n)
+//! messages … Open MPI broadcasts to co-located processes with a single
+//! message" (§Issues): flat binomial over ranks vs hierarchical vs
+//! mc-aware broadcast across cluster sizes, priced in the multi-core
+//! model and timed by the simulator.
+
+use crate::collectives::{broadcast, TargetHeuristic};
+use crate::model::{legalize, Multicore};
+use crate::sim::{simulate, SimParams};
+use crate::topology::{switched, Placement};
+use crate::util::table::{fnum, ftime, Table};
+
+/// Summary for assertions: per (machines, cores) the external rounds of
+/// each algorithm and the simulated speedup of mc-aware over flat.
+pub struct Summary {
+    pub rows: Vec<RowSummary>,
+}
+
+pub struct RowSummary {
+    pub machines: usize,
+    pub cores: usize,
+    pub flat_ext: usize,
+    pub hier_ext: usize,
+    pub mc_ext: usize,
+    pub sim_speedup_mc_vs_flat: f64,
+}
+
+pub fn run(quick: bool) -> crate::Result<Summary> {
+    let sweep: Vec<(usize, usize)> = if quick {
+        vec![(4, 4), (16, 8)]
+    } else {
+        vec![
+            (2, 4),
+            (4, 4),
+            (8, 4),
+            (16, 4),
+            (4, 1),
+            (4, 8),
+            (4, 16),
+            (16, 8),
+            (32, 8),
+            (64, 8),
+        ]
+    };
+    let nics = 2;
+    let model = Multicore::default();
+    let params = SimParams::lan_cluster(64 << 10); // 64 KiB message
+    let mut table = Table::new(vec![
+        "machines", "cores", "ranks", "flat ext-rounds", "hier ext-rounds",
+        "mc ext-rounds", "flat sim", "hier sim", "mc sim", "mc speedup",
+    ]);
+    let mut rows = Vec::new();
+
+    for &(m, c) in &sweep {
+        let cl = switched(m, c, nics);
+        let pl = Placement::block(&cl);
+        let root = 0;
+
+        let flat = legalize(&model, &cl, &pl, &broadcast::binomial(&pl, root));
+        let hier = broadcast::hierarchical(&cl, &pl, root);
+        let mc = broadcast::mc_aware(&cl, &pl, root, TargetHeuristic::FirstFit);
+
+        let cf = model.cost_detail(&cl, &pl, &flat)?;
+        let ch = model.cost_detail(&cl, &pl, &hier)?;
+        let cm = model.cost_detail(&cl, &pl, &mc)?;
+        let tf = simulate(&cl, &pl, &flat, &params)?.t_end;
+        let th = simulate(&cl, &pl, &hier, &params)?.t_end;
+        let tm = simulate(&cl, &pl, &mc, &params)?.t_end;
+
+        table.row(vec![
+            m.to_string(),
+            c.to_string(),
+            (m * c).to_string(),
+            cf.ext_rounds.to_string(),
+            ch.ext_rounds.to_string(),
+            cm.ext_rounds.to_string(),
+            ftime(tf),
+            ftime(th),
+            ftime(tm),
+            format!("{}x", fnum(tf / tm)),
+        ]);
+        rows.push(RowSummary {
+            machines: m,
+            cores: c,
+            flat_ext: cf.ext_rounds,
+            hier_ext: ch.ext_rounds,
+            mc_ext: cm.ext_rounds,
+            sim_speedup_mc_vs_flat: tf / tm,
+        });
+    }
+
+    println!("E1: broadcast across cluster sizes (k={nics} NICs, 64 KiB)");
+    table.print();
+    println!(
+        "claim check: mc-aware ≤ hierarchical ≤ flat external rounds on \
+         every row; speedup grows with cores/machine.\n"
+    );
+    Ok(Summary { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claims_hold() {
+        let s = run(true).unwrap();
+        for r in &s.rows {
+            assert!(
+                r.mc_ext <= r.hier_ext && r.hier_ext <= r.flat_ext,
+                "ordering violated: {} / {} / {}",
+                r.mc_ext,
+                r.hier_ext,
+                r.flat_ext
+            );
+            assert!(r.sim_speedup_mc_vs_flat > 1.0);
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! E2 — rule R3: a machine of degree k drives k external links in
+//! parallel. mc-aware broadcast dissemination shrinks from log₂M toward
+//! log_{k+1}M external rounds as NICs are added; the flat baseline cannot
+//! use them at all (single sender process bottleneck).
+
+use crate::collectives::{broadcast, TargetHeuristic};
+use crate::model::{legalize, Multicore};
+use crate::sim::{simulate, SimParams};
+use crate::topology::{switched, Placement};
+use crate::util::table::{ftime, Table};
+
+pub struct Summary {
+    /// (nics, mc external rounds, simulated time).
+    pub rows: Vec<(usize, usize, f64)>,
+}
+
+pub fn run(quick: bool) -> crate::Result<Summary> {
+    let machines = if quick { 16 } else { 64 };
+    let cores = 8;
+    let nic_sweep = [1usize, 2, 4, 8];
+    let model = Multicore::default();
+    let params = SimParams::lan_cluster(64 << 10);
+
+    let mut table = Table::new(vec![
+        "NICs/machine", "mc ext-rounds", "mc sim", "flat ext-rounds", "flat sim",
+    ]);
+    let mut rows = Vec::new();
+    for &k in &nic_sweep {
+        let cl = switched(machines, cores, k);
+        let pl = Placement::block(&cl);
+        let mc = broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit);
+        let flat = legalize(&model, &cl, &pl, &broadcast::binomial(&pl, 0));
+        let cm = model.cost_detail(&cl, &pl, &mc)?;
+        let cf = model.cost_detail(&cl, &pl, &flat)?;
+        let tm = simulate(&cl, &pl, &mc, &params)?.t_end;
+        let tf = simulate(&cl, &pl, &flat, &params)?.t_end;
+        table.row(vec![
+            k.to_string(),
+            cm.ext_rounds.to_string(),
+            ftime(tm),
+            cf.ext_rounds.to_string(),
+            ftime(tf),
+        ]);
+        rows.push((k, cm.ext_rounds, tm));
+    }
+    println!("E2: parallel-NIC broadcast, {machines} machines x {cores} cores");
+    table.print();
+    println!("claim check: mc external rounds fall as k grows (R3).\n");
+    Ok(Summary { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_nics_fewer_rounds() {
+        let s = run(true).unwrap();
+        let r1 = s.rows.first().unwrap();
+        let r8 = s.rows.last().unwrap();
+        assert!(r8.1 < r1.1, "rounds: k=8 {} !< k=1 {}", r8.1, r1.1);
+        assert!(r8.2 < r1.2, "time: k=8 {} !< k=1 {}", r8.2, r1.2);
+        // Monotone non-increasing across the sweep.
+        for w in s.rows.windows(2) {
+            assert!(w[1].1 <= w[0].1);
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Experiment harnesses E1–E8: one function per quantitative claim in the
+//! paper (the paper has no numbered tables/figures; DESIGN.md maps each
+//! claim to an experiment id). Each harness prints the table the paper's
+//! evaluation would contain and returns machine-checkable summary numbers
+//! that the integration tests and benches assert on.
+
+pub mod ablations;
+pub mod e1_broadcast;
+pub mod e2_nics;
+pub mod e3_gather;
+pub mod e4_heuristics;
+pub mod e5_alltoall;
+pub mod e6_validation;
+pub mod e7_allreduce;
+pub mod e8_train;
+
+/// Run an experiment by id ("e1".."e8" or "all"). `quick` trims sweeps
+/// for CI-speed runs.
+pub fn run(id: &str, quick: bool, artifact_dir: &str) -> crate::Result<()> {
+    match id {
+        "e1" => {
+            e1_broadcast::run(quick)?;
+        }
+        "e2" => {
+            e2_nics::run(quick)?;
+        }
+        "e3" => {
+            e3_gather::run(quick)?;
+        }
+        "e4" => {
+            e4_heuristics::run(quick)?;
+        }
+        "e5" => {
+            e5_alltoall::run(quick)?;
+        }
+        "e6" => {
+            e6_validation::run(quick)?;
+        }
+        "e7" => {
+            e7_allreduce::run(quick)?;
+        }
+        "e8" => {
+            e8_train::run(quick, artifact_dir)?;
+        }
+        "ablations" => {
+            ablations::run(quick)?;
+        }
+        "all" => {
+            for id in ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "ablations"] {
+                println!("\n================ {} ================", id.to_uppercase());
+                run(id, quick, artifact_dir)?;
+            }
+        }
+        other => anyhow::bail!("unknown experiment {other:?} (e1..e8 or all)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! # mcomm — communication modeling for clusters of multi-core machines
+//!
+//! `mcomm` reproduces, as a deployable framework, the system described in
+//! *“A Model for Communication in Clusters of Multi-core Machines”*
+//! (Christine Task, Arun Chauhan, 2008). The paper extends the round-based
+//! *telephone* cost model with three rules for multi-core machines:
+//!
+//! 1. **Read-Is-Not-Write** — writing a value to any subset of co-located
+//!    processes is a single constant-time operation (shared memory); reading
+//!    from co-located processes costs per-process assembly time.
+//! 2. **Local edges are short, global edges are long** — intra-machine
+//!    communication happens "within" a round; only network rounds dominate.
+//! 3. **Parallel communication** — a machine with *k* NICs may drive all
+//!    *k* external links simultaneously, but its processes *share* those
+//!    *k* NICs.
+//!
+//! The crate is organized around one idea: **schedules are data**. A
+//! collective algorithm is a pure function from a [`topology::Cluster`] and
+//! [`topology::Placement`] to a [`sched::Schedule`]. The same schedule value
+//! is then
+//!
+//! * **validated** against a cost model's legality rules ([`model`]),
+//! * **costed** in rounds ([`model`]) or continuous time ([`sim`]),
+//! * **symbolically executed** to prove collective semantics
+//!   ([`sched::symexec`]),
+//! * **run over real bytes** by the in-process cluster executor ([`exec`]),
+//! * and **driven from the coordinator** for end-to-end workloads such as
+//!   data-parallel training with AOT-compiled JAX compute ([`coordinator`],
+//!   [`runtime`]).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! reproduction of every quantitative claim in the paper.
+
+pub mod collectives;
+pub mod coordinator;
+pub mod exec;
+pub mod experiments;
+pub mod model;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod topology;
+pub mod trace;
+pub mod util;
+
+/// Global process rank (0-based, dense).
+pub type Rank = usize;
+/// Machine index within a [`topology::Cluster`].
+pub type MachineId = usize;
+
+/// Crate-wide error type.
+pub type Error = anyhow::Error;
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

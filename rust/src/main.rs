@@ -1,0 +1,260 @@
+//! `mcomm` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   experiment <e1..e8|ablations|all> [--quick]  reproduce a paper claim
+//!   train [--steps N] [--algo A] [...]       end-to-end data-parallel run
+//!   simulate --op OP --algo A [...]          one collective, sim-timed
+//!   trace --workload W --suite S [...]       workload-trace replay
+//!   validate                                 artifact + runtime smoke test
+//!
+//! Hand-rolled argument parsing: the offline build environment has no
+//! clap; see Cargo.toml.
+
+use std::collections::HashMap;
+
+use mcomm::collectives::TargetHeuristic;
+use mcomm::coordinator::{
+    AllreduceAlgo, AlltoallAlgo, BroadcastAlgo, Communicator, GatherAlgo, Trainer,
+    TrainerCfg,
+};
+use mcomm::exec::ExecParams;
+use mcomm::sim::SimParams;
+use mcomm::topology::switched;
+use mcomm::trace::{replay, Suite, Trace};
+use mcomm::util::table::{ftime, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Split args into positionals and --key[=value] flags.
+fn parse(args: &[String]) -> (Vec<&str>, HashMap<&str, &str>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                flags.insert(k, v);
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(stripped, args[i + 1].as_str());
+                i += 1;
+            } else {
+                flags.insert(stripped, "true");
+            }
+        } else {
+            pos.push(a);
+        }
+        i += 1;
+    }
+    (pos, flags)
+}
+
+fn flag_usize(flags: &HashMap<&str, &str>, key: &str, default: usize) -> usize {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn artifact_dir(flags: &HashMap<&str, &str>) -> String {
+    flags
+        .get("artifacts")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
+}
+
+fn dispatch(args: &[String]) -> mcomm::Result<()> {
+    let (pos, flags) = parse(args);
+    match pos.first().copied() {
+        Some("experiment") => {
+            let id = pos.get(1).copied().unwrap_or("all");
+            let quick = flags.contains_key("quick");
+            mcomm::experiments::run(id, quick, &artifact_dir(&flags))
+        }
+        Some("train") => cmd_train(&flags),
+        Some("simulate") => cmd_simulate(&flags),
+        Some("trace") => cmd_trace(&flags),
+        Some("validate") => cmd_validate(&flags),
+        _ => {
+            println!(
+                "mcomm — communication modeling for multi-core clusters\n\
+                 \n\
+                 usage:\n\
+                 \x20 mcomm experiment <e1..e8|ablations|all> [--quick]\n\
+                 \x20 mcomm train [--steps N] [--algo ring|hier|recdoub|raben]\n\
+                 \x20        [--machines M --cores C --nics K] [--lan] [--lr F]\n\
+                 \x20 mcomm simulate --op bcast|gather|alltoall|allreduce\n\
+                 \x20        [--algo NAME] [--machines M --cores C --nics K] [--bytes B]\n\
+                 \x20 mcomm trace [--workload training|shuffle|mixed] [--suite flat|mc]\n\
+                 \x20 mcomm validate [--artifacts DIR]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn parse_allreduce(name: &str) -> mcomm::Result<AllreduceAlgo> {
+    Ok(match name {
+        "ring" => AllreduceAlgo::Ring,
+        "hier" | "hierarchical-mc" => AllreduceAlgo::HierarchicalMc,
+        "recdoub" | "recursive-doubling" => AllreduceAlgo::RecursiveDoubling,
+        "raben" | "rabenseifner" => AllreduceAlgo::Rabenseifner,
+        o => anyhow::bail!("unknown allreduce algo {o:?}"),
+    })
+}
+
+fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
+    let cfg = TrainerCfg {
+        machines: flag_usize(flags, "machines", 2),
+        cores: flag_usize(flags, "cores", 4),
+        nics: flag_usize(flags, "nics", 2),
+        steps: flag_usize(flags, "steps", 200),
+        lr: flags.get("lr").and_then(|v| v.parse().ok()).unwrap_or(0.5),
+        algo: parse_allreduce(flags.get("algo").copied().unwrap_or("hier"))?,
+        exec_params: if flags.contains_key("lan") {
+            ExecParams::lan_scaled()
+        } else {
+            ExecParams::zero()
+        },
+        seed: flag_usize(flags, "seed", 7) as u64,
+        log_every: flag_usize(flags, "log-every", 10),
+    };
+    let trainer = Trainer::new(&artifact_dir(flags), &cfg)?;
+    println!(
+        "training byte-LM ({} params) on {} workers, allreduce={}",
+        trainer.num_params(),
+        trainer.workers(),
+        cfg.algo.name()
+    );
+    let rep = trainer.run(&cfg)?;
+    println!(
+        "done: loss {:.4} -> {:.4} | compute {} | comm {} | {:.2} steps/s",
+        rep.losses[0],
+        rep.final_loss(),
+        ftime(rep.compute_time.as_secs_f64()),
+        ftime(rep.comm_time.as_secs_f64()),
+        rep.steps_per_sec()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
+    let comm = Communicator::block(switched(
+        flag_usize(flags, "machines", 4),
+        flag_usize(flags, "cores", 4),
+        flag_usize(flags, "nics", 2),
+    ));
+    let op = flags.get("op").copied().unwrap_or("bcast");
+    let algo = flags.get("algo").copied().unwrap_or("");
+    let bytes = flag_usize(flags, "bytes", 64 << 10) as u64;
+    let schedules = match op {
+        "bcast" | "broadcast" => vec![
+            ("binomial", comm.broadcast(BroadcastAlgo::Binomial, 0)),
+            ("hierarchical", comm.broadcast(BroadcastAlgo::Hierarchical, 0)),
+            (
+                "mc-aware",
+                comm.broadcast(BroadcastAlgo::McAware(TargetHeuristic::CoverageAware), 0),
+            ),
+        ],
+        "gather" => vec![
+            ("inverse-binomial", comm.gather(GatherAlgo::InverseBinomial, 0)),
+            ("mc-aware", comm.gather(GatherAlgo::McAware, 0)),
+        ],
+        "alltoall" => vec![
+            ("pairwise", comm.alltoall(AlltoallAlgo::Pairwise)),
+            ("bruck", comm.alltoall(AlltoallAlgo::Bruck)),
+            ("leader-aggregated", comm.alltoall(AlltoallAlgo::LeaderAggregated(2))),
+        ],
+        "allreduce" => vec![
+            ("ring", comm.allreduce(AllreduceAlgo::Ring)?),
+            ("hierarchical-mc", comm.allreduce(AllreduceAlgo::HierarchicalMc)?),
+        ],
+        o => anyhow::bail!("unknown op {o:?}"),
+    };
+    let mut table = Table::new(vec!["algorithm", "rounds", "ext msgs", "sim time"]);
+    for (name, s) in schedules {
+        if !algo.is_empty() && !name.contains(algo) {
+            continue;
+        }
+        let legal = mcomm::model::legalize(
+            &mcomm::model::Multicore::default(),
+            &comm.cluster,
+            &comm.placement,
+            &s,
+        );
+        let chunks = legal
+            .rounds
+            .iter()
+            .flat_map(|r| r.xfers.iter())
+            .map(|x| x.payload.num_chunks())
+            .max()
+            .unwrap_or(1) as u64;
+        let params = SimParams::lan_cluster((bytes / chunks.max(1)).max(1));
+        let rep = comm.simulate(&legal, &params)?;
+        table.row(vec![
+            name.to_string(),
+            legal.num_rounds().to_string(),
+            rep.ext_messages.to_string(),
+            ftime(rep.t_end),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_trace(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
+    let comm = Communicator::block(switched(
+        flag_usize(flags, "machines", 4),
+        flag_usize(flags, "cores", 4),
+        flag_usize(flags, "nics", 2),
+    ));
+    let trace = match flags.get("workload").copied().unwrap_or("training") {
+        "training" => Trace::training(flag_usize(flags, "steps", 50), 4 << 20),
+        "shuffle" => Trace::shuffle(flag_usize(flags, "steps", 20), 16 << 10, 16 << 20),
+        "mixed" => Trace::mixed(flag_usize(flags, "steps", 30), 42),
+        o => anyhow::bail!("unknown workload {o:?}"),
+    };
+    let params = SimParams::lan_cluster(1);
+    let mut table = Table::new(vec!["suite", "total time", "ext msgs"]);
+    for suite in [Suite::Flat, Suite::McAware] {
+        if let Some(want) = flags.get("suite") {
+            if !suite.name().contains(want) {
+                continue;
+            }
+        }
+        let rep = replay(&comm, &trace, suite, &params)?;
+        table.row(vec![
+            suite.name().to_string(),
+            ftime(rep.total_time),
+            rep.ext_messages.to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_validate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
+    let dir = artifact_dir(flags);
+    println!("validating artifacts in {dir}");
+    let rt = mcomm::runtime::Runtime::cpu(&dir)?;
+    println!("platform: {}", rt.platform());
+    println!("model: {} params", rt.meta.num_params);
+    for name in ["grad", "apply", "combine", "pack"] {
+        let t = std::time::Instant::now();
+        rt.load(name)?;
+        println!("  {name}.hlo.txt: compiled in {:?}", t.elapsed());
+    }
+    // One end-to-end step.
+    let cfg = TrainerCfg { steps: 2, log_every: 0, ..Default::default() };
+    let trainer = Trainer::new(&dir, &cfg)?;
+    let rep = trainer.run(&cfg)?;
+    println!(
+        "2-step smoke: loss {:.4} -> {:.4} OK",
+        rep.losses[0],
+        rep.final_loss()
+    );
+    Ok(())
+}

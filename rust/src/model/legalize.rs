@@ -1,0 +1,200 @@
+//! Legalization: make an arbitrary schedule legal under the multi-core
+//! model by splitting oversubscribed rounds.
+//!
+//! Flat, multi-core-oblivious algorithms (binomial broadcast over ranks,
+//! pairwise all-to-all, …) routinely schedule more concurrent network
+//! messages than a machine's NICs can carry. On a real cluster those
+//! messages simply serialize; `legalize` models that serialization in the
+//! round domain so that round-based costs of flat baselines are honest
+//! rather than impossible.
+//!
+//! Splitting a round never breaks data-flow validity: all transfers in the
+//! original round read pre-round state, so any partition into ordered
+//! sub-rounds still has every send reading state available before the
+//! original round began.
+
+use std::collections::HashMap;
+
+use super::multicore::{Duplex, Multicore};
+use crate::sched::{Round, Schedule, Xfer, XferKind};
+use crate::topology::{Cluster, Interconnect, Placement};
+
+/// Split every round of `schedule` into the minimum greedy number of
+/// sub-rounds that respect the multi-core model's per-round caps
+/// (per-process send/recv, per-machine NIC budget, per-edge capacity).
+/// Local operations are unconstrained in count and stay in the first
+/// sub-round they fit.
+pub fn legalize(
+    model: &Multicore,
+    cluster: &Cluster,
+    placement: &Placement,
+    schedule: &Schedule,
+) -> Schedule {
+    let mut out = Schedule::new(
+        schedule.op,
+        schedule.num_ranks,
+        format!("{}+legalized", schedule.algo),
+    );
+    let mut caps = SubRoundCaps::new(cluster, placement.num_ranks(), model.duplex);
+    for round in &schedule.rounds {
+        let mut pending: Vec<Xfer> = round.xfers.clone();
+        while !pending.is_empty() {
+            caps.reset();
+            let mut this_round = Vec::new();
+            let mut rest = Vec::new();
+            for x in pending.drain(..) {
+                if caps.admit(cluster, placement, &x) {
+                    this_round.push(x);
+                } else {
+                    rest.push(x);
+                }
+            }
+            debug_assert!(!this_round.is_empty(), "caps must admit at least one xfer");
+            out.push_round(Round { xfers: this_round });
+            pending = rest;
+        }
+    }
+    out
+}
+
+/// Running resource usage for one sub-round under construction.
+/// Flat arrays + an epoch counter so `reset` is O(1) and the hot `admit`
+/// path never touches a hash map (§Perf).
+struct SubRoundCaps {
+    duplex: Duplex,
+    graph: bool,
+    epoch: u32,
+    proc_send: Vec<u32>, // epoch tag; == epoch means "used this sub-round"
+    proc_recv: Vec<u32>,
+    mach_send: Vec<usize>,
+    mach_recv: Vec<usize>,
+    edge_use: HashMap<(usize, usize), u32>, // graph-only, usually small
+}
+
+impl SubRoundCaps {
+    fn new(cluster: &Cluster, num_ranks: usize, duplex: Duplex) -> Self {
+        Self {
+            duplex,
+            graph: matches!(cluster.interconnect, Interconnect::Graph { .. }),
+            epoch: 0,
+            proc_send: vec![0; num_ranks],
+            proc_recv: vec![0; num_ranks],
+            mach_send: vec![0; cluster.num_machines()],
+            mach_recv: vec![0; cluster.num_machines()],
+            edge_use: HashMap::new(),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.epoch += 1;
+        self.mach_send.fill(0);
+        self.mach_recv.fill(0);
+        if self.graph {
+            self.edge_use.clear();
+        }
+    }
+
+    /// Try to place `x` in this sub-round; true on success.
+    fn admit(&mut self, cluster: &Cluster, placement: &Placement, x: &Xfer) -> bool {
+        match x.kind {
+            XferKind::LocalWrite | XferKind::LocalRead => true, // uncapped
+            XferKind::External => {
+                let dst = x.dsts[0];
+                let (ms, md) = (placement.machine_of(x.src), placement.machine_of(dst));
+                let (ks, kd) = (cluster.degree(ms), cluster.degree(md));
+                if self.proc_send[x.src] == self.epoch || self.proc_recv[dst] == self.epoch
+                {
+                    return false;
+                }
+                let fits_nics = match self.duplex {
+                    Duplex::Full => self.mach_send[ms] < ks && self.mach_recv[md] < kd,
+                    Duplex::Half => {
+                        self.mach_send[ms] + self.mach_recv[ms] < ks
+                            && self.mach_send[md] + self.mach_recv[md] < kd
+                    }
+                };
+                if !fits_nics {
+                    return false;
+                }
+                if self.graph && self.edge_use.get(&(ms, md)) == Some(&self.epoch) {
+                    return false;
+                }
+                self.proc_send[x.src] = self.epoch;
+                self.proc_recv[dst] = self.epoch;
+                self.mach_send[ms] += 1;
+                self.mach_recv[md] += 1;
+                if self.graph {
+                    self.edge_use.insert((ms, md), self.epoch);
+                }
+                true
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CostModel;
+    use crate::sched::{symexec, CollectiveOp, Payload};
+    use crate::topology::switched;
+
+    /// A flat round with 4 external sends from a 1-NIC machine must split
+    /// into 4 legal rounds.
+    #[test]
+    fn splits_oversubscribed_round() {
+        let c = switched(2, 4, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Allgather, 8, "flat");
+        s.push_round(Round {
+            xfers: (0..4)
+                .map(|i| Xfer::external(i, 4 + i, Payload::single(i as u32, i)))
+                .collect(),
+        });
+        let model = Multicore::default();
+        assert!(model.validate(&c, &p, &s).is_err());
+        let legal = legalize(&model, &c, &p, &s);
+        model.validate(&c, &p, &legal).unwrap();
+        assert_eq!(legal.num_rounds(), 4);
+        assert_eq!(legal.external_messages(), 4);
+    }
+
+    /// Legalization preserves data-flow validity end-to-end.
+    #[test]
+    fn preserves_semantics() {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        // Hand-built broadcast that oversubscribes round 2.
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "flat");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 2, Payload::single(0, 0))],
+        });
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::local_write(0, vec![1], Payload::single(0, 0)),
+                Xfer::local_write(2, vec![3], Payload::single(0, 0)),
+            ],
+        });
+        let model = Multicore::default();
+        let legal = legalize(&model, &c, &p, &s);
+        symexec::verify(&legal).unwrap();
+        model.validate(&c, &p, &legal).unwrap();
+    }
+
+    /// Already-legal schedules pass through with identical round structure.
+    #[test]
+    fn legal_schedule_unchanged_in_shape() {
+        let c = switched(2, 2, 2);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Allgather, 4, "ok");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 2, Payload::single(0, 0)),
+                Xfer::external(1, 3, Payload::single(1, 1)),
+            ],
+        });
+        let legal = legalize(&Multicore::default(), &c, &p, &s);
+        assert_eq!(legal.num_rounds(), 1);
+        assert_eq!(legal.rounds[0].xfers.len(), 2);
+    }
+}

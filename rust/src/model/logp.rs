@@ -1,0 +1,139 @@
+//! LogP model (Culler et al., PPoPP 1993) — the continuous baseline the
+//! paper contrasts with.
+//!
+//! Four parameters: latency `L`, per-message CPU overhead `o`, gap `g`
+//! (inverse per-process bandwidth), and processor count `P` (implicit in
+//! the schedule). LogP deliberately ignores topology — every process pair
+//! is one `L` apart — and therefore also ignores multi-core structure:
+//! co-located processes are as far apart as remote ones, and NIC sharing
+//! does not exist. Costing a schedule under LogP runs it through the
+//! continuous engine with flat parameters ([`SimParams::flat_logp`]).
+
+use super::CostModel;
+use crate::sched::{Schedule, XferKind};
+use crate::sim::{simulate, SimParams};
+use crate::topology::{Cluster, Placement};
+
+/// LogP parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct LogP {
+    pub l: f64,
+    pub o: f64,
+    pub g: f64,
+    /// Bytes per schedule chunk (LogP classically prices fixed-size
+    /// messages; the byte size only matters through `g`-spacing here).
+    pub chunk_bytes: u64,
+}
+
+impl Default for LogP {
+    /// Parameters of the same order as the original paper's measurements
+    /// (µs-scale LAN).
+    fn default() -> Self {
+        Self { l: 10e-6, o: 2e-6, g: 4e-6, chunk_bytes: 1024 }
+    }
+}
+
+impl LogP {
+    pub fn params(&self) -> SimParams {
+        SimParams::flat_logp(self.l, self.o, self.g, self.chunk_bytes)
+    }
+}
+
+impl CostModel for LogP {
+    fn name(&self) -> &'static str {
+        "logp"
+    }
+
+    /// LogP accepts any shape-valid schedule: it has no NIC or edge
+    /// constraints (the network is an opaque full crossbar), and one-to-
+    /// many local writes are simply priced as writes.
+    fn validate(
+        &self,
+        _cluster: &Cluster,
+        placement: &Placement,
+        schedule: &Schedule,
+    ) -> crate::Result<()> {
+        schedule.check_shape(placement)?;
+        // LogP has no shared-memory concept: flag schedules that lean on
+        // one-to-many writes so model comparisons stay honest.
+        for round in &schedule.rounds {
+            for x in &round.xfers {
+                if x.kind == XferKind::LocalWrite && x.dsts.len() > 1 {
+                    anyhow::bail!(
+                        "LogP cannot express one-to-many shared-memory writes \
+                         (rank {} -> {} dsts); legalize or price under the \
+                         multicore model instead",
+                        x.src,
+                        x.dsts.len()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn cost(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        schedule: &Schedule,
+    ) -> crate::Result<f64> {
+        self.validate(cluster, placement, schedule)?;
+        Ok(simulate(cluster, placement, schedule, &self.params())?.t_end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{CollectiveOp, Payload, Round, Schedule, Xfer};
+    use crate::topology::{switched, Placement};
+
+    #[test]
+    fn single_message_costs_two_o_plus_l() {
+        let c = switched(2, 1, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 2, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 1, Payload::single(0, 0))],
+        });
+        let m = LogP::default();
+        let cost = m.cost(&c, &p, &s).unwrap();
+        let expect = m.o + m.l + m.o;
+        assert!((cost - expect).abs() < 1e-12, "{cost} vs {expect}");
+    }
+
+    #[test]
+    fn rejects_shared_memory_writes() {
+        let c = switched(1, 3, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 3, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::local_write(0, vec![1, 2], Payload::single(0, 0))],
+        });
+        assert!(LogP::default().validate(&c, &p, &s).is_err());
+    }
+
+    #[test]
+    fn binomial_timing_overlaps_sends() {
+        // Under LogP with o << L, a root can pipeline sends every g while
+        // the first message is still in flight: 2 sends from the root cost
+        // o + g + L + o, not 2*(2o+L).
+        let c = switched(3, 1, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 3, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 1, Payload::single(0, 0))],
+        });
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 2, Payload::single(0, 0))],
+        });
+        let m = LogP::default();
+        let cost = m.cost(&c, &p, &s).unwrap();
+        let expect = m.o.max(m.g) + m.o + m.l + m.o; // second send dominates
+        assert!(
+            (cost - expect).abs() < 1e-9,
+            "pipelined sends: {cost} vs {expect}"
+        );
+    }
+}

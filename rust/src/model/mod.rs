@@ -1,0 +1,62 @@
+//! Communication cost models.
+//!
+//! Three models, one interface:
+//!
+//! * [`telephone::Telephone`] — the classic round-based model the paper
+//!   starts from: every process is a node, every transfer occupies both
+//!   endpoints for a whole round, topology-aware, one message per edge.
+//! * [`logp::LogP`] — Culler et al.'s continuous model (latency `L`,
+//!   overhead `o`, gap `g`, `P` processors), topology-oblivious and
+//!   multi-core-oblivious. Costed by running the schedule through the
+//!   continuous-time engine in [`crate::sim`] with flat parameters.
+//! * [`multicore::Multicore`] — **the paper's model**: the telephone model
+//!   extended with rules R1 (read-is-not-write), R2 (local edges are
+//!   short) and R3 (parallel NICs). See the module docs for the exact
+//!   round semantics we adopt.
+//!
+//! A model does two things with a [`crate::sched::Schedule`]: **validate**
+//! (is every round legal under my rules?) and **cost** (how long does it
+//! take?). Schedules built for one model can be *legalized* for another
+//! ([`legalize`]) — this is how flat, multi-core-oblivious baselines are
+//! priced under the multi-core model: their oversubscribed rounds get
+//! serialized exactly as a real NIC-constrained cluster would serialize
+//! them.
+
+pub mod legalize;
+pub mod logp;
+pub mod multicore;
+pub mod telephone;
+
+pub use legalize::legalize;
+pub use logp::LogP;
+pub use multicore::{Duplex, McCost, Multicore};
+pub use telephone::Telephone;
+
+use crate::sched::Schedule;
+use crate::topology::{Cluster, Placement};
+
+/// Common interface over the three cost models.
+pub trait CostModel {
+    /// Stable short name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Is every round of `schedule` legal under this model's rules on this
+    /// cluster? (Data-flow validity is checked separately by
+    /// [`crate::sched::symexec`].)
+    fn validate(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        schedule: &Schedule,
+    ) -> crate::Result<()>;
+
+    /// Scalar cost of the schedule (rounds for round-based models, seconds
+    /// for continuous ones). Implementations may legalize internally; the
+    /// returned cost always refers to a legal execution.
+    fn cost(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        schedule: &Schedule,
+    ) -> crate::Result<f64>;
+}

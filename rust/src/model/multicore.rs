@@ -1,0 +1,361 @@
+//! **The paper's model**: the round-based telephone model extended with
+//! the three multi-core rules.
+//!
+//! ## Concrete round semantics
+//!
+//! The paper states the rules qualitatively; we adopt the following
+//! concrete semantics (documented here because every validator, cost
+//! figure and experiment depends on them):
+//!
+//! * All transfers within a round are concurrent and read *pre-round*
+//!   state ([`crate::sched::symexec`] enforces this data-flow rule
+//!   globally — it is model-independent).
+//!
+//! * **R3 (parallel NICs).** Per round, a machine with degree `k` may
+//!   source at most `k` external messages and sink at most `k` external
+//!   messages ([`Duplex::Full`]; under [`Duplex::Half`] the *sum* is
+//!   capped at `k`). Each process may source at most one and sink at most
+//!   one external message per round — processes assemble/consume messages,
+//!   NICs move them. On graph interconnects each machine-edge carries at
+//!   most one message per direction per round.
+//!
+//! * **R1 (read-is-not-write).** A [`XferKind::LocalWrite`] delivers its
+//!   payload to *any subset* of co-located ranks as one constant-time
+//!   operation ("in writing, a machine acts as a node"). A
+//!   [`XferKind::LocalRead`] moves one message from one co-located source
+//!   to one destination that must spend assembly time on it ("in reading,
+//!   a machine acts as a clique").
+//!
+//! * **R2 (local edges are short).** Intra-machine operations never make a
+//!   round *longer*: a round containing external transfers costs one
+//!   network round regardless of how much local work rides along. Rounds
+//!   containing *only* local work cost `alpha` (≪ 1) per unit of local
+//!   work, where a round's local work is the maximum number of local
+//!   actions (writes issued + reads assembled) performed by any single
+//!   process — local actions by different processes are parallel, local
+//!   actions by one process are serial.
+//!
+//! Cost is reported as [`McCost`]: external rounds, internal work units,
+//! and the scalar `ext + alpha * int`.
+
+use std::collections::HashMap;
+
+use super::CostModel;
+use crate::sched::{Schedule, XferKind};
+use crate::topology::{Cluster, Placement};
+
+/// NIC duplexing assumption (R3 cap applies per direction or in sum).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Duplex {
+    /// A NIC sends and receives simultaneously: ≤ k sends *and* ≤ k
+    /// receives per machine per round.
+    #[default]
+    Full,
+    /// Sends + receives share the k NICs: their sum is capped at k.
+    Half,
+}
+
+/// The paper's multi-core cluster model.
+#[derive(Debug, Clone, Copy)]
+pub struct Multicore {
+    pub duplex: Duplex,
+    /// Relative length of one unit of intra-machine work vs. one network
+    /// round (the paper folds this "extra cost" into the round estimate;
+    /// we keep it explicit). Typical value: 0.05–0.2.
+    pub alpha: f64,
+}
+
+impl Default for Multicore {
+    fn default() -> Self {
+        Self { duplex: Duplex::Full, alpha: 0.1 }
+    }
+}
+
+/// Round-model cost under [`Multicore`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct McCost {
+    /// Rounds containing at least one network message.
+    pub ext_rounds: usize,
+    /// Total internal work units across internal-only rounds (per round:
+    /// max local actions by any single process).
+    pub int_units: usize,
+    /// Total network messages (bandwidth proxy).
+    pub ext_messages: usize,
+}
+
+impl McCost {
+    /// Scalar cost at a given `alpha`.
+    pub fn total(&self, alpha: f64) -> f64 {
+        self.ext_rounds as f64 + alpha * self.int_units as f64
+    }
+}
+
+impl Multicore {
+    /// Validate one round's resource usage; returns per-proc local action
+    /// counts for cost accounting.
+    fn check_round(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        ri: usize,
+        round: &crate::sched::Round,
+    ) -> crate::Result<HashMap<usize, usize>> {
+        let m_count = cluster.num_machines();
+        let mut proc_send: HashMap<usize, usize> = HashMap::new();
+        let mut proc_recv: HashMap<usize, usize> = HashMap::new();
+        let mut mach_send = vec![0usize; m_count];
+        let mut mach_recv = vec![0usize; m_count];
+        let mut edge_use: HashMap<(usize, usize), usize> = HashMap::new();
+        let mut local_actions: HashMap<usize, usize> = HashMap::new();
+
+        for x in &round.xfers {
+            match x.kind {
+                XferKind::External => {
+                    let dst = x.dsts[0];
+                    let (ms, md) =
+                        (placement.machine_of(x.src), placement.machine_of(dst));
+                    if !cluster.connected(ms, md) {
+                        anyhow::bail!(
+                            "round {ri}: machines {ms} and {md} are not connected"
+                        );
+                    }
+                    *proc_send.entry(x.src).or_default() += 1;
+                    *proc_recv.entry(dst).or_default() += 1;
+                    mach_send[ms] += 1;
+                    mach_recv[md] += 1;
+                    *edge_use.entry((ms, md)).or_default() += 1;
+                }
+                XferKind::LocalWrite => {
+                    // One constant-time action for the writer (R1);
+                    // readers of shared memory are free.
+                    *local_actions.entry(x.src).or_default() += 1;
+                }
+                XferKind::LocalRead => {
+                    // Assembly cost lands on the reader (R1).
+                    *local_actions.entry(x.dsts[0]).or_default() += 1;
+                }
+            }
+        }
+
+        for (&r, &n) in &proc_send {
+            if n > 1 {
+                anyhow::bail!("round {ri}: rank {r} sources {n} external messages");
+            }
+        }
+        for (&r, &n) in &proc_recv {
+            if n > 1 {
+                anyhow::bail!("round {ri}: rank {r} sinks {n} external messages");
+            }
+        }
+        for m in 0..m_count {
+            let k = cluster.degree(m);
+            match self.duplex {
+                Duplex::Full => {
+                    if mach_send[m] > k {
+                        anyhow::bail!(
+                            "round {ri}: machine {m} sends {} messages over {k} NICs",
+                            mach_send[m]
+                        );
+                    }
+                    if mach_recv[m] > k {
+                        anyhow::bail!(
+                            "round {ri}: machine {m} receives {} messages over {k} NICs",
+                            mach_recv[m]
+                        );
+                    }
+                }
+                Duplex::Half => {
+                    if mach_send[m] + mach_recv[m] > k {
+                        anyhow::bail!(
+                            "round {ri}: machine {m} moves {} messages over {k} \
+                             half-duplex NICs",
+                            mach_send[m] + mach_recv[m]
+                        );
+                    }
+                }
+            }
+        }
+        if matches!(cluster.interconnect, crate::topology::Interconnect::Graph { .. }) {
+            for (&(a, b), &n) in &edge_use {
+                if n > 1 {
+                    anyhow::bail!(
+                        "round {ri}: edge {a}->{b} carries {n} messages"
+                    );
+                }
+            }
+        }
+        Ok(local_actions)
+    }
+
+    /// Full cost breakdown (validates as it goes).
+    pub fn cost_detail(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        schedule: &Schedule,
+    ) -> crate::Result<McCost> {
+        schedule.check_shape(placement)?;
+        let mut ext_rounds = 0usize;
+        let mut int_units = 0usize;
+        for (ri, round) in schedule.rounds.iter().enumerate() {
+            let local_actions = self.check_round(cluster, placement, ri, round)?;
+            if round.has_external() {
+                // R2: local work rides inside a network round for free.
+                ext_rounds += 1;
+            } else {
+                // Internal-only round: costs the longest per-proc chain.
+                int_units += local_actions.values().copied().max().unwrap_or(0);
+            }
+        }
+        Ok(McCost {
+            ext_rounds,
+            int_units,
+            ext_messages: schedule.external_messages(),
+        })
+    }
+}
+
+impl CostModel for Multicore {
+    fn name(&self) -> &'static str {
+        "multicore"
+    }
+
+    fn validate(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        schedule: &Schedule,
+    ) -> crate::Result<()> {
+        self.cost_detail(cluster, placement, schedule).map(|_| ())
+    }
+
+    fn cost(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        schedule: &Schedule,
+    ) -> crate::Result<f64> {
+        Ok(self.cost_detail(cluster, placement, schedule)?.total(self.alpha))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{CollectiveOp, Payload, Round, Schedule, Xfer};
+    use crate::topology::{switched, Placement};
+
+    fn cluster(nics: usize) -> (Cluster, Placement) {
+        let c = switched(2, 4, nics);
+        let p = Placement::block(&c);
+        (c, p)
+    }
+
+    #[test]
+    fn local_write_to_whole_machine_is_one_action() {
+        let (c, p) = cluster(1);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 8, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::local_write(0, vec![1, 2, 3], Payload::single(0, 0))],
+        });
+        let cost = Multicore::default().cost_detail(&c, &p, &s).unwrap();
+        assert_eq!(cost.ext_rounds, 0);
+        assert_eq!(cost.int_units, 1); // R1: one write covers the machine
+    }
+
+    #[test]
+    fn reads_cost_per_message() {
+        let (c, p) = cluster(1);
+        // Root 0 assembles from 3 co-located ranks in one round.
+        let mut s = Schedule::new(CollectiveOp::Gather { root: 0 }, 8, "t");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::local_read(1, 0, Payload::single(1, 1)),
+                Xfer::local_read(2, 0, Payload::single(2, 2)),
+                Xfer::local_read(3, 0, Payload::single(3, 3)),
+            ],
+        });
+        let cost = Multicore::default().cost_detail(&c, &p, &s).unwrap();
+        assert_eq!(cost.int_units, 3); // R1: reading is per-process
+    }
+
+    #[test]
+    fn nic_cap_enforced() {
+        let (c, p) = cluster(1); // 1 NIC per machine
+        let mut s = Schedule::new(CollectiveOp::Allgather, 8, "t");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 4, Payload::single(0, 0)),
+                Xfer::external(1, 5, Payload::single(1, 1)),
+            ],
+        });
+        assert!(Multicore::default().validate(&c, &p, &s).is_err());
+
+        let (c2, p2) = cluster(2); // 2 NICs: now legal
+        Multicore::default().validate(&c2, &p2, &s).unwrap();
+    }
+
+    #[test]
+    fn full_vs_half_duplex() {
+        let (c, p) = cluster(1);
+        // Machine 0 sends one and receives one message in the same round.
+        let mut s = Schedule::new(CollectiveOp::Allgather, 8, "t");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 4, Payload::single(0, 0)),
+                Xfer::external(5, 1, Payload::single(5, 5)),
+            ],
+        });
+        Multicore { duplex: Duplex::Full, alpha: 0.1 }
+            .validate(&c, &p, &s)
+            .unwrap();
+        assert!(Multicore { duplex: Duplex::Half, alpha: 0.1 }
+            .validate(&c, &p, &s)
+            .is_err());
+    }
+
+    #[test]
+    fn proc_single_send_enforced() {
+        let (c, p) = cluster(4);
+        let mut s = Schedule::new(CollectiveOp::Allgather, 8, "t");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 4, Payload::single(0, 0)),
+                Xfer::external(0, 5, Payload::single(0, 0)),
+            ],
+        });
+        assert!(Multicore::default().validate(&c, &p, &s).is_err());
+    }
+
+    #[test]
+    fn local_work_rides_free_in_network_rounds() {
+        let (c, p) = cluster(1);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 8, "t");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 4, Payload::single(0, 0)),
+                Xfer::local_write(0, vec![1, 2, 3], Payload::single(0, 0)),
+            ],
+        });
+        let cost = Multicore::default().cost_detail(&c, &p, &s).unwrap();
+        assert_eq!(cost.ext_rounds, 1);
+        assert_eq!(cost.int_units, 0);
+        assert!((cost.total(0.1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edge_capacity_on_graph() {
+        use crate::topology::line;
+        let c = line(2, 2, 2);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Allgather, 4, "t");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 2, Payload::single(0, 0)),
+                Xfer::external(1, 3, Payload::single(1, 1)),
+            ],
+        });
+        // 2 NICs but a single physical edge 0-1: second message rejected.
+        assert!(Multicore::default().validate(&c, &p, &s).is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! The classic telephone model.
+//!
+//! Processes are nodes in an undirected graph; each round, a node may take
+//! part in at most **one** call (as caller or callee), and each edge
+//! carries at most one call. Cost = number of rounds. The model is
+//! completely blind to multi-core structure: co-located processes are
+//! simply adjacent nodes, and a "call" between them costs a full round
+//! like any other — exactly the blindness the paper criticizes.
+//!
+//! Adjacency on a cluster: two processes are adjacent iff they are
+//! co-located or their machines are connected. (On a switch this makes the
+//! process graph complete.)
+
+use std::collections::HashSet;
+
+use super::CostModel;
+use crate::sched::{Schedule, XferKind};
+use crate::topology::{Cluster, Placement};
+
+/// Telephone model (unit-weight edges, one call per node per round).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Telephone;
+
+impl CostModel for Telephone {
+    fn name(&self) -> &'static str {
+        "telephone"
+    }
+
+    fn validate(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        schedule: &Schedule,
+    ) -> crate::Result<()> {
+        schedule.check_shape(placement)?;
+        for (ri, round) in schedule.rounds.iter().enumerate() {
+            let mut busy: HashSet<usize> = HashSet::new();
+            let mut edges: HashSet<(usize, usize)> = HashSet::new();
+            for x in &round.xfers {
+                if x.kind == XferKind::LocalWrite && x.dsts.len() != 1 {
+                    anyhow::bail!(
+                        "round {ri}: telephone model has no one-to-many writes \
+                         (rank {} writes to {} dsts)",
+                        x.src,
+                        x.dsts.len()
+                    );
+                }
+                let dst = x.dsts[0];
+                // Adjacency: co-located or connected machines.
+                if !placement.colocated(x.src, dst)
+                    && !cluster.connected(
+                        placement.machine_of(x.src),
+                        placement.machine_of(dst),
+                    )
+                {
+                    anyhow::bail!(
+                        "round {ri}: no edge between ranks {} and {dst}",
+                        x.src
+                    );
+                }
+                // One call per node per round.
+                if !busy.insert(x.src) {
+                    anyhow::bail!("round {ri}: rank {} in two calls", x.src);
+                }
+                if !busy.insert(dst) {
+                    anyhow::bail!("round {ri}: rank {dst} in two calls");
+                }
+                // One call per edge per round.
+                let e = (x.src.min(dst), x.src.max(dst));
+                if !edges.insert(e) {
+                    anyhow::bail!("round {ri}: edge {e:?} used twice");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn cost(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        schedule: &Schedule,
+    ) -> crate::Result<f64> {
+        self.validate(cluster, placement, schedule)?;
+        Ok(schedule.num_rounds() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{CollectiveOp, Payload, Round, Schedule, Xfer};
+    use crate::topology::{switched, Placement};
+
+    fn setup() -> (Cluster, Placement) {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        (c, p)
+    }
+
+    #[test]
+    fn accepts_pairwise_rounds() {
+        let (c, p) = setup();
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 2, Payload::single(0, 0))],
+        });
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::local_read(0, 1, Payload::single(0, 0)),
+                Xfer::local_read(2, 3, Payload::single(0, 0)),
+            ],
+        });
+        Telephone.validate(&c, &p, &s).unwrap();
+        assert_eq!(Telephone.cost(&c, &p, &s).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn rejects_node_in_two_calls() {
+        let (c, p) = setup();
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "t");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 2, Payload::single(0, 0)),
+                Xfer::local_read(0, 1, Payload::single(0, 0)),
+            ],
+        });
+        assert!(Telephone.validate(&c, &p, &s).is_err());
+    }
+
+    #[test]
+    fn rejects_one_to_many_write() {
+        let (c, p) = setup();
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::local_write(0, vec![1], Payload::single(0, 0))],
+        });
+        // Single-dst local write is fine (it's just a call)...
+        Telephone.validate(&c, &p, &s).unwrap();
+        // ...multi-dst is not.
+        let mut s2 = Schedule::new(CollectiveOp::Broadcast { root: 2 }, 4, "t");
+        s2.push_round(Round {
+            xfers: vec![Xfer::local_write(2, vec![3], Payload::single(0, 2))],
+        });
+        s2.rounds[0].xfers[0].dsts = vec![3, 3];
+        assert!(Telephone.validate(&c, &p, &s2).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_edge_on_graph() {
+        use crate::topology::line;
+        let c = line(3, 1, 1); // machines 0-1-2, one proc each
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 3, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 2, Payload::single(0, 0))],
+        });
+        assert!(Telephone.validate(&c, &p, &s).is_err());
+    }
+}

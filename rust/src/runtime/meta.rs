@@ -1,0 +1,70 @@
+//! Artifact metadata (`artifacts/meta.json`), written by
+//! `python/compile/aot.py`.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Shapes and model config shared between the AOT exporter and the Rust
+/// loader.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub num_params: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    /// Leading dimension of the combine artifact's input stack.
+    pub workers: usize,
+    pub pack_rows: usize,
+    pub pack_cols: usize,
+}
+
+impl ArtifactMeta {
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let j = Json::parse(text)?;
+        Ok(Self {
+            num_params: j.req_usize("num_params")?,
+            batch: j.req_usize("batch")?,
+            seq_len: j.req_usize("seq_len")?,
+            vocab: j.req_usize("vocab")?,
+            d_model: j.req_usize("d_model")?,
+            n_heads: j.req_usize("n_heads")?,
+            n_layers: j.req_usize("n_layers")?,
+            d_ff: j.req_usize("d_ff")?,
+            workers: j.req_usize("workers")?,
+            pack_rows: j.req_usize("pack_rows")?,
+            pack_cols: j.req_usize("pack_cols")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_exporter_output() {
+        let text = r#"{
+          "num_params": 469504, "batch": 16, "seq_len": 64, "vocab": 256,
+          "d_model": 128, "n_heads": 4, "n_layers": 2, "d_ff": 512,
+          "workers": 8, "pack_rows": 64, "pack_cols": 4096
+        }"#;
+        let m = ArtifactMeta::parse(text).unwrap();
+        assert_eq!(m.num_params, 469504);
+        assert_eq!(m.workers, 8);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        assert!(ArtifactMeta::parse(r#"{"num_params": 1}"#).is_err());
+    }
+}

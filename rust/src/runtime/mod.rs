@@ -1,0 +1,186 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the Rust hot path. Python never runs here — `make artifacts`
+//! lowered the JAX/Pallas computations once; this module compiles the
+//! text with the in-process XLA CPU client and executes with concrete
+//! buffers.
+
+mod meta;
+
+pub use meta::ArtifactMeta;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+/// A PJRT client plus the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub meta: ArtifactMeta,
+}
+
+/// One compiled computation.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// CPU client over `dir` (expects `meta.json` plus `*.hlo.txt` files
+    /// produced by `make artifacts`).
+    pub fn cpu(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let meta = ArtifactMeta::load(&meta_path)
+            .with_context(|| format!("loading {meta_path:?}; run `make artifacts`"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir, meta })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> crate::Result<Artifact> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Artifact { name: name.to_string(), exe })
+    }
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns the flattened output tuple
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// f32 slice -> 1-D literal.
+pub fn lit_f32(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// f32 slice -> 2-D literal.
+pub fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> crate::Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// i32 slice -> 2-D literal.
+pub fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> crate::Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_f32_scalar(x: f32) -> xla::Literal {
+    xla::Literal::from(x)
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests need `artifacts/` (built by `make artifacts`); they are
+    //! skipped gracefully when it is absent so `cargo test` works in a
+    //! fresh checkout.
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("meta.json").exists() {
+            eprintln!("skipping runtime test: {dir}/meta.json missing");
+            return None;
+        }
+        Some(Runtime::cpu(dir).expect("runtime"))
+    }
+
+    #[test]
+    fn meta_loads() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.meta.num_params > 100_000);
+        assert_eq!(rt.meta.batch, 16);
+    }
+
+    #[test]
+    fn apply_artifact_is_sgd() {
+        let Some(rt) = runtime() else { return };
+        let apply = rt.load("apply").unwrap();
+        let p = rt.meta.num_params;
+        let params = vec![1.0f32; p];
+        let grads = vec![0.5f32; p];
+        let out = apply
+            .run(&[lit_f32(&params), lit_f32(&grads), lit_f32_scalar(2.0)])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let vals = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(vals.len(), p);
+        assert!(vals.iter().all(|&v| (v - 0.0).abs() < 1e-6)); // 1 - 2*0.5
+    }
+
+    #[test]
+    fn combine_artifact_sums_shards() {
+        let Some(rt) = runtime() else { return };
+        let combine = rt.load("combine").unwrap();
+        let (k, p) = (rt.meta.workers, rt.meta.num_params);
+        let mut stack = vec![0.0f32; k * p];
+        for w in 0..k {
+            for i in 0..p {
+                stack[w * p + i] = (w + 1) as f32;
+            }
+        }
+        let want: f32 = (1..=k).map(|w| w as f32).sum();
+        let out = combine.run(&[lit_f32_2d(&stack, k, p).unwrap()]).unwrap();
+        let vals = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(vals.len(), p);
+        assert!(vals.iter().all(|&v| (v - want).abs() < 1e-4));
+    }
+
+    #[test]
+    fn pack_artifact_transposes() {
+        let Some(rt) = runtime() else { return };
+        let pack = rt.load("pack").unwrap();
+        let (r, c) = (rt.meta.pack_rows, rt.meta.pack_cols);
+        let data: Vec<f32> = (0..r * c).map(|i| i as f32).collect();
+        let out = pack.run(&[lit_f32_2d(&data, r, c).unwrap()]).unwrap();
+        let vals = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(vals.len(), r * c);
+        // out[j, i] == in[i, j]
+        assert_eq!(vals[1 * r + 0], data[0 * c + 1]);
+        assert_eq!(vals[(c - 1) * r + (r - 1)], data[(r - 1) * c + (c - 1)]);
+    }
+
+    #[test]
+    fn grad_artifact_runs_and_loss_is_sane() {
+        let Some(rt) = runtime() else { return };
+        let grad = rt.load("grad").unwrap();
+        let p = rt.meta.num_params;
+        let mut rng = crate::util::Rng::seed_from_u64(0);
+        let params: Vec<f32> =
+            (0..p).map(|_| (rng.gen_f64() as f32 - 0.5) * 0.05).collect();
+        let tokens: Vec<i32> = (0..rt.meta.batch * (rt.meta.seq_len + 1))
+            .map(|_| rng.gen_range(0..rt.meta.vocab) as i32)
+            .collect();
+        let out = grad
+            .run(&[
+                lit_f32(&params),
+                lit_i32_2d(&tokens, rt.meta.batch, rt.meta.seq_len + 1).unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let loss = out[0].get_first_element::<f32>().unwrap();
+        let grads = out[1].to_vec::<f32>().unwrap();
+        assert!(loss.is_finite() && loss > 1.0 && loss < 12.0, "loss={loss}");
+        assert_eq!(grads.len(), p);
+        assert!(grads.iter().all(|g| g.is_finite()));
+        let norm: f32 = grads.iter().map(|g| g * g).sum::<f32>().sqrt();
+        assert!(norm > 1e-4, "gradient should be nonzero, norm={norm}");
+    }
+}

@@ -1,0 +1,320 @@
+//! Compact rank-set used to track which ranks' contributions are folded
+//! into a chunk.
+//!
+//! Perf note (§Perf): contribution sets are cloned on every transfer by
+//! the schedule builders, the symbolic executor and the real executor —
+//! tens of thousands of times per schedule. Sets over ranks `< 256` are
+//! therefore stored **inline** (4 × u64, no heap allocation; clone is a
+//! 32-byte memcpy) and only larger clusters spill to a heap vector. This
+//! cut ring-allreduce schedule construction ~4× and symbolic
+//! verification ~3× (see EXPERIMENTS.md §Perf).
+
+use crate::Rank;
+
+const INLINE_WORDS: usize = 4; // ranks 0..256 stay inline
+
+#[derive(Debug, Clone)]
+enum Repr {
+    Inline([u64; INLINE_WORDS]),
+    Heap(Vec<u64>),
+}
+
+/// Set of ranks, implemented as a word-packed bitset (inline below 256
+/// ranks).
+#[derive(Debug, Clone)]
+pub struct ContribSet {
+    repr: Repr,
+}
+
+impl Default for ContribSet {
+    fn default() -> Self {
+        Self { repr: Repr::Inline([0; INLINE_WORDS]) }
+    }
+}
+
+impl ContribSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn singleton(r: Rank) -> Self {
+        let mut s = Self::new();
+        s.insert(r);
+        s
+    }
+
+    /// Set containing ranks `0..n`.
+    pub fn full(n: usize) -> Self {
+        let mut s = Self::new();
+        if n == 0 {
+            return s;
+        }
+        let words = n.div_ceil(64);
+        s.ensure_words(words);
+        let w = s.words_mut();
+        for i in 0..words {
+            w[i] = u64::MAX;
+        }
+        let extra = words * 64 - n;
+        if extra > 0 {
+            w[words - 1] >>= extra;
+        }
+        s
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = Rank>>(it: I) -> Self {
+        let mut s = Self::new();
+        for r in it {
+            s.insert(r);
+        }
+        s
+    }
+
+    #[inline]
+    fn words(&self) -> &[u64] {
+        match &self.repr {
+            Repr::Inline(w) => w,
+            Repr::Heap(v) => v,
+        }
+    }
+
+    #[inline]
+    fn words_mut(&mut self) -> &mut [u64] {
+        match &mut self.repr {
+            Repr::Inline(w) => w,
+            Repr::Heap(v) => v,
+        }
+    }
+
+    /// Guarantee at least `n` words of backing storage.
+    fn ensure_words(&mut self, n: usize) {
+        if n <= self.words().len() {
+            return;
+        }
+        match &mut self.repr {
+            Repr::Inline(w) if n <= INLINE_WORDS => {
+                let _ = w;
+            }
+            Repr::Inline(w) => {
+                let mut v = w.to_vec();
+                v.resize(n, 0);
+                self.repr = Repr::Heap(v);
+            }
+            Repr::Heap(v) => v.resize(n, 0),
+        }
+    }
+
+    pub fn insert(&mut self, r: Rank) {
+        let (w, b) = (r / 64, r % 64);
+        self.ensure_words(w + 1);
+        self.words_mut()[w] |= 1u64 << b;
+    }
+
+    pub fn contains(&self, r: Rank) -> bool {
+        let (w, b) = (r / 64, r % 64);
+        self.words().get(w).is_some_and(|word| word & (1u64 << b) != 0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.words().iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words().iter().all(|&w| w == 0)
+    }
+
+    /// Do `self` and `other` share any rank?
+    #[inline]
+    pub fn intersects(&self, other: &Self) -> bool {
+        self.words()
+            .iter()
+            .zip(other.words().iter())
+            .any(|(a, b)| a & b != 0)
+    }
+
+    /// Is `self` a subset of `other`?
+    #[inline]
+    pub fn is_subset(&self, other: &Self) -> bool {
+        let ow = other.words();
+        self.words().iter().enumerate().all(|(i, &w)| {
+            let o = ow.get(i).copied().unwrap_or(0);
+            w & !o == 0
+        })
+    }
+
+    /// In-place union.
+    pub fn union_with(&mut self, other: &Self) {
+        self.ensure_words(other.significant_words());
+        let sw = self.words_mut();
+        for (i, &w) in other.words().iter().enumerate() {
+            if w != 0 {
+                sw[i] |= w;
+            }
+        }
+    }
+
+    pub fn union(&self, other: &Self) -> Self {
+        let mut out = self.clone();
+        out.union_with(other);
+        out
+    }
+
+    /// Number of words up to the last non-zero one.
+    fn significant_words(&self) -> usize {
+        let w = self.words();
+        w.iter().rposition(|&x| x != 0).map_or(0, |i| i + 1)
+    }
+
+    /// Iterate members in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = Rank> + '_ {
+        self.words().iter().enumerate().flat_map(|(wi, &w)| {
+            (0..64).filter_map(move |b| {
+                if w & (1u64 << b) != 0 {
+                    Some(wi * 64 + b)
+                } else {
+                    None
+                }
+            })
+        })
+    }
+}
+
+// Semantic equality: trailing zero words are insignificant (an inline set
+// and a heap set with the same members are equal).
+impl PartialEq for ContribSet {
+    fn eq(&self, other: &Self) -> bool {
+        let n = self.significant_words();
+        if n != other.significant_words() {
+            return false;
+        }
+        self.words()[..n] == other.words()[..n]
+    }
+}
+
+impl Eq for ContribSet {}
+
+impl std::hash::Hash for ContribSet {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        let n = self.significant_words();
+        self.words()[..n].hash(state);
+    }
+}
+
+impl std::fmt::Display for ContribSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{{")?;
+        for (i, r) in self.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{r}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops() {
+        let mut s = ContribSet::new();
+        assert!(s.is_empty());
+        s.insert(3);
+        s.insert(70);
+        s.insert(3);
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(3));
+        assert!(s.contains(70));
+        assert!(!s.contains(4));
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![3, 70]);
+    }
+
+    #[test]
+    fn full_and_subset() {
+        let f = ContribSet::full(130);
+        assert_eq!(f.len(), 130);
+        assert!(f.contains(0) && f.contains(129) && !f.contains(130));
+        let s = ContribSet::from_iter([0, 64, 129]);
+        assert!(s.is_subset(&f));
+        assert!(!f.is_subset(&s));
+        assert!(s.is_subset(&s));
+    }
+
+    #[test]
+    fn full_exact_word_boundary() {
+        let f = ContribSet::full(128);
+        assert_eq!(f.len(), 128);
+        assert!(!f.contains(128));
+        let f64 = ContribSet::full(64);
+        assert_eq!(f64.len(), 64);
+    }
+
+    #[test]
+    fn union_and_intersect() {
+        let a = ContribSet::from_iter([1, 65]);
+        let b = ContribSet::from_iter([2, 65]);
+        assert!(a.intersects(&b));
+        let c = ContribSet::from_iter([2, 66]);
+        assert!(!a.intersects(&c));
+        let u = a.union(&c);
+        assert_eq!(u.iter().collect::<Vec<_>>(), vec![1, 2, 65, 66]);
+    }
+
+    #[test]
+    fn subset_with_longer_words() {
+        let a = ContribSet::from_iter([200]);
+        let b = ContribSet::from_iter([1]);
+        assert!(!a.is_subset(&b));
+        assert!(b.is_subset(&ContribSet::full(2)));
+    }
+
+    #[test]
+    fn spills_beyond_inline_capacity() {
+        // Ranks above 255 force heap storage; semantics unchanged.
+        let mut s = ContribSet::singleton(3);
+        s.insert(1000);
+        assert!(s.contains(3) && s.contains(1000));
+        assert_eq!(s.len(), 2);
+        let t = ContribSet::from_iter([3, 1000]);
+        assert_eq!(s, t);
+        // Inline vs heap equality.
+        let inline = ContribSet::singleton(5);
+        let mut heap = ContribSet::singleton(999);
+        assert_ne!(inline, heap);
+        heap = ContribSet::singleton(5);
+        heap.insert(999);
+        assert!(inline.is_subset(&heap));
+    }
+
+    #[test]
+    fn equality_ignores_representation() {
+        let mut big = ContribSet::singleton(300);
+        big.insert(2);
+        // Remove 300 indirectly is impossible; build another heap set.
+        let mut other = ContribSet::singleton(2);
+        other.insert(300);
+        assert_eq!(big, other);
+        // A set that spilled to heap but holds only small ranks equals
+        // its inline twin (trailing zero words are insignificant).
+        let mut spilled = ContribSet::singleton(300);
+        spilled.insert(2);
+        let trimmed = ContribSet::from_iter(spilled.iter().filter(|&r| r < 64));
+        assert_eq!(trimmed, ContribSet::singleton(2));
+    }
+
+    #[test]
+    fn hash_consistent_with_eq() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(ContribSet::from_iter([1, 2, 3]));
+        assert!(set.contains(&ContribSet::from_iter([1, 2, 3])));
+    }
+
+    #[test]
+    fn display() {
+        let s = ContribSet::from_iter([0, 2]);
+        assert_eq!(s.to_string(), "{0,2}");
+    }
+}

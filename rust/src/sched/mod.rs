@@ -1,0 +1,388 @@
+//! Round-based communication schedules — the crate's central data
+//! structure.
+//!
+//! A [`Schedule`] is an explicit, machine-checkable plan for a collective
+//! operation: a sequence of rounds, each containing transfers. Collective
+//! algorithms *build* schedules ([`crate::collectives`]), cost models
+//! *validate and price* them ([`crate::model`]), the simulator *times*
+//! them ([`crate::sim`]), the symbolic executor *proves* them correct
+//! ([`symexec`]), and the in-process executor *runs* them over real bytes
+//! ([`crate::exec`]).
+//!
+//! Transfers carry explicit payloads: sets of ([`Chunk`], [`ContribSet`])
+//! pairs. A chunk is an op-defined unit of data (e.g. "rank 3's
+//! contribution" for gather, "segment 7 of the vector" for allreduce); the
+//! contribution set records which ranks' data has been folded into the
+//! chunk — this is what lets the symbolic executor prove that a reduction
+//! schedule neither drops nor double-counts any rank.
+
+pub mod contrib;
+pub mod symexec;
+
+pub use contrib::ContribSet;
+
+
+use crate::topology::Placement;
+use crate::Rank;
+
+/// Identifier of an op-defined unit of data.
+///
+/// Meaning per op (with `P` ranks):
+/// * `Broadcast`: single chunk `0`.
+/// * `Gather`/`Allgather`/`Scatter`: chunk `r` = rank `r`'s slot.
+/// * `AllToAll`: chunk `s * P + d` = the block rank `s` sends to rank `d`.
+/// * `Reduce`/`Allreduce`/`ReduceScatter`: chunk `c` = segment `c` of the
+///   vector being reduced (`num_chunks` segments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Chunk(pub u32);
+
+/// The collective operation a schedule implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveOp {
+    Broadcast { root: Rank },
+    Gather { root: Rank },
+    Scatter { root: Rank },
+    Allgather,
+    AllToAll,
+    /// Reduction to `root` over `chunks` segments.
+    Reduce { root: Rank, chunks: u32 },
+    /// Allreduce over `chunks` segments.
+    Allreduce { chunks: u32 },
+    /// Reduce-scatter: rank `r` ends with fully-reduced chunk `r`
+    /// (requires `chunks == P`).
+    ReduceScatter,
+}
+
+impl CollectiveOp {
+    /// Does this op combine contributions (sum-like semantics)?
+    /// Reduce-type ops forbid overlapping contribution merges
+    /// (double-counting); data-type ops have singleton contributions and
+    /// tolerate duplicate delivery.
+    pub fn is_reduction(&self) -> bool {
+        matches!(
+            self,
+            CollectiveOp::Reduce { .. }
+                | CollectiveOp::Allreduce { .. }
+                | CollectiveOp::ReduceScatter
+        )
+    }
+
+    /// Short, stable name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveOp::Broadcast { .. } => "broadcast",
+            CollectiveOp::Gather { .. } => "gather",
+            CollectiveOp::Scatter { .. } => "scatter",
+            CollectiveOp::Allgather => "allgather",
+            CollectiveOp::AllToAll => "alltoall",
+            CollectiveOp::Reduce { .. } => "reduce",
+            CollectiveOp::Allreduce { .. } => "allreduce",
+            CollectiveOp::ReduceScatter => "reduce_scatter",
+        }
+    }
+}
+
+/// What a transfer moves: one or more chunks, each with the set of ranks
+/// whose contribution it embodies.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Payload {
+    pub items: Vec<(Chunk, ContribSet)>,
+}
+
+impl Payload {
+    pub fn one(chunk: Chunk, contrib: ContribSet) -> Self {
+        Self { items: vec![(chunk, contrib)] }
+    }
+
+    pub fn single(chunk: u32, rank: Rank) -> Self {
+        Self::one(Chunk(chunk), ContribSet::singleton(rank))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Number of chunks carried.
+    pub fn num_chunks(&self) -> usize {
+        self.items.len()
+    }
+}
+
+/// The kind of a transfer under the paper's model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XferKind {
+    /// Crosses the network; occupies a NIC on both machines (rule R3) and
+    /// one round (rule R2: "global edges are long").
+    External,
+    /// Rule R1, write side: the source writes the payload into shared
+    /// memory where *any subset* of co-located ranks observes it — one
+    /// constant-time operation regardless of `dsts.len()`.
+    LocalWrite,
+    /// Rule R1, read side: the destination assembles one message from one
+    /// co-located source; per-message cost ("in reading, a machine acts as
+    /// a clique").
+    LocalRead,
+}
+
+/// One transfer: `src` moves `payload` to `dsts`.
+///
+/// Invariants (checked by [`Schedule::check_shape`]):
+/// * `External` and `LocalRead` have exactly one destination.
+/// * `LocalWrite`/`LocalRead` endpoints are co-located; `External`
+///   endpoints are not.
+/// * `payload` is non-empty; `dsts` non-empty and free of `src`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Xfer {
+    pub src: Rank,
+    pub dsts: Vec<Rank>,
+    pub kind: XferKind,
+    pub payload: Payload,
+}
+
+impl Xfer {
+    pub fn external(src: Rank, dst: Rank, payload: Payload) -> Self {
+        Self { src, dsts: vec![dst], kind: XferKind::External, payload }
+    }
+
+    pub fn local_write(src: Rank, dsts: Vec<Rank>, payload: Payload) -> Self {
+        Self { src, dsts, kind: XferKind::LocalWrite, payload }
+    }
+
+    pub fn local_read(src: Rank, dst: Rank, payload: Payload) -> Self {
+        Self { src, dsts: vec![dst], kind: XferKind::LocalRead, payload }
+    }
+}
+
+/// One round of concurrent transfers.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Round {
+    pub xfers: Vec<Xfer>,
+}
+
+impl Round {
+    pub fn is_empty(&self) -> bool {
+        self.xfers.is_empty()
+    }
+
+    /// Does the round contain any network transfer?
+    pub fn has_external(&self) -> bool {
+        self.xfers.iter().any(|x| x.kind == XferKind::External)
+    }
+}
+
+/// A complete schedule for one collective over `num_ranks` ranks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub op: CollectiveOp,
+    pub num_ranks: usize,
+    pub rounds: Vec<Round>,
+    /// Human-readable algorithm name ("binomial", "mc-aware", …).
+    pub algo: String,
+}
+
+impl Schedule {
+    pub fn new(op: CollectiveOp, num_ranks: usize, algo: impl Into<String>) -> Self {
+        Self { op, num_ranks, rounds: Vec::new(), algo: algo.into() }
+    }
+
+    /// Append a round (dropped if empty).
+    pub fn push_round(&mut self, round: Round) {
+        if !round.is_empty() {
+            self.rounds.push(round);
+        }
+    }
+
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Rounds containing at least one network transfer.
+    pub fn external_rounds(&self) -> usize {
+        self.rounds.iter().filter(|r| r.has_external()).count()
+    }
+
+    /// Rounds containing only intra-machine operations.
+    pub fn internal_rounds(&self) -> usize {
+        self.num_rounds() - self.external_rounds()
+    }
+
+    /// Total number of network messages.
+    pub fn external_messages(&self) -> usize {
+        self.rounds
+            .iter()
+            .map(|r| {
+                r.xfers
+                    .iter()
+                    .filter(|x| x.kind == XferKind::External)
+                    .count()
+            })
+            .sum()
+    }
+
+    /// Total number of intra-machine operations (writes + reads).
+    pub fn local_ops(&self) -> usize {
+        self.rounds
+            .iter()
+            .map(|r| {
+                r.xfers
+                    .iter()
+                    .filter(|x| x.kind != XferKind::External)
+                    .count()
+            })
+            .sum()
+    }
+
+    /// Total transfers of any kind.
+    pub fn total_xfers(&self) -> usize {
+        self.rounds.iter().map(|r| r.xfers.len()).sum()
+    }
+
+    /// Structural sanity independent of any cost model: rank bounds,
+    /// destination arity per kind, co-location of local ops, non-empty
+    /// payloads.
+    pub fn check_shape(&self, placement: &Placement) -> crate::Result<()> {
+        if placement.num_ranks() != self.num_ranks {
+            anyhow::bail!(
+                "schedule is for {} ranks, placement has {}",
+                self.num_ranks,
+                placement.num_ranks()
+            );
+        }
+        for (ri, round) in self.rounds.iter().enumerate() {
+            for x in &round.xfers {
+                if x.src >= self.num_ranks {
+                    anyhow::bail!("round {ri}: src {} out of range", x.src);
+                }
+                if x.dsts.is_empty() {
+                    anyhow::bail!("round {ri}: transfer from {} has no destination", x.src);
+                }
+                if x.payload.is_empty() {
+                    anyhow::bail!("round {ri}: empty payload from {}", x.src);
+                }
+                for &d in &x.dsts {
+                    if d >= self.num_ranks {
+                        anyhow::bail!("round {ri}: dst {d} out of range");
+                    }
+                    if d == x.src {
+                        anyhow::bail!("round {ri}: self-transfer at rank {d}");
+                    }
+                }
+                match x.kind {
+                    XferKind::External => {
+                        if x.dsts.len() != 1 {
+                            anyhow::bail!("round {ri}: external transfer with multiple dsts");
+                        }
+                        if placement.colocated(x.src, x.dsts[0]) {
+                            anyhow::bail!(
+                                "round {ri}: external transfer between co-located ranks \
+                                 {} and {}",
+                                x.src,
+                                x.dsts[0]
+                            );
+                        }
+                    }
+                    XferKind::LocalWrite => {
+                        for &d in &x.dsts {
+                            if !placement.colocated(x.src, d) {
+                                anyhow::bail!(
+                                    "round {ri}: local write from {} to remote rank {d}",
+                                    x.src
+                                );
+                            }
+                        }
+                    }
+                    XferKind::LocalRead => {
+                        if x.dsts.len() != 1 {
+                            anyhow::bail!("round {ri}: local read with multiple dsts");
+                        }
+                        if !placement.colocated(x.src, x.dsts[0]) {
+                            anyhow::bail!(
+                                "round {ri}: local read across machines ({} -> {})",
+                                x.src,
+                                x.dsts[0]
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{switched, Placement};
+
+    fn two_by_two() -> Placement {
+        Placement::block(&switched(2, 2, 1))
+    }
+
+    #[test]
+    fn shape_accepts_valid_mixed_round() {
+        let p = two_by_two();
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "t");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 2, Payload::single(0, 0)),
+                Xfer::local_write(0, vec![1], Payload::single(0, 0)),
+            ],
+        });
+        s.check_shape(&p).unwrap();
+        assert_eq!(s.external_rounds(), 1);
+        assert_eq!(s.external_messages(), 1);
+        assert_eq!(s.local_ops(), 1);
+    }
+
+    #[test]
+    fn shape_rejects_local_write_across_machines() {
+        let p = two_by_two();
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::local_write(0, vec![3], Payload::single(0, 0))],
+        });
+        assert!(s.check_shape(&p).is_err());
+    }
+
+    #[test]
+    fn shape_rejects_external_within_machine() {
+        let p = two_by_two();
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 1, Payload::single(0, 0))],
+        });
+        assert!(s.check_shape(&p).is_err());
+    }
+
+    #[test]
+    fn shape_rejects_self_and_oob() {
+        let p = two_by_two();
+        let mut s = Schedule::new(CollectiveOp::Allgather, 4, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 0, Payload::single(0, 0))],
+        });
+        assert!(s.check_shape(&p).is_err());
+
+        let mut s = Schedule::new(CollectiveOp::Allgather, 4, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 9, Payload::single(0, 0))],
+        });
+        assert!(s.check_shape(&p).is_err());
+    }
+
+    #[test]
+    fn empty_rounds_dropped() {
+        let mut s = Schedule::new(CollectiveOp::Allgather, 4, "t");
+        s.push_round(Round::default());
+        assert_eq!(s.num_rounds(), 0);
+    }
+
+    #[test]
+    fn op_reduction_classification() {
+        assert!(CollectiveOp::Allreduce { chunks: 4 }.is_reduction());
+        assert!(CollectiveOp::ReduceScatter.is_reduction());
+        assert!(!CollectiveOp::Broadcast { root: 0 }.is_reduction());
+        assert!(!CollectiveOp::AllToAll.is_reduction());
+    }
+}

@@ -1,0 +1,568 @@
+//! Symbolic execution of schedules: proves a schedule implements its
+//! collective's semantics without moving a byte.
+//!
+//! For **data ops** (broadcast, gather, scatter, allgather, all-to-all) a
+//! rank's state per chunk is the set of origin contributions it has seen;
+//! payload contributions are singletons and duplicate delivery is
+//! harmless.
+//!
+//! For **reduction ops** (reduce, allreduce, reduce-scatter) state is a
+//! set of *buffers* per chunk, each buffer a disjoint-by-construction
+//! partial sum (a [`ContribSet`]). This mirrors a real implementation: an
+//! arriving message lands in its own receive buffer; a process may
+//! *combine* pairwise-disjoint buffers (locally, for free) before
+//! forwarding, and an arriving superset overwrites the buffers it
+//! subsumes — but partial sums are indivisible (you cannot un-add), and
+//! overlapping buffers can never be combined (double count). Any schedule
+//! that drops a contribution, double-counts one, or ships a sum it cannot
+//! assemble fails here deterministically.
+
+use std::collections::HashMap;
+
+use super::{Chunk, CollectiveOp, ContribSet, Schedule};
+use crate::Rank;
+
+/// Per-rank, per-chunk buffer sets.
+#[derive(Debug, Clone, Default)]
+pub struct Holdings {
+    map: HashMap<Chunk, Vec<ContribSet>>,
+}
+
+impl Holdings {
+    /// All buffers held for a chunk.
+    pub fn buffers(&self, c: Chunk) -> &[ContribSet] {
+        self.map.get(&c).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Union of everything seen for a chunk (data-op view).
+    pub fn union(&self, c: Chunk) -> ContribSet {
+        let mut out = ContribSet::new();
+        for b in self.buffers(c) {
+            out.union_with(b);
+        }
+        out
+    }
+
+    fn insert(&mut self, c: Chunk, s: ContribSet) {
+        self.map.entry(c).or_default().push(s);
+    }
+
+    /// Can this rank assemble exactly `want` for chunk `c` by combining
+    /// pairwise-disjoint held buffers? (Greedy over subset buffers —
+    /// sufficient for all schedules we build, conservative in general.)
+    fn can_assemble(&self, c: Chunk, want: &ContribSet) -> bool {
+        let mut acc = ContribSet::new();
+        for b in self.buffers(c) {
+            if b.is_subset(want) && !acc.intersects(b) {
+                acc.union_with(b);
+            }
+        }
+        acc == *want
+    }
+
+    /// Best-effort combined coverage: union of a pairwise-disjoint buffer
+    /// subset, built greedily largest-first (reduction-op final check).
+    fn max_disjoint_union(&self, c: Chunk) -> ContribSet {
+        let mut bufs: Vec<&ContribSet> = self.buffers(c).iter().collect();
+        bufs.sort_by_key(|b| std::cmp::Reverse(b.len()));
+        let mut acc = ContribSet::new();
+        for b in bufs {
+            if !acc.intersects(b) {
+                acc.union_with(b);
+            }
+        }
+        acc
+    }
+
+    /// Deliver a buffer: absorb every held buffer it subsumes; drop it if
+    /// it is itself subsumed (stale duplicate).
+    fn deliver(&mut self, c: Chunk, s: ContribSet) {
+        let bufs = self.map.entry(c).or_default();
+        if bufs.iter().any(|b| s.is_subset(b)) {
+            return; // stale duplicate
+        }
+        bufs.retain(|b| !b.is_subset(&s));
+        bufs.push(s);
+    }
+}
+
+/// Final symbolic state: `state[r]` is rank `r`'s holdings.
+pub struct SymState {
+    pub state: Vec<Holdings>,
+}
+
+/// Initial holdings implied by the op's semantics.
+pub fn initial_state(op: CollectiveOp, num_ranks: usize) -> Vec<Holdings> {
+    let mut st = vec![Holdings::default(); num_ranks];
+    match op {
+        CollectiveOp::Broadcast { root } => {
+            st[root].insert(Chunk(0), ContribSet::singleton(root));
+        }
+        CollectiveOp::Gather { .. } | CollectiveOp::Allgather => {
+            for r in 0..num_ranks {
+                st[r].insert(Chunk(r as u32), ContribSet::singleton(r));
+            }
+        }
+        CollectiveOp::Scatter { root } => {
+            for r in 0..num_ranks {
+                st[root].insert(Chunk(r as u32), ContribSet::singleton(root));
+            }
+        }
+        CollectiveOp::AllToAll => {
+            let p = num_ranks as u32;
+            for s in 0..num_ranks {
+                for d in 0..num_ranks {
+                    st[s].insert(
+                        Chunk(s as u32 * p + d as u32),
+                        ContribSet::singleton(s),
+                    );
+                }
+            }
+        }
+        CollectiveOp::Reduce { chunks, .. } | CollectiveOp::Allreduce { chunks } => {
+            for r in 0..num_ranks {
+                for c in 0..chunks {
+                    st[r].insert(Chunk(c), ContribSet::singleton(r));
+                }
+            }
+        }
+        CollectiveOp::ReduceScatter => {
+            for r in 0..num_ranks {
+                for c in 0..num_ranks {
+                    st[r].insert(Chunk(c as u32), ContribSet::singleton(r));
+                }
+            }
+        }
+    }
+    st
+}
+
+/// Execute the schedule symbolically; error on any data-flow violation.
+pub fn run(schedule: &Schedule) -> crate::Result<SymState> {
+    let op = schedule.op;
+    let reduction = op.is_reduction();
+    let mut st = initial_state(op, schedule.num_ranks);
+
+    for (ri, round) in schedule.rounds.iter().enumerate() {
+        // All sends read pre-round state (transfers within a round are
+        // concurrent); deliveries land after the round.
+        let mut deliveries: Vec<(Rank, Chunk, ContribSet)> = Vec::new();
+        for x in &round.xfers {
+            for (chunk, contrib) in &x.payload.items {
+                if reduction {
+                    // A partial sum is indivisible: the sender must be
+                    // able to assemble *exactly* this contribution from
+                    // pairwise-disjoint buffers it holds.
+                    if !st[x.src].can_assemble(*chunk, contrib) {
+                        anyhow::bail!(
+                            "round {ri}: rank {} cannot assemble partial sum {} \
+                             of chunk {:?} from held buffers {:?}",
+                            x.src,
+                            contrib,
+                            chunk,
+                            st[x.src]
+                                .buffers(*chunk)
+                                .iter()
+                                .map(|b| b.to_string())
+                                .collect::<Vec<_>>()
+                        );
+                    }
+                } else {
+                    let have = st[x.src].union(*chunk);
+                    if !contrib.is_subset(&have) {
+                        anyhow::bail!(
+                            "round {ri}: rank {} sends contrib {} of chunk {:?} \
+                             exceeding held {}",
+                            x.src,
+                            contrib,
+                            chunk,
+                            have
+                        );
+                    }
+                    if have.is_empty() {
+                        anyhow::bail!(
+                            "round {ri}: rank {} sends chunk {:?} it does not hold",
+                            x.src,
+                            chunk
+                        );
+                    }
+                }
+                for &d in &x.dsts {
+                    deliveries.push((d, *chunk, contrib.clone()));
+                }
+            }
+        }
+        for (d, chunk, contrib) in deliveries {
+            st[d].deliver(chunk, contrib);
+        }
+    }
+    Ok(SymState { state: st })
+}
+
+/// Check the op's postcondition over a final symbolic state.
+pub fn check_final(schedule: &Schedule, st: &SymState) -> crate::Result<()> {
+    let p = schedule.num_ranks;
+    let full = ContribSet::full(p);
+    let reduction = schedule.op.is_reduction();
+    let require = |r: Rank, c: Chunk, want: &ContribSet| -> crate::Result<()> {
+        let have = if reduction {
+            st.state[r].max_disjoint_union(c)
+        } else {
+            st.state[r].union(c)
+        };
+        if want.is_subset(&have) {
+            Ok(())
+        } else if have.is_empty() {
+            Err(anyhow::anyhow!("rank {r} never received chunk {:?}", c))
+        } else {
+            Err(anyhow::anyhow!(
+                "rank {r} holds chunk {:?} with {} but needs {}",
+                c,
+                have,
+                want
+            ))
+        }
+    };
+    match schedule.op {
+        CollectiveOp::Broadcast { root } => {
+            let want = ContribSet::singleton(root);
+            for r in 0..p {
+                require(r, Chunk(0), &want)?;
+            }
+        }
+        CollectiveOp::Gather { root } => {
+            for s in 0..p {
+                require(root, Chunk(s as u32), &ContribSet::singleton(s))?;
+            }
+        }
+        CollectiveOp::Scatter { root } => {
+            let want = ContribSet::singleton(root);
+            for r in 0..p {
+                require(r, Chunk(r as u32), &want)?;
+            }
+        }
+        CollectiveOp::Allgather => {
+            for r in 0..p {
+                for s in 0..p {
+                    require(r, Chunk(s as u32), &ContribSet::singleton(s))?;
+                }
+            }
+        }
+        CollectiveOp::AllToAll => {
+            for d in 0..p {
+                for s in 0..p {
+                    require(
+                        d,
+                        Chunk(s as u32 * p as u32 + d as u32),
+                        &ContribSet::singleton(s),
+                    )?;
+                }
+            }
+        }
+        CollectiveOp::Reduce { root, chunks } => {
+            for c in 0..chunks {
+                require(root, Chunk(c), &full)?;
+            }
+        }
+        CollectiveOp::Allreduce { chunks } => {
+            for r in 0..p {
+                for c in 0..chunks {
+                    require(r, Chunk(c), &full)?;
+                }
+            }
+        }
+        CollectiveOp::ReduceScatter => {
+            for r in 0..p {
+                require(r, Chunk(r as u32), &full)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run + postcondition in one call — "this schedule is semantically
+/// correct".
+pub fn verify(schedule: &Schedule) -> crate::Result<()> {
+    let st = run(schedule)?;
+    check_final(schedule, &st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{Payload, Round, Schedule, Xfer};
+
+    /// Hand-built correct broadcast over 4 ranks (2 machines × 2 cores):
+    /// 0 -> 2 external, then local writes on both machines.
+    fn good_broadcast() -> Schedule {
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "hand");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 2, Payload::single(0, 0))],
+        });
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::local_write(0, vec![1], Payload::single(0, 0)),
+                Xfer::local_write(2, vec![3], Payload::single(0, 0)),
+            ],
+        });
+        s
+    }
+
+    #[test]
+    fn broadcast_verifies() {
+        verify(&good_broadcast()).unwrap();
+    }
+
+    #[test]
+    fn broadcast_missing_rank_fails() {
+        let mut s = good_broadcast();
+        s.rounds[1].xfers.pop(); // drop the write covering rank 3
+        let st = run(&s).unwrap();
+        assert!(check_final(&s, &st).is_err());
+    }
+
+    #[test]
+    fn send_before_receive_fails() {
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "bad");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(2, 1, Payload::single(0, 0))],
+        });
+        assert!(run(&s).is_err());
+    }
+
+    #[test]
+    fn same_round_forward_fails() {
+        // Receive and forward in the same round is illegal (sends read
+        // pre-round state).
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 3, "bad");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 1, Payload::single(0, 0)),
+                Xfer::external(1, 2, Payload::single(0, 0)),
+            ],
+        });
+        assert!(run(&s).is_err());
+    }
+
+    #[test]
+    fn reduce_double_count_detected() {
+        // r0's contribution reaches the root inside two *overlapping*
+        // partial sums ({0,3} and {0,2}) that can never be combined —
+        // the double count surfaces as an unmeetable postcondition.
+        let mut s = Schedule::new(
+            CollectiveOp::Reduce { root: 1, chunks: 1 },
+            4,
+            "bad",
+        );
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 2, Payload::one(Chunk(0), ContribSet::singleton(0))),
+                Xfer::external(3, 1, Payload::one(Chunk(0), ContribSet::singleton(3))),
+            ],
+        });
+        s.push_round(Round {
+            xfers: vec![Xfer::external(
+                0,
+                3,
+                Payload::one(Chunk(0), ContribSet::singleton(0)),
+            )],
+        });
+        s.push_round(Round {
+            xfers: vec![
+                // r2 ships x0+x2, r3 ships x0+x3: both fold in x0.
+                Xfer::external(2, 1, Payload::one(Chunk(0), ContribSet::from_iter([0, 2]))),
+                Xfer::external(3, 1, Payload::one(Chunk(0), ContribSet::from_iter([0, 3]))),
+            ],
+        });
+        assert!(verify(&s).is_err());
+    }
+
+    #[test]
+    fn reduce_overwrite_supersedes_stale_buffer() {
+        // r1 holds x0 (received) and later receives x0+x2: the superset
+        // replaces the stale buffer — correct under receive-buffer
+        // overwrite semantics, so the reduce completes.
+        let mut s = Schedule::new(
+            CollectiveOp::Reduce { root: 1, chunks: 1 },
+            3,
+            "overwrite",
+        );
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 1, Payload::one(Chunk(0), ContribSet::singleton(0))),
+                Xfer::external(0, 2, Payload::one(Chunk(0), ContribSet::singleton(0))),
+            ],
+        });
+        s.push_round(Round {
+            xfers: vec![Xfer::external(
+                2,
+                1,
+                Payload::one(Chunk(0), ContribSet::from_iter([0, 2])),
+            )],
+        });
+        verify(&s).unwrap();
+    }
+
+    #[test]
+    fn reduce_overwrite_with_superset_ok() {
+        // Leader pattern: r1 accumulates {0,1}, then sends the sum back to
+        // r0 — the superset subsumes r0's own buffer.
+        let mut s = Schedule::new(CollectiveOp::Allreduce { chunks: 1 }, 2, "ok");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(
+                0,
+                1,
+                Payload::one(Chunk(0), ContribSet::singleton(0)),
+            )],
+        });
+        s.push_round(Round {
+            xfers: vec![Xfer::external(
+                1,
+                0,
+                Payload::one(Chunk(0), ContribSet::from_iter([0, 1])),
+            )],
+        });
+        verify(&s).unwrap();
+    }
+
+    #[test]
+    fn reduce_stale_duplicate_ignored() {
+        let mut s = Schedule::new(
+            CollectiveOp::Reduce { root: 1, chunks: 1 },
+            2,
+            "dup",
+        );
+        for _ in 0..2 {
+            s.push_round(Round {
+                xfers: vec![Xfer::external(
+                    0,
+                    1,
+                    Payload::one(Chunk(0), ContribSet::singleton(0)),
+                )],
+            });
+        }
+        verify(&s).unwrap();
+    }
+
+    #[test]
+    fn landing_buffer_forwards_without_merging_own() {
+        // The pattern that motivated buffer semantics: r2 receives r0's
+        // partial, then forwards *only that buffer* to r1 even though r2
+        // also holds its own contribution; r2's own contribution travels
+        // separately. No double count.
+        let mut s = Schedule::new(
+            CollectiveOp::Reduce { root: 1, chunks: 1 },
+            3,
+            "landing",
+        );
+        s.push_round(Round {
+            xfers: vec![Xfer::external(
+                0,
+                2,
+                Payload::one(Chunk(0), ContribSet::singleton(0)),
+            )],
+        });
+        s.push_round(Round {
+            xfers: vec![Xfer::external(
+                2,
+                1,
+                Payload::one(Chunk(0), ContribSet::singleton(0)), // forward r0's buffer only
+            )],
+        });
+        s.push_round(Round {
+            xfers: vec![Xfer::external(
+                2,
+                1,
+                Payload::one(Chunk(0), ContribSet::singleton(2)), // own contribution
+            )],
+        });
+        verify(&s).unwrap();
+    }
+
+    #[test]
+    fn reduce_cannot_ship_unassemblable_sum() {
+        // r0 holds {0} and receives {1}; it may ship {0,1} (combine) but
+        // never {0,2}.
+        let mut s = Schedule::new(
+            CollectiveOp::Reduce { root: 2, chunks: 1 },
+            3,
+            "bad",
+        );
+        s.push_round(Round {
+            xfers: vec![Xfer::external(
+                1,
+                0,
+                Payload::one(Chunk(0), ContribSet::singleton(1)),
+            )],
+        });
+        s.push_round(Round {
+            xfers: vec![Xfer::external(
+                0,
+                2,
+                Payload::one(Chunk(0), ContribSet::from_iter([0, 2])),
+            )],
+        });
+        assert!(run(&s).is_err());
+
+        let mut ok = Schedule::new(
+            CollectiveOp::Reduce { root: 2, chunks: 1 },
+            3,
+            "ok",
+        );
+        ok.push_round(Round {
+            xfers: vec![Xfer::external(
+                1,
+                0,
+                Payload::one(Chunk(0), ContribSet::singleton(1)),
+            )],
+        });
+        ok.push_round(Round {
+            xfers: vec![Xfer::external(
+                0,
+                2,
+                Payload::one(Chunk(0), ContribSet::from_iter([0, 1])),
+            )],
+        });
+        verify(&ok).unwrap();
+    }
+
+    #[test]
+    fn allreduce_requires_everyone() {
+        let mut s = Schedule::new(CollectiveOp::Allreduce { chunks: 1 }, 2, "bad");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(
+                0,
+                1,
+                Payload::one(Chunk(0), ContribSet::singleton(0)),
+            )],
+        });
+        let st = run(&s).unwrap();
+        assert!(check_final(&s, &st).is_err());
+    }
+
+    #[test]
+    fn duplicate_delivery_ok_for_data_ops() {
+        let mut s = good_broadcast();
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 2, Payload::single(0, 0))],
+        });
+        verify(&s).unwrap();
+    }
+
+    #[test]
+    fn correct_two_rank_reduce() {
+        let mut s = Schedule::new(
+            CollectiveOp::Reduce { root: 1, chunks: 1 },
+            2,
+            "hand",
+        );
+        s.push_round(Round {
+            xfers: vec![Xfer::external(
+                0,
+                1,
+                Payload::one(Chunk(0), ContribSet::singleton(0)),
+            )],
+        });
+        verify(&s).unwrap();
+    }
+}

@@ -1,0 +1,430 @@
+//! Continuous-time simulation of schedules — the testbed substitute.
+//!
+//! The paper's authors would validate model predictions on a physical
+//! cluster; we substitute a deterministic simulator that implements the
+//! physics the model abstracts: per-message CPU overheads, per-process
+//! send gaps (LogP's `g`), wire latency and bandwidth that differ between
+//! intra-machine and inter-machine transfers, per-machine NIC tokens
+//! (rule R3 made physical), and per-edge occupancy on graph interconnects.
+//!
+//! The engine is an ASAP list scheduler over the schedule's dependency
+//! DAG: a transfer may start once (a) the data it carries has arrived at
+//! its source — per the *schedule's* round structure, so reductions never
+//! appear to ship sums that have not been merged yet — and (b) the
+//! resources it needs (source process, NIC tokens, edge slot, destination
+//! process) are free. Everything downstream of that is greedy and
+//! deterministic, which is how a real asynchronous MPI progress engine
+//! would drain the same DAG.
+//!
+//! One engine, many models: [`SimParams::lan_cluster`] is the realistic
+//! multi-core testbed; [`SimParams::flat_logp`] reproduces LogP (no
+//! locality, no NIC sharing); [`crate::model::LogP`] delegates here.
+
+mod params;
+mod report;
+
+pub use params::SimParams;
+pub use report::{SimReport, XferRecord};
+
+use std::collections::HashMap;
+
+use crate::sched::{Chunk, Schedule, XferKind};
+use crate::topology::{Cluster, Interconnect, Placement};
+
+/// Multi-token resource: `k` interchangeable servers (a machine's NIC
+/// pool). Acquiring picks the earliest-free token.
+#[derive(Debug, Clone)]
+struct TokenPool {
+    free_at: Vec<f64>,
+}
+
+impl TokenPool {
+    fn new(k: usize) -> Self {
+        Self { free_at: vec![0.0; k.max(1)] }
+    }
+
+    /// Reserve the earliest-free token at or after `t` for `busy` seconds;
+    /// returns the actual start time.
+    fn acquire(&mut self, t: f64, busy: f64) -> f64 {
+        let idx = self
+            .free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        let start = t.max(self.free_at[idx]);
+        self.free_at[idx] = start + busy;
+        start
+    }
+}
+
+/// Run `schedule` on `cluster` under `params`; returns timing + stats.
+/// Deterministic: same inputs → identical report.
+pub fn simulate(
+    cluster: &Cluster,
+    placement: &Placement,
+    schedule: &Schedule,
+    params: &SimParams,
+) -> crate::Result<SimReport> {
+    schedule.check_shape(placement)?;
+    let p = schedule.num_ranks;
+    let m_count = cluster.num_machines();
+    let is_graph = matches!(cluster.interconnect, Interconnect::Graph { .. });
+
+    // Resource state. Within a round all transfers are concurrent (they
+    // read pre-round state), so send-side work gates on the *round-start*
+    // snapshot of each process — not on receives landing in the same
+    // round. Send-side (sends + writes) and receive-side (receives +
+    // reads) activity each serialize on their own per-round cursor; the
+    // process is busy until the later of the two at round end.
+    let mut proc_send_free = vec![0.0f64; p]; // next legal send (LogP gap)
+    let mut proc_busy_until = vec![0.0f64; p];
+    let mut out_cursor = vec![0.0f64; p];
+    let mut in_cursor = vec![0.0f64; p];
+    let (mut nic_out, mut nic_in): (Vec<TokenPool>, Vec<TokenPool>) = if params.nic_limited {
+        (
+            (0..m_count).map(|m| TokenPool::new(cluster.degree(m))).collect(),
+            (0..m_count).map(|m| TokenPool::new(cluster.degree(m))).collect(),
+        )
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let mut edge_free: HashMap<(usize, usize), f64> = HashMap::new();
+
+    // Data readiness per (rank, chunk), updated with delivery times after
+    // each round so intra-round transfers read pre-round state. Chunks a
+    // rank holds initially have implicit ready time 0.
+    let mut ready: Vec<HashMap<Chunk, f64>> = vec![HashMap::new(); p];
+
+    let speed = |r: usize| {
+        if params.respect_speed {
+            cluster.machines[placement.machine_of(r)].speed
+        } else {
+            1.0
+        }
+    };
+
+    let mut records: Vec<XferRecord> = Vec::new();
+    let mut nic_busy = 0.0f64;
+    let mut t_end = 0.0f64;
+    let mut ext_msgs = 0usize;
+    let mut ext_bytes = 0u64;
+
+    for round in &schedule.rounds {
+        out_cursor.copy_from_slice(&proc_busy_until);
+        in_cursor.copy_from_slice(&proc_busy_until);
+        let mut deliveries: Vec<(usize, Chunk, f64)> = Vec::new();
+        for x in &round.xfers {
+            let size_bytes = x.payload.num_chunks() as u64 * params.chunk_bytes;
+            let data_ready = x
+                .payload
+                .items
+                .iter()
+                .map(|(c, _)| ready[x.src].get(c).copied().unwrap_or(0.0))
+                .fold(0.0f64, f64::max);
+
+            match x.kind {
+                XferKind::External => {
+                    let dst = x.dsts[0];
+                    let (ms, md) =
+                        (placement.machine_of(x.src), placement.machine_of(dst));
+                    if !cluster.connected(ms, md) {
+                        anyhow::bail!("simulate: machines {ms},{md} not connected");
+                    }
+                    let o_s = params.o_send / speed(x.src);
+                    let o_r = params.o_recv / speed(dst);
+                    let ser = size_bytes as f64 * params.byte_time_ext;
+
+                    let mut t0 = data_ready
+                        .max(proc_send_free[x.src])
+                        .max(out_cursor[x.src]);
+                    let (start, arrival) = if params.nic_limited {
+                        if is_graph {
+                            t0 = t0.max(edge_free.get(&(ms, md)).copied().unwrap_or(0.0));
+                        }
+                        // Out-NIC held while the sender injects the message.
+                        let start = nic_out[ms].acquire(t0, o_s + ser);
+                        // In-NIC held while bits land at the receiver.
+                        let wire_done = start + o_s + params.lat_ext;
+                        let in_start = nic_in[md].acquire(wire_done, ser);
+                        if is_graph {
+                            edge_free.insert((ms, md), start + o_s + ser);
+                        }
+                        nic_busy += o_s + 2.0 * ser;
+                        (start, in_start + ser)
+                    } else {
+                        (t0, t0 + o_s + params.lat_ext + ser)
+                    };
+
+                    proc_send_free[x.src] = start + o_s.max(params.gap / speed(x.src));
+                    out_cursor[x.src] = start + o_s;
+                    let recv_done = arrival.max(in_cursor[dst]) + o_r;
+                    in_cursor[dst] = recv_done;
+                    t_end = t_end.max(recv_done);
+                    ext_msgs += 1;
+                    ext_bytes += size_bytes;
+                    if params.record_xfers {
+                        records.push(XferRecord {
+                            src: x.src,
+                            dst,
+                            start,
+                            end: recv_done,
+                            external: true,
+                            bytes: size_bytes,
+                        });
+                    }
+                    for (c, _) in &x.payload.items {
+                        deliveries.push((dst, *c, recv_done));
+                    }
+                }
+                XferKind::LocalWrite => {
+                    // One constant-time shared-memory publication (R1):
+                    // cost is independent of the destination count.
+                    let o_w = params.o_write / speed(x.src);
+                    let start = data_ready.max(out_cursor[x.src]);
+                    let done = start + o_w + params.lat_int;
+                    out_cursor[x.src] = start + o_w;
+                    t_end = t_end.max(done);
+                    if params.record_xfers {
+                        records.push(XferRecord {
+                            src: x.src,
+                            dst: x.dsts[0],
+                            start,
+                            end: done,
+                            external: false,
+                            bytes: size_bytes,
+                        });
+                    }
+                    for &d in &x.dsts {
+                        for (c, _) in &x.payload.items {
+                            deliveries.push((d, *c, done));
+                        }
+                    }
+                }
+                XferKind::LocalRead => {
+                    // Reader assembles the message: per-message cost (R1).
+                    let dst = x.dsts[0];
+                    let o_r = params.o_recv / speed(dst);
+                    let copy = size_bytes as f64 * params.byte_time_int;
+                    let start = (data_ready + params.lat_int) // shm visibility
+                        .max(in_cursor[dst]);
+                    let done = start + o_r + copy;
+                    in_cursor[dst] = done;
+                    t_end = t_end.max(done);
+                    if params.record_xfers {
+                        records.push(XferRecord {
+                            src: x.src,
+                            dst,
+                            start,
+                            end: done,
+                            external: false,
+                            bytes: size_bytes,
+                        });
+                    }
+                    for (c, _) in &x.payload.items {
+                        deliveries.push((dst, *c, done));
+                    }
+                }
+            }
+        }
+        for (r, c, t) in deliveries {
+            let e = ready[r].entry(c).or_insert(0.0);
+            *e = e.max(t);
+        }
+        for r in 0..p {
+            proc_busy_until[r] = out_cursor[r].max(in_cursor[r]);
+        }
+    }
+
+    let nic_util = if t_end > 0.0 && params.nic_limited {
+        let total_tokens: usize = (0..m_count).map(|m| cluster.degree(m)).sum();
+        nic_busy / (2.0 * total_tokens as f64 * t_end)
+    } else {
+        0.0
+    };
+
+    Ok(SimReport {
+        t_end,
+        ext_messages: ext_msgs,
+        ext_bytes,
+        nic_utilization: nic_util,
+        records,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{CollectiveOp, Payload, Round, Schedule, Xfer};
+    use crate::topology::{switched, Placement};
+
+    fn bcast_2x2() -> (Cluster, Placement, Schedule) {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "hand");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 2, Payload::single(0, 0))],
+        });
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::local_write(0, vec![1], Payload::single(0, 0)),
+                Xfer::local_write(2, vec![3], Payload::single(0, 0)),
+            ],
+        });
+        (c, p, s)
+    }
+
+    #[test]
+    fn deterministic() {
+        let (c, p, s) = bcast_2x2();
+        let params = SimParams::lan_cluster(1024);
+        let a = simulate(&c, &p, &s, &params).unwrap();
+        let b = simulate(&c, &p, &s, &params).unwrap();
+        assert_eq!(a.t_end, b.t_end);
+        assert_eq!(a.ext_messages, 1);
+    }
+
+    #[test]
+    fn local_write_cheaper_than_external() {
+        let (c, p, _) = bcast_2x2();
+        let params = SimParams::lan_cluster(1024);
+
+        let mut ext = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "e");
+        ext.push_round(Round {
+            xfers: vec![Xfer::external(0, 2, Payload::single(0, 0))],
+        });
+        let mut loc = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "l");
+        loc.push_round(Round {
+            xfers: vec![Xfer::local_write(0, vec![1], Payload::single(0, 0))],
+        });
+        let te = simulate(&c, &p, &ext, &params).unwrap().t_end;
+        let tl = simulate(&c, &p, &loc, &params).unwrap().t_end;
+        assert!(tl < te / 5.0, "local {tl} should be ≪ external {te}");
+    }
+
+    #[test]
+    fn dependency_chains_serialize() {
+        let c = switched(3, 1, 1);
+        let p = Placement::block(&c);
+        let params = SimParams::lan_cluster(1 << 20);
+
+        let mut one = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 3, "1");
+        one.push_round(Round {
+            xfers: vec![Xfer::external(0, 1, Payload::single(0, 0))],
+        });
+        let mut two = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 3, "2");
+        two.push_round(Round {
+            xfers: vec![Xfer::external(0, 1, Payload::single(0, 0))],
+        });
+        two.push_round(Round {
+            xfers: vec![Xfer::external(1, 2, Payload::single(0, 0))],
+        });
+        let t1 = simulate(&c, &p, &one, &params).unwrap().t_end;
+        let t2 = simulate(&c, &p, &two, &params).unwrap().t_end;
+        assert!(t2 > 1.9 * t1, "chained hops must serialize: {t2} vs {t1}");
+    }
+
+    #[test]
+    fn nic_contention_serializes() {
+        // 4 procs on one 1-NIC machine each send externally: sends must
+        // serialize on the NIC, vs a 4-NIC machine where they parallelize.
+        let mk = |nics| {
+            let c = switched(2, 4, nics);
+            let p = Placement::block(&c);
+            let mut s = Schedule::new(CollectiveOp::Allgather, 8, "t");
+            s.push_round(Round {
+                xfers: (0..4)
+                    .map(|i| Xfer::external(i, 4 + i, Payload::single(i as u32, i)))
+                    .collect(),
+            });
+            (c, p, s)
+        };
+        let params = SimParams::lan_cluster(1 << 20); // 1 MiB: bw-dominated
+        let (c1, p1, s1) = mk(1);
+        let (c4, p4, s4) = mk(4);
+        let t1 = simulate(&c1, &p1, &s1, &params).unwrap().t_end;
+        let t4 = simulate(&c4, &p4, &s4, &params).unwrap().t_end;
+        assert!(
+            t1 > 3.0 * t4,
+            "1-NIC {t1} should be ~4x slower than 4-NIC {t4}"
+        );
+    }
+
+    #[test]
+    fn flat_logp_ignores_locality() {
+        let (c, p, _) = bcast_2x2();
+        let params = SimParams::flat_logp(10e-6, 2e-6, 3e-6, 1024);
+        let mut loc = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "l");
+        loc.push_round(Round {
+            xfers: vec![Xfer::local_read(0, 1, Payload::single(0, 0))],
+        });
+        let mut ext = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "e");
+        ext.push_round(Round {
+            xfers: vec![Xfer::external(0, 2, Payload::single(0, 0))],
+        });
+        let tl = simulate(&c, &p, &loc, &params).unwrap().t_end;
+        let te = simulate(&c, &p, &ext, &params).unwrap().t_end;
+        let ratio = tl / te;
+        assert!(
+            (0.5..=2.0).contains(&ratio),
+            "flat model: local {tl} ≈ external {te}"
+        );
+    }
+
+    #[test]
+    fn bytes_and_messages_accounted() {
+        let (c, p, s) = bcast_2x2();
+        let params = SimParams::lan_cluster(4096);
+        let r = simulate(&c, &p, &s, &params).unwrap();
+        assert_eq!(r.ext_messages, 1);
+        assert_eq!(r.ext_bytes, 4096);
+    }
+
+    #[test]
+    fn gap_throttles_send_rate() {
+        // One proc sending 4 messages to 4 different machines: starts must
+        // be spaced by at least g.
+        let c = switched(5, 1, 4);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Scatter { root: 0 }, 5, "t");
+        // Four rounds so per-round proc-send caps don't apply here.
+        for d in 1..5usize {
+            s.push_round(Round {
+                xfers: vec![Xfer::external(
+                    0,
+                    d,
+                    Payload::single(d as u32, 0),
+                )],
+            });
+        }
+        let mut params = SimParams::lan_cluster(64);
+        params.gap = 1.0; // enormous gap dominates
+        let r = simulate(&c, &p, &s, &params).unwrap();
+        assert!(r.t_end >= 3.0, "4 sends with g=1 need ≥ 3s, got {}", r.t_end);
+    }
+
+    #[test]
+    fn speed_scales_overheads() {
+        use crate::topology::{hetero_switched, MachineSpec};
+        let slow = hetero_switched(vec![
+            MachineSpec::with_speed(1, 1, 0.25),
+            MachineSpec::new(1, 1),
+        ]);
+        let fast = hetero_switched(vec![
+            MachineSpec::with_speed(1, 1, 4.0),
+            MachineSpec::new(1, 1),
+        ]);
+        let p = Placement::block(&slow);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 2, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 1, Payload::single(0, 0))],
+        });
+        let mut params = SimParams::lan_cluster(64);
+        params.respect_speed = true;
+        params.o_send = 1.0; // make overhead dominate
+        let ts = simulate(&slow, &p, &s, &params).unwrap().t_end;
+        let tf = simulate(&fast, &p, &s, &params).unwrap().t_end;
+        assert!(ts > 2.0 * tf, "slow sender {ts} vs fast sender {tf}");
+    }
+}

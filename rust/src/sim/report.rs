@@ -1,0 +1,59 @@
+//! Simulation output: completion time, traffic statistics, optional
+//! per-transfer records.
+
+
+/// One simulated transfer (kept only when `record_xfers` is on).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct XferRecord {
+    pub src: usize,
+    pub dst: usize,
+    pub start: f64,
+    pub end: f64,
+    pub external: bool,
+    pub bytes: u64,
+}
+
+/// Result of simulating one schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimReport {
+    /// Makespan: time at which the last transfer completes.
+    pub t_end: f64,
+    /// Number of network messages.
+    pub ext_messages: usize,
+    /// Bytes moved across the network.
+    pub ext_bytes: u64,
+    /// Fraction of total NIC-seconds actually busy (0 when unlimited).
+    pub nic_utilization: f64,
+    /// Per-transfer records (empty unless requested).
+    pub records: Vec<XferRecord>,
+}
+
+impl SimReport {
+    /// Effective network goodput in bytes/second (0 for local-only runs).
+    pub fn goodput(&self) -> f64 {
+        if self.t_end > 0.0 {
+            self.ext_bytes as f64 / self.t_end
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn goodput() {
+        let r = SimReport {
+            t_end: 2.0,
+            ext_messages: 3,
+            ext_bytes: 100,
+            nic_utilization: 0.5,
+            records: vec![],
+        };
+        assert_eq!(r.goodput(), 50.0);
+        let z = SimReport { t_end: 0.0, ..r };
+        assert_eq!(z.goodput(), 0.0);
+    }
+}

@@ -1,0 +1,255 @@
+//! Standard topology generators used throughout the experiments.
+
+use crate::util::Rng;
+
+use super::{Cluster, Interconnect, MachineSpec};
+
+/// `m` identical machines (`cores` cores, `nics` NICs) on a non-blocking
+/// switch — the workhorse topology for E1/E2/E3/E5/E7.
+pub fn switched(m: usize, cores: usize, nics: usize) -> Cluster {
+    Cluster::new(vec![MachineSpec::new(cores, nics); m], Interconnect::FullSwitch)
+        .expect("valid switched cluster")
+}
+
+/// Heterogeneous machines on a switch.
+pub fn hetero_switched(specs: Vec<MachineSpec>) -> Cluster {
+    Cluster::new(specs, Interconnect::FullSwitch).expect("valid hetero cluster")
+}
+
+/// Erdős–Rényi G(m, p) machine graph, retried until connected.
+/// Deterministic in `seed`. Used by E4 (non-sparse random topologies).
+pub fn gnp(m: usize, p: f64, cores: usize, nics: usize, seed: u64) -> Cluster {
+    assert!(m >= 2, "gnp needs at least 2 machines");
+    let mut rng = Rng::seed_from_u64(seed);
+    loop {
+        let mut adj = vec![Vec::new(); m];
+        for a in 0..m {
+            for b in (a + 1)..m {
+                if rng.gen_bool(p) {
+                    adj[a].push(b);
+                    adj[b].push(a);
+                }
+            }
+        }
+        let c = Cluster::new(
+            vec![MachineSpec::new(cores, nics); m],
+            Interconnect::Graph { adj },
+        )
+        .expect("valid gnp cluster");
+        if c.is_connected() {
+            return c;
+        }
+    }
+}
+
+/// G(m, p) with heterogeneous core counts and speeds (non-sparse multi-core
+/// clusters for the heuristic study). Cores drawn from `core_choices`,
+/// speed from `[0.5, 1.5)`.
+pub fn gnp_hetero(
+    m: usize,
+    p: f64,
+    core_choices: &[usize],
+    nic_choices: &[usize],
+    seed: u64,
+) -> Cluster {
+    let mut rng = Rng::seed_from_u64(seed);
+    let machines: Vec<MachineSpec> = (0..m)
+        .map(|_| {
+            let cores = core_choices[rng.gen_range(0..core_choices.len())];
+            let nics = nic_choices[rng.gen_range(0..nic_choices.len())];
+            MachineSpec::with_speed(cores, nics, 0.5 + rng.gen_f64())
+        })
+        .collect();
+    loop {
+        let mut adj = vec![Vec::new(); m];
+        for a in 0..m {
+            for b in (a + 1)..m {
+                if rng.gen_bool(p) {
+                    adj[a].push(b);
+                    adj[b].push(a);
+                }
+            }
+        }
+        let c = Cluster::new(machines.clone(), Interconnect::Graph { adj })
+            .expect("valid gnp_hetero cluster");
+        if c.is_connected() {
+            return c;
+        }
+    }
+}
+
+/// Clustered ("community") topology: `n_comm` dense communities of
+/// `comm_size` machines each (intra-community edge probability
+/// `intra_p`), joined by one bridge edge between consecutive communities
+/// plus a few random long-range bridges.
+///
+/// This is the paper's "non-sparse" scenario where *nearby high-degree
+/// nodes have a large intersection of neighbors*: inside a community
+/// every node sees nearly the same neighborhood, so a highest-degree-
+/// first broadcast heuristic burns NICs on redundant targets while a
+/// coverage-aware one routes toward bridges (E4).
+pub fn clustered(
+    n_comm: usize,
+    comm_size: usize,
+    intra_p: f64,
+    cores: usize,
+    nics: usize,
+    seed: u64,
+) -> Cluster {
+    assert!(n_comm >= 2 && comm_size >= 2);
+    let m = n_comm * comm_size;
+    let mut rng = Rng::seed_from_u64(seed);
+    loop {
+        let mut adj = vec![Vec::new(); m];
+        let add = |adj: &mut Vec<Vec<usize>>, a: usize, b: usize| {
+            if a != b && !adj[a].contains(&b) {
+                adj[a].push(b);
+                adj[b].push(a);
+            }
+        };
+        for comm in 0..n_comm {
+            let base = comm * comm_size;
+            for i in 0..comm_size {
+                for j in (i + 1)..comm_size {
+                    if rng.gen_bool(intra_p) {
+                        add(&mut adj, base + i, base + j);
+                    }
+                }
+            }
+            // One bridge to the next community (random endpoints).
+            let next = (comm + 1) % n_comm;
+            let a = base + rng.gen_range(0..comm_size);
+            let b = next * comm_size + rng.gen_range(0..comm_size);
+            add(&mut adj, a, b);
+        }
+        // A few random long-range bridges.
+        for _ in 0..n_comm / 2 {
+            let a = rng.gen_range(0..m);
+            let b = rng.gen_range(0..m);
+            add(&mut adj, a, b);
+        }
+        let c = Cluster::new(
+            vec![MachineSpec::new(cores, nics); m],
+            Interconnect::Graph { adj },
+        )
+        .expect("valid clustered cluster");
+        if c.is_connected() {
+            return c;
+        }
+    }
+}
+
+/// 2-D torus of `a × b` machines (classic HPC interconnect).
+pub fn torus2d(a: usize, b: usize, cores: usize, nics: usize) -> Cluster {
+    assert!(a >= 2 && b >= 2, "torus needs both dims >= 2");
+    let m = a * b;
+    let idx = |x: usize, y: usize| x * b + y;
+    let mut adj = vec![Vec::new(); m];
+    for x in 0..a {
+        for y in 0..b {
+            let me = idx(x, y);
+            adj[me].push(idx((x + 1) % a, y));
+            adj[me].push(idx((x + a - 1) % a, y));
+            adj[me].push(idx(x, (y + 1) % b));
+            adj[me].push(idx(x, (y + b - 1) % b));
+        }
+    }
+    Cluster::new(
+        vec![MachineSpec::new(cores, nics); m],
+        Interconnect::Graph { adj },
+    )
+    .expect("valid torus")
+}
+
+/// Line (path) of `m` machines — worst-case diameter.
+pub fn line(m: usize, cores: usize, nics: usize) -> Cluster {
+    let mut adj = vec![Vec::new(); m];
+    for i in 0..m.saturating_sub(1) {
+        adj[i].push(i + 1);
+        adj[i + 1].push(i);
+    }
+    Cluster::new(
+        vec![MachineSpec::new(cores, nics); m],
+        Interconnect::Graph { adj },
+    )
+    .expect("valid line")
+}
+
+/// Star: machine 0 is the hub.
+pub fn star(m: usize, cores: usize, hub_nics: usize, leaf_nics: usize) -> Cluster {
+    assert!(m >= 2);
+    let mut machines = vec![MachineSpec::new(cores, leaf_nics); m];
+    machines[0] = MachineSpec::new(cores, hub_nics);
+    let mut adj = vec![Vec::new(); m];
+    for i in 1..m {
+        adj[0].push(i);
+        adj[i].push(0);
+    }
+    Cluster::new(machines, Interconnect::Graph { adj }).expect("valid star")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn switched_shape() {
+        let c = switched(4, 8, 2);
+        assert_eq!(c.num_machines(), 4);
+        assert_eq!(c.total_cores(), 32);
+        assert_eq!(c.degree(0), 2);
+    }
+
+    #[test]
+    fn gnp_deterministic_and_connected() {
+        let a = gnp(10, 0.4, 2, 1, 42);
+        let b = gnp(10, 0.4, 2, 1, 42);
+        assert_eq!(a, b);
+        assert!(a.is_connected());
+        let c = gnp(10, 0.4, 2, 1, 43);
+        assert!(c.is_connected());
+        assert_ne!(a, c); // overwhelmingly likely
+    }
+
+    #[test]
+    fn torus_degree_four() {
+        let c = torus2d(3, 4, 1, 4);
+        assert_eq!(c.num_machines(), 12);
+        for m in 0..12 {
+            assert_eq!(c.neighbors(m).len(), 4);
+        }
+        assert!(c.is_connected());
+    }
+
+    #[test]
+    fn torus_small_dims_dedup() {
+        // 2x2 torus: +1 and -1 wrap to the same neighbor; dedup applies.
+        let c = torus2d(2, 2, 1, 4);
+        for m in 0..4 {
+            assert_eq!(c.neighbors(m).len(), 2);
+        }
+    }
+
+    #[test]
+    fn line_and_star() {
+        let l = line(5, 2, 1);
+        assert_eq!(l.neighbors(0), vec![1]);
+        assert_eq!(l.neighbors(2), vec![1, 3]);
+        assert!(l.is_connected());
+
+        let s = star(5, 2, 4, 1);
+        assert_eq!(s.neighbors(0).len(), 4);
+        assert_eq!(s.degree(0), 4);
+        assert_eq!(s.degree(3), 1);
+    }
+
+    #[test]
+    fn gnp_hetero_in_choice_sets() {
+        let c = gnp_hetero(8, 0.5, &[2, 4, 8], &[1, 2], 7);
+        for m in &c.machines {
+            assert!([2, 4, 8].contains(&m.cores));
+            assert!([1, 2].contains(&m.nics));
+            assert!(m.speed >= 0.5 && m.speed < 1.5);
+        }
+    }
+}

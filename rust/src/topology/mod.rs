@@ -1,0 +1,373 @@
+//! Cluster topology: machines (cores + NICs + speed), the interconnect
+//! between them, and the placement of process ranks onto machines.
+//!
+//! The paper models a cluster as a set of multi-core machines joined by a
+//! network. Two things matter to the model: how many *processes* a machine
+//! hosts (its cores, which share memory — rules R1/R2) and how many
+//! *network interfaces* it owns (its *degree*, rule R3). The interconnect
+//! is either a non-blocking switch (every machine pair may communicate) or
+//! an explicit machine-level graph (the telephone model's native habitat).
+
+mod generators;
+pub use generators::*;
+
+
+use crate::{MachineId, Rank};
+
+/// Static description of one machine in the cluster.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MachineSpec {
+    /// Number of cores == number of processes hosted under block placement.
+    pub cores: usize,
+    /// Number of network interfaces; the machine's *degree* in the paper's
+    /// terminology (rule R3: up to `nics` concurrent external transfers
+    /// per direction).
+    pub nics: usize,
+    /// Relative speed multiplier (1.0 = baseline). Used by the
+    /// fastest-node-first heuristic and the continuous-time simulator.
+    pub speed: f64,
+}
+
+impl MachineSpec {
+    pub fn new(cores: usize, nics: usize) -> Self {
+        Self { cores, nics, speed: 1.0 }
+    }
+
+    pub fn with_speed(cores: usize, nics: usize, speed: f64) -> Self {
+        Self { cores, nics, speed }
+    }
+}
+
+/// Machine-level interconnect.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Interconnect {
+    /// Non-blocking crossbar: any machine pair may exchange messages; the
+    /// only constraint is each machine's NIC count (LogP-style "topology
+    /// oblivious" network).
+    FullSwitch,
+    /// Explicit undirected machine graph (the telephone model's network).
+    /// `adj[m]` lists the neighbors of machine `m`, sorted, no duplicates,
+    /// no self-loops.
+    Graph { adj: Vec<Vec<MachineId>> },
+}
+
+/// A cluster: machines plus their interconnect.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cluster {
+    pub machines: Vec<MachineSpec>,
+    pub interconnect: Interconnect,
+}
+
+impl Cluster {
+    /// Build a cluster, normalizing and checking the interconnect.
+    pub fn new(machines: Vec<MachineSpec>, interconnect: Interconnect) -> crate::Result<Self> {
+        if machines.is_empty() {
+            anyhow::bail!("cluster must have at least one machine");
+        }
+        for (m, spec) in machines.iter().enumerate() {
+            if spec.cores == 0 {
+                anyhow::bail!("machine {m} has zero cores");
+            }
+            if spec.nics == 0 && machines.len() > 1 {
+                anyhow::bail!("machine {m} has zero NICs in a multi-machine cluster");
+            }
+            if !(spec.speed > 0.0) {
+                anyhow::bail!("machine {m} has non-positive speed");
+            }
+        }
+        let interconnect = match interconnect {
+            Interconnect::FullSwitch => Interconnect::FullSwitch,
+            Interconnect::Graph { mut adj } => {
+                if adj.len() != machines.len() {
+                    anyhow::bail!(
+                        "adjacency has {} rows for {} machines",
+                        adj.len(),
+                        machines.len()
+                    );
+                }
+                for (m, row) in adj.iter_mut().enumerate() {
+                    row.sort_unstable();
+                    row.dedup();
+                    if row.iter().any(|&n| n == m) {
+                        anyhow::bail!("machine {m} has a self-loop");
+                    }
+                    if row.iter().any(|&n| n >= machines.len()) {
+                        anyhow::bail!("machine {m} has an out-of-range neighbor");
+                    }
+                }
+                // Enforce symmetry.
+                let snapshot = adj.clone();
+                for (m, row) in snapshot.iter().enumerate() {
+                    for &n in row {
+                        if !snapshot[n].contains(&m) {
+                            adj[n].push(m);
+                            adj[n].sort_unstable();
+                        }
+                    }
+                }
+                Interconnect::Graph { adj }
+            }
+        };
+        Ok(Self { machines, interconnect })
+    }
+
+    pub fn num_machines(&self) -> usize {
+        self.machines.len()
+    }
+
+    /// Total process count under one-process-per-core placement.
+    pub fn total_cores(&self) -> usize {
+        self.machines.iter().map(|m| m.cores).sum()
+    }
+
+    /// Can machines `a` and `b` exchange a message directly?
+    pub fn connected(&self, a: MachineId, b: MachineId) -> bool {
+        if a == b {
+            return false;
+        }
+        match &self.interconnect {
+            Interconnect::FullSwitch => true,
+            Interconnect::Graph { adj } => adj[a].binary_search(&b).is_ok(),
+        }
+    }
+
+    /// Machines directly reachable from `m`.
+    pub fn neighbors(&self, m: MachineId) -> Vec<MachineId> {
+        match &self.interconnect {
+            Interconnect::FullSwitch => {
+                (0..self.num_machines()).filter(|&n| n != m).collect()
+            }
+            Interconnect::Graph { adj } => adj[m].clone(),
+        }
+    }
+
+    /// The paper's *degree*: how many external transfers machine `m` can
+    /// drive concurrently (per direction). On a graph it is additionally
+    /// capped by the number of physical neighbors.
+    pub fn degree(&self, m: MachineId) -> usize {
+        match &self.interconnect {
+            Interconnect::FullSwitch => self.machines[m].nics,
+            Interconnect::Graph { adj } => self.machines[m].nics.min(adj[m].len()),
+        }
+    }
+
+    /// Is the machine graph connected (always true for a switch)?
+    pub fn is_connected(&self) -> bool {
+        match &self.interconnect {
+            Interconnect::FullSwitch => true,
+            Interconnect::Graph { adj } => {
+                let n = adj.len();
+                let mut seen = vec![false; n];
+                let mut stack = vec![0usize];
+                seen[0] = true;
+                let mut count = 1;
+                while let Some(m) = stack.pop() {
+                    for &nb in &adj[m] {
+                        if !seen[nb] {
+                            seen[nb] = true;
+                            count += 1;
+                            stack.push(nb);
+                        }
+                    }
+                }
+                count == n
+            }
+        }
+    }
+}
+
+/// Mapping of global ranks onto machines.
+///
+/// Ranks are dense `0..num_ranks()`. `machine_of[r]` gives rank `r`'s
+/// machine; `ranks_on[m]` lists the ranks hosted by machine `m` in
+/// ascending order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    machine_of: Vec<MachineId>,
+    ranks_on: Vec<Vec<Rank>>,
+}
+
+impl Placement {
+    /// Block placement: one process per core, ranks assigned machine by
+    /// machine (`machine 0` gets ranks `0..c0`, machine 1 the next `c1`, …).
+    pub fn block(cluster: &Cluster) -> Self {
+        let mut machine_of = Vec::with_capacity(cluster.total_cores());
+        let mut ranks_on = vec![Vec::new(); cluster.num_machines()];
+        for (m, spec) in cluster.machines.iter().enumerate() {
+            for _ in 0..spec.cores {
+                ranks_on[m].push(machine_of.len());
+                machine_of.push(m);
+            }
+        }
+        Self { machine_of, ranks_on }
+    }
+
+    /// Round-robin placement: rank `r` lives on machine `r % M`, bounded by
+    /// each machine's core count. Panics if total ranks ≠ total cores.
+    pub fn round_robin(cluster: &Cluster) -> Self {
+        let total = cluster.total_cores();
+        let m_count = cluster.num_machines();
+        let mut capacity: Vec<usize> = cluster.machines.iter().map(|m| m.cores).collect();
+        let mut machine_of = vec![usize::MAX; total];
+        let mut ranks_on = vec![Vec::new(); m_count];
+        let mut m = 0usize;
+        for r in 0..total {
+            // find next machine with free capacity
+            let mut probe = 0;
+            while capacity[m] == 0 {
+                m = (m + 1) % m_count;
+                probe += 1;
+                assert!(probe <= m_count, "no capacity left");
+            }
+            machine_of[r] = m;
+            ranks_on[m].push(r);
+            capacity[m] -= 1;
+            m = (m + 1) % m_count;
+        }
+        Self { machine_of, ranks_on }
+    }
+
+    /// Explicit placement from a `rank -> machine` map.
+    pub fn explicit(cluster: &Cluster, machine_of: Vec<MachineId>) -> crate::Result<Self> {
+        let mut ranks_on = vec![Vec::new(); cluster.num_machines()];
+        for (r, &m) in machine_of.iter().enumerate() {
+            if m >= cluster.num_machines() {
+                anyhow::bail!("rank {r} placed on nonexistent machine {m}");
+            }
+            ranks_on[m].push(r);
+        }
+        for (m, ranks) in ranks_on.iter().enumerate() {
+            if ranks.len() > cluster.machines[m].cores {
+                anyhow::bail!(
+                    "machine {m} hosts {} ranks but has {} cores",
+                    ranks.len(),
+                    cluster.machines[m].cores
+                );
+            }
+        }
+        Ok(Self { machine_of, ranks_on })
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        self.machine_of.len()
+    }
+
+    pub fn machine_of(&self, r: Rank) -> MachineId {
+        self.machine_of[r]
+    }
+
+    pub fn ranks_on(&self, m: MachineId) -> &[Rank] {
+        &self.ranks_on[m]
+    }
+
+    /// Are two ranks co-located on the same machine?
+    pub fn colocated(&self, a: Rank, b: Rank) -> bool {
+        self.machine_of[a] == self.machine_of[b]
+    }
+
+    /// The lowest rank on rank `r`'s machine — the conventional *leader*.
+    pub fn leader_of(&self, r: Rank) -> Rank {
+        self.ranks_on[self.machine_of[r]][0]
+    }
+
+    /// Leader rank of machine `m`.
+    pub fn machine_leader(&self, m: MachineId) -> Rank {
+        self.ranks_on[m][0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_placement_dense_and_sorted() {
+        let c = switched(3, 4, 1);
+        let p = Placement::block(&c);
+        assert_eq!(p.num_ranks(), 12);
+        assert_eq!(p.ranks_on(0), &[0, 1, 2, 3]);
+        assert_eq!(p.ranks_on(2), &[8, 9, 10, 11]);
+        assert_eq!(p.machine_of(5), 1);
+        assert!(p.colocated(4, 7));
+        assert!(!p.colocated(3, 4));
+        assert_eq!(p.leader_of(6), 4);
+    }
+
+    #[test]
+    fn round_robin_spreads_ranks() {
+        let c = switched(2, 2, 1);
+        let p = Placement::round_robin(&c);
+        assert_eq!(p.machine_of(0), 0);
+        assert_eq!(p.machine_of(1), 1);
+        assert_eq!(p.machine_of(2), 0);
+        assert_eq!(p.machine_of(3), 1);
+    }
+
+    #[test]
+    fn explicit_placement_checks_capacity() {
+        let c = switched(2, 2, 1);
+        assert!(Placement::explicit(&c, vec![0, 0, 0, 1]).is_err());
+        assert!(Placement::explicit(&c, vec![0, 0, 1, 1]).is_ok());
+        assert!(Placement::explicit(&c, vec![0, 0, 1, 9]).is_err());
+    }
+
+    #[test]
+    fn switch_connectivity_and_degree() {
+        let c = switched(4, 2, 3);
+        assert!(c.connected(0, 3));
+        assert!(!c.connected(2, 2));
+        assert_eq!(c.degree(1), 3);
+        assert_eq!(c.neighbors(1), vec![0, 2, 3]);
+        assert!(c.is_connected());
+    }
+
+    #[test]
+    fn graph_symmetry_enforced() {
+        let machines = vec![MachineSpec::new(1, 1); 3];
+        let adj = vec![vec![1], vec![], vec![1]];
+        let c = Cluster::new(machines, Interconnect::Graph { adj }).unwrap();
+        assert!(c.connected(1, 0));
+        assert!(c.connected(1, 2));
+        assert!(!c.connected(0, 2));
+        assert_eq!(c.degree(1), 1); // 1 NIC caps 2 neighbors
+        assert!(c.is_connected());
+    }
+
+    #[test]
+    fn graph_rejects_self_loop_and_oob() {
+        let machines = vec![MachineSpec::new(1, 1); 2];
+        assert!(Cluster::new(
+            machines.clone(),
+            Interconnect::Graph { adj: vec![vec![0], vec![]] }
+        )
+        .is_err());
+        assert!(Cluster::new(
+            machines,
+            Interconnect::Graph { adj: vec![vec![5], vec![]] }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_degenerate_machines() {
+        assert!(Cluster::new(vec![], Interconnect::FullSwitch).is_err());
+        assert!(Cluster::new(
+            vec![MachineSpec::new(0, 1)],
+            Interconnect::FullSwitch
+        )
+        .is_err());
+        assert!(Cluster::new(
+            vec![MachineSpec::new(1, 0), MachineSpec::new(1, 1)],
+            Interconnect::FullSwitch
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn disconnected_graph_detected() {
+        let machines = vec![MachineSpec::new(1, 1); 4];
+        let adj = vec![vec![1], vec![0], vec![3], vec![2]];
+        let c = Cluster::new(machines, Interconnect::Graph { adj }).unwrap();
+        assert!(!c.is_connected());
+    }
+}

@@ -1,0 +1,219 @@
+//! SPMD workload traces: sequences of collective operations with data
+//! sizes, replayed through the simulator under a chosen algorithm suite.
+//!
+//! This is the workload-level view of the paper's claims: not "one
+//! broadcast is faster" but "an application that broadcasts, reduces and
+//! exchanges every iteration finishes sooner on multi-core-aware
+//! schedules". Generators cover the two SPMD shapes the paper's
+//! introduction motivates: iterative solvers (allreduce-dominated) and
+//! transform/shuffle codes (all-to-all dominated).
+
+use crate::collectives::TargetHeuristic;
+use crate::coordinator::{
+    AllreduceAlgo, AlltoallAlgo, BroadcastAlgo, Communicator, GatherAlgo,
+};
+use crate::sched::{CollectiveOp, Schedule};
+use crate::sim::{simulate, SimParams};
+use crate::util::Rng;
+
+/// One collective in a workload trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceOp {
+    Broadcast { root: usize, bytes: u64 },
+    Gather { root: usize, bytes: u64 },
+    Allreduce { bytes: u64 },
+    AllToAll { bytes_per_pair: u64 },
+}
+
+/// A sequence of collectives.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub ops: Vec<TraceOp>,
+}
+
+impl Trace {
+    /// Data-parallel training: per step one gradient allreduce plus an
+    /// occasional model broadcast (checkpoint restore / elastic join).
+    pub fn training(steps: usize, grad_bytes: u64) -> Self {
+        let mut ops = Vec::with_capacity(steps + steps / 50 + 1);
+        ops.push(TraceOp::Broadcast { root: 0, bytes: grad_bytes });
+        for s in 0..steps {
+            ops.push(TraceOp::Allreduce { bytes: grad_bytes });
+            if s % 50 == 49 {
+                ops.push(TraceOp::Broadcast { root: 0, bytes: grad_bytes });
+            }
+        }
+        Self { ops }
+    }
+
+    /// FFT/shuffle-style: all-to-all every iteration, gather at the end.
+    pub fn shuffle(iters: usize, bytes_per_pair: u64, result_bytes: u64) -> Self {
+        let mut ops: Vec<TraceOp> =
+            (0..iters).map(|_| TraceOp::AllToAll { bytes_per_pair }).collect();
+        ops.push(TraceOp::Gather { root: 0, bytes: result_bytes });
+        Self { ops }
+    }
+
+    /// Mixed workload with seeded randomness.
+    pub fn mixed(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let ops = (0..n)
+            .map(|_| match rng.gen_range(0..4) {
+                0 => TraceOp::Broadcast { root: 0, bytes: 1 << rng.gen_range(10..22) },
+                1 => TraceOp::Gather { root: 0, bytes: 1 << rng.gen_range(10..18) },
+                2 => TraceOp::Allreduce { bytes: 1 << rng.gen_range(12..24) },
+                _ => TraceOp::AllToAll { bytes_per_pair: 1 << rng.gen_range(8..14) },
+            })
+            .collect();
+        Self { ops }
+    }
+}
+
+/// Which algorithm family serves each op during replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suite {
+    /// Multi-core-oblivious classics (binomial / inverse-binomial /
+    /// pairwise / ring).
+    Flat,
+    /// The paper's multi-core-aware algorithms.
+    McAware,
+}
+
+impl Suite {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Suite::Flat => "flat",
+            Suite::McAware => "mc-aware",
+        }
+    }
+}
+
+/// Replay result.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub total_time: f64,
+    pub per_op: Vec<f64>,
+    pub ext_messages: usize,
+}
+
+/// Replay a trace on a communicator under a suite, timing each op with
+/// the continuous simulator.
+pub fn replay(
+    comm: &Communicator,
+    trace: &Trace,
+    suite: Suite,
+    base_params: &SimParams,
+) -> crate::Result<TraceReport> {
+    let mut total = 0.0;
+    let mut per_op = Vec::with_capacity(trace.ops.len());
+    let mut ext_messages = 0;
+    for op in &trace.ops {
+        let (schedule, total_bytes): (Schedule, u64) = match *op {
+            TraceOp::Broadcast { root, bytes } => (
+                match suite {
+                    Suite::Flat => comm.broadcast(BroadcastAlgo::Binomial, root),
+                    Suite::McAware => comm.broadcast(
+                        BroadcastAlgo::McAware(TargetHeuristic::CoverageAware),
+                        root,
+                    ),
+                },
+                bytes,
+            ),
+            TraceOp::Gather { root, bytes } => (
+                match suite {
+                    Suite::Flat => comm.gather(GatherAlgo::InverseBinomial, root),
+                    Suite::McAware => comm.gather(GatherAlgo::McAware, root),
+                },
+                bytes,
+            ),
+            TraceOp::Allreduce { bytes } => (
+                match suite {
+                    Suite::Flat => comm.allreduce(AllreduceAlgo::Ring)?,
+                    Suite::McAware => comm.allreduce(AllreduceAlgo::HierarchicalMc)?,
+                },
+                bytes,
+            ),
+            TraceOp::AllToAll { bytes_per_pair } => {
+                let n = comm.num_ranks() as u64;
+                (
+                    match suite {
+                        Suite::Flat => comm.alltoall(AlltoallAlgo::Pairwise),
+                        Suite::McAware => {
+                            let slots = comm
+                                .cluster
+                                .degree(0)
+                                .min(comm.placement.ranks_on(0).len())
+                                .max(1);
+                            comm.alltoall(AlltoallAlgo::LeaderAggregated(slots))
+                        }
+                    },
+                    bytes_per_pair * n * n,
+                )
+            }
+        };
+        // Spread the op's total payload over the schedule's chunk space.
+        let chunk_count = match schedule.op {
+            CollectiveOp::Broadcast { .. } => 1,
+            CollectiveOp::Gather { .. }
+            | CollectiveOp::Scatter { .. }
+            | CollectiveOp::Allgather => schedule.num_ranks,
+            CollectiveOp::AllToAll => schedule.num_ranks * schedule.num_ranks,
+            CollectiveOp::Reduce { chunks, .. } | CollectiveOp::Allreduce { chunks } => {
+                chunks as usize
+            }
+            CollectiveOp::ReduceScatter => schedule.num_ranks,
+        };
+        let params = base_params
+            .clone()
+            .with_chunk_bytes((total_bytes / chunk_count.max(1) as u64).max(1));
+        let rep = simulate(&comm.cluster, &comm.placement, &schedule, &params)?;
+        total += rep.t_end;
+        ext_messages += rep.ext_messages;
+        per_op.push(rep.t_end);
+    }
+    Ok(TraceReport { total_time: total, per_op, ext_messages })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::switched;
+
+    #[test]
+    fn generators_shape() {
+        let t = Trace::training(100, 1 << 20);
+        assert_eq!(
+            t.ops.iter().filter(|o| matches!(o, TraceOp::Allreduce { .. })).count(),
+            100
+        );
+        let s = Trace::shuffle(5, 1024, 1 << 20);
+        assert_eq!(s.ops.len(), 6);
+        let m1 = Trace::mixed(20, 7);
+        let m2 = Trace::mixed(20, 7);
+        assert_eq!(m1.ops, m2.ops);
+    }
+
+    #[test]
+    fn mc_suite_beats_flat_on_training_trace() {
+        let comm = Communicator::block(switched(4, 4, 2));
+        let trace = Trace::training(10, 4 << 20);
+        let params = SimParams::lan_cluster(1);
+        let flat = replay(&comm, &trace, Suite::Flat, &params).unwrap();
+        let mc = replay(&comm, &trace, Suite::McAware, &params).unwrap();
+        assert!(
+            mc.total_time < flat.total_time,
+            "mc {} vs flat {}",
+            mc.total_time,
+            flat.total_time
+        );
+    }
+
+    #[test]
+    fn replay_reports_per_op() {
+        let comm = Communicator::block(switched(2, 2, 1));
+        let trace = Trace::mixed(8, 1);
+        let rep = replay(&comm, &trace, Suite::McAware, &SimParams::lan_cluster(1)).unwrap();
+        assert_eq!(rep.per_op.len(), 8);
+        assert!(rep.total_time > 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities (the build environment is offline, so
+//! the crate is std-only: PRNG, stats and table formatting live here).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;

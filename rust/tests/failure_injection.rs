@@ -1,0 +1,171 @@
+//! Failure injection: randomly mutate correct schedules and assert that
+//! the verification pipeline (symbolic executor, postcondition check,
+//! model validator) catches the corruption — or, for the benign mutation
+//! classes, stays correct. This is the mutation-coverage test for the
+//! correctness oracles themselves.
+
+use mcomm::collectives::{allreduce, broadcast, gather, TargetHeuristic};
+use mcomm::model::{CostModel, Multicore};
+use mcomm::sched::{symexec, Schedule, XferKind};
+use mcomm::topology::{switched, Cluster, Placement};
+use mcomm::util::Rng;
+
+fn setup() -> (Cluster, Placement) {
+    let cl = switched(3, 4, 2);
+    let pl = Placement::block(&cl);
+    (cl, pl)
+}
+
+/// Apply one random structural mutation; returns a description, or None
+/// if the schedule had nothing to mutate at the chosen spot.
+fn mutate(s: &mut Schedule, rng: &mut Rng) -> Option<&'static str> {
+    if s.rounds.is_empty() {
+        return None;
+    }
+    let ri = rng.gen_range(0..s.rounds.len());
+    if s.rounds[ri].xfers.is_empty() {
+        return None;
+    }
+    let xi = rng.gen_range(0..s.rounds[ri].xfers.len());
+    match rng.gen_range(0..4) {
+        0 => {
+            // Drop a transfer entirely: some destination misses data.
+            s.rounds[ri].xfers.remove(xi);
+            Some("drop transfer")
+        }
+        1 => {
+            // Redirect to the sender's own source (self-loop).
+            let src = s.rounds[ri].xfers[xi].src;
+            s.rounds[ri].xfers[xi].dsts = vec![src];
+            Some("self loop")
+        }
+        2 => {
+            // Retarget the source to a rank that may not hold the data.
+            let x = &mut s.rounds[ri].xfers[xi];
+            x.src = (x.src + 1) % s.num_ranks;
+            Some("retarget source")
+        }
+        3 => {
+            // Strip the payload.
+            s.rounds[ri].xfers[xi].payload.items.clear();
+            Some("empty payload")
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// A mutated schedule must be rejected by at least one stage of the
+/// pipeline: shape check, symbolic run, postcondition, or model validity.
+fn pipeline_catches(cl: &Cluster, pl: &Placement, s: &Schedule) -> bool {
+    if s.check_shape(pl).is_err() {
+        return true;
+    }
+    let st = match symexec::run(s) {
+        Err(_) => return true,
+        Ok(st) => st,
+    };
+    if symexec::check_final(s, &st).is_err() {
+        return true;
+    }
+    Multicore::default().validate(cl, pl, s).is_err()
+}
+
+#[test]
+fn mutations_are_caught() {
+    let (cl, pl) = setup();
+    let originals: Vec<Schedule> = vec![
+        broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit),
+        broadcast::binomial(&pl, 0),
+        gather::mc_aware(&cl, &pl, 0),
+        allreduce::ring(&pl),
+        allreduce::hierarchical_mc(&cl, &pl),
+    ];
+    let mut rng = Rng::seed_from_u64(99);
+    let mut caught = 0usize;
+    let mut attempted = 0usize;
+    for (oi, original) in originals.iter().enumerate() {
+        symexec::verify(original).unwrap();
+        for trial in 0..60 {
+            let mut m = original.clone();
+            let Some(kind) = mutate(&mut m, &mut rng) else { continue };
+            if m == *original {
+                continue;
+            }
+            attempted += 1;
+            if pipeline_catches(&cl, &pl, &m) {
+                caught += 1;
+            } else {
+                // Surviving the whole pipeline means the mutant is still a
+                // *correct* schedule. Only two mutation classes can be
+                // benign: dropping a redundant transfer, and retargeting a
+                // source to another rank that also holds the data (e.g. a
+                // co-located informed process). Any other survivor is a
+                // hole in the oracle.
+                assert!(
+                    kind == "drop transfer" || kind == "retarget source",
+                    "schedule {oi} trial {trial}: undetected '{kind}' mutation"
+                );
+            }
+        }
+    }
+    // The pipeline must catch the overwhelming majority.
+    assert!(attempted > 150, "not enough mutation attempts: {attempted}");
+    let rate = caught as f64 / attempted as f64;
+    assert!(
+        rate > 0.85,
+        "only {caught}/{attempted} mutations caught ({rate:.2})"
+    );
+}
+
+#[test]
+fn executor_rejects_mutants_without_hanging() {
+    use mcomm::exec::{self, ExecParams};
+    let (cl, pl) = setup();
+    let original = allreduce::hierarchical_mc(&cl, &pl);
+    let mut rng = Rng::seed_from_u64(5);
+    let mut rejected = 0;
+    for _ in 0..20 {
+        let mut m = original.clone();
+        if mutate(&mut m, &mut rng).is_none() || m == original {
+            continue;
+        }
+        let inputs = exec::initial_inputs(&m, |_r, _c| vec![1.0f32; 8]);
+        let t = std::time::Instant::now();
+        let res = exec::run(&cl, &pl, &m, inputs, &ExecParams::zero());
+        assert!(
+            t.elapsed() < std::time::Duration::from_secs(5),
+            "executor must fail fast, took {:?}",
+            t.elapsed()
+        );
+        if res.is_err() {
+            rejected += 1;
+        }
+    }
+    assert!(rejected > 5, "executor rejected only {rejected} mutants");
+}
+
+#[test]
+fn validator_rejects_nic_oversubscription_everywhere() {
+    // Systematically duplicate external transfers until the NIC cap
+    // trips; the validator must catch every oversubscribed variant.
+    let (cl, pl) = setup();
+    let s = broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit);
+    let model = Multicore::default();
+    model.validate(&cl, &pl, &s).unwrap();
+    for ri in 0..s.rounds.len() {
+        for xi in 0..s.rounds[ri].xfers.len() {
+            if s.rounds[ri].xfers[xi].kind != XferKind::External {
+                continue;
+            }
+            let mut m = s.clone();
+            // Duplicate the send from the same src (proc cap) 3 times.
+            let dup = m.rounds[ri].xfers[xi].clone();
+            m.rounds[ri].xfers.push(dup.clone());
+            m.rounds[ri].xfers.push(dup);
+            assert!(
+                model.validate(&cl, &pl, &m).is_err(),
+                "round {ri} xfer {xi}: duplicated send not caught"
+            );
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Cross-layer integration: PJRT runtime + coordinator + executor +
+//! Pallas `combine` artifact cross-checks. Tests skip gracefully when
+//! `artifacts/` has not been built (`make artifacts`).
+
+use mcomm::coordinator::{AllreduceAlgo, Trainer, TrainerCfg};
+use mcomm::exec::ExecParams;
+use mcomm::runtime::{lit_f32_2d, Runtime};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&dir).join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+/// The Rust executor's allreduce and the Pallas `combine` kernel artifact
+/// must agree numerically on the same gradient stack: this pins L3's
+/// summation semantics to L1's.
+#[test]
+fn exec_allreduce_matches_pallas_combine_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu(&dir).unwrap();
+    let combine = rt.load("combine").unwrap();
+    let (k, p) = (rt.meta.workers, rt.meta.num_params);
+
+    // Trainer with exactly `workers` ranks.
+    let cfg = TrainerCfg {
+        machines: 2,
+        cores: k / 2,
+        nics: 2,
+        steps: 0,
+        algo: AllreduceAlgo::HierarchicalMc,
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&dir, &cfg).unwrap();
+    assert_eq!(trainer.workers(), k);
+
+    // Deterministic pseudo-gradients.
+    let mut rng = mcomm::util::Rng::seed_from_u64(3);
+    let grads: Vec<Vec<f32>> = (0..k)
+        .map(|_| (0..p).map(|_| (rng.gen_f64() as f32 - 0.5) * 0.1).collect())
+        .collect();
+
+    // L3 path: threaded executor running the hierarchical-mc schedule.
+    let via_exec = trainer.allreduce_grads(&grads, &ExecParams::zero()).unwrap();
+
+    // L1 path: the Pallas combine kernel compiled via PJRT.
+    let mut stack = Vec::with_capacity(k * p);
+    for g in &grads {
+        stack.extend_from_slice(g);
+    }
+    let out = combine.run(&[lit_f32_2d(&stack, k, p).unwrap()]).unwrap();
+    let via_pallas = out[0].to_vec::<f32>().unwrap();
+
+    let mut max_err = 0.0f32;
+    for i in 0..p {
+        max_err = max_err.max((via_exec[i] - via_pallas[i]).abs());
+    }
+    assert!(max_err < 1e-4, "exec vs pallas combine max err {max_err}");
+}
+
+/// Both allreduce algorithms produce bit-compatible training trajectories
+/// (same batches, same math — the schedule is the only difference).
+#[test]
+fn ring_and_hierarchical_training_trajectories_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut finals = Vec::new();
+    for algo in [AllreduceAlgo::Ring, AllreduceAlgo::HierarchicalMc] {
+        let cfg = TrainerCfg {
+            machines: 2,
+            cores: 2,
+            nics: 1,
+            steps: 6,
+            lr: 0.5,
+            algo,
+            exec_params: ExecParams::zero(),
+            seed: 11,
+            log_every: 0,
+        };
+        let trainer = Trainer::new(&dir, &cfg).unwrap();
+        let rep = trainer.run(&cfg).unwrap();
+        finals.push(rep.losses);
+    }
+    for (a, b) in finals[0].iter().zip(&finals[1]) {
+        assert!(
+            (a - b).abs() < 2e-3,
+            "trajectories diverged: {a} vs {b} (ring vs hier)"
+        );
+    }
+}
+
+/// Recursive-doubling also trains correctly (third algorithm, pow2 ranks).
+#[test]
+fn recursive_doubling_trains() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = TrainerCfg {
+        machines: 2,
+        cores: 2,
+        nics: 2,
+        steps: 4,
+        lr: 0.5,
+        algo: AllreduceAlgo::RecursiveDoubling,
+        exec_params: ExecParams::zero(),
+        seed: 11,
+        log_every: 0,
+    };
+    let trainer = Trainer::new(&dir, &cfg).unwrap();
+    let rep = trainer.run(&cfg).unwrap();
+    assert_eq!(rep.losses.len(), 4);
+    assert!(rep.losses.iter().all(|l| l.is_finite()));
+}

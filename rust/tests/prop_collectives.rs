@@ -1,0 +1,264 @@
+//! Property tests over randomized topologies: every schedule builder, on
+//! every random cluster shape, must (a) verify symbolically, (b) be
+//! legal — directly or after legalization — under the multi-core model,
+//! (c) simulate without error, and (d) for a sample of cases, move real
+//! bytes correctly through the threaded executor.
+//!
+//! The offline build has no proptest crate; this is a seeded-sweep
+//! equivalent (deterministic, ~200 distinct cases per run) with shrink-
+//! free but fully reproducible failures (the failing seed is in the
+//! panic message).
+
+use mcomm::collectives::{
+    allgather, allreduce, alltoall, broadcast, gather, reduce, scatter, TargetHeuristic,
+};
+use mcomm::exec::{self, ExecParams};
+use mcomm::model::{legalize, CostModel, Multicore};
+use mcomm::sched::{symexec, Schedule};
+use mcomm::sim::{simulate, SimParams};
+use mcomm::topology::{clustered, gnp, switched, Cluster, Placement};
+use mcomm::util::Rng;
+
+/// Random cluster from a seed: switch or connected graph, 2..6 machines,
+/// 1..6 cores, 1..4 NICs.
+fn random_cluster(seed: u64) -> Cluster {
+    let mut rng = Rng::seed_from_u64(seed);
+    let machines = 2 + rng.gen_range(0..5);
+    let cores = 1 + rng.gen_range(0..6);
+    let nics = 1 + rng.gen_range(0..4);
+    match rng.gen_range(0..3) {
+        0 => switched(machines, cores, nics),
+        1 => gnp(machines.max(2), 0.5, cores, nics, seed ^ 0xABCD),
+        _ => clustered(2, 2 + rng.gen_range(0..3), 0.8, cores, nics, seed ^ 0x1234),
+    }
+}
+
+fn check_schedule(cl: &Cluster, pl: &Placement, s: &Schedule, ctx: &str) {
+    symexec::verify(s).unwrap_or_else(|e| panic!("{ctx}: symexec: {e}"));
+    let model = Multicore::default();
+    let legal = legalize(&model, cl, pl, s);
+    model
+        .validate(cl, pl, &legal)
+        .unwrap_or_else(|e| panic!("{ctx}: validate: {e}"));
+    symexec::verify(&legal).unwrap_or_else(|e| panic!("{ctx}: legalized symexec: {e}"));
+    simulate(cl, pl, &legal, &SimParams::lan_cluster(512))
+        .unwrap_or_else(|e| panic!("{ctx}: simulate: {e}"));
+}
+
+#[test]
+fn all_builders_verify_on_random_topologies() {
+    for seed in 0..40u64 {
+        let cl = random_cluster(seed);
+        let pl = Placement::block(&cl);
+        let n = pl.num_ranks();
+        let mut rng = Rng::seed_from_u64(seed ^ 0xF00D);
+        let root = rng.gen_range(0..n);
+        let slots = (1 + rng.gen_range(0..2))
+            .min(cl.degree(0))
+            .min(pl.ranks_on(0).len())
+            .max(1);
+        let is_switch = matches!(
+            cl.interconnect,
+            mcomm::topology::Interconnect::FullSwitch
+        );
+        let ctx = |name: &str| format!("seed {seed} ({name}, root {root})");
+
+        // Topology-aware builders work on any connected interconnect.
+        check_schedule(
+            &cl,
+            &pl,
+            &broadcast::hierarchical(&cl, &pl, root),
+            &ctx("hierarchical"),
+        );
+        for h in [
+            TargetHeuristic::FirstFit,
+            TargetHeuristic::FastestNodeFirst,
+            TargetHeuristic::HighestDegreeFirst,
+            TargetHeuristic::CoverageAware,
+        ] {
+            check_schedule(
+                &cl,
+                &pl,
+                &broadcast::mc_aware(&cl, &pl, root, h),
+                &ctx(h.name()),
+            );
+        }
+        check_schedule(&cl, &pl, &gather::mc_aware(&cl, &pl, root), &ctx("mc_gather"));
+        check_schedule(&cl, &pl, &scatter::mc_aware(&cl, &pl, root), &ctx("mc_scatter"));
+        check_schedule(&cl, &pl, &reduce::mc_aware(&cl, &pl, root), &ctx("reduce_mc"));
+
+        // Flat algorithms assume any-to-any reachability (the LogP
+        // premise); they only apply on switched interconnects.
+        if is_switch {
+            check_schedule(&cl, &pl, &broadcast::flat_tree(&pl, root), &ctx("flat_tree"));
+            check_schedule(&cl, &pl, &broadcast::binomial(&pl, root), &ctx("binomial"));
+            check_schedule(
+                &cl,
+                &pl,
+                &gather::flat_gather(&pl, root),
+                &ctx("flat_gather"),
+            );
+            check_schedule(
+                &cl,
+                &pl,
+                &gather::inverse_binomial(&pl, root),
+                &ctx("inverse_binomial"),
+            );
+            check_schedule(
+                &cl,
+                &pl,
+                &scatter::flat_scatter(&pl, root),
+                &ctx("flat_scatter"),
+            );
+            check_schedule(&cl, &pl, &scatter::binomial(&pl, root), &ctx("bin_scatter"));
+            check_schedule(&cl, &pl, &alltoall::pairwise(&pl), &ctx("pairwise"));
+            check_schedule(&cl, &pl, &alltoall::bruck(&pl), &ctx("bruck"));
+            check_schedule(
+                &cl,
+                &pl,
+                &alltoall::leader_aggregated(&cl, &pl, slots),
+                &ctx("leader_aggregated"),
+            );
+            check_schedule(&cl, &pl, &allgather::ring(&pl), &ctx("ag_ring"));
+            check_schedule(
+                &cl,
+                &pl,
+                &allgather::mc_aware(&cl, &pl, slots),
+                &ctx("ag_mc"),
+            );
+            check_schedule(&cl, &pl, &reduce::binomial(&pl, root), &ctx("reduce_bin"));
+            if n > 1 {
+                check_schedule(&cl, &pl, &allreduce::ring(&pl), &ctx("ar_ring"));
+            }
+            check_schedule(
+                &cl,
+                &pl,
+                &allreduce::hierarchical_mc(&cl, &pl),
+                &ctx("ar_hier"),
+            );
+            if n.is_power_of_two() && n > 1 {
+                check_schedule(
+                    &cl,
+                    &pl,
+                    &allreduce::recursive_doubling(&pl).unwrap(),
+                    &ctx("ar_recdoub"),
+                );
+                check_schedule(
+                    &cl,
+                    &pl,
+                    &allreduce::rabenseifner(&pl).unwrap(),
+                    &ctx("ar_raben"),
+                );
+            }
+        }
+    }
+}
+
+/// Real-byte spot checks: a random sample of (seed, op) pairs through the
+/// executor with numeric verification.
+#[test]
+fn executor_matches_reference_on_random_cases() {
+    let pat = |r: usize, c: mcomm::sched::Chunk| -> Vec<f32> {
+        (0..3)
+            .map(|i| (r * 31 + c.0 as usize * 7 + i) as f32 * 0.25)
+            .collect()
+    };
+    for seed in 0..12u64 {
+        // Switched shapes: hierarchical-mc's inter-machine rings need
+        // any-to-any reachability.
+        let mut shape_rng = Rng::seed_from_u64(seed + 1000);
+        let cl = switched(
+            2 + shape_rng.gen_range(0..4),
+            1 + shape_rng.gen_range(0..5),
+            1 + shape_rng.gen_range(0..3),
+        );
+        let pl = Placement::block(&cl);
+        let n = pl.num_ranks();
+        if n < 2 {
+            continue;
+        }
+        let mut rng = Rng::seed_from_u64(seed);
+        let root = rng.gen_range(0..n);
+
+        // Broadcast: everyone ends with root's data.
+        let s = broadcast::mc_aware(&cl, &pl, root, TargetHeuristic::CoverageAware);
+        let rep = exec::run(&cl, &pl, &s, exec::initial_inputs(&s, pat), &ExecParams::zero())
+            .unwrap_or_else(|e| panic!("seed {seed} bcast: {e}"));
+        let want = pat(root, mcomm::sched::Chunk(0));
+        for r in 0..n {
+            assert_eq!(
+                *rep.outputs[r].value(mcomm::sched::Chunk(0)).unwrap(),
+                want,
+                "seed {seed} rank {r}"
+            );
+        }
+
+        // Allreduce: everyone ends with the sum.
+        let s = allreduce::hierarchical_mc(&cl, &pl);
+        let chunks = match s.op {
+            mcomm::sched::CollectiveOp::Allreduce { chunks } => chunks,
+            _ => unreachable!(),
+        };
+        let rep = exec::run(&cl, &pl, &s, exec::initial_inputs(&s, pat), &ExecParams::zero())
+            .unwrap_or_else(|e| panic!("seed {seed} allreduce: {e}"));
+        for c in 0..chunks {
+            let ch = mcomm::sched::Chunk(c);
+            let want: Vec<f32> = (0..3)
+                .map(|i| (0..n).map(|r| pat(r, ch)[i]).sum())
+                .collect();
+            for r in 0..n {
+                let got = rep.outputs[r]
+                    .reduced_value(ch, n)
+                    .unwrap_or_else(|| panic!("seed {seed} rank {r} chunk {c}"));
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g - w).abs() < 1e-3,
+                        "seed {seed} rank {r} chunk {c}: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Random placements (not just block): builders must stay correct when
+/// ranks are scattered round-robin across machines.
+#[test]
+fn round_robin_placement_still_verifies() {
+    for seed in 0..15u64 {
+        let mut shape_rng = Rng::seed_from_u64(seed + 2000);
+        let cl = switched(
+            2 + shape_rng.gen_range(0..4),
+            1 + shape_rng.gen_range(0..5),
+            1 + shape_rng.gen_range(0..3),
+        );
+        let pl = Placement::round_robin(&cl);
+        let n = pl.num_ranks();
+        let mut rng = Rng::seed_from_u64(seed);
+        let root = rng.gen_range(0..n);
+        check_schedule(
+            &cl,
+            &pl,
+            &broadcast::binomial(&pl, root),
+            &format!("rr binomial seed {seed}"),
+        );
+        check_schedule(
+            &cl,
+            &pl,
+            &broadcast::mc_aware(&cl, &pl, root, TargetHeuristic::FirstFit),
+            &format!("rr mc seed {seed}"),
+        );
+        check_schedule(
+            &cl,
+            &pl,
+            &gather::mc_aware(&cl, &pl, root),
+            &format!("rr gather seed {seed}"),
+        );
+        check_schedule(
+            &cl,
+            &pl,
+            &allreduce::ring(&pl),
+            &format!("rr ring seed {seed}"),
+        );
+    }
+}
