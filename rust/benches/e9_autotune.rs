@@ -1,0 +1,72 @@
+//! Bench E9: autotuner overhead and win margins.
+//!
+//! Three questions: what does a cold `tune::select` cost (builds, prices
+//! and simulates a candidate pool), what does a warm cache lookup cost
+//! (fingerprint + hash probe — the steady-state price of routing every
+//! collective through the tuner), and how much simulated time does the
+//! tuned choice save over the flat baseline across cluster shapes.
+#[path = "bench_harness.rs"]
+mod bench_harness;
+use bench_harness::{bench, bench_once};
+
+use mcomm::topology::{switched, Placement};
+use mcomm::tune::{self, Collective, DecisionCache, TuneCfg};
+
+fn main() {
+    let cfg = TuneCfg::default();
+    let cl = switched(8, 8, 2);
+    let pl = Placement::block(&cl);
+
+    // Cold selection: the full two-stage pipeline, no cache.
+    bench("e9: cold select broadcast (8x8, k=2)", || {
+        tune::select(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg).unwrap();
+    });
+    bench("e9: cold select allreduce (8x8, k=2)", || {
+        tune::select(&cl, &pl, Collective::Allreduce, &cfg).unwrap();
+    });
+
+    // Warm lookups: fingerprint + probe only.
+    let mut cache = DecisionCache::new();
+    cache.get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg).unwrap();
+    bench("e9: cached lookup (hit)", || {
+        cache.get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg).unwrap();
+    });
+    let stats = cache.stats();
+    println!(
+        "cache: {} hits / {} misses / {} entries\n",
+        stats.hits, stats.misses, stats.entries
+    );
+
+    // Win margins: tuned vs flat baseline across shapes.
+    bench_once("e9: win-margin sweep", || {
+        println!();
+        println!(
+            "{:<22} {:>16} {:>14} {:>14} {:>8}",
+            "cluster", "tuned pick", "tuned (ms)", "flat (ms)", "win"
+        );
+        for (m, c, k) in [
+            (2usize, 2usize, 1usize),
+            (4, 4, 1),
+            (4, 4, 2),
+            (8, 8, 2),
+            (8, 8, 4),
+            (16, 8, 4),
+        ] {
+            let cl = switched(m, c, k);
+            let pl = Placement::block(&cl);
+            for coll in [Collective::Broadcast { root: 0 }, Collective::Allreduce] {
+                let d = tune::select(&cl, &pl, coll, &cfg).unwrap();
+                let base = d.baseline_sim.expect("switch has a baseline");
+                assert!(d.sim_time <= base, "tuner must never lose to flat");
+                println!(
+                    "{:<22} {:>16} {:>14.3} {:>14.3} {:>7.1}%",
+                    format!("{m}x{c} k={k} {}", coll.name()),
+                    d.choice.label().split('/').nth(1).unwrap_or("?"),
+                    d.sim_time * 1e3,
+                    base * 1e3,
+                    d.win_margin().unwrap_or(0.0) * 100.0
+                );
+            }
+        }
+    });
+}

@@ -23,6 +23,18 @@ fn chunks_of(ranks: &[Rank]) -> Payload {
 
 /// Ring allgather: round `t`, rank `i` forwards chunk `(i - t) mod P` to
 /// `(i + 1) mod P`.
+///
+/// ```
+/// use mcomm::collectives::allgather;
+/// use mcomm::sched::symexec;
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(2, 3, 1);            // 6 ranks
+/// let placement = Placement::block(&cluster);
+/// let s = allgather::ring(&placement);
+/// symexec::verify(&s).unwrap();               // every rank ends with all 6 chunks
+/// assert_eq!(s.num_rounds(), 5);              // P - 1
+/// ```
 pub fn ring(placement: &Placement) -> Schedule {
     let n = placement.num_ranks();
     let mut s = Schedule::new(CollectiveOp::Allgather, n, "ring");
@@ -39,6 +51,21 @@ pub fn ring(placement: &Placement) -> Schedule {
 
 /// Multi-core-aware allgather (publish, machine-pairwise exchange with
 /// `slots` parallel planes, republish).
+///
+/// ```
+/// use mcomm::collectives::allgather;
+/// use mcomm::model::{CostModel, Multicore};
+/// use mcomm::sched::symexec;
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(4, 4, 2);            // 4 machines x 4 cores, 2 NICs
+/// let placement = Placement::block(&cluster);
+/// let s = allgather::mc_aware(&cluster, &placement, 2);
+/// symexec::verify(&s).unwrap();
+/// let model = Multicore::default();
+/// model.validate(&cluster, &placement, &s).unwrap(); // legal as built
+/// assert!(model.cost(&cluster, &placement, &s).unwrap() > 0.0);
+/// ```
 pub fn mc_aware(cluster: &Cluster, placement: &Placement, slots: usize) -> Schedule {
     let n = placement.num_ranks();
     let m_count = cluster.num_machines();

@@ -22,6 +22,18 @@ use crate::Rank;
 use super::helpers::pt2pt;
 
 /// Flat ring allreduce over `P` chunks.
+///
+/// ```
+/// use mcomm::collectives::allreduce;
+/// use mcomm::sched::symexec;
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(2, 2, 1);            // 4 ranks
+/// let placement = Placement::block(&cluster);
+/// let s = allreduce::ring(&placement);
+/// symexec::verify(&s).unwrap();   // every rank ends with the full sum
+/// assert_eq!(s.num_rounds(), 6);  // 2 * (P - 1)
+/// ```
 pub fn ring(placement: &Placement) -> Schedule {
     let n = placement.num_ranks();
     let op = CollectiveOp::Allreduce { chunks: n as u32 };
@@ -180,6 +192,27 @@ pub fn rabenseifner(placement: &Placement) -> crate::Result<Schedule> {
 ///
 /// `S = max(1, min over machines of min(degree, cores))` parallel planes;
 /// `S*M` chunks (single-machine clusters use 1 chunk). See module docs.
+///
+/// ```
+/// use mcomm::collectives::allreduce;
+/// use mcomm::model::{CostModel, Multicore};
+/// use mcomm::sched::symexec;
+/// use mcomm::sim::{simulate, SimParams};
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(4, 4, 2);            // 4 machines x 4 cores, 2 NICs
+/// let placement = Placement::block(&cluster);
+/// let s = allreduce::hierarchical_mc(&cluster, &placement);
+/// symexec::verify(&s).unwrap();
+/// let model = Multicore::default();
+/// model.validate(&cluster, &placement, &s).unwrap(); // legal as built
+/// // Round-model cost and continuous-time cost, same schedule value.
+/// assert!(model.cost(&cluster, &placement, &s).unwrap() > 0.0);
+/// let t = simulate(&cluster, &placement, &s, &SimParams::lan_cluster(1024))
+///     .unwrap()
+///     .t_end;
+/// assert!(t > 0.0);
+/// ```
 pub fn hierarchical_mc(cluster: &Cluster, placement: &Placement) -> Schedule {
     let n = placement.num_ranks();
     let m_count = cluster.num_machines();

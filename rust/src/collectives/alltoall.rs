@@ -64,6 +64,18 @@ pub fn pairwise(placement: &Placement) -> Schedule {
 /// Each block `(s, d)` sits at holder `h`; its remaining offset is
 /// `(d - h) mod P`. In round `k`, every rank forwards all blocks whose
 /// offset has bit `k` set to `(h + 2^k) mod P`.
+///
+/// ```
+/// use mcomm::collectives::alltoall;
+/// use mcomm::sched::symexec;
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(2, 2, 1);            // 4 ranks
+/// let placement = Placement::block(&cluster);
+/// let s = alltoall::bruck(&placement);
+/// symexec::verify(&s).unwrap();   // every (src, dst) block delivered
+/// assert_eq!(s.num_rounds(), 2);  // ceil(log2 4)
+/// ```
 pub fn bruck(placement: &Placement) -> Schedule {
     let n = placement.num_ranks();
     let mut s = Schedule::new(CollectiveOp::AllToAll, n, "bruck");
@@ -118,6 +130,21 @@ pub fn bruck(placement: &Placement) -> Schedule {
 ///
 /// Phase 3 (1 internal round per receive round, piggybacked): the landing
 /// process publishes the received aggregate with one local write.
+///
+/// ```
+/// use mcomm::collectives::alltoall;
+/// use mcomm::model::{CostModel, Multicore};
+/// use mcomm::sched::symexec;
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(4, 4, 2);            // 4 machines x 4 cores, 2 NICs
+/// let placement = Placement::block(&cluster);
+/// let s = alltoall::leader_aggregated(&cluster, &placement, 2);
+/// symexec::verify(&s).unwrap();
+/// let model = Multicore::default();
+/// model.validate(&cluster, &placement, &s).unwrap(); // legal as built
+/// assert!(model.cost(&cluster, &placement, &s).unwrap() > 0.0);
+/// ```
 pub fn leader_aggregated(
     cluster: &Cluster,
     placement: &Placement,

@@ -28,7 +28,8 @@ use crate::Rank;
 use super::helpers::{ceil_log2, pt2pt, Rooted};
 
 /// Target-selection policy for [`mc_aware`] dissemination on graphs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// (`Hash` so the tuner's candidate ids can key its decision cache.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TargetHeuristic {
     /// Lowest machine id first (arbitrary but deterministic).
     FirstFit,
@@ -72,6 +73,23 @@ pub fn flat_tree(placement: &Placement, root: Rank) -> Schedule {
 /// Classic binomial tree over ranks (multi-core oblivious).
 ///
 /// Round `k`: every informed virtual rank `v < 2^k` sends to `v + 2^k`.
+///
+/// ```
+/// use mcomm::collectives::broadcast;
+/// use mcomm::model::{legalize, CostModel, Multicore};
+/// use mcomm::sched::symexec;
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(2, 4, 1);            // 2 machines x 4 cores, 1 NIC
+/// let placement = Placement::block(&cluster);
+/// let s = broadcast::binomial(&placement, 0);
+/// symexec::verify(&s).unwrap();               // proves broadcast semantics
+/// assert_eq!(s.num_rounds(), 3);              // ceil(log2 8)
+/// // Flat trees oversubscribe NICs; legalize, then price in rounds.
+/// let model = Multicore::default();
+/// let legal = legalize(&model, &cluster, &placement, &s);
+/// assert!(model.cost(&cluster, &placement, &legal).unwrap() > 0.0);
+/// ```
 pub fn binomial(placement: &Placement, root: Rank) -> Schedule {
     let n = placement.num_ranks();
     let map = Rooted::new(root, n);
@@ -200,6 +218,23 @@ pub fn hierarchical(cluster: &Cluster, placement: &Placement, root: Rank) -> Sch
 /// process publishes it with one local write (piggybacked into the next
 /// round — local work rides free, R2), after which *all* its processes
 /// are senders.
+///
+/// ```
+/// use mcomm::collectives::{broadcast, TargetHeuristic};
+/// use mcomm::model::{CostModel, Multicore};
+/// use mcomm::sched::symexec;
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(4, 4, 2);            // 4 machines x 4 cores, 2 NICs
+/// let placement = Placement::block(&cluster);
+/// let s =
+///     broadcast::mc_aware(&cluster, &placement, 0, TargetHeuristic::CoverageAware);
+/// symexec::verify(&s).unwrap();
+/// let model = Multicore::default();
+/// model.validate(&cluster, &placement, &s).unwrap(); // legal as built (R1-R3)
+/// let cost = model.cost_detail(&cluster, &placement, &s).unwrap();
+/// assert!(cost.ext_rounds <= 3);              // (k+1)-ary dissemination
+/// ```
 pub fn mc_aware(
     cluster: &Cluster,
     placement: &Placement,

@@ -93,6 +93,21 @@ pub fn inverse_binomial(placement: &Placement, root: Rank) -> Schedule {
 /// arity per round on *distinct* processes (one external receive per
 /// process per round), then merges those landings into its leader with
 /// local reads.
+///
+/// ```
+/// use mcomm::collectives::gather;
+/// use mcomm::model::{CostModel, Multicore};
+/// use mcomm::sched::symexec;
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(4, 4, 2);            // 4 machines x 4 cores, 2 NICs
+/// let placement = Placement::block(&cluster);
+/// let s = gather::mc_aware(&cluster, &placement, 0);
+/// symexec::verify(&s).unwrap();               // every chunk reaches the root
+/// let model = Multicore::default();
+/// model.validate(&cluster, &placement, &s).unwrap(); // legal as built
+/// assert!(model.cost(&cluster, &placement, &s).unwrap() > 0.0);
+/// ```
 pub fn mc_aware(cluster: &Cluster, placement: &Placement, root: Rank) -> Schedule {
     let n = placement.num_ranks();
     let m_count = cluster.num_machines();

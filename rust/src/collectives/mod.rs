@@ -17,7 +17,13 @@
 //!
 //! Every builder's output is symbolically verified
 //! ([`crate::sched::symexec`]) in this module's tests and hammered with
-//! randomized topologies in `rust/tests/prop_collectives.rs`.
+//! randomized topologies in `rust/tests/prop_collectives.rs` — under
+//! both NIC duplex assumptions ([`crate::model::Duplex`]): schedules are
+//! built assuming full duplex, and the half-duplex sweep checks that
+//! legalization serializes them correctly. Each builder also carries a
+//! runnable doctest showing the `(Cluster, Placement) -> Schedule ->
+//! cost` round trip, and the tuner (`crate::tune`) enumerates these
+//! builders as its candidate registry.
 
 pub mod allgather;
 pub mod allreduce;

@@ -49,6 +49,21 @@ pub fn binomial(placement: &Placement, root: Rank) -> Schedule {
 
 /// Multi-core-aware reduce (mirror of the mc-aware gather, with
 /// combining).
+///
+/// ```
+/// use mcomm::collectives::reduce;
+/// use mcomm::model::{CostModel, Multicore};
+/// use mcomm::sched::symexec;
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(4, 4, 2);            // 4 machines x 4 cores, 2 NICs
+/// let placement = Placement::block(&cluster);
+/// let s = reduce::mc_aware(&cluster, &placement, 0);
+/// symexec::verify(&s).unwrap();   // sum neither drops nor double-counts
+/// let model = Multicore::default();
+/// model.validate(&cluster, &placement, &s).unwrap(); // legal as built
+/// assert!(model.cost(&cluster, &placement, &s).unwrap() > 0.0);
+/// ```
 pub fn mc_aware(cluster: &Cluster, placement: &Placement, root: Rank) -> Schedule {
     let n = placement.num_ranks();
     let m_count = cluster.num_machines();

@@ -1,5 +1,11 @@
 //! Communicator: algorithm-by-name collective schedule construction plus
 //! one-call costing/simulation/execution — the crate's public facade.
+//!
+//! Fixed algorithms are picked with the per-op `*Algo` enums; the
+//! embedded [`Tuned`] autotuner serves [`Communicator::tuned`] and the
+//! `Auto` selector variants, so callers that do not care which builder
+//! wins simply get the best schedule for their topology (cached across
+//! calls).
 
 use crate::collectives::{allgather, allreduce, alltoall, broadcast, gather, reduce, scatter};
 use crate::collectives::TargetHeuristic;
@@ -8,6 +14,7 @@ use crate::model::CostModel;
 use crate::sched::Schedule;
 use crate::sim::{simulate, SimParams, SimReport};
 use crate::topology::{Cluster, Placement};
+use crate::tune::{CacheStats, Collective, Decision, TuneCfg, Tuned};
 use crate::Rank;
 
 /// Broadcast algorithm selector.
@@ -43,6 +50,8 @@ pub enum AllreduceAlgo {
     RecursiveDoubling,
     Rabenseifner,
     HierarchicalMc,
+    /// Let the autotuner pick (cached per topology fingerprint).
+    Auto,
 }
 
 /// Allgather algorithm selector.
@@ -59,6 +68,7 @@ impl AllreduceAlgo {
             AllreduceAlgo::RecursiveDoubling => "recursive-doubling",
             AllreduceAlgo::Rabenseifner => "rabenseifner",
             AllreduceAlgo::HierarchicalMc => "hierarchical-mc",
+            AllreduceAlgo::Auto => "auto",
         }
     }
 }
@@ -67,17 +77,25 @@ impl AllreduceAlgo {
 pub struct Communicator {
     pub cluster: Cluster,
     pub placement: Placement,
+    /// The embedded autotuner (decision cache included). Replace via
+    /// [`Communicator::with_tune_cfg`] to change model/sim assumptions.
+    pub tuner: Tuned,
 }
 
 impl Communicator {
     pub fn new(cluster: Cluster, placement: Placement) -> Self {
-        Self { cluster, placement }
+        Self { cluster, placement, tuner: Tuned::default() }
     }
 
     /// One process per core, block placement.
     pub fn block(cluster: Cluster) -> Self {
         let placement = Placement::block(&cluster);
-        Self { cluster, placement }
+        Self::new(cluster, placement)
+    }
+
+    /// Like [`Communicator::new`] but with explicit tuning parameters.
+    pub fn with_tune_cfg(cluster: Cluster, placement: Placement, cfg: TuneCfg) -> Self {
+        Self { cluster, placement, tuner: Tuned::new(cfg) }
     }
 
     pub fn num_ranks(&self) -> usize {
@@ -129,6 +147,7 @@ impl Communicator {
             AllreduceAlgo::HierarchicalMc => {
                 allreduce::hierarchical_mc(&self.cluster, &self.placement)
             }
+            AllreduceAlgo::Auto => self.tuned(Collective::Allreduce)?,
         })
     }
 
@@ -155,6 +174,25 @@ impl Communicator {
 
     pub fn scatter_mc(&self, root: Rank) -> Schedule {
         scatter::mc_aware(&self.cluster, &self.placement, root)
+    }
+
+    // ---- autotuned dispatch ------------------------------------------
+
+    /// The best schedule for `coll` on this communicator's topology, as
+    /// decided by the embedded autotuner (model-cost shortlist, simulator
+    /// confirmation, decision cached per topology fingerprint).
+    pub fn tuned(&self, coll: Collective) -> crate::Result<Schedule> {
+        self.tuner.schedule(&self.cluster, &self.placement, coll)
+    }
+
+    /// The full tuning decision for `coll` (choice, costs, win margin).
+    pub fn tuned_decision(&self, coll: Collective) -> crate::Result<Decision> {
+        self.tuner.decision(&self.cluster, &self.placement, coll)
+    }
+
+    /// Autotuner cache counters.
+    pub fn tune_stats(&self) -> CacheStats {
+        self.tuner.stats()
     }
 
     // ---- evaluation ---------------------------------------------------
@@ -219,6 +257,43 @@ mod tests {
                 .validate(&comm.cluster, &comm.placement, &legal)
                 .unwrap_or_else(|e| panic!("{}: {e}", s.algo));
         }
+    }
+
+    #[test]
+    fn auto_allreduce_routes_through_tuner() {
+        let comm = Communicator::block(switched(4, 4, 2));
+        let a = comm.allreduce(AllreduceAlgo::Auto).unwrap();
+        symexec::verify(&a).unwrap();
+        let b = comm.allreduce(AllreduceAlgo::Auto).unwrap();
+        assert_eq!(a, b);
+        let s = comm.tune_stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn tuned_dispatch_covers_every_collective() {
+        let comm = Communicator::block(switched(2, 4, 2));
+        use crate::tune::Collective;
+        for coll in [
+            Collective::Broadcast { root: 0 },
+            Collective::Gather { root: 0 },
+            Collective::Scatter { root: 0 },
+            Collective::Reduce { root: 0 },
+            Collective::Allgather,
+            Collective::AllToAll,
+            Collective::Allreduce,
+        ] {
+            let d = comm.tuned_decision(coll).unwrap();
+            symexec::verify(&d.schedule).unwrap_or_else(|e| panic!("{}: {e}", coll.name()));
+            let base = d.baseline_sim.expect("switch always has a flat baseline");
+            assert!(
+                d.sim_time <= base,
+                "{}: tuned {} > baseline {base}",
+                coll.name(),
+                d.sim_time
+            );
+        }
+        assert_eq!(comm.tune_stats().entries, 7);
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //! through the `apply` artifact. Swapping [`AllreduceAlgo::Ring`] for
 //! [`AllreduceAlgo::HierarchicalMc`] changes nothing but the schedule;
 //! the measured communication-time gap is the paper's claim made
-//! end-to-end.
+//! end-to-end. The default is [`AllreduceAlgo::Auto`]: the schedule is
+//! picked by [`crate::tune`] for the configured cluster rather than
+//! hard-coded.
 //!
 //! PJRT compute runs sequentially over workers on the host CPU client
 //! (device parallelism is not what this paper is about); communication
@@ -47,7 +49,7 @@ impl Default for TrainerCfg {
             nics: 2,
             steps: 100,
             lr: 0.25,
-            algo: AllreduceAlgo::HierarchicalMc,
+            algo: AllreduceAlgo::Auto,
             exec_params: ExecParams::zero(),
             seed: 0,
             log_every: 10,

@@ -24,12 +24,18 @@
 //! * **symbolically executed** to prove collective semantics
 //!   ([`sched::symexec`]),
 //! * **run over real bytes** by the in-process cluster executor ([`exec`]),
+//! * **autotuned**: [`tune`] enumerates every applicable builder,
+//!   ranks candidates by model cost, confirms with the simulator, and
+//!   caches the decision per topology fingerprint,
 //! * and **driven from the coordinator** for end-to-end workloads such as
 //!   data-parallel training with AOT-compiled JAX compute ([`coordinator`],
 //!   [`runtime`]).
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! reproduction of every quantitative claim in the paper.
+//! The architecture guide — module map, the concrete R1/R2/R3 round
+//! semantics, and the tuner's data-flow diagram — lives in
+//! `rust/src/README.md`; see `DESIGN.md` for the system inventory and
+//! `EXPERIMENTS.md` for the reproduction of every quantitative claim in
+//! the paper.
 
 pub mod collectives;
 pub mod coordinator;
@@ -41,6 +47,7 @@ pub mod sched;
 pub mod sim;
 pub mod topology;
 pub mod trace;
+pub mod tune;
 pub mod util;
 
 /// Global process rank (0-based, dense).

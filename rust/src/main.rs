@@ -84,7 +84,7 @@ fn dispatch(args: &[String]) -> mcomm::Result<()> {
                  \n\
                  usage:\n\
                  \x20 mcomm experiment <e1..e8|ablations|all> [--quick]\n\
-                 \x20 mcomm train [--steps N] [--algo ring|hier|recdoub|raben]\n\
+                 \x20 mcomm train [--steps N] [--algo auto|ring|hier|recdoub|raben]\n\
                  \x20        [--machines M --cores C --nics K] [--lan] [--lr F]\n\
                  \x20 mcomm simulate --op bcast|gather|alltoall|allreduce\n\
                  \x20        [--algo NAME] [--machines M --cores C --nics K] [--bytes B]\n\
@@ -98,6 +98,7 @@ fn dispatch(args: &[String]) -> mcomm::Result<()> {
 
 fn parse_allreduce(name: &str) -> mcomm::Result<AllreduceAlgo> {
     Ok(match name {
+        "auto" | "tuned" => AllreduceAlgo::Auto,
         "ring" => AllreduceAlgo::Ring,
         "hier" | "hierarchical-mc" => AllreduceAlgo::HierarchicalMc,
         "recdoub" | "recursive-doubling" => AllreduceAlgo::RecursiveDoubling,
@@ -113,7 +114,7 @@ fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
         nics: flag_usize(flags, "nics", 2),
         steps: flag_usize(flags, "steps", 200),
         lr: flags.get("lr").and_then(|v| v.parse().ok()).unwrap_or(0.5),
-        algo: parse_allreduce(flags.get("algo").copied().unwrap_or("hier"))?,
+        algo: parse_allreduce(flags.get("algo").copied().unwrap_or("auto"))?,
         exec_params: if flags.contains_key("lan") {
             ExecParams::lan_scaled()
         } else {
@@ -142,14 +143,26 @@ fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
 }
 
 fn cmd_simulate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
-    let comm = Communicator::block(switched(
-        flag_usize(flags, "machines", 4),
-        flag_usize(flags, "cores", 4),
-        flag_usize(flags, "nics", 2),
-    ));
     let op = flags.get("op").copied().unwrap_or("bcast");
     let algo = flags.get("algo").copied().unwrap_or("");
     let bytes = flag_usize(flags, "bytes", 64 << 10) as u64;
+    let cluster = switched(
+        flag_usize(flags, "machines", 4),
+        flag_usize(flags, "cores", 4),
+        flag_usize(flags, "nics", 2),
+    );
+    let placement = mcomm::topology::Placement::block(&cluster);
+    // The tuner must judge candidates under the same payload assumption
+    // the table rows are simulated with, or its row would be misleading.
+    let comm = Communicator::with_tune_cfg(
+        cluster,
+        placement,
+        mcomm::tune::TuneCfg {
+            sim: SimParams::lan_cluster(bytes),
+            ..Default::default()
+        },
+    );
+    use mcomm::tune::Collective;
     let schedules = match op {
         "bcast" | "broadcast" => vec![
             ("binomial", comm.broadcast(BroadcastAlgo::Binomial, 0)),
@@ -158,19 +171,23 @@ fn cmd_simulate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
                 "mc-aware",
                 comm.broadcast(BroadcastAlgo::McAware(TargetHeuristic::CoverageAware), 0),
             ),
+            ("auto", comm.tuned(Collective::Broadcast { root: 0 })?),
         ],
         "gather" => vec![
             ("inverse-binomial", comm.gather(GatherAlgo::InverseBinomial, 0)),
             ("mc-aware", comm.gather(GatherAlgo::McAware, 0)),
+            ("auto", comm.tuned(Collective::Gather { root: 0 })?),
         ],
         "alltoall" => vec![
             ("pairwise", comm.alltoall(AlltoallAlgo::Pairwise)),
             ("bruck", comm.alltoall(AlltoallAlgo::Bruck)),
             ("leader-aggregated", comm.alltoall(AlltoallAlgo::LeaderAggregated(2))),
+            ("auto", comm.tuned(Collective::AllToAll)?),
         ],
         "allreduce" => vec![
             ("ring", comm.allreduce(AllreduceAlgo::Ring)?),
             ("hierarchical-mc", comm.allreduce(AllreduceAlgo::HierarchicalMc)?),
+            ("auto", comm.allreduce(AllreduceAlgo::Auto)?),
         ],
         o => anyhow::bail!("unknown op {o:?}"),
     };

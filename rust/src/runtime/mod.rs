@@ -3,8 +3,20 @@
 //! lowered the JAX/Pallas computations once; this module compiles the
 //! text with the in-process XLA CPU client and executes with concrete
 //! buffers.
+//!
+//! The XLA bindings are gated behind the `pjrt` cargo feature; the
+//! default (offline) build substitutes [`xla_stub`], which keeps every
+//! signature intact and fails with a descriptive error when a client is
+//! requested. Callers that probe for artifacts first (the trainer tests,
+//! `mcomm validate`) degrade gracefully either way.
 
 mod meta;
+
+#[cfg(not(feature = "pjrt"))]
+#[doc(hidden)]
+pub mod xla_stub;
+#[cfg(not(feature = "pjrt"))]
+use xla_stub as xla;
 
 pub use meta::ArtifactMeta;
 

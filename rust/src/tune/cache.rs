@@ -1,0 +1,158 @@
+//! Decision cache: fingerprint → [`Decision`], so repeated lookups skip
+//! candidate construction and simulation entirely.
+//!
+//! A hit returns the cached decision — including the schedule, whose rank
+//! numbering is valid because equal fingerprints imply the exact same
+//! cluster + placement (see [`super::fingerprint`]). The per-lookup work
+//! on a hit is computing the fingerprint (linear in the topology
+//! description, microseconds) plus one hash-map probe; no schedules are
+//! built and nothing is simulated.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+use crate::topology::{Cluster, Placement};
+
+use super::fingerprint::Fingerprint;
+use super::registry::Collective;
+use super::selector::{select, Decision, TuneCfg};
+
+/// Hit/miss counters for observability (E9 benches, tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub entries: usize,
+}
+
+/// An in-memory decision cache. Single-threaded by itself; wrap in the
+/// thread-safe [`crate::tune::Tuned`] facade for shared use.
+#[derive(Debug, Default)]
+pub struct DecisionCache {
+    map: HashMap<Fingerprint, Decision>,
+    hits: usize,
+    misses: usize,
+}
+
+impl DecisionCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look up the decision for this (topology, collective, cfg), tuning
+    /// and inserting on a miss.
+    pub fn get_or_tune(
+        &mut self,
+        cluster: &Cluster,
+        placement: &Placement,
+        collective: Collective,
+        cfg: &TuneCfg,
+    ) -> crate::Result<&Decision> {
+        let fp = Fingerprint::new(cluster, placement, collective, cfg);
+        match self.map.entry(fp) {
+            Entry::Occupied(hit) => {
+                self.hits += 1;
+                Ok(hit.into_mut())
+            }
+            Entry::Vacant(slot) => {
+                self.misses += 1;
+                let decision = select(cluster, placement, collective, cfg)?;
+                Ok(slot.insert(decision))
+            }
+        }
+    }
+
+    /// Direct probe without tuning on miss.
+    pub fn lookup(&mut self, fp: &Fingerprint) -> Option<&Decision> {
+        match self.map.get(fp) {
+            Some(decision) => {
+                self.hits += 1;
+                Some(decision)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { hits: self.hits, misses: self.misses, entries: self.map.len() }
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{switched, Placement};
+
+    #[test]
+    fn second_lookup_hits_and_returns_identical_schedule() {
+        let cl = switched(4, 4, 2);
+        let pl = Placement::block(&cl);
+        let cfg = TuneCfg::default();
+        let mut cache = DecisionCache::new();
+
+        let first = cache
+            .get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg)
+            .unwrap()
+            .schedule
+            .clone();
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 1, entries: 1 });
+
+        let second = cache
+            .get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg)
+            .unwrap()
+            .schedule
+            .clone();
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, entries: 1 });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn distinct_fingerprints_miss() {
+        let cl = switched(4, 4, 2);
+        let pl = Placement::block(&cl);
+        let cfg = TuneCfg::default();
+        let mut cache = DecisionCache::new();
+        cache.get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg).unwrap();
+        // Different root: a different decision key.
+        cache.get_or_tune(&cl, &pl, Collective::Broadcast { root: 3 }, &cfg).unwrap();
+        // Different topology: another miss.
+        let cl2 = switched(4, 4, 1);
+        let pl2 = Placement::block(&cl2);
+        cache.get_or_tune(&cl2, &pl2, Collective::Broadcast { root: 0 }, &cfg).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 3, entries: 3 });
+    }
+
+    #[test]
+    fn lookup_counts_misses_without_tuning() {
+        let cl = switched(2, 2, 1);
+        let pl = Placement::block(&cl);
+        let cfg = TuneCfg::default();
+        let mut cache = DecisionCache::new();
+        let fp = Fingerprint::new(&cl, &pl, Collective::Allgather, &cfg);
+        assert!(cache.lookup(&fp).is_none());
+        cache.get_or_tune(&cl, &pl, Collective::Allgather, &cfg).unwrap();
+        assert!(cache.lookup(&fp).is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 1));
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let cl = switched(2, 2, 1);
+        let pl = Placement::block(&cl);
+        let cfg = TuneCfg::default();
+        let mut cache = DecisionCache::new();
+        cache.get_or_tune(&cl, &pl, Collective::Allreduce, &cfg).unwrap();
+        cache.clear();
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+}

@@ -1,0 +1,257 @@
+//! Canonical topology fingerprints — the decision-cache key.
+//!
+//! A [`Fingerprint`] captures everything the tuner's decision depends on:
+//! the cluster (machine specs + interconnect), the placement, the
+//! requested collective (including its root), and the evaluation
+//! parameters (duplex assumption, `alpha`, simulator physics). Two
+//! lookups with equal fingerprints are guaranteed to want the same
+//! schedule, so the cached [`crate::tune::Decision`] — rank numbers and
+//! all — can be reused verbatim.
+//!
+//! **Canonical** here means *normalized representation*, not graph
+//! isomorphism: floats are compared bit-exactly, graph adjacency is
+//! folded to a sorted undirected edge list (so the same graph described
+//! in any order, with duplicate or one-sided edges, fingerprints
+//! identically — [`crate::topology::Cluster::new`] performs the
+//! normalization), and a switch is a flag rather than a clique.
+//! Relabeled-but-isomorphic clusters fingerprint differently and tune
+//! independently; that is deliberately conservative (full canonical
+//! labeling is graph-isomorphism-hard) and always sound, because a cached
+//! schedule's rank numbering only fits the exact topology it was tuned
+//! for.
+
+use crate::sim::SimParams;
+use crate::topology::{Cluster, Interconnect, Placement};
+use crate::tune::{Collective, TuneCfg};
+
+/// Hashable, equality-comparable key for one tuning decision.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Fingerprint {
+    /// Per machine, in machine order: (cores, nics, speed bits).
+    machines: Vec<(usize, usize, u64)>,
+    /// Sorted undirected edge list; empty for a full switch.
+    edges: Vec<(usize, usize)>,
+    /// Non-blocking switch (edge list irrelevant) vs. explicit graph.
+    switch: bool,
+    /// Placement map: rank -> machine.
+    machine_of: Vec<usize>,
+    /// The requested operation, root included.
+    collective: Collective,
+    /// Model knobs: half-duplex NICs and the internal-work weight.
+    duplex_half: bool,
+    alpha_bits: u64,
+    /// Digest of the simulator physics (`record_xfers` excluded: it never
+    /// changes timing).
+    sim_bits: u64,
+    /// Stage-2 pool width — decides which candidates get simulated, so
+    /// decisions made under different widths must not alias.
+    shortlist: usize,
+}
+
+impl Fingerprint {
+    pub fn new(
+        cluster: &Cluster,
+        placement: &Placement,
+        collective: Collective,
+        cfg: &TuneCfg,
+    ) -> Self {
+        let machines = cluster
+            .machines
+            .iter()
+            .map(|m| (m.cores, m.nics, m.speed.to_bits()))
+            .collect();
+        let (switch, edges) = match &cluster.interconnect {
+            Interconnect::FullSwitch => (true, Vec::new()),
+            Interconnect::Graph { adj } => {
+                let mut edges = Vec::new();
+                for (a, row) in adj.iter().enumerate() {
+                    for &b in row {
+                        if a < b {
+                            edges.push((a, b));
+                        }
+                    }
+                }
+                edges.sort_unstable();
+                (false, edges)
+            }
+        };
+        let machine_of = (0..placement.num_ranks())
+            .map(|r| placement.machine_of(r))
+            .collect();
+        Self {
+            machines,
+            edges,
+            switch,
+            machine_of,
+            collective,
+            duplex_half: matches!(cfg.model.duplex, crate::model::Duplex::Half),
+            alpha_bits: cfg.model.alpha.to_bits(),
+            sim_bits: sim_digest(&cfg.sim),
+            shortlist: cfg.shortlist,
+        }
+    }
+
+    /// Short stable digest for logs and reports (FNV-1a over the full
+    /// key). Collisions here are cosmetic; the cache compares full keys.
+    pub fn digest(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for &(c, n, s) in &self.machines {
+            h = fnv(h, c as u64);
+            h = fnv(h, n as u64);
+            h = fnv(h, s);
+        }
+        for &(a, b) in &self.edges {
+            h = fnv(h, a as u64);
+            h = fnv(h, b as u64);
+        }
+        h = fnv(h, self.switch as u64);
+        for &m in &self.machine_of {
+            h = fnv(h, m as u64);
+        }
+        h = fnv(h, collective_tag(self.collective));
+        h = fnv(h, self.duplex_half as u64);
+        h = fnv(h, self.alpha_bits);
+        h = fnv(h, self.sim_bits);
+        h = fnv(h, self.shortlist as u64);
+        h
+    }
+}
+
+fn fnv(acc: u64, word: u64) -> u64 {
+    (acc ^ word).wrapping_mul(0x100000001b3)
+}
+
+fn collective_tag(c: Collective) -> u64 {
+    match c {
+        Collective::Broadcast { root } => 1 << 56 | root as u64,
+        Collective::Gather { root } => 2 << 56 | root as u64,
+        Collective::Scatter { root } => 3 << 56 | root as u64,
+        Collective::Reduce { root } => 4 << 56 | root as u64,
+        Collective::Allgather => 5 << 56,
+        Collective::AllToAll => 6 << 56,
+        Collective::Allreduce => 7 << 56,
+    }
+}
+
+fn sim_digest(p: &SimParams) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for bits in [
+        p.o_send.to_bits(),
+        p.o_recv.to_bits(),
+        p.o_write.to_bits(),
+        p.gap.to_bits(),
+        p.lat_ext.to_bits(),
+        p.lat_int.to_bits(),
+        p.byte_time_ext.to_bits(),
+        p.byte_time_int.to_bits(),
+        p.chunk_bytes,
+        p.nic_limited as u64,
+        p.respect_speed as u64,
+    ] {
+        h = fnv(h, bits);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Duplex, Multicore};
+    use crate::topology::{switched, Interconnect, MachineSpec};
+
+    fn fp(cluster: &Cluster, cfg: &TuneCfg) -> Fingerprint {
+        let placement = Placement::block(cluster);
+        Fingerprint::new(cluster, &placement, Collective::Broadcast { root: 0 }, cfg)
+    }
+
+    #[test]
+    fn identical_inputs_fingerprint_identically() {
+        let cfg = TuneCfg::default();
+        let a = fp(&switched(3, 4, 2), &cfg);
+        let b = fp(&switched(3, 4, 2), &cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn adjacency_representation_is_canonicalized() {
+        // The same triangle described shuffled, duplicated and one-sided:
+        // Cluster::new normalizes, so fingerprints agree.
+        let cfg = TuneCfg::default();
+        let machines = vec![MachineSpec::new(2, 1); 3];
+        let a = Cluster::new(
+            machines.clone(),
+            Interconnect::Graph { adj: vec![vec![2, 1], vec![0, 2], vec![1, 0]] },
+        )
+        .unwrap();
+        let b = Cluster::new(
+            machines,
+            Interconnect::Graph { adj: vec![vec![1, 1, 2], vec![2], vec![]] },
+        )
+        .unwrap();
+        assert_eq!(fp(&a, &cfg), fp(&b, &cfg));
+    }
+
+    #[test]
+    fn every_ingredient_discriminates() {
+        let cfg = TuneCfg::default();
+        let base = fp(&switched(3, 4, 2), &cfg);
+
+        // Topology shape.
+        assert_ne!(base, fp(&switched(3, 4, 1), &cfg)); // nics
+        assert_ne!(base, fp(&switched(3, 2, 2), &cfg)); // cores
+        assert_ne!(base, fp(&switched(4, 4, 2), &cfg)); // machines
+
+        // Root.
+        let cl = switched(3, 4, 2);
+        let pl = Placement::block(&cl);
+        let r0 = Fingerprint::new(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg);
+        let r1 = Fingerprint::new(&cl, &pl, Collective::Broadcast { root: 1 }, &cfg);
+        assert_ne!(r0, r1);
+
+        // Op kind.
+        let g = Fingerprint::new(&cl, &pl, Collective::Gather { root: 0 }, &cfg);
+        assert_ne!(r0, g);
+
+        // Model knobs.
+        let mut half = TuneCfg::default();
+        half.model = Multicore { duplex: Duplex::Half, alpha: 0.1 };
+        assert_ne!(base, fp(&switched(3, 4, 2), &half));
+        let mut alpha = TuneCfg::default();
+        alpha.model = Multicore { duplex: Duplex::Full, alpha: 0.2 };
+        assert_ne!(base, fp(&switched(3, 4, 2), &alpha));
+
+        // Simulator physics.
+        let mut sim = TuneCfg::default();
+        sim.sim = crate::sim::SimParams::lan_cluster(1 << 20);
+        assert_ne!(base, fp(&switched(3, 4, 2), &sim));
+
+        // Stage-2 pool width (decides what gets simulated).
+        let mut wide = TuneCfg::default();
+        wide.shortlist = usize::MAX;
+        assert_ne!(base, fp(&switched(3, 4, 2), &wide));
+    }
+
+    #[test]
+    fn placement_discriminates() {
+        let cl = switched(2, 2, 1);
+        let cfg = TuneCfg::default();
+        let block = Placement::block(&cl);
+        let rr = Placement::round_robin(&cl);
+        let a = Fingerprint::new(&cl, &block, Collective::Allgather, &cfg);
+        let b = Fingerprint::new(&cl, &rr, Collective::Allgather, &cfg);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn record_xfers_does_not_discriminate() {
+        let cl = switched(2, 2, 1);
+        let pl = Placement::block(&cl);
+        let plain = TuneCfg::default();
+        let mut recording = TuneCfg::default();
+        recording.sim.record_xfers = true;
+        let a = Fingerprint::new(&cl, &pl, Collective::Allreduce, &plain);
+        let b = Fingerprint::new(&cl, &pl, Collective::Allreduce, &recording);
+        assert_eq!(a, b);
+    }
+}

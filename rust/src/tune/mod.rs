@@ -1,0 +1,130 @@
+//! Schedule autotuning: pick the best collective algorithm for a
+//! topology, automatically.
+//!
+//! The paper's central claim is that the *right* schedule depends on the
+//! machine model: flat binomial trees win on single-core switches,
+//! hierarchical leader schemes on modest SMP clusters, and the mc-aware
+//! builders pull ahead as core counts and NIC degrees grow. Hand-picking
+//! per experiment does not scale to a framework; this module makes the
+//! choice a cached, first-class subsystem (following Barchet-Estefanel &
+//! Mounié's *Fast Tuning of Intra-Cluster Collective Communications*: a
+//! static decision stage refined by measurement, memoized per topology).
+//!
+//! Pipeline (see `rust/src/README.md` for the full diagram):
+//!
+//! ```text
+//! (Cluster, Placement, Collective, TuneCfg)
+//!        │
+//!        ▼
+//!  registry::candidates_for        every applicable builder variant,
+//!        │                         parameter sweeps included
+//!        ▼
+//!  stage 1: Multicore model cost   build + legalize + price in rounds,
+//!        │                         keep the `shortlist` best
+//!        ▼
+//!  stage 2: sim::simulate          continuous-time confirmation over the
+//!        │                         shortlist ∪ {flat baseline}
+//!        ▼
+//!  Decision ──▶ DecisionCache      keyed by canonical Fingerprint;
+//!                                  repeat lookups are one hash probe
+//! ```
+//!
+//! Contract: the selected schedule's simulated time never exceeds the
+//! flat baseline's, because the baseline always participates in stage 2
+//! ([`selector`] docs). Entry points:
+//!
+//! * [`select`] — one-shot tuning, no cache.
+//! * [`DecisionCache`] — explicit cache for loops over many topologies.
+//! * [`Tuned`] — thread-safe facade used by
+//!   [`crate::coordinator::Communicator`]; this is what the trainer and
+//!   the CLI go through.
+
+pub mod cache;
+pub mod fingerprint;
+pub mod registry;
+pub mod selector;
+
+pub use cache::{CacheStats, DecisionCache};
+pub use fingerprint::Fingerprint;
+pub use registry::{candidates_for, flat_baseline, CandidateId, Collective};
+pub use selector::{select, Decision, TuneCfg};
+
+use std::sync::Mutex;
+
+use crate::sched::Schedule;
+use crate::topology::{Cluster, Placement};
+
+/// Thread-safe autotuner: a [`TuneCfg`] plus a shared [`DecisionCache`].
+/// Stateless with respect to topology, so one instance can serve any
+/// number of clusters/placements.
+#[derive(Debug)]
+pub struct Tuned {
+    pub cfg: TuneCfg,
+    cache: Mutex<DecisionCache>,
+}
+
+impl Default for Tuned {
+    fn default() -> Self {
+        Self::new(TuneCfg::default())
+    }
+}
+
+impl Tuned {
+    pub fn new(cfg: TuneCfg) -> Self {
+        Self { cfg, cache: Mutex::new(DecisionCache::new()) }
+    }
+
+    /// The tuned schedule for `collective` on this topology (cached).
+    pub fn schedule(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        collective: Collective,
+    ) -> crate::Result<Schedule> {
+        Ok(self.decision(cluster, placement, collective)?.schedule)
+    }
+
+    /// The full tuning decision (cached), cloned out of the cache.
+    pub fn decision(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        collective: Collective,
+    ) -> crate::Result<Decision> {
+        let mut cache = self.cache.lock().expect("tune cache poisoned");
+        Ok(cache.get_or_tune(cluster, placement, collective, &self.cfg)?.clone())
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.cache.lock().expect("tune cache poisoned").stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{switched, Placement};
+
+    #[test]
+    fn facade_caches_across_calls() {
+        let tuner = Tuned::default();
+        let cl = switched(4, 4, 2);
+        let pl = Placement::block(&cl);
+        let a = tuner.schedule(&cl, &pl, Collective::Allreduce).unwrap();
+        let b = tuner.schedule(&cl, &pl, Collective::Allreduce).unwrap();
+        assert_eq!(a, b);
+        let s = tuner.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn facade_serves_multiple_topologies() {
+        let tuner = Tuned::default();
+        for m in [2usize, 3, 4] {
+            let cl = switched(m, 2, 1);
+            let pl = Placement::block(&cl);
+            tuner.schedule(&cl, &pl, Collective::Broadcast { root: 0 }).unwrap();
+        }
+        assert_eq!(tuner.stats().entries, 3);
+    }
+}

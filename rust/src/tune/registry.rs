@@ -1,0 +1,353 @@
+//! Candidate registry: which schedule builders can serve a collective on
+//! a given topology, including parameter sweeps (broadcast target
+//! heuristics, NIC-slot counts).
+//!
+//! Applicability rules mirror the builders' own premises:
+//!
+//! * Flat algorithms (binomial trees, rings, pairwise/Bruck exchanges)
+//!   assume any-to-any reachability — the LogP premise — so they are
+//!   offered only on [`Interconnect::FullSwitch`] clusters.
+//! * The machine-level exchange patterns behind the mc-aware allgather /
+//!   all-to-all / allreduce builders also need any-to-any machine
+//!   reachability; on explicit graphs only the dissemination-style ops
+//!   (broadcast, gather, scatter, reduce) apply.
+//! * `recursive_doubling` / `rabenseifner` require power-of-two ranks.
+//! * Slot sweeps enumerate powers of two up to each topology's
+//!   bottleneck `min(degree, cores)`.
+
+use crate::collectives::{
+    allgather, allreduce, alltoall, broadcast, gather, reduce, scatter, TargetHeuristic,
+};
+use crate::sched::Schedule;
+use crate::topology::{Cluster, Interconnect, Placement};
+use crate::Rank;
+
+/// A collective request, parameterized the way a caller sees it (no
+/// algorithm choice — that is the tuner's job).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Collective {
+    Broadcast { root: Rank },
+    Gather { root: Rank },
+    Scatter { root: Rank },
+    Reduce { root: Rank },
+    Allgather,
+    AllToAll,
+    Allreduce,
+}
+
+impl Collective {
+    /// Short stable name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Collective::Broadcast { .. } => "broadcast",
+            Collective::Gather { .. } => "gather",
+            Collective::Scatter { .. } => "scatter",
+            Collective::Reduce { .. } => "reduce",
+            Collective::Allgather => "allgather",
+            Collective::AllToAll => "alltoall",
+            Collective::Allreduce => "allreduce",
+        }
+    }
+}
+
+/// One fully-parameterized builder invocation. Identifies a candidate
+/// uniquely, builds deterministically, and is cheap to store in cache
+/// decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CandidateId {
+    BcastFlatTree { root: Rank },
+    BcastBinomial { root: Rank },
+    BcastHierarchical { root: Rank },
+    BcastMcAware { root: Rank, heuristic: TargetHeuristic },
+    GatherFlat { root: Rank },
+    GatherInverseBinomial { root: Rank },
+    GatherMcAware { root: Rank },
+    ScatterFlat { root: Rank },
+    ScatterBinomial { root: Rank },
+    ScatterMcAware { root: Rank },
+    ReduceBinomial { root: Rank },
+    ReduceMcAware { root: Rank },
+    AllgatherRing,
+    AllgatherMcAware { slots: usize },
+    AlltoallPairwise,
+    AlltoallBruck,
+    AlltoallLeaderAggregated { slots: usize },
+    AllreduceRing,
+    AllreduceRecursiveDoubling,
+    AllreduceRabenseifner,
+    AllreduceHierarchicalMc,
+}
+
+impl CandidateId {
+    /// Human-readable label, e.g. `bcast/mc-aware/coverage-aware`.
+    pub fn label(&self) -> String {
+        match self {
+            CandidateId::BcastFlatTree { .. } => "bcast/flat-tree".into(),
+            CandidateId::BcastBinomial { .. } => "bcast/binomial".into(),
+            CandidateId::BcastHierarchical { .. } => "bcast/hierarchical".into(),
+            CandidateId::BcastMcAware { heuristic, .. } => {
+                format!("bcast/mc-aware/{}", heuristic.name())
+            }
+            CandidateId::GatherFlat { .. } => "gather/flat".into(),
+            CandidateId::GatherInverseBinomial { .. } => "gather/inverse-binomial".into(),
+            CandidateId::GatherMcAware { .. } => "gather/mc-aware".into(),
+            CandidateId::ScatterFlat { .. } => "scatter/flat".into(),
+            CandidateId::ScatterBinomial { .. } => "scatter/binomial".into(),
+            CandidateId::ScatterMcAware { .. } => "scatter/mc-aware".into(),
+            CandidateId::ReduceBinomial { .. } => "reduce/binomial".into(),
+            CandidateId::ReduceMcAware { .. } => "reduce/mc-aware".into(),
+            CandidateId::AllgatherRing => "allgather/ring".into(),
+            CandidateId::AllgatherMcAware { slots } => {
+                format!("allgather/mc-aware/slots={slots}")
+            }
+            CandidateId::AlltoallPairwise => "alltoall/pairwise".into(),
+            CandidateId::AlltoallBruck => "alltoall/bruck".into(),
+            CandidateId::AlltoallLeaderAggregated { slots } => {
+                format!("alltoall/leader-aggregated/slots={slots}")
+            }
+            CandidateId::AllreduceRing => "allreduce/ring".into(),
+            CandidateId::AllreduceRecursiveDoubling => "allreduce/recursive-doubling".into(),
+            CandidateId::AllreduceRabenseifner => "allreduce/rabenseifner".into(),
+            CandidateId::AllreduceHierarchicalMc => "allreduce/hierarchical-mc".into(),
+        }
+    }
+
+    /// Build the schedule this candidate denotes.
+    pub fn build(&self, cluster: &Cluster, placement: &Placement) -> crate::Result<Schedule> {
+        Ok(match *self {
+            CandidateId::BcastFlatTree { root } => broadcast::flat_tree(placement, root),
+            CandidateId::BcastBinomial { root } => broadcast::binomial(placement, root),
+            CandidateId::BcastHierarchical { root } => {
+                broadcast::hierarchical(cluster, placement, root)
+            }
+            CandidateId::BcastMcAware { root, heuristic } => {
+                broadcast::mc_aware(cluster, placement, root, heuristic)
+            }
+            CandidateId::GatherFlat { root } => gather::flat_gather(placement, root),
+            CandidateId::GatherInverseBinomial { root } => {
+                gather::inverse_binomial(placement, root)
+            }
+            CandidateId::GatherMcAware { root } => gather::mc_aware(cluster, placement, root),
+            CandidateId::ScatterFlat { root } => scatter::flat_scatter(placement, root),
+            CandidateId::ScatterBinomial { root } => scatter::binomial(placement, root),
+            CandidateId::ScatterMcAware { root } => {
+                scatter::mc_aware(cluster, placement, root)
+            }
+            CandidateId::ReduceBinomial { root } => reduce::binomial(placement, root),
+            CandidateId::ReduceMcAware { root } => reduce::mc_aware(cluster, placement, root),
+            CandidateId::AllgatherRing => allgather::ring(placement),
+            CandidateId::AllgatherMcAware { slots } => {
+                allgather::mc_aware(cluster, placement, slots)
+            }
+            CandidateId::AlltoallPairwise => alltoall::pairwise(placement),
+            CandidateId::AlltoallBruck => alltoall::bruck(placement),
+            CandidateId::AlltoallLeaderAggregated { slots } => {
+                alltoall::leader_aggregated(cluster, placement, slots)
+            }
+            CandidateId::AllreduceRing => allreduce::ring(placement),
+            CandidateId::AllreduceRecursiveDoubling => {
+                allreduce::recursive_doubling(placement)?
+            }
+            CandidateId::AllreduceRabenseifner => allreduce::rabenseifner(placement)?,
+            CandidateId::AllreduceHierarchicalMc => {
+                allreduce::hierarchical_mc(cluster, placement)
+            }
+        })
+    }
+}
+
+fn is_switch(cluster: &Cluster) -> bool {
+    matches!(cluster.interconnect, Interconnect::FullSwitch)
+}
+
+/// The bottleneck NIC-slot count: `min` over machines of
+/// `min(degree, hosted ranks)`, at least 1.
+fn min_slots(cluster: &Cluster, placement: &Placement) -> usize {
+    (0..cluster.num_machines())
+        .map(|m| cluster.degree(m).min(placement.ranks_on(m).len()))
+        .min()
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// Slot sweep: powers of two up to `kmin`, plus `kmin` itself.
+fn slot_sweep(kmin: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut s = 1usize;
+    while s < kmin {
+        out.push(s);
+        s *= 2;
+    }
+    out.push(kmin);
+    out
+}
+
+/// Every candidate applicable to `collective` on this topology. The
+/// result is non-empty for dissemination ops on any connected cluster and
+/// for all ops on switched clusters; exchange-style ops on explicit
+/// graphs yield an empty set (no builder supports them yet).
+pub fn candidates_for(
+    collective: Collective,
+    cluster: &Cluster,
+    placement: &Placement,
+) -> Vec<CandidateId> {
+    let switch = is_switch(cluster);
+    let n = placement.num_ranks();
+    let mut out = Vec::new();
+    match collective {
+        Collective::Broadcast { root } => {
+            if switch {
+                out.push(CandidateId::BcastFlatTree { root });
+                out.push(CandidateId::BcastBinomial { root });
+            }
+            out.push(CandidateId::BcastHierarchical { root });
+            for heuristic in [
+                TargetHeuristic::FirstFit,
+                TargetHeuristic::FastestNodeFirst,
+                TargetHeuristic::HighestDegreeFirst,
+                TargetHeuristic::CoverageAware,
+            ] {
+                out.push(CandidateId::BcastMcAware { root, heuristic });
+            }
+        }
+        Collective::Gather { root } => {
+            if switch {
+                out.push(CandidateId::GatherFlat { root });
+                out.push(CandidateId::GatherInverseBinomial { root });
+            }
+            out.push(CandidateId::GatherMcAware { root });
+        }
+        Collective::Scatter { root } => {
+            if switch {
+                out.push(CandidateId::ScatterFlat { root });
+                out.push(CandidateId::ScatterBinomial { root });
+            }
+            out.push(CandidateId::ScatterMcAware { root });
+        }
+        Collective::Reduce { root } => {
+            if switch {
+                out.push(CandidateId::ReduceBinomial { root });
+            }
+            out.push(CandidateId::ReduceMcAware { root });
+        }
+        Collective::Allgather => {
+            if switch {
+                out.push(CandidateId::AllgatherRing);
+                for slots in slot_sweep(min_slots(cluster, placement)) {
+                    out.push(CandidateId::AllgatherMcAware { slots });
+                }
+            }
+        }
+        Collective::AllToAll => {
+            if switch {
+                out.push(CandidateId::AlltoallPairwise);
+                out.push(CandidateId::AlltoallBruck);
+                for slots in slot_sweep(min_slots(cluster, placement)) {
+                    out.push(CandidateId::AlltoallLeaderAggregated { slots });
+                }
+            }
+        }
+        Collective::Allreduce => {
+            if switch {
+                out.push(CandidateId::AllreduceRing);
+                if n.is_power_of_two() {
+                    out.push(CandidateId::AllreduceRecursiveDoubling);
+                    out.push(CandidateId::AllreduceRabenseifner);
+                }
+                out.push(CandidateId::AllreduceHierarchicalMc);
+            }
+        }
+    }
+    out
+}
+
+/// The multi-core-oblivious baseline the paper (and our guarantee in
+/// [`crate::tune::select`]) measures against, when one applies: the best
+/// classic algorithm for the op, ignoring machine structure.
+pub fn flat_baseline(collective: Collective, cluster: &Cluster) -> Option<CandidateId> {
+    if !is_switch(cluster) {
+        return None; // flat algorithms assume any-to-any reachability
+    }
+    Some(match collective {
+        Collective::Broadcast { root } => CandidateId::BcastBinomial { root },
+        Collective::Gather { root } => CandidateId::GatherInverseBinomial { root },
+        Collective::Scatter { root } => CandidateId::ScatterBinomial { root },
+        Collective::Reduce { root } => CandidateId::ReduceBinomial { root },
+        Collective::Allgather => CandidateId::AllgatherRing,
+        Collective::AllToAll => CandidateId::AlltoallPairwise,
+        Collective::Allreduce => CandidateId::AllreduceRing,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{gnp, switched};
+
+    #[test]
+    fn switch_offers_flat_and_mc_candidates() {
+        let cl = switched(4, 4, 2);
+        let pl = Placement::block(&cl);
+        let bcast = candidates_for(Collective::Broadcast { root: 0 }, &cl, &pl);
+        assert!(bcast.contains(&CandidateId::BcastBinomial { root: 0 }));
+        assert!(bcast.iter().any(|c| matches!(c, CandidateId::BcastMcAware { .. })));
+        assert_eq!(bcast.len(), 7);
+
+        let ar = candidates_for(Collective::Allreduce, &cl, &pl);
+        assert_eq!(ar.len(), 4); // 16 ranks: pow2 variants apply
+    }
+
+    #[test]
+    fn graph_offers_only_topology_aware_candidates() {
+        let cl = gnp(5, 0.6, 2, 1, 3);
+        let pl = Placement::block(&cl);
+        let bcast = candidates_for(Collective::Broadcast { root: 0 }, &cl, &pl);
+        assert_eq!(bcast.len(), 5); // hierarchical + 4 heuristics
+        assert!(flat_baseline(Collective::Broadcast { root: 0 }, &cl).is_none());
+        assert!(candidates_for(Collective::Allreduce, &cl, &pl).is_empty());
+    }
+
+    #[test]
+    fn slot_sweep_covers_powers_of_two() {
+        assert_eq!(slot_sweep(1), vec![1]);
+        assert_eq!(slot_sweep(2), vec![1, 2]);
+        assert_eq!(slot_sweep(3), vec![1, 2, 3]);
+        assert_eq!(slot_sweep(8), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn candidates_build_and_are_distinct() {
+        let cl = switched(4, 4, 2);
+        let pl = Placement::block(&cl);
+        for coll in [
+            Collective::Broadcast { root: 1 },
+            Collective::Gather { root: 0 },
+            Collective::Scatter { root: 2 },
+            Collective::Reduce { root: 0 },
+            Collective::Allgather,
+            Collective::AllToAll,
+            Collective::Allreduce,
+        ] {
+            let ids = candidates_for(coll, &cl, &pl);
+            assert!(!ids.is_empty(), "{}", coll.name());
+            let mut labels: Vec<String> = ids.iter().map(|c| c.label()).collect();
+            labels.sort();
+            labels.dedup();
+            assert_eq!(labels.len(), ids.len(), "duplicate candidate for {}", coll.name());
+            for id in ids {
+                let s = id.build(&cl, &pl).unwrap();
+                assert_eq!(s.num_ranks, pl.num_ranks(), "{}", id.label());
+            }
+        }
+    }
+
+    #[test]
+    fn non_pow2_drops_butterfly_allreduces() {
+        let cl = switched(3, 2, 1); // 6 ranks
+        let pl = Placement::block(&cl);
+        let ids = candidates_for(Collective::Allreduce, &cl, &pl);
+        assert!(!ids.contains(&CandidateId::AllreduceRecursiveDoubling));
+        assert!(!ids.contains(&CandidateId::AllreduceRabenseifner));
+        assert!(ids.contains(&CandidateId::AllreduceRing));
+    }
+}

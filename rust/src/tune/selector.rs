@@ -1,0 +1,244 @@
+//! Two-stage candidate selection: rank by round-model cost, break ties
+//! (and confirm) with the continuous-time simulator.
+//!
+//! Stage 1 prices every applicable candidate under the configured
+//! [`Multicore`] model — cheap, round-based, and already enough to
+//! discard grossly oversubscribed schedules (flat candidates are
+//! legalized first, exactly as a real NIC-constrained cluster would
+//! serialize them). The best [`TuneCfg::shortlist`] candidates advance.
+//!
+//! Stage 2 runs the shortlist through [`crate::sim::simulate`] and picks
+//! the smallest simulated completion time. The flat baseline
+//! ([`crate::tune::flat_baseline`]) is *always* added to stage 2 when the
+//! topology admits one, which yields the tuner's contract:
+//!
+//! > **`select` never returns a schedule whose simulated time exceeds the
+//! > flat baseline's.**
+//!
+//! Ties are broken by model cost, then candidate label, so selection is
+//! fully deterministic.
+
+use crate::model::{legalize, CostModel, Multicore};
+use crate::sched::Schedule;
+use crate::sim::{simulate, SimParams};
+use crate::topology::{Cluster, Placement};
+
+use super::registry::{candidates_for, flat_baseline, CandidateId, Collective};
+
+/// Tuner configuration: the cost model used for stage-1 ranking (its
+/// duplex assumption and `alpha` are part of the cache fingerprint), the
+/// simulator physics used for stage-2 confirmation, and the shortlist
+/// width.
+#[derive(Debug, Clone)]
+pub struct TuneCfg {
+    pub model: Multicore,
+    pub sim: SimParams,
+    /// How many stage-1 winners advance to simulation. Larger values
+    /// trade tuning time for decision quality; `usize::MAX` simulates
+    /// every candidate (exhaustive mode, used by ablations).
+    pub shortlist: usize,
+}
+
+impl Default for TuneCfg {
+    fn default() -> Self {
+        Self {
+            model: Multicore::default(),
+            sim: SimParams::lan_cluster(16 << 10),
+            shortlist: 4,
+        }
+    }
+}
+
+/// The outcome of one tuning run: the winning schedule plus enough
+/// context to audit the choice.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub choice: CandidateId,
+    /// The winning schedule, legalized for `cfg.model` if the raw builder
+    /// output was not already legal.
+    pub schedule: Schedule,
+    /// Stage-1 scalar cost of the winner (`ext + alpha * int`).
+    pub model_cost: f64,
+    /// Stage-2 simulated completion time of the winner, seconds.
+    pub sim_time: f64,
+    /// Simulated time of the flat baseline, when the topology admits one.
+    pub baseline_sim: Option<f64>,
+    /// Candidates priced in stage 1 / simulated in stage 2.
+    pub considered: usize,
+    pub simulated: usize,
+}
+
+impl Decision {
+    /// Fractional improvement over the flat baseline (0.37 = 37% faster),
+    /// when a baseline exists.
+    pub fn win_margin(&self) -> Option<f64> {
+        self.baseline_sim
+            .map(|b| if b > 0.0 { 1.0 - self.sim_time / b } else { 0.0 })
+    }
+}
+
+/// Select the best schedule for `collective` on this topology. See the
+/// module docs for the two-stage procedure and the baseline guarantee.
+pub fn select(
+    cluster: &Cluster,
+    placement: &Placement,
+    collective: Collective,
+    cfg: &TuneCfg,
+) -> crate::Result<Decision> {
+    let ids = candidates_for(collective, cluster, placement);
+    if ids.is_empty() {
+        anyhow::bail!(
+            "no applicable schedule builder for {} on this topology \
+             (exchange-style collectives need a switched interconnect)",
+            collective.name()
+        );
+    }
+
+    // Stage 1: build, legalize if needed, price under the round model.
+    let mut ranked: Vec<(CandidateId, Schedule, f64)> = Vec::with_capacity(ids.len());
+    for id in ids {
+        let built = id.build(cluster, placement)?;
+        let schedule = if cfg.model.validate(cluster, placement, &built).is_ok() {
+            built
+        } else {
+            legalize(&cfg.model, cluster, placement, &built)
+        };
+        let cost = cfg.model.cost(cluster, placement, &schedule)?;
+        ranked.push((id, schedule, cost));
+    }
+    let considered = ranked.len();
+    ranked.sort_by(|a, b| {
+        a.2.partial_cmp(&b.2)
+            .expect("model costs are finite")
+            .then_with(|| a.0.label().cmp(&b.0.label()))
+    });
+
+    // Stage 2 pool: shortlist plus (always) the flat baseline.
+    let baseline = flat_baseline(collective, cluster);
+    let cut = cfg.shortlist.clamp(1, ranked.len());
+    let mut pool: Vec<(CandidateId, Schedule, f64)> = Vec::with_capacity(cut + 1);
+    let mut rest: Vec<(CandidateId, Schedule, f64)> = Vec::new();
+    for (i, entry) in ranked.into_iter().enumerate() {
+        if i < cut {
+            pool.push(entry);
+        } else {
+            rest.push(entry);
+        }
+    }
+    if let Some(b) = baseline {
+        if !pool.iter().any(|(id, _, _)| *id == b) {
+            if let Some(p) = rest.iter().position(|(id, _, _)| *id == b) {
+                pool.push(rest.swap_remove(p));
+            }
+        }
+    }
+
+    // Stage 2: simulate the pool, keep the fastest (ties: model cost,
+    // then label — deterministic).
+    let mut sims = Vec::with_capacity(pool.len());
+    let mut baseline_sim = None;
+    for (id, schedule, _) in &pool {
+        let t = simulate(cluster, placement, schedule, &cfg.sim)?.t_end;
+        if baseline == Some(*id) {
+            baseline_sim = Some(t);
+        }
+        sims.push(t);
+    }
+    let mut best = 0usize;
+    for i in 1..pool.len() {
+        let a = (sims[i], pool[i].2, pool[i].0.label());
+        let b = (sims[best], pool[best].2, pool[best].0.label());
+        if a < b {
+            best = i;
+        }
+    }
+    let simulated = pool.len();
+    let (choice, schedule, model_cost) = pool.swap_remove(best);
+    Ok(Decision {
+        choice,
+        schedule,
+        model_cost,
+        sim_time: sims[best],
+        baseline_sim,
+        considered,
+        simulated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::symexec;
+    use crate::topology::{switched, Placement};
+    use crate::tune::Collective;
+
+    #[test]
+    fn broadcast_on_fat_cluster_prefers_mc_aware() {
+        // 16 machines x 8 cores x 4 NICs: the paper's regime where
+        // (k+1)^t dissemination crushes the binomial tree.
+        let cl = switched(16, 8, 4);
+        let pl = Placement::block(&cl);
+        let cfg = TuneCfg::default();
+        let d = select(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg).unwrap();
+        symexec::verify(&d.schedule).unwrap();
+        assert!(
+            matches!(d.choice, CandidateId::BcastMcAware { .. }),
+            "expected mc-aware, got {}",
+            d.choice.label()
+        );
+        let base = d.baseline_sim.expect("switch has a flat baseline");
+        assert!(d.sim_time <= base, "tuned {} > baseline {base}", d.sim_time);
+        assert!(d.win_margin().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn single_machine_broadcast_is_one_write() {
+        let cl = switched(1, 8, 1);
+        let pl = Placement::block(&cl);
+        let d = select(&cl, &pl, Collective::Broadcast { root: 0 }, &TuneCfg::default())
+            .unwrap();
+        assert_eq!(d.schedule.external_messages(), 0);
+        assert!(d.sim_time <= d.baseline_sim.unwrap());
+    }
+
+    #[test]
+    fn allreduce_selects_and_beats_baseline() {
+        let cl = switched(4, 8, 4);
+        let pl = Placement::block(&cl);
+        let d = select(&cl, &pl, Collective::Allreduce, &TuneCfg::default()).unwrap();
+        symexec::verify(&d.schedule).unwrap();
+        assert!(d.sim_time <= d.baseline_sim.unwrap());
+        assert!(d.considered >= 4);
+        assert!(d.simulated <= d.considered);
+    }
+
+    #[test]
+    fn exhaustive_mode_simulates_everything() {
+        let cl = switched(4, 4, 2);
+        let pl = Placement::block(&cl);
+        let cfg = TuneCfg { shortlist: usize::MAX, ..TuneCfg::default() };
+        let d = select(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg).unwrap();
+        assert_eq!(d.simulated, d.considered);
+    }
+
+    #[test]
+    fn graph_exchange_ops_report_no_candidates() {
+        let cl = crate::topology::line(3, 2, 1);
+        let pl = Placement::block(&cl);
+        assert!(select(&cl, &pl, Collective::Allreduce, &TuneCfg::default()).is_err());
+        // Dissemination ops still tune fine on graphs.
+        select(&cl, &pl, Collective::Broadcast { root: 0 }, &TuneCfg::default()).unwrap();
+    }
+
+    #[test]
+    fn selection_is_deterministic() {
+        let cl = switched(6, 4, 2);
+        let pl = Placement::block(&cl);
+        let cfg = TuneCfg::default();
+        let a = select(&cl, &pl, Collective::AllToAll, &cfg).unwrap();
+        let b = select(&cl, &pl, Collective::AllToAll, &cfg).unwrap();
+        assert_eq!(a.choice, b.choice);
+        assert_eq!(a.sim_time, b.sim_time);
+        assert_eq!(a.schedule, b.schedule);
+    }
+}

@@ -13,7 +13,7 @@ use mcomm::collectives::{
     allgather, allreduce, alltoall, broadcast, gather, reduce, scatter, TargetHeuristic,
 };
 use mcomm::exec::{self, ExecParams};
-use mcomm::model::{legalize, CostModel, Multicore};
+use mcomm::model::{legalize, CostModel, Duplex, Multicore};
 use mcomm::sched::{symexec, Schedule};
 use mcomm::sim::{simulate, SimParams};
 use mcomm::topology::{clustered, gnp, switched, Cluster, Placement};
@@ -150,6 +150,63 @@ fn all_builders_verify_on_random_topologies() {
                     &ctx("ar_raben"),
                 );
             }
+        }
+    }
+}
+
+/// Half-duplex sweep: every builder output — constructed assuming full
+/// duplex — must legalize to a schedule that satisfies the stricter
+/// `sends + receives <= k` cap, still verify symbolically, and still
+/// simulate. This is the `Duplex::Half` counterpart of the sweep above.
+#[test]
+fn half_duplex_legalization_on_random_topologies() {
+    let model = Multicore { duplex: Duplex::Half, alpha: 0.1 };
+    let check = |cl: &Cluster, pl: &Placement, s: &Schedule, ctx: &str| {
+        symexec::verify(s).unwrap_or_else(|e| panic!("{ctx}: symexec: {e}"));
+        let legal = legalize(&model, cl, pl, s);
+        model
+            .validate(cl, pl, &legal)
+            .unwrap_or_else(|e| panic!("{ctx}: half-duplex validate: {e}"));
+        symexec::verify(&legal)
+            .unwrap_or_else(|e| panic!("{ctx}: legalized symexec: {e}"));
+        simulate(cl, pl, &legal, &SimParams::lan_cluster(512))
+            .unwrap_or_else(|e| panic!("{ctx}: simulate: {e}"));
+    };
+    for seed in 0..25u64 {
+        let cl = random_cluster(seed);
+        let pl = Placement::block(&cl);
+        let n = pl.num_ranks();
+        let mut rng = Rng::seed_from_u64(seed ^ 0xBEEF);
+        let root = rng.gen_range(0..n);
+        let is_switch = matches!(
+            cl.interconnect,
+            mcomm::topology::Interconnect::FullSwitch
+        );
+        let ctx = |name: &str| format!("half-duplex seed {seed} ({name}, root {root})");
+
+        check(
+            &cl,
+            &pl,
+            &broadcast::mc_aware(&cl, &pl, root, TargetHeuristic::CoverageAware),
+            &ctx("mc_bcast"),
+        );
+        check(&cl, &pl, &broadcast::hierarchical(&cl, &pl, root), &ctx("hier"));
+        check(&cl, &pl, &gather::mc_aware(&cl, &pl, root), &ctx("mc_gather"));
+        check(&cl, &pl, &scatter::mc_aware(&cl, &pl, root), &ctx("mc_scatter"));
+        check(&cl, &pl, &reduce::mc_aware(&cl, &pl, root), &ctx("mc_reduce"));
+        if is_switch {
+            check(&cl, &pl, &broadcast::binomial(&pl, root), &ctx("binomial"));
+            check(&cl, &pl, &alltoall::pairwise(&pl), &ctx("pairwise"));
+            check(&cl, &pl, &allgather::ring(&pl), &ctx("ag_ring"));
+            if n > 1 {
+                check(&cl, &pl, &allreduce::ring(&pl), &ctx("ar_ring"));
+            }
+            check(
+                &cl,
+                &pl,
+                &allreduce::hierarchical_mc(&cl, &pl),
+                &ctx("ar_hier"),
+            );
         }
     }
 }

@@ -1,0 +1,126 @@
+//! Property tests for the autotuner: across randomized topologies, the
+//! tuned choice is (a) semantically correct, (b) legal under the paper's
+//! model, and (c) **never worse in simulated time than the flat
+//! baseline** — the tuner's contract. Plus cache behavior: a second
+//! lookup with the same fingerprint is a hit and returns the identical
+//! decision.
+
+use mcomm::model::CostModel;
+use mcomm::sched::symexec;
+use mcomm::sim::simulate;
+use mcomm::topology::{switched, Cluster, Placement};
+use mcomm::tune::{
+    self, flat_baseline, Collective, DecisionCache, Fingerprint, TuneCfg,
+};
+use mcomm::util::Rng;
+
+/// Random switched cluster (flat baselines need any-to-any reachability).
+fn random_switched(seed: u64) -> Cluster {
+    let mut rng = Rng::seed_from_u64(seed);
+    let machines = 1 + rng.gen_range(0..6);
+    let cores = 1 + rng.gen_range(0..6);
+    let nics = 1 + rng.gen_range(0..4);
+    switched(machines, cores, nics)
+}
+
+fn collectives_under_test(n: usize, rng: &mut Rng) -> Vec<Collective> {
+    let root = rng.gen_range(0..n);
+    vec![
+        Collective::Broadcast { root },
+        Collective::Gather { root },
+        Collective::Scatter { root },
+        Collective::Reduce { root },
+        Collective::Allgather,
+        Collective::AllToAll,
+        Collective::Allreduce,
+    ]
+}
+
+/// The acceptance property: tuned simulated time <= flat baseline
+/// simulated time, on every randomized topology, for every collective.
+/// The baseline is recomputed independently here (build -> legalize if
+/// needed -> simulate) rather than trusting `Decision::baseline_sim`.
+#[test]
+fn tuned_choice_never_loses_to_flat_baseline() {
+    let cfg = TuneCfg::default();
+    for seed in 0..30u64 {
+        let cl = random_switched(seed);
+        let pl = Placement::block(&cl);
+        let mut rng = Rng::seed_from_u64(seed ^ 0x7E57);
+        for coll in collectives_under_test(pl.num_ranks(), &mut rng) {
+            let ctx = format!("seed {seed}, {}", coll.name());
+            let d = tune::select(&cl, &pl, coll, &cfg)
+                .unwrap_or_else(|e| panic!("{ctx}: select: {e}"));
+
+            // (a) semantic correctness, (b) model legality.
+            symexec::verify(&d.schedule)
+                .unwrap_or_else(|e| panic!("{ctx}: symexec: {e}"));
+            cfg.model
+                .validate(&cl, &pl, &d.schedule)
+                .unwrap_or_else(|e| panic!("{ctx}: validate: {e}"));
+
+            // (c) the contract, against an independently computed baseline.
+            let base_id = flat_baseline(coll, &cl).expect("switched => baseline");
+            let built = base_id.build(&cl, &pl).unwrap();
+            let base = if cfg.model.validate(&cl, &pl, &built).is_ok() {
+                built
+            } else {
+                mcomm::model::legalize(&cfg.model, &cl, &pl, &built)
+            };
+            let base_t = simulate(&cl, &pl, &base, &cfg.sim).unwrap().t_end;
+            assert!(
+                d.sim_time <= base_t + 1e-12,
+                "{ctx}: tuned {} ({}) > baseline {} ({})",
+                d.sim_time,
+                d.choice.label(),
+                base_t,
+                base_id.label(),
+            );
+            assert_eq!(
+                d.baseline_sim,
+                Some(base_t),
+                "{ctx}: reported baseline mismatch"
+            );
+        }
+    }
+}
+
+/// Cache contract: same fingerprint => hit, identical decision; the
+/// fingerprint computed standalone matches what the cache keys on.
+#[test]
+fn cache_hits_on_repeated_fingerprint() {
+    let cfg = TuneCfg::default();
+    let mut cache = DecisionCache::new();
+    for seed in 0..10u64 {
+        let cl = random_switched(seed);
+        let pl = Placement::block(&cl);
+        let coll = Collective::Broadcast { root: 0 };
+
+        let first = cache.get_or_tune(&cl, &pl, coll, &cfg).unwrap().schedule.clone();
+        let second = cache.get_or_tune(&cl, &pl, coll, &cfg).unwrap().schedule.clone();
+        assert_eq!(first, second, "seed {seed}: cache must return the same schedule");
+
+        // The standalone fingerprint probes the same entry.
+        let fp = Fingerprint::new(&cl, &pl, coll, &cfg);
+        assert!(cache.lookup(&fp).is_some(), "seed {seed}: fingerprint mismatch");
+    }
+    let stats = cache.stats();
+    assert_eq!(stats.entries, 10);
+    // Per seed: one miss, one hit from get_or_tune, one hit from lookup.
+    assert_eq!((stats.hits, stats.misses), (20, 10));
+}
+
+/// Distinct topologies must not collide: tuning 2 different shapes yields
+/// 2 cache entries even when machine/core counts only differ slightly.
+#[test]
+fn cache_misses_across_topologies() {
+    let cfg = TuneCfg::default();
+    let mut cache = DecisionCache::new();
+    for (m, c, k) in [(2usize, 2usize, 1usize), (2, 2, 2), (2, 3, 1), (3, 2, 1)] {
+        let cl = switched(m, c, k);
+        let pl = Placement::block(&cl);
+        cache.get_or_tune(&cl, &pl, Collective::Allreduce, &cfg).unwrap();
+    }
+    let stats = cache.stats();
+    assert_eq!((stats.hits, stats.misses, stats.entries), (0, 4, 4));
+}
