@@ -1,25 +1,49 @@
 //! Minimal criterion-style bench harness (the offline build has no
 //! criterion crate — see Cargo.toml). Provides warmup + timed iterations
-//! with mean/median/p95 reporting, and a `bench_table` helper for the
-//! experiment benches that regenerate the paper's tables.
+//! with mean/median/p95 reporting, machine-readable JSON emission for
+//! CI trend tracking (`write_json`), and a smoke mode
+//! (`MCOMM_BENCH_SMOKE=1`) that shrinks warmup/measurement so the bench
+//! can run inside the CI gate.
 
 use std::time::{Duration, Instant};
 
-/// Measure `f` and print criterion-like statistics.
+/// One bench's summary statistics, as printed and as serialized to JSON.
 #[allow(dead_code)]
-pub fn bench<F: FnMut()>(name: &str, mut f: F) {
-    // Warmup ~0.5 s.
+#[derive(Debug, Clone)]
+pub struct BenchStat {
+    pub name: String,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub samples: usize,
+}
+
+/// Smoke mode (`MCOMM_BENCH_SMOKE=1`): ~10× shorter warmup and
+/// measurement windows, for CI where the trend matters more than the
+/// confidence interval.
+#[allow(dead_code)]
+pub fn smoke_mode() -> bool {
+    std::env::var("MCOMM_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Measure `f`, print criterion-like statistics, and return them for
+/// JSON emission.
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchStat {
+    let (warm_target, measure_target, max_samples) = if smoke_mode() {
+        (Duration::from_millis(50), Duration::from_millis(200), 100)
+    } else {
+        (Duration::from_millis(500), Duration::from_secs(2), 1000)
+    };
     let warm_start = Instant::now();
     let mut warm_iters = 0u64;
-    while warm_start.elapsed() < Duration::from_millis(500) {
+    while warm_start.elapsed() < warm_target {
         f();
         warm_iters += 1;
     }
     let per_iter = warm_start.elapsed() / warm_iters.max(1) as u32;
-    // Target ~2 s of measurement, 10..=1000 samples.
-    let samples = ((Duration::from_secs(2).as_nanos()
-        / per_iter.as_nanos().max(1)) as usize)
-        .clamp(10, 1000);
+    let samples = ((measure_target.as_nanos() / per_iter.as_nanos().max(1)) as usize)
+        .clamp(10, max_samples);
 
     let mut times: Vec<f64> = Vec::with_capacity(samples);
     for _ in 0..samples {
@@ -38,6 +62,13 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) {
         fmt(p95),
         times.len()
     );
+    BenchStat {
+        name: name.to_string(),
+        mean,
+        median,
+        p95,
+        samples: times.len(),
+    }
 }
 
 #[allow(dead_code)]
@@ -60,4 +91,39 @@ pub fn bench_once<F: FnOnce() -> R, R>(name: &str, f: F) -> R {
     let out = f();
     println!("{name:<44} single run {:>12}", fmt(t.elapsed().as_secs_f64()));
     out
+}
+
+/// Serialize `stats` as `BENCH_<bench_name>.json` in the working
+/// directory (override the path with `MCOMM_BENCH_JSON`). CI uploads the
+/// file as an artifact so the perf trajectory is tracked PR-over-PR.
+/// Returns the path written.
+#[allow(dead_code)]
+pub fn write_json(bench_name: &str, stats: &[BenchStat]) -> std::io::Result<String> {
+    let path = std::env::var("MCOMM_BENCH_JSON")
+        .unwrap_or_else(|_| format!("BENCH_{bench_name}.json"));
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"bench\": \"{}\",\n", esc(bench_name)));
+    out.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
+    out.push_str("  \"results\": [\n");
+    for (i, s) in stats.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"mean_s\": {:e}, \"median_s\": {:e}, \
+             \"p95_s\": {:e}, \"samples\": {}}}{}\n",
+            esc(&s.name),
+            s.mean,
+            s.median,
+            s.p95,
+            s.samples,
+            if i + 1 < stats.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(&path, out)?;
+    Ok(path)
+}
+
+#[allow(dead_code)]
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }

@@ -24,6 +24,19 @@ fn main() {
     bench("e9: cold select allreduce (8x8, k=2)", || {
         tune::select(&cl, &pl, Collective::Allreduce, &cfg).unwrap();
     });
+    // Batched: all seven collectives through one topology compilation.
+    let all = [
+        Collective::Broadcast { root: 0 },
+        Collective::Gather { root: 0 },
+        Collective::Scatter { root: 0 },
+        Collective::Reduce { root: 0 },
+        Collective::Allgather,
+        Collective::AllToAll,
+        Collective::Allreduce,
+    ];
+    bench("e9: batched select, 7 collectives", || {
+        tune::select_many(&cl, &pl, &all, &cfg).unwrap();
+    });
 
     // Warm lookups: fingerprint + probe only.
     let mut cache = DecisionCache::new();

@@ -41,7 +41,7 @@
 use std::collections::HashMap;
 
 use super::CostModel;
-use crate::sched::{Schedule, XferKind};
+use crate::sched::{LoweredSchedule, Schedule, XferKind};
 use crate::topology::{Cluster, Placement};
 
 /// NIC duplexing assumption (R3 cap applies per direction or in sum).
@@ -185,6 +185,158 @@ impl Multicore {
             }
         }
         Ok(local_actions)
+    }
+
+    /// Full cost breakdown over the lowered IR (validates as it goes).
+    ///
+    /// Semantically identical to [`Multicore::cost_detail`] — the same
+    /// R1/R2/R3 legality rules and the same `McCost` — but walks a
+    /// [`LoweredSchedule`]'s flat arrays with dense counters instead of
+    /// re-deriving machines and building `HashMap`s per round. This is
+    /// the tuner's stage-1 hot path: every candidate is priced through
+    /// here. Connectivity was already proven by lowering, so only the
+    /// per-round capacity rules are checked.
+    pub fn cost_detail_lowered(&self, low: &LoweredSchedule<'_>) -> crate::Result<McCost> {
+        let p = low.ctx.num_ranks;
+        let m = low.ctx.num_machines;
+        let mut proc_send = vec![0u32; p];
+        let mut proc_recv = vec![0u32; p];
+        let mut local_actions = vec![0u32; p];
+        let mut mach_send = vec![0u32; m];
+        let mut mach_recv = vec![0u32; m];
+        let mut edge_use = if low.ctx.is_graph { vec![0u32; m * m] } else { Vec::new() };
+        // Touched lists so per-round clearing is O(transfers), not
+        // O(ranks + machines).
+        let mut touched_procs: Vec<u32> = Vec::new();
+        let mut touched_machines: Vec<u32> = Vec::new();
+        let mut touched_edges: Vec<u32> = Vec::new();
+
+        let mut ext_rounds = 0usize;
+        let mut int_units = 0usize;
+        for ri in 0..low.num_rounds {
+            for &i in &touched_procs {
+                proc_send[i as usize] = 0;
+                proc_recv[i as usize] = 0;
+                local_actions[i as usize] = 0;
+            }
+            touched_procs.clear();
+            for &mm in &touched_machines {
+                mach_send[mm as usize] = 0;
+                mach_recv[mm as usize] = 0;
+            }
+            touched_machines.clear();
+            for &e in &touched_edges {
+                edge_use[e as usize] = 0;
+            }
+            touched_edges.clear();
+
+            let mut has_external = false;
+            let mut has_local = false;
+            for xi in low.round_off[ri] as usize..low.round_off[ri + 1] as usize {
+                let src = low.src[xi] as usize;
+                match low.kind[xi] {
+                    XferKind::External => {
+                        has_external = true;
+                        let dst = low.dst0[xi] as usize;
+                        let (ms, md) = (
+                            low.src_machine[xi] as usize,
+                            low.dst_machine[xi] as usize,
+                        );
+                        touched_procs.push(src as u32);
+                        touched_procs.push(dst as u32);
+                        touched_machines.push(ms as u32);
+                        touched_machines.push(md as u32);
+                        proc_send[src] += 1;
+                        proc_recv[dst] += 1;
+                        if proc_send[src] > 1 {
+                            anyhow::bail!(
+                                "round {ri}: rank {src} sources {} external messages",
+                                proc_send[src]
+                            );
+                        }
+                        if proc_recv[dst] > 1 {
+                            anyhow::bail!(
+                                "round {ri}: rank {dst} sinks {} external messages",
+                                proc_recv[dst]
+                            );
+                        }
+                        mach_send[ms] += 1;
+                        mach_recv[md] += 1;
+                        match self.duplex {
+                            Duplex::Full => {
+                                if mach_send[ms] > low.ctx.degree[ms] {
+                                    anyhow::bail!(
+                                        "round {ri}: machine {ms} sends {} messages \
+                                         over {} NICs",
+                                        mach_send[ms],
+                                        low.ctx.degree[ms]
+                                    );
+                                }
+                                if mach_recv[md] > low.ctx.degree[md] {
+                                    anyhow::bail!(
+                                        "round {ri}: machine {md} receives {} messages \
+                                         over {} NICs",
+                                        mach_recv[md],
+                                        low.ctx.degree[md]
+                                    );
+                                }
+                            }
+                            Duplex::Half => {
+                                for mm in [ms, md] {
+                                    if mach_send[mm] + mach_recv[mm] > low.ctx.degree[mm] {
+                                        anyhow::bail!(
+                                            "round {ri}: machine {mm} moves {} messages \
+                                             over {} half-duplex NICs",
+                                            mach_send[mm] + mach_recv[mm],
+                                            low.ctx.degree[mm]
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        if low.ctx.is_graph {
+                            let e = ms * m + md;
+                            touched_edges.push(e as u32);
+                            edge_use[e] += 1;
+                            if edge_use[e] > 1 {
+                                anyhow::bail!(
+                                    "round {ri}: edge {ms}->{md} carries {} messages",
+                                    edge_use[e]
+                                );
+                            }
+                        }
+                    }
+                    XferKind::LocalWrite => {
+                        has_local = true;
+                        touched_procs.push(src as u32);
+                        local_actions[src] += 1;
+                    }
+                    XferKind::LocalRead => {
+                        has_local = true;
+                        let dst = low.dst0[xi] as usize;
+                        touched_procs.push(dst as u32);
+                        local_actions[dst] += 1;
+                    }
+                }
+            }
+            if has_external {
+                // R2: local work rides inside a network round for free.
+                ext_rounds += 1;
+            } else if has_local {
+                // Internal-only round: costs the longest per-proc chain.
+                int_units += touched_procs
+                    .iter()
+                    .map(|&i| local_actions[i as usize] as usize)
+                    .max()
+                    .unwrap_or(0);
+            }
+        }
+        Ok(McCost { ext_rounds, int_units, ext_messages: low.ext_messages })
+    }
+
+    /// Scalar cost over the lowered IR at this model's `alpha`.
+    pub fn cost_lowered(&self, low: &LoweredSchedule<'_>) -> crate::Result<f64> {
+        Ok(self.cost_detail_lowered(low)?.total(self.alpha))
     }
 
     /// Full cost breakdown (validates as it goes).
@@ -341,6 +493,50 @@ mod tests {
         assert_eq!(cost.ext_rounds, 1);
         assert_eq!(cost.int_units, 0);
         assert!((cost.total(0.1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lowered_costing_agrees_with_boxed() {
+        use crate::collectives::{allreduce, broadcast, TargetHeuristic};
+        use crate::sched::{LoweredSchedule, TopoCtx};
+        let c = switched(4, 4, 2);
+        let p = Placement::block(&c);
+        let ctx = TopoCtx::new(&c, &p);
+        let schedules = [
+            broadcast::mc_aware(&c, &p, 0, TargetHeuristic::FirstFit),
+            broadcast::binomial(&p, 0),
+            allreduce::hierarchical_mc(&c, &p),
+            allreduce::ring(&p),
+        ];
+        for model in [
+            Multicore { duplex: Duplex::Full, alpha: 0.1 },
+            Multicore { duplex: Duplex::Half, alpha: 0.07 },
+        ] {
+            for s in &schedules {
+                let low = LoweredSchedule::compile(&ctx, s).unwrap();
+                let boxed = model.cost_detail(&c, &p, s);
+                let lowered = model.cost_detail_lowered(&low);
+                match (boxed, lowered) {
+                    (Ok(x), Ok(y)) => assert_eq!(x, y, "{}", s.algo),
+                    (Err(_), Err(_)) => {}
+                    (x, y) => panic!("{}: paths disagree: {x:?} vs {y:?}", s.algo),
+                }
+            }
+        }
+
+        // Oversubscribed round: both paths must reject.
+        let (c1, p1) = cluster(1);
+        let ctx1 = TopoCtx::new(&c1, &p1);
+        let mut s = Schedule::new(CollectiveOp::Allgather, 8, "t");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 4, Payload::single(0, 0)),
+                Xfer::external(1, 5, Payload::single(1, 1)),
+            ],
+        });
+        let low = LoweredSchedule::compile(&ctx1, &s).unwrap();
+        assert!(Multicore::default().cost_detail_lowered(&low).is_err());
+        assert!(Multicore::default().cost_detail(&c1, &p1, &s).is_err());
     }
 
     #[test]

@@ -1,0 +1,415 @@
+//! Lowering pass: compile a [`Schedule`] against a topology into a flat,
+//! arena-style IR that the hot consumers (the continuous-time simulator,
+//! the `Multicore` cost model, the autotuner's candidate sweep) can walk
+//! without hashing or per-payload heap traffic.
+//!
+//! The boxed [`Schedule`] is the right representation for *building* and
+//! *checking* plans — every transfer owns its destination vector and its
+//! payload items. It is the wrong representation for *pricing thousands
+//! of candidates*: the simulator's inner loop used to do per-chunk
+//! `HashMap` probes, per-transfer `machine_of` lookups and a
+//! `HashMap<(usize, usize)>` for edge occupancy. Lowering hoists all of
+//! that out of the loop, once, into three kinds of flat storage:
+//!
+//! * **Topology context** ([`TopoCtx`]) — per-rank machine ids and raw
+//!   machine speeds, per-machine degrees, and a dense machine-pair
+//!   connectivity matrix. Built once per `(Cluster, Placement)` and
+//!   shared by every schedule lowered against it (the batched tuner
+//!   compiles it exactly once per selection).
+//! * **CSR round/transfer arrays** — transfers of all rounds concatenated
+//!   in round-major order with `round_off` offsets; per-transfer parallel
+//!   arrays for kind, endpoints and the endpoints' machines.
+//! * **Interned payload slices** — payload chunk ids renumbered into a
+//!   dense `0..num_chunks` space (so readiness state is a flat
+//!   `Vec<f64>` indexed by `rank * num_chunks + chunk`) and stored as one
+//!   shared `payload_chunks` arena with CSR offsets, order-preserving.
+//!
+//! Lowering also runs the structural checks the downstream consumers
+//! used to re-run on every walk (rank bounds, destination arity,
+//! co-location, machine connectivity), so the resulting IR is legal by
+//! construction and the engines over it are infallible.
+
+use std::collections::HashMap;
+
+use crate::sched::{Schedule, XferKind};
+use crate::topology::{Cluster, Interconnect, Placement};
+
+/// Chunk ids below this bound are interned through a flat table; larger
+/// (sparse) ids spill to a `HashMap`. Every in-tree collective uses ids
+/// below `P * P`, so the flat path is the only one normally taken.
+const DENSE_CHUNK_LIMIT: usize = 1 << 20;
+
+/// Precomputed topology context: everything the hot loops need to know
+/// about a `(Cluster, Placement)` pair, in flat per-rank / per-machine
+/// arrays. Build once, share across every schedule lowered against it.
+#[derive(Debug, Clone)]
+pub struct TopoCtx {
+    pub num_ranks: usize,
+    pub num_machines: usize,
+    /// Is the interconnect an explicit machine graph (per-edge occupancy
+    /// applies) rather than a non-blocking switch?
+    pub is_graph: bool,
+    /// Rank → machine id.
+    pub machine_of: Vec<u32>,
+    /// Rank → raw machine speed multiplier (consumers decide whether to
+    /// respect it).
+    pub speed: Vec<f64>,
+    /// Machine → degree (rule R3 NIC tokens; graph-capped).
+    pub degree: Vec<u32>,
+    /// Dense `num_machines × num_machines` connectivity matrix.
+    connected: Vec<bool>,
+}
+
+impl TopoCtx {
+    pub fn new(cluster: &Cluster, placement: &Placement) -> Self {
+        let num_ranks = placement.num_ranks();
+        let num_machines = cluster.num_machines();
+        let is_graph = matches!(cluster.interconnect, Interconnect::Graph { .. });
+        let machine_of: Vec<u32> =
+            (0..num_ranks).map(|r| placement.machine_of(r) as u32).collect();
+        let speed: Vec<f64> = (0..num_ranks)
+            .map(|r| cluster.machines[placement.machine_of(r)].speed)
+            .collect();
+        let degree: Vec<u32> =
+            (0..num_machines).map(|m| cluster.degree(m) as u32).collect();
+        let mut connected = vec![false; num_machines * num_machines];
+        for a in 0..num_machines {
+            for b in 0..num_machines {
+                connected[a * num_machines + b] = cluster.connected(a, b);
+            }
+        }
+        Self { num_ranks, num_machines, is_graph, machine_of, speed, degree, connected }
+    }
+
+    /// Can machines `a` and `b` exchange a message directly?
+    #[inline]
+    pub fn connected(&self, a: usize, b: usize) -> bool {
+        self.connected[a * self.num_machines + b]
+    }
+
+    /// Are two ranks hosted by the same machine?
+    #[inline]
+    pub fn colocated(&self, a: usize, b: usize) -> bool {
+        self.machine_of[a] == self.machine_of[b]
+    }
+}
+
+/// Chunk-id interner: raw (sparse) chunk ids → dense `0..n`, first-seen
+/// order, so readiness state can live in a flat table.
+struct ChunkInterner {
+    flat: Vec<u32>,
+    spill: HashMap<u32, u32>,
+    next: u32,
+}
+
+impl ChunkInterner {
+    fn new() -> Self {
+        Self { flat: Vec::new(), spill: HashMap::new(), next: 0 }
+    }
+
+    fn intern(&mut self, raw: u32) -> u32 {
+        if (raw as usize) < DENSE_CHUNK_LIMIT {
+            let i = raw as usize;
+            if i >= self.flat.len() {
+                self.flat.resize(i + 1, u32::MAX);
+            }
+            if self.flat[i] == u32::MAX {
+                self.flat[i] = self.next;
+                self.next += 1;
+            }
+            self.flat[i]
+        } else {
+            match self.spill.entry(raw) {
+                std::collections::hash_map::Entry::Occupied(e) => *e.get(),
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    let id = self.next;
+                    self.next += 1;
+                    *e.insert(id)
+                }
+            }
+        }
+    }
+}
+
+/// A schedule compiled against a [`TopoCtx`]: flat CSR arrays, dense
+/// chunk ids, precomputed endpoint machines — built once, immutable
+/// thereafter. Consumed by [`crate::sim::simulate_lowered`] and
+/// [`crate::model::Multicore::cost_detail_lowered`].
+#[derive(Debug, Clone)]
+pub struct LoweredSchedule<'t> {
+    pub ctx: &'t TopoCtx,
+    pub num_rounds: usize,
+    /// Size of the dense chunk-id space (`0..num_chunks`).
+    pub num_chunks: usize,
+    /// Total number of network messages (schedule-static).
+    pub ext_messages: usize,
+    /// CSR: transfers of round `r` are `round_off[r]..round_off[r+1]`.
+    pub round_off: Vec<u32>,
+    /// Per-transfer parallel arrays, round-major order.
+    pub kind: Vec<XferKind>,
+    pub src: Vec<u32>,
+    /// First (for `External`/`LocalRead`: only) destination.
+    pub dst0: Vec<u32>,
+    pub src_machine: Vec<u32>,
+    /// Machine of `dst0`.
+    pub dst_machine: Vec<u32>,
+    /// CSR: transfer `x` carries dense chunks
+    /// `payload_chunks[payload_off[x]..payload_off[x+1]]`, source order
+    /// preserved.
+    pub payload_off: Vec<u32>,
+    pub payload_chunks: Vec<u32>,
+    /// CSR: transfer `x` delivers to `dsts[dst_off[x]..dst_off[x+1]]`
+    /// (length 1 except for `LocalWrite`).
+    pub dst_off: Vec<u32>,
+    pub dsts: Vec<u32>,
+}
+
+impl<'t> LoweredSchedule<'t> {
+    /// Compile `schedule` against `ctx`. Runs the structural checks the
+    /// reference simulator ran (rank bounds, arity, co-location,
+    /// connectivity); a lowered schedule is legal by construction.
+    pub fn compile(ctx: &'t TopoCtx, schedule: &Schedule) -> crate::Result<Self> {
+        if schedule.num_ranks != ctx.num_ranks {
+            anyhow::bail!(
+                "lower: schedule is for {} ranks, topology has {}",
+                schedule.num_ranks,
+                ctx.num_ranks
+            );
+        }
+        let total = schedule.total_xfers();
+        let mut round_off = Vec::with_capacity(schedule.rounds.len() + 1);
+        let mut kind = Vec::with_capacity(total);
+        let mut src_v = Vec::with_capacity(total);
+        let mut dst0_v = Vec::with_capacity(total);
+        let mut src_machine = Vec::with_capacity(total);
+        let mut dst_machine = Vec::with_capacity(total);
+        let mut payload_off = Vec::with_capacity(total + 1);
+        let mut payload_chunks = Vec::new();
+        let mut dst_off = Vec::with_capacity(total + 1);
+        let mut dsts_v = Vec::with_capacity(total);
+        let mut interner = ChunkInterner::new();
+        let mut ext_messages = 0usize;
+
+        round_off.push(0u32);
+        payload_off.push(0u32);
+        dst_off.push(0u32);
+
+        for (ri, round) in schedule.rounds.iter().enumerate() {
+            for x in &round.xfers {
+                let src = x.src;
+                if src >= ctx.num_ranks {
+                    anyhow::bail!("round {ri}: src {src} out of range");
+                }
+                if x.dsts.is_empty() {
+                    anyhow::bail!("round {ri}: transfer from {src} has no destination");
+                }
+                if x.payload.is_empty() {
+                    anyhow::bail!("round {ri}: empty payload from {src}");
+                }
+                for &d in &x.dsts {
+                    if d >= ctx.num_ranks {
+                        anyhow::bail!("round {ri}: dst {d} out of range");
+                    }
+                    if d == src {
+                        anyhow::bail!("round {ri}: self-transfer at rank {d}");
+                    }
+                }
+                let d0 = x.dsts[0];
+                match x.kind {
+                    XferKind::External => {
+                        if x.dsts.len() != 1 {
+                            anyhow::bail!(
+                                "round {ri}: external transfer with multiple dsts"
+                            );
+                        }
+                        if ctx.colocated(src, d0) {
+                            anyhow::bail!(
+                                "round {ri}: external transfer between co-located \
+                                 ranks {src} and {d0}"
+                            );
+                        }
+                        let (ms, md) =
+                            (ctx.machine_of[src] as usize, ctx.machine_of[d0] as usize);
+                        if !ctx.connected(ms, md) {
+                            anyhow::bail!("simulate: machines {ms},{md} not connected");
+                        }
+                        ext_messages += 1;
+                    }
+                    XferKind::LocalWrite => {
+                        for &d in &x.dsts {
+                            if !ctx.colocated(src, d) {
+                                anyhow::bail!(
+                                    "round {ri}: local write from {src} to remote rank {d}"
+                                );
+                            }
+                        }
+                    }
+                    XferKind::LocalRead => {
+                        if x.dsts.len() != 1 {
+                            anyhow::bail!("round {ri}: local read with multiple dsts");
+                        }
+                        if !ctx.colocated(src, d0) {
+                            anyhow::bail!(
+                                "round {ri}: local read across machines ({src} -> {d0})"
+                            );
+                        }
+                    }
+                }
+
+                kind.push(x.kind);
+                src_v.push(src as u32);
+                dst0_v.push(d0 as u32);
+                src_machine.push(ctx.machine_of[src]);
+                dst_machine.push(ctx.machine_of[d0]);
+                for (c, _) in &x.payload.items {
+                    payload_chunks.push(interner.intern(c.0));
+                }
+                payload_off.push(payload_chunks.len() as u32);
+                if x.kind == XferKind::LocalWrite {
+                    for &d in &x.dsts {
+                        dsts_v.push(d as u32);
+                    }
+                } else {
+                    dsts_v.push(d0 as u32);
+                }
+                dst_off.push(dsts_v.len() as u32);
+            }
+            round_off.push(kind.len() as u32);
+        }
+
+        Ok(Self {
+            ctx,
+            num_rounds: schedule.rounds.len(),
+            num_chunks: interner.next as usize,
+            ext_messages,
+            round_off,
+            kind,
+            src: src_v,
+            dst0: dst0_v,
+            src_machine,
+            dst_machine,
+            payload_off,
+            payload_chunks,
+            dst_off,
+            dsts: dsts_v,
+        })
+    }
+
+    /// Total transfers of any kind.
+    pub fn num_xfers(&self) -> usize {
+        self.kind.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{CollectiveOp, Payload, Round, Schedule, Xfer};
+    use crate::topology::{line, switched, Placement};
+
+    fn bcast_2x2() -> (Cluster, Placement, Schedule) {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "hand");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 2, Payload::single(7, 0)),
+                Xfer::local_write(0, vec![1], Payload::single(7, 0)),
+            ],
+        });
+        s.push_round(Round {
+            xfers: vec![Xfer::local_write(2, vec![3], Payload::single(7, 0))],
+        });
+        (c, p, s)
+    }
+
+    #[test]
+    fn csr_layout_and_dense_chunks() {
+        let (c, p, s) = bcast_2x2();
+        let ctx = TopoCtx::new(&c, &p);
+        let low = LoweredSchedule::compile(&ctx, &s).unwrap();
+        assert_eq!(low.num_rounds, 2);
+        assert_eq!(low.num_xfers(), 3);
+        assert_eq!(low.round_off, vec![0, 2, 3]);
+        // Chunk 7 interned to dense id 0.
+        assert_eq!(low.num_chunks, 1);
+        assert_eq!(low.payload_chunks, vec![0, 0, 0]);
+        assert_eq!(low.ext_messages, 1);
+        assert_eq!(low.kind[0], XferKind::External);
+        assert_eq!(low.src_machine[0], 0);
+        assert_eq!(low.dst_machine[0], 1);
+        // LocalWrite keeps its full destination list.
+        assert_eq!(low.dst_off, vec![0, 1, 2, 3]);
+        assert_eq!(low.dsts, vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn topo_ctx_matches_cluster() {
+        let c = switched(3, 2, 2);
+        let p = Placement::block(&c);
+        let ctx = TopoCtx::new(&c, &p);
+        assert_eq!(ctx.num_ranks, 6);
+        assert_eq!(ctx.num_machines, 3);
+        assert!(!ctx.is_graph);
+        assert_eq!(ctx.machine_of, vec![0, 0, 1, 1, 2, 2]);
+        assert_eq!(ctx.degree, vec![2, 2, 2]);
+        assert!(ctx.connected(0, 2) && !ctx.connected(1, 1));
+        assert!(ctx.colocated(2, 3) && !ctx.colocated(1, 2));
+    }
+
+    #[test]
+    fn rejects_disconnected_external() {
+        let c = line(3, 1, 1); // machines 0-1-2: 0 and 2 not adjacent
+        let p = Placement::block(&c);
+        let ctx = TopoCtx::new(&c, &p);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 3, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 2, Payload::single(0, 0))],
+        });
+        let err = LoweredSchedule::compile(&ctx, &s).unwrap_err();
+        assert!(err.to_string().contains("not connected"), "{err}");
+    }
+
+    #[test]
+    fn rejects_shape_violations() {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let ctx = TopoCtx::new(&c, &p);
+
+        // External between co-located ranks.
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 1, Payload::single(0, 0))],
+        });
+        assert!(LoweredSchedule::compile(&ctx, &s).is_err());
+
+        // Local write across machines.
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::local_write(0, vec![3], Payload::single(0, 0))],
+        });
+        assert!(LoweredSchedule::compile(&ctx, &s).is_err());
+
+        // Rank-count mismatch.
+        let s = Schedule::new(CollectiveOp::Allgather, 5, "t");
+        assert!(LoweredSchedule::compile(&ctx, &s).is_err());
+    }
+
+    #[test]
+    fn sparse_chunk_ids_spill_without_renumber_collisions() {
+        let c = switched(2, 1, 1);
+        let p = Placement::block(&c);
+        let ctx = TopoCtx::new(&c, &p);
+        let mut s = Schedule::new(CollectiveOp::Allgather, 2, "t");
+        let big = (DENSE_CHUNK_LIMIT as u32) + 17;
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 1, Payload::single(big, 0))],
+        });
+        s.push_round(Round {
+            xfers: vec![Xfer::external(1, 0, Payload::single(big, 1))],
+        });
+        let low = LoweredSchedule::compile(&ctx, &s).unwrap();
+        assert_eq!(low.num_chunks, 1);
+        assert_eq!(low.payload_chunks, vec![0, 0]);
+    }
+}

@@ -7,7 +7,9 @@
 //! *validate and price* them ([`crate::model`]), the simulator *times*
 //! them ([`crate::sim`]), the symbolic executor *proves* them correct
 //! ([`symexec`]), and the in-process executor *runs* them over real bytes
-//! ([`crate::exec`]).
+//! ([`crate::exec`]). Hot consumers (the simulator, the autotuner's
+//! candidate sweep) first *compile* a schedule into the flat arena-style
+//! IR in [`lowered`].
 //!
 //! Transfers carry explicit payloads: sets of ([`Chunk`], [`ContribSet`])
 //! pairs. A chunk is an op-defined unit of data (e.g. "rank 3's
@@ -17,9 +19,11 @@
 //! schedule neither drops nor double-counts any rank.
 
 pub mod contrib;
+pub mod lowered;
 pub mod symexec;
 
 pub use contrib::ContribSet;
+pub use lowered::{LoweredSchedule, TopoCtx};
 
 
 use crate::topology::Placement;

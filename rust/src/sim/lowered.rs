@@ -1,0 +1,436 @@
+//! The production engine: the same continuous-time physics as
+//! [`super::reference`], executed over the flat lowered IR with dense
+//! state and reusable scratch.
+//!
+//! Three structural changes relative to the reference engine, none of
+//! which may change a single bit of the output (the differential suite
+//! in `rust/tests/prop_sim_lowered.rs` enforces exact agreement):
+//!
+//! * **Dense readiness** — chunk readiness lives in one flat `Vec<f64>`
+//!   indexed by `rank * num_chunks + dense_chunk` instead of a
+//!   `HashMap<Chunk, f64>` per rank. Absent entries were implicitly 0.0
+//!   in the map; the table is zero-initialized, so the fold over a
+//!   payload reads the same values in the same order.
+//! * **Dense edge occupancy** — per-machine-pair wire state is a flat
+//!   `num_machines²` matrix instead of `HashMap<(usize, usize), f64>`.
+//! * **[`SimArena`] scratch reuse** — every per-run buffer (cursors,
+//!   readiness table, NIC pools, edge matrix, the per-round delivery
+//!   list) lives in a caller-owned arena that is resized/reset rather
+//!   than reallocated, so batch simulation (the autotuner's stage 2)
+//!   does zero steady-state allocation.
+//!
+//! The NIC pool also drops the reference's O(k) linear min-scan for a
+//! binary heap keyed `(free_at, token index)` — the tie order (lowest
+//! index among equally-free tokens) is exactly the scan's, so acquire
+//! sequences are unchanged.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::sched::{LoweredSchedule, XferKind};
+
+use super::{SimParams, SimReport, XferRecord};
+
+/// One NIC token: when it frees up, and which physical slot it is (the
+/// index breaks ties so the pool reproduces the reference linear scan's
+/// first-minimum choice).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct TokenSlot {
+    free_at: f64,
+    idx: u32,
+}
+
+impl Eq for TokenSlot {}
+
+impl PartialOrd for TokenSlot {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TokenSlot {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.free_at
+            .total_cmp(&other.free_at)
+            .then_with(|| self.idx.cmp(&other.idx))
+    }
+}
+
+/// Multi-token resource (a machine's NIC pool): `k` interchangeable
+/// servers with earliest-free tracking — acquire pops the earliest-free
+/// token in O(log k) instead of scanning all `k`.
+#[derive(Debug, Clone)]
+pub(crate) struct TokenPool {
+    k: usize,
+    heap: BinaryHeap<Reverse<TokenSlot>>,
+}
+
+impl TokenPool {
+    pub(crate) fn new(k: usize) -> Self {
+        let k = k.max(1);
+        let mut pool = Self { k, heap: BinaryHeap::with_capacity(k) };
+        pool.reset();
+        pool
+    }
+
+    pub(crate) fn capacity(&self) -> usize {
+        self.k
+    }
+
+    /// Return every token to the free-at-0 state (arena reuse).
+    pub(crate) fn reset(&mut self) {
+        self.heap.clear();
+        for i in 0..self.k {
+            self.heap.push(Reverse(TokenSlot { free_at: 0.0, idx: i as u32 }));
+        }
+    }
+
+    /// Reserve the earliest-free token at or after `t` for `busy` seconds;
+    /// returns the actual start time. Ties pick the lowest token index.
+    pub(crate) fn acquire(&mut self, t: f64, busy: f64) -> f64 {
+        let Reverse(slot) = self.heap.pop().expect("token pool is never empty");
+        let start = t.max(slot.free_at);
+        self.heap.push(Reverse(TokenSlot { free_at: start + busy, idx: slot.idx }));
+        start
+    }
+}
+
+/// Reusable scratch state for [`simulate_lowered`]: cursors, the dense
+/// readiness table, NIC pools, the edge matrix and the per-round delivery
+/// list. Create once, pass to every run — buffers are resized/reset in
+/// place, so steady-state batch simulation allocates nothing.
+#[derive(Debug, Default)]
+pub struct SimArena {
+    proc_send_free: Vec<f64>,
+    proc_busy_until: Vec<f64>,
+    out_cursor: Vec<f64>,
+    in_cursor: Vec<f64>,
+    /// `rank * num_chunks + chunk` → earliest time the chunk is ready.
+    ready: Vec<f64>,
+    nic_out: Vec<TokenPool>,
+    nic_in: Vec<TokenPool>,
+    /// `src_machine * num_machines + dst_machine` → wire free time
+    /// (graph interconnects under NIC limits only).
+    edge_free: Vec<f64>,
+    deliveries: Vec<(u32, u32, f64)>,
+}
+
+impl SimArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size and zero every buffer for `low` under `params`. Reuses
+    /// allocations whenever the shapes already match.
+    fn prepare(&mut self, low: &LoweredSchedule<'_>, params: &SimParams) {
+        let p = low.ctx.num_ranks;
+        let m = low.ctx.num_machines;
+
+        self.proc_send_free.clear();
+        self.proc_send_free.resize(p, 0.0);
+        self.proc_busy_until.clear();
+        self.proc_busy_until.resize(p, 0.0);
+        self.out_cursor.clear();
+        self.out_cursor.resize(p, 0.0);
+        self.in_cursor.clear();
+        self.in_cursor.resize(p, 0.0);
+
+        let cells = p * low.num_chunks.max(1);
+        self.ready.clear();
+        self.ready.resize(cells, 0.0);
+
+        if params.nic_limited {
+            let shape_ok = self.nic_out.len() == m
+                && self
+                    .nic_out
+                    .iter()
+                    .zip(low.ctx.degree.iter())
+                    .all(|(pool, &k)| pool.capacity() == (k as usize).max(1));
+            if shape_ok {
+                for pool in &mut self.nic_out {
+                    pool.reset();
+                }
+                for pool in &mut self.nic_in {
+                    pool.reset();
+                }
+            } else {
+                self.nic_out =
+                    low.ctx.degree.iter().map(|&k| TokenPool::new(k as usize)).collect();
+                self.nic_in =
+                    low.ctx.degree.iter().map(|&k| TokenPool::new(k as usize)).collect();
+            }
+            if low.ctx.is_graph {
+                self.edge_free.clear();
+                self.edge_free.resize(m * m, 0.0);
+            } else {
+                self.edge_free.clear();
+            }
+        } else {
+            self.nic_out.clear();
+            self.nic_in.clear();
+            self.edge_free.clear();
+        }
+        self.deliveries.clear();
+    }
+}
+
+/// Run a lowered schedule under `params` using `arena` for scratch;
+/// returns timing + stats. Infallible: lowering already proved the
+/// schedule structurally legal. Produces reports *exactly* equal to
+/// [`super::simulate_reference`] on the same inputs.
+pub fn simulate_lowered(
+    low: &LoweredSchedule<'_>,
+    params: &SimParams,
+    arena: &mut SimArena,
+) -> SimReport {
+    arena.prepare(low, params);
+    let SimArena {
+        proc_send_free,
+        proc_busy_until,
+        out_cursor,
+        in_cursor,
+        ready,
+        nic_out,
+        nic_in,
+        edge_free,
+        deliveries,
+    } = arena;
+
+    let p = low.ctx.num_ranks;
+    let m = low.ctx.num_machines;
+    let nc = low.num_chunks.max(1);
+    let speed = low.ctx.speed.as_slice();
+    let is_graph = low.ctx.is_graph;
+
+    let mut records: Vec<XferRecord> = Vec::new();
+    let mut nic_busy = 0.0f64;
+    let mut t_end = 0.0f64;
+    let mut ext_msgs = 0usize;
+    let mut ext_bytes = 0u64;
+
+    for round in 0..low.num_rounds {
+        out_cursor.copy_from_slice(proc_busy_until.as_slice());
+        in_cursor.copy_from_slice(proc_busy_until.as_slice());
+        deliveries.clear();
+        let lo = low.round_off[round] as usize;
+        let hi = low.round_off[round + 1] as usize;
+        for xi in lo..hi {
+            let src = low.src[xi] as usize;
+            let (p0, p1) =
+                (low.payload_off[xi] as usize, low.payload_off[xi + 1] as usize);
+            let size_bytes = (p1 - p0) as u64 * params.chunk_bytes;
+            let mut data_ready = 0.0f64;
+            for &c in &low.payload_chunks[p0..p1] {
+                data_ready = data_ready.max(ready[src * nc + c as usize]);
+            }
+
+            match low.kind[xi] {
+                XferKind::External => {
+                    let dst = low.dst0[xi] as usize;
+                    let (ms, md) =
+                        (low.src_machine[xi] as usize, low.dst_machine[xi] as usize);
+                    let s_src = if params.respect_speed { speed[src] } else { 1.0 };
+                    let s_dst = if params.respect_speed { speed[dst] } else { 1.0 };
+                    let o_s = params.o_send / s_src;
+                    let o_r = params.o_recv / s_dst;
+                    let ser = size_bytes as f64 * params.byte_time_ext;
+
+                    let mut t0 = data_ready
+                        .max(proc_send_free[src])
+                        .max(out_cursor[src]);
+                    let (start, arrival) = if params.nic_limited {
+                        if is_graph {
+                            t0 = t0.max(edge_free[ms * m + md]);
+                        }
+                        // Out-NIC held while the sender injects the message.
+                        let start = nic_out[ms].acquire(t0, o_s + ser);
+                        // In-NIC held while bits land at the receiver.
+                        let wire_done = start + o_s + params.lat_ext;
+                        let in_start = nic_in[md].acquire(wire_done, ser);
+                        if is_graph {
+                            edge_free[ms * m + md] = start + o_s + ser;
+                        }
+                        nic_busy += o_s + 2.0 * ser;
+                        (start, in_start + ser)
+                    } else {
+                        (t0, t0 + o_s + params.lat_ext + ser)
+                    };
+
+                    proc_send_free[src] = start + o_s.max(params.gap / s_src);
+                    out_cursor[src] = start + o_s;
+                    let recv_done = arrival.max(in_cursor[dst]) + o_r;
+                    in_cursor[dst] = recv_done;
+                    t_end = t_end.max(recv_done);
+                    ext_msgs += 1;
+                    ext_bytes += size_bytes;
+                    if params.record_xfers {
+                        records.push(XferRecord {
+                            src,
+                            dst,
+                            start,
+                            end: recv_done,
+                            external: true,
+                            bytes: size_bytes,
+                        });
+                    }
+                    for &c in &low.payload_chunks[p0..p1] {
+                        deliveries.push((dst as u32, c, recv_done));
+                    }
+                }
+                XferKind::LocalWrite => {
+                    // One constant-time shared-memory publication (R1):
+                    // cost is independent of the destination count.
+                    let s_src = if params.respect_speed { speed[src] } else { 1.0 };
+                    let o_w = params.o_write / s_src;
+                    let start = data_ready.max(out_cursor[src]);
+                    let done = start + o_w + params.lat_int;
+                    out_cursor[src] = start + o_w;
+                    t_end = t_end.max(done);
+                    let (d0, d1) =
+                        (low.dst_off[xi] as usize, low.dst_off[xi + 1] as usize);
+                    for &d in &low.dsts[d0..d1] {
+                        // One record per destination so traces match the
+                        // delivered chunks (the publication itself still
+                        // costs once).
+                        if params.record_xfers {
+                            records.push(XferRecord {
+                                src,
+                                dst: d as usize,
+                                start,
+                                end: done,
+                                external: false,
+                                bytes: size_bytes,
+                            });
+                        }
+                        for &c in &low.payload_chunks[p0..p1] {
+                            deliveries.push((d, c, done));
+                        }
+                    }
+                }
+                XferKind::LocalRead => {
+                    // Reader assembles the message: per-message cost (R1).
+                    let dst = low.dst0[xi] as usize;
+                    let s_dst = if params.respect_speed { speed[dst] } else { 1.0 };
+                    let o_r = params.o_recv / s_dst;
+                    let copy = size_bytes as f64 * params.byte_time_int;
+                    let start = (data_ready + params.lat_int) // shm visibility
+                        .max(in_cursor[dst]);
+                    let done = start + o_r + copy;
+                    in_cursor[dst] = done;
+                    t_end = t_end.max(done);
+                    if params.record_xfers {
+                        records.push(XferRecord {
+                            src,
+                            dst,
+                            start,
+                            end: done,
+                            external: false,
+                            bytes: size_bytes,
+                        });
+                    }
+                    for &c in &low.payload_chunks[p0..p1] {
+                        deliveries.push((dst as u32, c, done));
+                    }
+                }
+            }
+        }
+        for &(r, c, t) in deliveries.iter() {
+            let e = &mut ready[r as usize * nc + c as usize];
+            *e = e.max(t);
+        }
+        for r in 0..p {
+            proc_busy_until[r] = out_cursor[r].max(in_cursor[r]);
+        }
+    }
+
+    let nic_util = if t_end > 0.0 && params.nic_limited {
+        let total_tokens: usize = low.ctx.degree.iter().map(|&k| k as usize).sum();
+        nic_busy / (2.0 * total_tokens as f64 * t_end)
+    } else {
+        0.0
+    };
+
+    SimReport {
+        t_end,
+        ext_messages: ext_msgs,
+        ext_bytes,
+        nic_utilization: nic_util,
+        records,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{CollectiveOp, Payload, Round, Schedule, TopoCtx, Xfer};
+    use crate::topology::{switched, Placement};
+
+    /// The multi-token contract: acquire always takes the earliest-free
+    /// token, ties resolved toward the lowest index — byte-for-byte the
+    /// reference linear scan's behavior.
+    #[test]
+    fn token_pool_earliest_free_order() {
+        let mut pool = TokenPool::new(2);
+        assert_eq!(pool.acquire(1.0, 5.0), 1.0); // token 0: busy until 6
+        assert_eq!(pool.acquire(0.0, 2.0), 0.0); // token 1 is earliest (0)
+        assert_eq!(pool.acquire(1.0, 1.0), 2.0); // token 1 again (2 < 6)
+        assert_eq!(pool.acquire(0.0, 10.0), 3.0); // token 1 (3 < 6)
+        assert_eq!(pool.acquire(0.0, 1.0), 6.0); // token 0 now earliest
+    }
+
+    #[test]
+    fn token_pool_tie_breaks_by_lowest_index() {
+        // Three tokens all free at 0 with distinct busy times: the pop
+        // order under ties must walk indices 0, 1, 2 — afterwards the
+        // earliest token is the one index 0 released first.
+        let mut pool = TokenPool::new(3);
+        assert_eq!(pool.acquire(0.0, 1.0), 0.0);
+        assert_eq!(pool.acquire(0.0, 2.0), 0.0);
+        assert_eq!(pool.acquire(0.0, 3.0), 0.0);
+        assert_eq!(pool.acquire(0.0, 1.0), 1.0); // token 0 (free at 1)
+        assert_eq!(pool.acquire(0.0, 1.0), 2.0); // tie at 2: tokens 0 and 1
+        assert_eq!(pool.acquire(0.0, 1.0), 2.0); // ...both serve at 2
+    }
+
+    #[test]
+    fn token_pool_reset_restores_fresh_state() {
+        let mut pool = TokenPool::new(2);
+        pool.acquire(5.0, 5.0);
+        pool.reset();
+        assert_eq!(pool.acquire(0.0, 1.0), 0.0);
+        assert_eq!(pool.capacity(), 2);
+    }
+
+    #[test]
+    fn arena_reuse_across_topologies_is_clean() {
+        // Simulate on a big topology, then a small one, then the big one
+        // again: the arena must resize/reset correctly every time.
+        let params = SimParams::lan_cluster(1024);
+        let mut arena = SimArena::new();
+        let mk = |machines: usize| {
+            let c = switched(machines, 2, 1);
+            let p = Placement::block(&c);
+            let mut s = Schedule::new(
+                CollectiveOp::Broadcast { root: 0 },
+                machines * 2,
+                "t",
+            );
+            s.push_round(Round {
+                xfers: vec![Xfer::external(0, 2, Payload::single(0, 0))],
+            });
+            (c, p, s)
+        };
+        let (c1, p1, s1) = mk(4);
+        let (c2, p2, s2) = mk(2);
+        let ctx1 = TopoCtx::new(&c1, &p1);
+        let ctx2 = TopoCtx::new(&c2, &p2);
+        let low1 = crate::sched::LoweredSchedule::compile(&ctx1, &s1).unwrap();
+        let low2 = crate::sched::LoweredSchedule::compile(&ctx2, &s2).unwrap();
+        let a = simulate_lowered(&low1, &params, &mut arena);
+        let b = simulate_lowered(&low2, &params, &mut arena);
+        let c = simulate_lowered(&low1, &params, &mut arena);
+        assert_eq!(a, c, "state must not leak across arena reuses");
+        assert_eq!(a.ext_messages, 1);
+        assert_eq!(b.ext_messages, 1);
+    }
+}

@@ -16,241 +16,54 @@
 //! deterministic, which is how a real asynchronous MPI progress engine
 //! would drain the same DAG.
 //!
+//! Two engines implement that physics:
+//!
+//! * [`simulate_lowered`] — the production engine: runs a
+//!   [`crate::sched::LoweredSchedule`] over dense readiness tables, a
+//!   dense machine-pair matrix and heap-backed NIC pools, with all
+//!   scratch in a caller-owned [`SimArena`] so batch simulation does
+//!   zero steady-state allocation. [`simulate`] is a thin
+//!   compile-and-run wrapper over it.
+//! * [`simulate_reference`] — the golden reference: walks the boxed
+//!   [`Schedule`] directly. Slower, obviously faithful; the differential
+//!   suite (`rust/tests/prop_sim_lowered.rs`) proves the production
+//!   engine reproduces it bit-for-bit.
+//!
 //! One engine, many models: [`SimParams::lan_cluster`] is the realistic
 //! multi-core testbed; [`SimParams::flat_logp`] reproduces LogP (no
 //! locality, no NIC sharing); [`crate::model::LogP`] delegates here.
 
+mod lowered;
 mod params;
+mod reference;
 mod report;
 
+pub use lowered::{simulate_lowered, SimArena};
 pub use params::SimParams;
+pub use reference::simulate_reference;
 pub use report::{SimReport, XferRecord};
 
-use std::collections::HashMap;
-
-use crate::sched::{Chunk, Schedule, XferKind};
-use crate::topology::{Cluster, Interconnect, Placement};
-
-/// Multi-token resource: `k` interchangeable servers (a machine's NIC
-/// pool). Acquiring picks the earliest-free token.
-#[derive(Debug, Clone)]
-struct TokenPool {
-    free_at: Vec<f64>,
-}
-
-impl TokenPool {
-    fn new(k: usize) -> Self {
-        Self { free_at: vec![0.0; k.max(1)] }
-    }
-
-    /// Reserve the earliest-free token at or after `t` for `busy` seconds;
-    /// returns the actual start time.
-    fn acquire(&mut self, t: f64, busy: f64) -> f64 {
-        let idx = self
-            .free_at
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap();
-        let start = t.max(self.free_at[idx]);
-        self.free_at[idx] = start + busy;
-        start
-    }
-}
+use crate::sched::{LoweredSchedule, Schedule, TopoCtx};
+use crate::topology::{Cluster, Placement};
 
 /// Run `schedule` on `cluster` under `params`; returns timing + stats.
 /// Deterministic: same inputs → identical report.
+///
+/// This is the one-shot convenience entry point: it compiles the
+/// topology context and the schedule ([`crate::sched::lowered`]) and
+/// runs [`simulate_lowered`] with a fresh [`SimArena`]. Callers pricing
+/// many schedules on one topology (the autotuner) should compile a
+/// [`TopoCtx`] once and reuse an arena instead.
 pub fn simulate(
     cluster: &Cluster,
     placement: &Placement,
     schedule: &Schedule,
     params: &SimParams,
 ) -> crate::Result<SimReport> {
-    schedule.check_shape(placement)?;
-    let p = schedule.num_ranks;
-    let m_count = cluster.num_machines();
-    let is_graph = matches!(cluster.interconnect, Interconnect::Graph { .. });
-
-    // Resource state. Within a round all transfers are concurrent (they
-    // read pre-round state), so send-side work gates on the *round-start*
-    // snapshot of each process — not on receives landing in the same
-    // round. Send-side (sends + writes) and receive-side (receives +
-    // reads) activity each serialize on their own per-round cursor; the
-    // process is busy until the later of the two at round end.
-    let mut proc_send_free = vec![0.0f64; p]; // next legal send (LogP gap)
-    let mut proc_busy_until = vec![0.0f64; p];
-    let mut out_cursor = vec![0.0f64; p];
-    let mut in_cursor = vec![0.0f64; p];
-    let (mut nic_out, mut nic_in): (Vec<TokenPool>, Vec<TokenPool>) = if params.nic_limited {
-        (
-            (0..m_count).map(|m| TokenPool::new(cluster.degree(m))).collect(),
-            (0..m_count).map(|m| TokenPool::new(cluster.degree(m))).collect(),
-        )
-    } else {
-        (Vec::new(), Vec::new())
-    };
-    let mut edge_free: HashMap<(usize, usize), f64> = HashMap::new();
-
-    // Data readiness per (rank, chunk), updated with delivery times after
-    // each round so intra-round transfers read pre-round state. Chunks a
-    // rank holds initially have implicit ready time 0.
-    let mut ready: Vec<HashMap<Chunk, f64>> = vec![HashMap::new(); p];
-
-    let speed = |r: usize| {
-        if params.respect_speed {
-            cluster.machines[placement.machine_of(r)].speed
-        } else {
-            1.0
-        }
-    };
-
-    let mut records: Vec<XferRecord> = Vec::new();
-    let mut nic_busy = 0.0f64;
-    let mut t_end = 0.0f64;
-    let mut ext_msgs = 0usize;
-    let mut ext_bytes = 0u64;
-
-    for round in &schedule.rounds {
-        out_cursor.copy_from_slice(&proc_busy_until);
-        in_cursor.copy_from_slice(&proc_busy_until);
-        let mut deliveries: Vec<(usize, Chunk, f64)> = Vec::new();
-        for x in &round.xfers {
-            let size_bytes = x.payload.num_chunks() as u64 * params.chunk_bytes;
-            let data_ready = x
-                .payload
-                .items
-                .iter()
-                .map(|(c, _)| ready[x.src].get(c).copied().unwrap_or(0.0))
-                .fold(0.0f64, f64::max);
-
-            match x.kind {
-                XferKind::External => {
-                    let dst = x.dsts[0];
-                    let (ms, md) =
-                        (placement.machine_of(x.src), placement.machine_of(dst));
-                    if !cluster.connected(ms, md) {
-                        anyhow::bail!("simulate: machines {ms},{md} not connected");
-                    }
-                    let o_s = params.o_send / speed(x.src);
-                    let o_r = params.o_recv / speed(dst);
-                    let ser = size_bytes as f64 * params.byte_time_ext;
-
-                    let mut t0 = data_ready
-                        .max(proc_send_free[x.src])
-                        .max(out_cursor[x.src]);
-                    let (start, arrival) = if params.nic_limited {
-                        if is_graph {
-                            t0 = t0.max(edge_free.get(&(ms, md)).copied().unwrap_or(0.0));
-                        }
-                        // Out-NIC held while the sender injects the message.
-                        let start = nic_out[ms].acquire(t0, o_s + ser);
-                        // In-NIC held while bits land at the receiver.
-                        let wire_done = start + o_s + params.lat_ext;
-                        let in_start = nic_in[md].acquire(wire_done, ser);
-                        if is_graph {
-                            edge_free.insert((ms, md), start + o_s + ser);
-                        }
-                        nic_busy += o_s + 2.0 * ser;
-                        (start, in_start + ser)
-                    } else {
-                        (t0, t0 + o_s + params.lat_ext + ser)
-                    };
-
-                    proc_send_free[x.src] = start + o_s.max(params.gap / speed(x.src));
-                    out_cursor[x.src] = start + o_s;
-                    let recv_done = arrival.max(in_cursor[dst]) + o_r;
-                    in_cursor[dst] = recv_done;
-                    t_end = t_end.max(recv_done);
-                    ext_msgs += 1;
-                    ext_bytes += size_bytes;
-                    if params.record_xfers {
-                        records.push(XferRecord {
-                            src: x.src,
-                            dst,
-                            start,
-                            end: recv_done,
-                            external: true,
-                            bytes: size_bytes,
-                        });
-                    }
-                    for (c, _) in &x.payload.items {
-                        deliveries.push((dst, *c, recv_done));
-                    }
-                }
-                XferKind::LocalWrite => {
-                    // One constant-time shared-memory publication (R1):
-                    // cost is independent of the destination count.
-                    let o_w = params.o_write / speed(x.src);
-                    let start = data_ready.max(out_cursor[x.src]);
-                    let done = start + o_w + params.lat_int;
-                    out_cursor[x.src] = start + o_w;
-                    t_end = t_end.max(done);
-                    if params.record_xfers {
-                        records.push(XferRecord {
-                            src: x.src,
-                            dst: x.dsts[0],
-                            start,
-                            end: done,
-                            external: false,
-                            bytes: size_bytes,
-                        });
-                    }
-                    for &d in &x.dsts {
-                        for (c, _) in &x.payload.items {
-                            deliveries.push((d, *c, done));
-                        }
-                    }
-                }
-                XferKind::LocalRead => {
-                    // Reader assembles the message: per-message cost (R1).
-                    let dst = x.dsts[0];
-                    let o_r = params.o_recv / speed(dst);
-                    let copy = size_bytes as f64 * params.byte_time_int;
-                    let start = (data_ready + params.lat_int) // shm visibility
-                        .max(in_cursor[dst]);
-                    let done = start + o_r + copy;
-                    in_cursor[dst] = done;
-                    t_end = t_end.max(done);
-                    if params.record_xfers {
-                        records.push(XferRecord {
-                            src: x.src,
-                            dst,
-                            start,
-                            end: done,
-                            external: false,
-                            bytes: size_bytes,
-                        });
-                    }
-                    for (c, _) in &x.payload.items {
-                        deliveries.push((dst, *c, done));
-                    }
-                }
-            }
-        }
-        for (r, c, t) in deliveries {
-            let e = ready[r].entry(c).or_insert(0.0);
-            *e = e.max(t);
-        }
-        for r in 0..p {
-            proc_busy_until[r] = out_cursor[r].max(in_cursor[r]);
-        }
-    }
-
-    let nic_util = if t_end > 0.0 && params.nic_limited {
-        let total_tokens: usize = (0..m_count).map(|m| cluster.degree(m)).sum();
-        nic_busy / (2.0 * total_tokens as f64 * t_end)
-    } else {
-        0.0
-    };
-
-    Ok(SimReport {
-        t_end,
-        ext_messages: ext_msgs,
-        ext_bytes,
-        nic_utilization: nic_util,
-        records,
-    })
+    let ctx = TopoCtx::new(cluster, placement);
+    let low = LoweredSchedule::compile(&ctx, schedule)?;
+    let mut arena = SimArena::new();
+    Ok(simulate_lowered(&low, params, &mut arena))
 }
 
 #[cfg(test)]
@@ -426,5 +239,25 @@ mod tests {
         let ts = simulate(&slow, &p, &s, &params).unwrap().t_end;
         let tf = simulate(&fast, &p, &s, &params).unwrap().t_end;
         assert!(ts > 2.0 * tf, "slow sender {ts} vs fast sender {tf}");
+    }
+
+    #[test]
+    fn local_write_records_one_per_destination() {
+        // Trace fidelity: a LocalWrite delivering to 3 ranks must emit 3
+        // records (one per destination), matching the delivered chunks.
+        let c = switched(1, 4, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::local_write(0, vec![1, 2, 3], Payload::single(0, 0))],
+        });
+        let params = SimParams::lan_cluster(1024).with_records();
+        let r = simulate(&c, &p, &s, &params).unwrap();
+        assert_eq!(r.records.len(), 3);
+        let dsts: Vec<usize> = r.records.iter().map(|x| x.dst).collect();
+        assert_eq!(dsts, vec![1, 2, 3]);
+        assert!(r.records.iter().all(|x| x.src == 0 && !x.external));
+        // All three publications share one start/end: the write costs once.
+        assert!(r.records.iter().all(|x| x.end == r.records[0].end));
     }
 }

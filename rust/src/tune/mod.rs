@@ -34,10 +34,20 @@
 //! ([`selector`] docs). Entry points:
 //!
 //! * [`select`] — one-shot tuning, no cache.
+//! * [`select_many`] — batched tuning of several collectives on one
+//!   topology: the lowered topology context is compiled once and both
+//!   stages sweep all candidates together (in parallel on big
+//!   topologies).
 //! * [`DecisionCache`] — explicit cache for loops over many topologies.
 //! * [`Tuned`] — thread-safe facade used by
 //!   [`crate::coordinator::Communicator`]; this is what the trainer and
 //!   the CLI go through.
+//!
+//! Both selection stages run over the flat lowered IR
+//! ([`crate::sched::lowered`]): stage 1 prices candidates with
+//! [`crate::model::Multicore::cost_detail_lowered`], stage 2 confirms
+//! with [`crate::sim::simulate_lowered`] against reusable
+//! [`crate::sim::SimArena`] scratch.
 
 pub mod cache;
 pub mod fingerprint;
@@ -47,7 +57,7 @@ pub mod selector;
 pub use cache::{CacheStats, DecisionCache};
 pub use fingerprint::Fingerprint;
 pub use registry::{candidates_for, flat_baseline, CandidateId, Collective};
-pub use selector::{select, Decision, TuneCfg};
+pub use selector::{select, select_many, Decision, TuneCfg};
 
 use std::sync::Mutex;
 

@@ -7,8 +7,8 @@
 //! legalized first, exactly as a real NIC-constrained cluster would
 //! serialize them). The best [`TuneCfg::shortlist`] candidates advance.
 //!
-//! Stage 2 runs the shortlist through [`crate::sim::simulate`] and picks
-//! the smallest simulated completion time. The flat baseline
+//! Stage 2 runs the shortlist through the continuous-time simulator and
+//! picks the smallest simulated completion time. The flat baseline
 //! ([`crate::tune::flat_baseline`]) is *always* added to stage 2 when the
 //! topology admits one, which yields the tuner's contract:
 //!
@@ -17,13 +17,34 @@
 //!
 //! Ties are broken by model cost, then candidate label, so selection is
 //! fully deterministic.
+//!
+//! ## Execution strategy
+//!
+//! Both stages run over the lowered IR ([`crate::sched::lowered`]): the
+//! topology context is compiled **once** per selection, every candidate
+//! is priced through [`Multicore::cost_detail_lowered`], and stage-2
+//! confirmation runs [`crate::sim::simulate_lowered`] against reusable
+//! [`SimArena`] scratch. When the topology is large enough for it to
+//! pay, candidates are evaluated in parallel with
+//! [`std::thread::scope`] — each worker owns one arena, results land in
+//! per-candidate slots, and the final argmin is sequential, so the
+//! decision is identical whatever the worker count. [`select_many`]
+//! amortizes all of this across several collectives on one topology.
 
-use crate::model::{legalize, CostModel, Multicore};
-use crate::sched::Schedule;
-use crate::sim::{simulate, SimParams};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::model::{legalize, Multicore};
+use crate::sched::{LoweredSchedule, Schedule, TopoCtx};
+use crate::sim::{simulate_lowered, SimArena, SimParams};
 use crate::topology::{Cluster, Placement};
 
 use super::registry::{candidates_for, flat_baseline, CandidateId, Collective};
+
+/// Minimum `num_ranks × candidates` before stage 1 fans out to threads.
+const STAGE1_PAR_MIN_WORK: usize = 1 << 12;
+/// Minimum total pool transfers before stage 2 fans out to threads.
+const STAGE2_PAR_MIN_XFERS: usize = 1 << 13;
 
 /// Tuner configuration: the cost model used for stage-1 ranking (its
 /// duplex assumption and `alpha` are part of the cache fingerprint), the
@@ -77,6 +98,92 @@ impl Decision {
     }
 }
 
+/// How many workers to use for `jobs` units whose total size is
+/// `work_estimate`: 1 (run inline) below `min_work`, else up to one per
+/// core, capped at the job count. The estimate is derived from the
+/// topology alone, so the choice — and therefore thread spawning — is
+/// deterministic per input.
+fn worker_count(jobs: usize, work_estimate: usize, min_work: usize) -> usize {
+    if jobs < 2 || work_estimate < min_work {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, jobs)
+}
+
+/// Run `f(scratch, i)` for every `i in 0..n_jobs` and collect results in
+/// job order, with per-worker scratch built by `init` (`()` for stage 1,
+/// a [`SimArena`] for stage 2). With `workers == 1` everything runs
+/// inline on one scratch value; otherwise a [`std::thread::scope`] fans
+/// jobs out over an atomic cursor, each worker owning its scratch.
+/// Results are written to per-job slots, so the output is independent of
+/// scheduling.
+fn run_jobs<S, T, I, F>(n_jobs: usize, workers: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    if workers <= 1 {
+        let mut scratch = init();
+        return (0..n_jobs).map(|i| f(&mut scratch, i)).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut scratch = init();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_jobs {
+                        break;
+                    }
+                    let out = f(&mut scratch, i);
+                    *slots[i].lock().expect("job slot poisoned") = Some(out);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("job slot poisoned")
+                .expect("every job slot is filled")
+        })
+        .collect()
+}
+
+/// One priced candidate: id, its (possibly legalized) schedule, stage-1
+/// scalar cost, and the compiled IR — kept so stage 2 simulates without
+/// re-lowering.
+type Priced<'t> = (CandidateId, Schedule, f64, LoweredSchedule<'t>);
+
+/// Build one candidate and price it under `model` over the lowered IR,
+/// legalizing first when the raw builder output is not legal (exactly as
+/// a real NIC-constrained cluster would serialize it).
+fn build_and_price<'t>(
+    ctx: &'t TopoCtx,
+    model: &Multicore,
+    cluster: &Cluster,
+    placement: &Placement,
+    id: CandidateId,
+) -> crate::Result<Priced<'t>> {
+    let built = id.build(cluster, placement)?;
+    if let Ok(low) = LoweredSchedule::compile(ctx, &built) {
+        if let Ok(detail) = model.cost_detail_lowered(&low) {
+            return Ok((id, built, detail.total(model.alpha), low));
+        }
+    }
+    let schedule = legalize(model, cluster, placement, &built);
+    let low = LoweredSchedule::compile(ctx, &schedule)?;
+    let cost = model.cost_lowered(&low)?;
+    Ok((id, schedule, cost, low))
+}
+
 /// Select the best schedule for `collective` on this topology. See the
 /// module docs for the two-stage procedure and the baseline guarantee.
 pub fn select(
@@ -85,84 +192,155 @@ pub fn select(
     collective: Collective,
     cfg: &TuneCfg,
 ) -> crate::Result<Decision> {
-    let ids = candidates_for(collective, cluster, placement);
-    if ids.is_empty() {
-        anyhow::bail!(
-            "no applicable schedule builder for {} on this topology \
-             (exchange-style collectives need a switched interconnect)",
-            collective.name()
-        );
-    }
+    let mut decisions = select_many(cluster, placement, &[collective], cfg)?;
+    Ok(decisions.pop().expect("one collective in, one decision out"))
+}
 
-    // Stage 1: build, legalize if needed, price under the round model.
-    let mut ranked: Vec<(CandidateId, Schedule, f64)> = Vec::with_capacity(ids.len());
-    for id in ids {
-        let built = id.build(cluster, placement)?;
-        let schedule = if cfg.model.validate(cluster, placement, &built).is_ok() {
-            built
-        } else {
-            legalize(&cfg.model, cluster, placement, &built)
-        };
-        let cost = cfg.model.cost(cluster, placement, &schedule)?;
-        ranked.push((id, schedule, cost));
-    }
-    let considered = ranked.len();
-    ranked.sort_by(|a, b| {
-        a.2.partial_cmp(&b.2)
-            .expect("model costs are finite")
-            .then_with(|| a.0.label().cmp(&b.0.label()))
-    });
+/// Batched selection: tune several collectives on one topology in a
+/// single pass. The topology context is compiled once, all candidates
+/// across all collectives are priced in one (possibly parallel) stage-1
+/// sweep, and the union of the stage-2 pools is confirmed in one
+/// (possibly parallel) simulation sweep over shared arena scratch.
+/// Decisions come back in input order and are identical to what
+/// [`select`] returns for each collective alone.
+pub fn select_many(
+    cluster: &Cluster,
+    placement: &Placement,
+    collectives: &[Collective],
+    cfg: &TuneCfg,
+) -> crate::Result<Vec<Decision>> {
+    let ctx = TopoCtx::new(cluster, placement);
 
-    // Stage 2 pool: shortlist plus (always) the flat baseline.
-    let baseline = flat_baseline(collective, cluster);
-    let cut = cfg.shortlist.clamp(1, ranked.len());
-    let mut pool: Vec<(CandidateId, Schedule, f64)> = Vec::with_capacity(cut + 1);
-    let mut rest: Vec<(CandidateId, Schedule, f64)> = Vec::new();
-    for (i, entry) in ranked.into_iter().enumerate() {
-        if i < cut {
-            pool.push(entry);
-        } else {
-            rest.push(entry);
+    // Enumerate every (collective, candidate) job up front.
+    let mut jobs: Vec<CandidateId> = Vec::new();
+    let mut job_ranges: Vec<std::ops::Range<usize>> = Vec::with_capacity(collectives.len());
+    for &coll in collectives {
+        let ids = candidates_for(coll, cluster, placement);
+        if ids.is_empty() {
+            anyhow::bail!(
+                "no applicable schedule builder for {} on this topology \
+                 (exchange-style collectives need a switched interconnect)",
+                coll.name()
+            );
         }
+        let start = jobs.len();
+        jobs.extend(ids);
+        job_ranges.push(start..jobs.len());
     }
-    if let Some(b) = baseline {
-        if !pool.iter().any(|(id, _, _)| *id == b) {
-            if let Some(p) = rest.iter().position(|(id, _, _)| *id == b) {
-                pool.push(rest.swap_remove(p));
+
+    // Stage 1: build, legalize if needed, price under the round model —
+    // all candidates of all collectives in one sweep.
+    let workers1 = worker_count(
+        jobs.len(),
+        ctx.num_ranks.saturating_mul(jobs.len()),
+        STAGE1_PAR_MIN_WORK,
+    );
+    let priced = run_jobs(
+        jobs.len(),
+        workers1,
+        || (),
+        |_scratch, i| build_and_price(&ctx, &cfg.model, cluster, placement, jobs[i]),
+    );
+    let mut ranked_all: Vec<Priced<'_>> = Vec::with_capacity(jobs.len());
+    for result in priced {
+        ranked_all.push(result?);
+    }
+
+    // Per collective: rank, cut the shortlist, re-attach the baseline.
+    // Job ranges are consecutive, so draining from the front walks them
+    // in input order without cloning any schedule.
+    let mut remaining = ranked_all.into_iter();
+    let mut pools: Vec<Vec<Priced<'_>>> = Vec::with_capacity(collectives.len());
+    let mut considered: Vec<usize> = Vec::with_capacity(collectives.len());
+    let mut baselines: Vec<Option<CandidateId>> = Vec::with_capacity(collectives.len());
+    for (ci, &coll) in collectives.iter().enumerate() {
+        let mut ranked: Vec<Priced<'_>> =
+            remaining.by_ref().take(job_ranges[ci].len()).collect();
+        considered.push(ranked.len());
+        ranked.sort_by(|a, b| {
+            a.2.partial_cmp(&b.2)
+                .expect("model costs are finite")
+                .then_with(|| a.0.label().cmp(&b.0.label()))
+        });
+
+        // Stage 2 pool: shortlist plus (always) the flat baseline.
+        let baseline = flat_baseline(coll, cluster);
+        let cut = cfg.shortlist.clamp(1, ranked.len());
+        let mut pool: Vec<Priced<'_>> = Vec::with_capacity(cut + 1);
+        let mut rest: Vec<Priced<'_>> = Vec::new();
+        for (i, entry) in ranked.into_iter().enumerate() {
+            if i < cut {
+                pool.push(entry);
+            } else {
+                rest.push(entry);
             }
         }
+        if let Some(b) = baseline {
+            if !pool.iter().any(|(id, _, _, _)| *id == b) {
+                if let Some(p) = rest.iter().position(|(id, _, _, _)| *id == b) {
+                    pool.push(rest.swap_remove(p));
+                }
+            }
+        }
+        baselines.push(baseline);
+        pools.push(pool);
     }
 
-    // Stage 2: simulate the pool, keep the fastest (ties: model cost,
-    // then label — deterministic).
-    let mut sims = Vec::with_capacity(pool.len());
-    let mut baseline_sim = None;
-    for (id, schedule, _) in &pool {
-        let t = simulate(cluster, placement, schedule, &cfg.sim)?.t_end;
-        if baseline == Some(*id) {
-            baseline_sim = Some(t);
-        }
-        sims.push(t);
+    // Stage 2: simulate the union of the pools — the IR compiled in
+    // stage 1 is reused, so confirmation is pure engine time over
+    // per-worker arena scratch.
+    let sim_jobs: Vec<(usize, usize)> = pools
+        .iter()
+        .enumerate()
+        .flat_map(|(ci, pool)| (0..pool.len()).map(move |pi| (ci, pi)))
+        .collect();
+    let pool_xfers: usize = pools
+        .iter()
+        .flat_map(|pool| pool.iter())
+        .map(|(_, _, _, low)| low.num_xfers())
+        .sum();
+    let workers2 = worker_count(sim_jobs.len(), pool_xfers, STAGE2_PAR_MIN_XFERS);
+    let sim_results = run_jobs(sim_jobs.len(), workers2, SimArena::new, |arena, i| {
+        let (ci, pi) = sim_jobs[i];
+        simulate_lowered(&pools[ci][pi].3, &cfg.sim, arena).t_end
+    });
+    let mut sims: Vec<Vec<f64>> = pools.iter().map(|pool| vec![0.0; pool.len()]).collect();
+    for (job, t_end) in sim_jobs.iter().zip(sim_results) {
+        sims[job.0][job.1] = t_end;
     }
-    let mut best = 0usize;
-    for i in 1..pool.len() {
-        let a = (sims[i], pool[i].2, pool[i].0.label());
-        let b = (sims[best], pool[best].2, pool[best].0.label());
-        if a < b {
-            best = i;
+
+    // Pick each collective's winner (ties: model cost, then label —
+    // deterministic).
+    let mut decisions = Vec::with_capacity(collectives.len());
+    for (ci, mut pool) in pools.into_iter().enumerate() {
+        let sims = &sims[ci];
+        let mut baseline_sim = None;
+        for (pi, (id, _, _, _)) in pool.iter().enumerate() {
+            if baselines[ci] == Some(*id) {
+                baseline_sim = Some(sims[pi]);
+            }
         }
+        let mut best = 0usize;
+        for i in 1..pool.len() {
+            let a = (sims[i], pool[i].2, pool[i].0.label());
+            let b = (sims[best], pool[best].2, pool[best].0.label());
+            if a < b {
+                best = i;
+            }
+        }
+        let simulated = pool.len();
+        let (choice, schedule, model_cost, _low) = pool.swap_remove(best);
+        decisions.push(Decision {
+            choice,
+            schedule,
+            model_cost,
+            sim_time: sims[best],
+            baseline_sim,
+            considered: considered[ci],
+            simulated,
+        });
     }
-    let simulated = pool.len();
-    let (choice, schedule, model_cost) = pool.swap_remove(best);
-    Ok(Decision {
-        choice,
-        schedule,
-        model_cost,
-        sim_time: sims[best],
-        baseline_sim,
-        considered,
-        simulated,
-    })
+    Ok(decisions)
 }
 
 #[cfg(test)]
@@ -240,5 +418,64 @@ mod tests {
         assert_eq!(a.choice, b.choice);
         assert_eq!(a.sim_time, b.sim_time);
         assert_eq!(a.schedule, b.schedule);
+    }
+
+    #[test]
+    fn run_jobs_threaded_preserves_job_order() {
+        // The threaded fan-out must land result i in slot i regardless of
+        // scheduling, for both scratch flavors (unit for stage 1, arena
+        // for stage 2).
+        let unit: Vec<usize> = run_jobs(64, 4, || (), |_scratch, i| i * 3);
+        assert_eq!(unit, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+        let with_arena: Vec<usize> =
+            run_jobs(17, 3, SimArena::new, |_arena, i| i + 100);
+        assert_eq!(with_arena, (100..117).collect::<Vec<_>>());
+        // Degenerate shapes.
+        assert!(run_jobs(0, 4, || (), |_s, i| i).is_empty());
+        assert_eq!(run_jobs(3, 8, || (), |_s, i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn batched_matches_one_shot() {
+        // select_many must hand back exactly what per-collective select
+        // does, in input order — batching is an execution detail. (At
+        // this size stage 1 stays below its parallel threshold and runs
+        // inline; stage 2's pools cross theirs, so the threaded sweep is
+        // exercised there — run_jobs_threaded_preserves_job_order covers
+        // the threaded helper for both scratch flavors directly.)
+        let cl = switched(8, 8, 2);
+        let pl = Placement::block(&cl);
+        let cfg = TuneCfg::default();
+        let colls = [
+            Collective::Broadcast { root: 0 },
+            Collective::Allreduce,
+            Collective::AllToAll,
+            Collective::Gather { root: 3 },
+        ];
+        let batch = select_many(&cl, &pl, &colls, &cfg).unwrap();
+        assert_eq!(batch.len(), colls.len());
+        for (coll, batched) in colls.iter().zip(&batch) {
+            let solo = select(&cl, &pl, *coll, &cfg).unwrap();
+            assert_eq!(solo.choice, batched.choice, "{}", coll.name());
+            assert_eq!(solo.sim_time, batched.sim_time, "{}", coll.name());
+            assert_eq!(solo.schedule, batched.schedule, "{}", coll.name());
+            assert_eq!(solo.baseline_sim, batched.baseline_sim, "{}", coll.name());
+            assert_eq!(solo.model_cost, batched.model_cost, "{}", coll.name());
+        }
+    }
+
+    #[test]
+    fn batched_rejects_any_unbuildable_collective() {
+        let cl = crate::topology::line(3, 2, 1);
+        let pl = Placement::block(&cl);
+        let cfg = TuneCfg::default();
+        // Allreduce has no graph builder: the whole batch errors.
+        assert!(select_many(
+            &cl,
+            &pl,
+            &[Collective::Broadcast { root: 0 }, Collective::Allreduce],
+            &cfg
+        )
+        .is_err());
     }
 }

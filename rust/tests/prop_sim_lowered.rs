@@ -1,0 +1,154 @@
+//! Differential property suite: the production simulator
+//! (`sched::lowered` compile + `sim::simulate_lowered` over arena
+//! scratch) must reproduce the golden reference engine
+//! (`sim::simulate_reference`) **exactly** — bit-identical `t_end` and
+//! identical `ext_messages`, `ext_bytes`, `nic_utilization` and
+//! per-transfer records — across randomized topologies (switched and
+//! graph), every collective's full candidate set, both duplex
+//! legalizations, and all simulator parameter presets.
+//!
+//! One shared `SimArena` is threaded through every lowered run, so the
+//! suite also proves arena reset/reuse leaks no state between schedules
+//! or topologies.
+
+use mcomm::model::{legalize, Duplex, Multicore};
+use mcomm::sched::{LoweredSchedule, Schedule, TopoCtx};
+use mcomm::sim::{simulate_lowered, simulate_reference, SimArena, SimParams};
+use mcomm::topology::{gnp, switched, Cluster, Placement};
+use mcomm::tune::{candidates_for, Collective};
+use mcomm::util::Rng;
+
+fn param_grid() -> Vec<SimParams> {
+    let mut speedy = SimParams::lan_cluster(2048).with_records();
+    speedy.respect_speed = true;
+    vec![
+        SimParams::lan_cluster(4096).with_records(),
+        SimParams::lan_2008(512).with_records(),
+        SimParams::datacenter(1 << 16).with_records(),
+        SimParams::flat_logp(10e-6, 2e-6, 3e-6, 1024).with_records(),
+        speedy,
+    ]
+}
+
+fn random_cluster(seed: u64, rng: &mut Rng) -> Cluster {
+    if rng.gen_bool(0.5) {
+        switched(
+            1 + rng.gen_range(0..6),
+            1 + rng.gen_range(0..6),
+            1 + rng.gen_range(0..4),
+        )
+    } else {
+        gnp(
+            2 + rng.gen_range(0..6),
+            0.5,
+            1 + rng.gen_range(0..4),
+            1 + rng.gen_range(0..3),
+            seed,
+        )
+    }
+}
+
+fn check_exact(
+    ctx_label: &str,
+    cl: &Cluster,
+    pl: &Placement,
+    ctx: &TopoCtx,
+    schedule: &Schedule,
+    params: &[SimParams],
+    arena: &mut SimArena,
+) {
+    let low = match LoweredSchedule::compile(ctx, schedule) {
+        Ok(low) => low,
+        Err(_) => {
+            // Lowering rejects exactly what the reference engine rejects
+            // (shape/connectivity); both must fail together.
+            assert!(
+                simulate_reference(cl, pl, schedule, &params[0]).is_err(),
+                "{ctx_label}: lowering rejected a schedule the reference accepts"
+            );
+            return;
+        }
+    };
+    for p in params {
+        let golden = simulate_reference(cl, pl, schedule, p)
+            .unwrap_or_else(|e| panic!("{ctx_label}: reference failed: {e}"));
+        let fast = simulate_lowered(&low, p, arena);
+        assert_eq!(
+            golden.t_end.to_bits(),
+            fast.t_end.to_bits(),
+            "{ctx_label}: t_end diverged ({} vs {})",
+            golden.t_end,
+            fast.t_end
+        );
+        assert_eq!(golden, fast, "{ctx_label}: full report diverged");
+    }
+}
+
+/// The acceptance property: on randomized topologies × collectives ×
+/// duplex settings, the lowered simulator reproduces the reference's
+/// `t_end`, `ext_messages` and `ext_bytes` exactly (we assert the whole
+/// report, records included).
+#[test]
+fn lowered_simulator_matches_reference_exactly() {
+    let params = param_grid();
+    let mut arena = SimArena::new();
+    let mut schedules_checked = 0usize;
+    for seed in 0..10u64 {
+        let mut rng = Rng::seed_from_u64(seed * 0x9E37 + 1);
+        let cl = random_cluster(seed, &mut rng);
+        let pl = Placement::block(&cl);
+        let ctx = TopoCtx::new(&cl, &pl);
+        let root = rng.gen_range(0..pl.num_ranks());
+        let colls = [
+            Collective::Broadcast { root },
+            Collective::Gather { root },
+            Collective::Scatter { root },
+            Collective::Reduce { root },
+            Collective::Allgather,
+            Collective::AllToAll,
+            Collective::Allreduce,
+        ];
+        for coll in colls {
+            for id in candidates_for(coll, &cl, &pl) {
+                let built = match id.build(&cl, &pl) {
+                    Ok(s) => s,
+                    Err(_) => continue, // builder inapplicable (e.g. pow2)
+                };
+                let label = format!("seed {seed} {} {}", coll.name(), id.label());
+                check_exact(&label, &cl, &pl, &ctx, &built, &params, &mut arena);
+                schedules_checked += 1;
+                // Both duplex legalizations of the raw candidate.
+                for duplex in [Duplex::Full, Duplex::Half] {
+                    let model = Multicore { duplex, alpha: 0.1 };
+                    let legal = legalize(&model, &cl, &pl, &built);
+                    let label = format!("{label} legalized/{duplex:?}");
+                    check_exact(&label, &cl, &pl, &ctx, &legal, &params, &mut arena);
+                    schedules_checked += 1;
+                }
+            }
+        }
+    }
+    assert!(
+        schedules_checked > 100,
+        "suite degenerated: only {schedules_checked} schedules checked"
+    );
+}
+
+/// The wrapper (`sim::simulate`) is the lowered path: it must agree with
+/// the reference too, including on error cases.
+#[test]
+fn wrapper_matches_reference() {
+    let params = SimParams::lan_cluster(8192).with_records();
+    for seed in [3u64, 11, 27] {
+        let cl = switched(1 + (seed as usize % 5), 2, 1);
+        let pl = Placement::block(&cl);
+        for coll in [Collective::Broadcast { root: 0 }, Collective::Allreduce] {
+            for id in candidates_for(coll, &cl, &pl) {
+                let Ok(s) = id.build(&cl, &pl) else { continue };
+                let a = simulate_reference(&cl, &pl, &s, &params).unwrap();
+                let b = mcomm::sim::simulate(&cl, &pl, &s, &params).unwrap();
+                assert_eq!(a, b, "{}", id.label());
+            }
+        }
+    }
+}
