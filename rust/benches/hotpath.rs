@@ -13,8 +13,10 @@
 mod bench_harness;
 use bench_harness::{bench, write_json};
 
+use std::sync::Arc;
+
 use mcomm::collectives::{allreduce, alltoall, broadcast, TargetHeuristic};
-use mcomm::exec::{self, ExecParams};
+use mcomm::exec::{self, ExecEngine, ExecParams, ExecPlan};
 use mcomm::model::{legalize, CostModel, Multicore};
 use mcomm::sched::{symexec, LoweredSchedule, TopoCtx};
 use mcomm::sim::{simulate, simulate_lowered, SimArena, SimParams};
@@ -119,6 +121,11 @@ fn main() {
     }));
 
     // Real executor: per-round overhead with zero injected cost.
+    // "exec:" keeps its historical one-shot semantics (validate + compile
+    // + spawn a fresh pool per call); the steady-state keys are the
+    // trainer's regime — plan compiled once, worker pool spawned once —
+    // and track the persistent-engine win PR-over-PR (§Perf wave 3:
+    // steady state should sit ≥2x above the one-shot line).
     let small = switched(2, 4, 2);
     let small_pl = Placement::block(&small);
     let bcast = broadcast::mc_aware(&small, &small_pl, 0, TargetHeuristic::FirstFit);
@@ -127,6 +134,17 @@ fn main() {
         std::hint::black_box(
             exec::run(&small, &small_pl, &bcast, inputs, &ExecParams::zero()).unwrap(),
         );
+    }));
+    let plan = Arc::new(ExecPlan::compile(&small_pl, &bcast).unwrap());
+    let mut engine = ExecEngine::new(small_pl.num_ranks());
+    stats.push(bench("exec steady-state: 8-rank broadcast (reuse)", || {
+        let inputs = exec::initial_inputs(&bcast, |_r, _c| vec![0.0f32; 256]);
+        std::hint::black_box(engine.execute(&plan, inputs, &ExecParams::zero()).unwrap());
+    }));
+    let vt_params = ExecParams::lan_scaled().with_virtual_time();
+    stats.push(bench("exec steady-state: broadcast virtual-time", || {
+        let inputs = exec::initial_inputs(&bcast, |_r, _c| vec![0.0f32; 256]);
+        std::hint::black_box(engine.execute(&plan, inputs, &vt_params).unwrap());
     }));
 
     match write_json("hotpath", &stats) {

@@ -6,14 +6,28 @@
 //! `Auto` selector variants, so callers that do not care which builder
 //! wins simply get the best schedule for their topology (cached across
 //! calls).
+//!
+//! [`Communicator::execute`] owns the real-byte execution hot path: a
+//! persistent [`ExecEngine`] (worker threads spawned once per
+//! communicator) plus a compiled-plan cache keyed by
+//! [`crate::tune::fingerprint::schedule_digest`] — the same FNV
+//! machinery the tuner's decision cache uses — with full structural
+//! comparison on probe. A repeat `execute()` of the same schedule is a
+//! digest probe + job dispatch: no thread spawn, no symbolic
+//! re-validation, no plan extraction (the trainer executes one allreduce
+//! per step, so this is its steady state).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::collectives::{allgather, allreduce, alltoall, broadcast, gather, reduce, scatter};
 use crate::collectives::TargetHeuristic;
-use crate::exec::{self, BufferStore, ExecParams, ExecReport};
+use crate::exec::{BufferStore, ExecEngine, ExecParams, ExecPlan, ExecReport};
 use crate::model::CostModel;
 use crate::sched::Schedule;
 use crate::sim::{simulate, SimParams, SimReport};
 use crate::topology::{Cluster, Placement};
+use crate::tune::fingerprint::schedule_digest;
 use crate::tune::{CacheStats, Collective, Decision, TuneCfg, Tuned};
 use crate::Rank;
 
@@ -73,6 +87,40 @@ impl AllreduceAlgo {
     }
 }
 
+/// Executor-side counters: plan-cache behavior and engine lifecycle.
+/// `engine_spawns` counts worker-pool creations (1 after the first
+/// `execute`, never more for one communicator); `engine_runs` counts
+/// dispatched collectives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ExecStats {
+    pub plan_hits: usize,
+    pub plan_misses: usize,
+    pub engine_spawns: usize,
+    pub engine_runs: usize,
+}
+
+/// Total cached plans per communicator. Schedules are topology-shaped,
+/// so real workloads cycle through a handful (the trainer needs one);
+/// when a caller streams more distinct schedules than this, the cache
+/// is cleared and refilled — bounded memory, and a re-miss only costs
+/// what the seed executor paid on *every* call.
+const MAX_CACHED_PLANS: usize = 64;
+
+/// Compiled-plan cache + executor counters (short-lived lock only — the
+/// engine itself sits behind a separate lock so cache probes and
+/// [`Communicator::exec_stats`] never wait on a running collective).
+#[derive(Default)]
+struct ExecState {
+    /// digest → [(schedule, plan)]; full comparison on probe, so digest
+    /// collisions cost a miss-compare, never a wrong plan.
+    plans: HashMap<u64, Vec<(Schedule, Arc<ExecPlan>)>>,
+    entries: usize,
+    hits: usize,
+    misses: usize,
+    spawns: usize,
+    runs: usize,
+}
+
 /// An MPI-like communicator bound to one cluster + placement.
 pub struct Communicator {
     pub cluster: Cluster,
@@ -80,11 +128,21 @@ pub struct Communicator {
     /// The embedded autotuner (decision cache included). Replace via
     /// [`Communicator::with_tune_cfg`] to change model/sim assumptions.
     pub tuner: Tuned,
+    exec: Mutex<ExecState>,
+    /// The persistent worker pool; locked for the duration of each run
+    /// (one collective at a time — the engine's barriers are per-pool).
+    engine: Mutex<Option<ExecEngine>>,
 }
 
 impl Communicator {
     pub fn new(cluster: Cluster, placement: Placement) -> Self {
-        Self { cluster, placement, tuner: Tuned::default() }
+        Self {
+            cluster,
+            placement,
+            tuner: Tuned::default(),
+            exec: Mutex::new(ExecState::default()),
+            engine: Mutex::new(None),
+        }
     }
 
     /// One process per core, block placement.
@@ -95,7 +153,13 @@ impl Communicator {
 
     /// Like [`Communicator::new`] but with explicit tuning parameters.
     pub fn with_tune_cfg(cluster: Cluster, placement: Placement, cfg: TuneCfg) -> Self {
-        Self { cluster, placement, tuner: Tuned::new(cfg) }
+        Self {
+            cluster,
+            placement,
+            tuner: Tuned::new(cfg),
+            exec: Mutex::new(ExecState::default()),
+            engine: Mutex::new(None),
+        }
     }
 
     pub fn num_ranks(&self) -> usize {
@@ -207,14 +271,75 @@ impl Communicator {
         simulate(&self.cluster, &self.placement, s, params)
     }
 
-    /// Execute a schedule over real bytes.
+    /// Execute a schedule over real bytes through the persistent engine.
+    ///
+    /// First call compiles (and symbolically validates) the schedule into
+    /// an [`ExecPlan`] and spawns the worker pool; repeats of the same
+    /// schedule hit the plan cache and reuse the pool, so the steady
+    /// state performs no validation and no thread spawn.
     pub fn execute(
         &self,
         s: &Schedule,
         inputs: Vec<BufferStore>,
         params: &ExecParams,
     ) -> crate::Result<ExecReport> {
-        exec::run(&self.cluster, &self.placement, s, inputs, params)
+        // Plan probe/compile under the short-lived cache lock only.
+        let plan = {
+            let digest = schedule_digest(s);
+            let mut guard = self.exec.lock().expect("exec state poisoned");
+            let st = &mut *guard;
+            let cached = st
+                .plans
+                .get(&digest)
+                .is_some_and(|b| b.iter().any(|(k, _)| k == s));
+            if st.entries >= MAX_CACHED_PLANS && !cached {
+                st.plans.clear();
+                st.entries = 0;
+            }
+            let bucket = st.plans.entry(digest).or_default();
+            match bucket.iter().find(|(k, _)| k == s) {
+                Some((_, p)) => {
+                    st.hits += 1;
+                    Arc::clone(p)
+                }
+                None => {
+                    st.misses += 1;
+                    let p = Arc::new(ExecPlan::compile(&self.placement, s)?);
+                    bucket.push((s.clone(), Arc::clone(&p)));
+                    st.entries += 1;
+                    p
+                }
+            }
+        };
+        // The run itself holds only the engine lock, so concurrent cache
+        // probes and `exec_stats` stay responsive.
+        let (result, spawned) = {
+            let mut eng = self.engine.lock().expect("engine poisoned");
+            let spawned = eng.is_none();
+            let engine = eng
+                .get_or_insert_with(|| ExecEngine::new(self.placement.num_ranks()));
+            (engine.execute(&plan, inputs, params), spawned)
+        };
+        {
+            let mut st = self.exec.lock().expect("exec state poisoned");
+            st.runs += 1;
+            if spawned {
+                st.spawns += 1;
+            }
+        }
+        result
+    }
+
+    /// Executor counters (plan cache hits/misses, pool spawns, runs).
+    /// Never blocks on a running collective.
+    pub fn exec_stats(&self) -> ExecStats {
+        let st = self.exec.lock().expect("exec state poisoned");
+        ExecStats {
+            plan_hits: st.hits,
+            plan_misses: st.misses,
+            engine_spawns: st.spawns,
+            engine_runs: st.runs,
+        }
     }
 }
 
@@ -294,6 +419,40 @@ mod tests {
             );
         }
         assert_eq!(comm.tune_stats().entries, 7);
+    }
+
+    #[test]
+    fn execute_reuses_pool_and_plan_cache() {
+        use crate::exec::initial_inputs;
+        use crate::sched::Chunk;
+        let pat = |r: usize, c: Chunk| vec![(r * 10 + c.0 as usize) as f32; 4];
+        let comm = Communicator::block(switched(2, 2, 1));
+        let s = comm.broadcast(BroadcastAlgo::Binomial, 0);
+
+        let a = comm
+            .execute(&s, initial_inputs(&s, pat), &crate::exec::ExecParams::zero())
+            .unwrap();
+        let b = comm
+            .execute(&s, initial_inputs(&s, pat), &crate::exec::ExecParams::zero())
+            .unwrap();
+        let want = pat(0, Chunk(0));
+        for r in 0..4 {
+            assert_eq!(*a.outputs[r].value(Chunk(0)).unwrap(), want);
+            assert_eq!(*b.outputs[r].value(Chunk(0)).unwrap(), want);
+        }
+        // Second call: plan-cache hit, same pool — no spawn, no re-compile.
+        let st = comm.exec_stats();
+        assert_eq!(
+            (st.plan_hits, st.plan_misses, st.engine_spawns, st.engine_runs),
+            (1, 1, 1, 2)
+        );
+
+        // A different collective compiles a new plan but keeps the pool.
+        let ar = comm.allreduce(AllreduceAlgo::Ring).unwrap();
+        comm.execute(&ar, initial_inputs(&ar, pat), &crate::exec::ExecParams::zero())
+            .unwrap();
+        let st = comm.exec_stats();
+        assert_eq!((st.plan_misses, st.engine_spawns, st.engine_runs), (2, 1, 3));
     }
 
     #[test]

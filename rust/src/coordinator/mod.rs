@@ -8,7 +8,8 @@ mod data;
 mod trainer;
 
 pub use comm::{
-    AllgatherAlgo, AllreduceAlgo, AlltoallAlgo, BroadcastAlgo, Communicator, GatherAlgo,
+    AllgatherAlgo, AllreduceAlgo, AlltoallAlgo, BroadcastAlgo, Communicator, ExecStats,
+    GatherAlgo,
 };
 pub use data::Corpus;
 pub use trainer::{TrainReport, Trainer, TrainerCfg};

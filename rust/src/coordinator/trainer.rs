@@ -14,7 +14,14 @@
 //!
 //! PJRT compute runs sequentially over workers on the host CPU client
 //! (device parallelism is not what this paper is about); communication
-//! runs with real per-rank threads.
+//! runs with real per-rank threads. The allreduce goes through
+//! [`Communicator::execute`], so the schedule is compiled and
+//! symbolically validated once and the executor's worker pool is spawned
+//! once — every training step after the first dispatches onto warm
+//! threads ([`Trainer::exec_stats`] exposes the counters). With
+//! [`crate::exec::ExecParams::virtual_time`] set in
+//! [`TrainerCfg::exec_params`], the report additionally carries a
+//! deterministic virtual communication time.
 
 use std::time::{Duration, Instant};
 
@@ -62,6 +69,9 @@ pub struct TrainReport {
     pub losses: Vec<f32>,
     pub compute_time: Duration,
     pub comm_time: Duration,
+    /// Summed deterministic communication time (seconds) when
+    /// [`TrainerCfg::exec_params`] runs in virtual-time mode.
+    pub comm_virtual: Option<f64>,
     pub total_time: Duration,
     pub algo: AllreduceAlgo,
     pub workers: usize,
@@ -134,6 +144,7 @@ impl Trainer {
         let mut losses = Vec::with_capacity(cfg.steps);
         let mut compute_time = Duration::ZERO;
         let mut comm_time = Duration::ZERO;
+        let mut comm_virtual: Option<f64> = None;
         let t_total = Instant::now();
 
         for step in 0..cfg.steps {
@@ -157,8 +168,12 @@ impl Trainer {
 
             // ---- communication phase: real allreduce over real bytes.
             let tm = Instant::now();
-            let combined = self.allreduce_grads(&worker_grads, &cfg.exec_params)?;
+            let (combined, vt) =
+                self.allreduce_grads_report(&worker_grads, &cfg.exec_params)?;
             comm_time += tm.elapsed();
+            if let Some(vt) = vt {
+                *comm_virtual.get_or_insert(0.0) += vt;
+            }
 
             // ---- update phase (identical on all workers; run once).
             let scale = 1.0 / w as f32;
@@ -185,10 +200,17 @@ impl Trainer {
             losses,
             compute_time,
             comm_time,
+            comm_virtual,
             total_time: t_total.elapsed(),
             algo: cfg.algo,
             workers: w,
         })
+    }
+
+    /// Executor counters of the embedded communicator (plan-cache hits,
+    /// pool spawns, dispatched runs).
+    pub fn exec_stats(&self) -> super::comm::ExecStats {
+        self.comm.exec_stats()
     }
 
     /// Allreduce the workers' gradient vectors through the real executor;
@@ -198,6 +220,17 @@ impl Trainer {
         worker_grads: &[Vec<f32>],
         exec_params: &ExecParams,
     ) -> crate::Result<Vec<f32>> {
+        Ok(self.allreduce_grads_report(worker_grads, exec_params)?.0)
+    }
+
+    /// Like [`Trainer::allreduce_grads`], additionally returning the
+    /// deterministic virtual communication time when `exec_params` runs
+    /// in virtual-time mode.
+    pub fn allreduce_grads_report(
+        &self,
+        worker_grads: &[Vec<f32>],
+        exec_params: &ExecParams,
+    ) -> crate::Result<(Vec<f32>, Option<f64>)> {
         let w = self.workers();
         anyhow::ensure!(worker_grads.len() == w, "one gradient per worker");
         let p = self.num_params();
@@ -229,7 +262,7 @@ impl Trainer {
             let hi = ((c + 1) * chunk_len).min(p);
             out[lo..hi].copy_from_slice(&sum[..hi - lo]);
         }
-        Ok(out)
+        Ok((out, report.virtual_time))
     }
 }
 

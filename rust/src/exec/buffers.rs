@@ -42,6 +42,13 @@ impl BufferStore {
     /// Assemble exactly `want`: returns the matching buffer zero-copy, or
     /// the element-wise sum of pairwise-disjoint sub-buffers.
     pub fn assemble(&self, c: Chunk, want: &ContribSet) -> crate::Result<Arc<Vec<f32>>> {
+        // An empty contribution set sails through the shape check and the
+        // symbolic executor (empty ⊆ anything), but has no buffers to
+        // assemble — reject it instead of reaching `picked[0]` below.
+        anyhow::ensure!(
+            !want.is_empty(),
+            "empty contribution set requested for chunk {c:?}"
+        );
         let bufs = self.buffers(c);
         if let Some(hit) = bufs.iter().find(|b| b.contrib == *want) {
             return Ok(hit.data.clone());
@@ -135,6 +142,9 @@ mod tests {
         assert!(s.assemble(Chunk(0), &ContribSet::from_iter([0, 1, 2])).is_err());
         // Missing chunk.
         assert!(s.assemble(Chunk(9), &ContribSet::singleton(0)).is_err());
+        // Empty want: an error, not a panic (it passes symexec, so the
+        // executor must handle it gracefully).
+        assert!(s.assemble(Chunk(0), &ContribSet::new()).is_err());
     }
 
     #[test]

@@ -1,0 +1,823 @@
+//! Persistent execution engine: one pool of per-rank worker threads
+//! serving many collectives.
+//!
+//! The seed executor spawned one OS thread per rank *per call* and wired
+//! fresh channels each time; the trainer executes one allreduce per step,
+//! so thread spawn and channel setup dominated steady-state cost. An
+//! [`ExecEngine`] spawns its workers once and dispatches compiled
+//! [`ExecPlan`]s to them as jobs:
+//!
+//! * **Reused state** — per-rank message queues, the slot-indexed board
+//!   array and each worker's staging arena persist across runs (cleared,
+//!   not reallocated), so a steady-state `execute()` performs no thread
+//!   spawn and no steady-state allocation of engine structures.
+//! * **Round-tagged messages** — every [`Msg`] carries the round (and
+//!   sender) it belongs to; the phase-2 drain rejects any message whose
+//!   tag does not match the current round instead of silently consuming
+//!   it as this round's delivery (the seed's count-based drain could
+//!   bleed a stale message from a partially failed round into a later
+//!   one). Queues are additionally cleared before every run so a failed
+//!   run can never leak messages into the next.
+//! * **Fast failure** — a shared abort flag replaces the seed's
+//!   per-message 10-second `recv_timeout`. The first failing rank sets
+//!   the flag and wakes every queue; peers observe it at the two round
+//!   barriers and inside the bounded queue waits, so one failed rank
+//!   stops the whole collective in milliseconds while every thread keeps
+//!   its barrier schedule (no deadlock, engine stays reusable). A worker
+//!   *panic* — which would abandon that barrier schedule — is caught,
+//!   breaks the pool barrier so peers drain, and poisons the engine:
+//!   the dispatcher gets an error, never a hang.
+//! * **Virtual time** — with [`ExecParams::virtual_time`], each rank
+//!   advances a deterministic clock by the same o/latency/byte-time
+//!   accounting the wall mode spins for. Clocks join (take the max) at
+//!   the two per-round barriers — exactly where wall clocks physically
+//!   synchronize — and the final makespan is reported as
+//!   [`ExecReport::virtual_time`].
+//!
+//! Execution semantics are unchanged from the seed: two barriers per
+//! round; phase 1 reads pre-round state and posts sends/writes/reads,
+//! phase 2 drains arrivals and applies deliveries — the concurrency
+//! model `sched::symexec` verifies, which `ExecPlan::compile` proved
+//! before the plan ever reached a worker.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::sched::{Chunk, ContribSet};
+
+use super::buffers::BufferStore;
+use super::plan::{ActKind, ExecPlan};
+use super::{ExecDelivery, ExecParams, ExecReport};
+
+/// One message in flight: payload plus the round/sender tag that the
+/// drain validates.
+pub(crate) struct Msg {
+    pub round: u32,
+    pub src: u32,
+    pub items: Vec<(Chunk, ContribSet, Arc<Vec<f32>>)>,
+    /// Wall mode: earliest instant the receiver may consume it.
+    pub available_at: Instant,
+    /// Virtual mode: sender clock at send completion + latency.
+    pub arrive_vt: f64,
+}
+
+/// Abort-aware cyclic barrier. Behaves like `std::sync::Barrier`, with
+/// one addition the pool needs to survive worker panics: `break_all`
+/// releases every current and future waiter immediately, so if a worker
+/// ever unwinds mid-round (skipping its remaining waits) the rest of
+/// the pool drains through its abort path instead of deadlocking.
+struct PoolBarrier {
+    n: usize,
+    state: Mutex<(usize, u64)>, // (waiting count, generation)
+    cv: Condvar,
+    broken: AtomicBool,
+}
+
+impl PoolBarrier {
+    fn new(n: usize) -> Self {
+        Self {
+            n,
+            state: Mutex::new((0, 0)),
+            cv: Condvar::new(),
+            broken: AtomicBool::new(false),
+        }
+    }
+
+    fn wait(&self) {
+        if self.broken.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut st = self.state.lock().expect("barrier state");
+        let gen = st.1;
+        st.0 += 1;
+        if st.0 == self.n {
+            st.0 = 0;
+            st.1 += 1;
+            self.cv.notify_all();
+            return;
+        }
+        while st.1 == gen && !self.broken.load(Ordering::SeqCst) {
+            // The timeout is a backstop for `break_all` racing the wait;
+            // the last arriver's notify_all is the normal wake-up.
+            let (g, _) = self
+                .cv
+                .wait_timeout(st, Duration::from_millis(2))
+                .expect("barrier state");
+            st = g;
+        }
+    }
+
+    /// Permanently release all waiters (worker panic — terminal).
+    fn break_all(&self) {
+        self.broken.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+}
+
+/// A persistent per-rank mailbox: bounded waits, abort-aware.
+struct MsgQueue {
+    q: Mutex<std::collections::VecDeque<Msg>>,
+    cv: Condvar,
+}
+
+impl MsgQueue {
+    fn new() -> Self {
+        Self { q: Mutex::new(std::collections::VecDeque::new()), cv: Condvar::new() }
+    }
+
+    fn push(&self, msg: Msg) {
+        self.q.lock().expect("msg queue").push_back(msg);
+        self.cv.notify_one();
+    }
+
+    fn clear(&self) {
+        self.q.lock().expect("msg queue").clear();
+    }
+
+    /// Pop the next message; returns `None` once `abort` is observed.
+    /// The wait is bounded (re-checked every few milliseconds) and the
+    /// failing rank additionally notifies, so a peer failure unblocks
+    /// this in milliseconds — not after a 10-second timeout.
+    fn pop(&self, abort: &AtomicBool) -> Option<Msg> {
+        let mut g = self.q.lock().expect("msg queue");
+        loop {
+            if let Some(m) = g.pop_front() {
+                return Some(m);
+            }
+            if abort.load(Ordering::SeqCst) {
+                return None;
+            }
+            let (g2, _) = self
+                .cv
+                .wait_timeout(g, Duration::from_millis(2))
+                .expect("msg queue");
+            g = g2;
+        }
+    }
+}
+
+/// One dispatched collective: everything a worker needs for a run.
+struct Job {
+    plan: Arc<ExecPlan>,
+    stores: Vec<Arc<RwLock<BufferStore>>>,
+    params: ExecParams,
+    record: bool,
+    /// Per-rank delivery records (populated only when `record`).
+    deliveries: Vec<Mutex<Vec<ExecDelivery>>>,
+}
+
+struct JobCell {
+    gen: u64,
+    job: Option<Arc<Job>>,
+    shutdown: bool,
+}
+
+/// State shared between the dispatching thread and the workers.
+struct Shared {
+    num_ranks: usize,
+    barrier: PoolBarrier,
+    /// Set when a worker panicked: the pool's barrier discipline can no
+    /// longer be trusted, so the engine refuses further runs.
+    poisoned: AtomicBool,
+    queues: Vec<MsgQueue>,
+    /// Slot-indexed publication boards; grown (never shrunk) to the
+    /// largest plan seen, slot buffers reused across runs.
+    boards: RwLock<Vec<Mutex<Vec<(Chunk, ContribSet, Arc<Vec<f32>>)>>>>,
+    abort: AtomicBool,
+    failure: Mutex<Option<String>>,
+    /// Virtual clocks published at end-of-round (read at round start)…
+    vt_round: Vec<AtomicU64>,
+    /// …and at end-of-phase-1 (read after the mid barrier). Two arrays so
+    /// a fast rank's phase-1 publish never races a slow rank's
+    /// round-start read.
+    vt_mid: Vec<AtomicU64>,
+    job: Mutex<JobCell>,
+    job_cv: Condvar,
+    done: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+impl Shared {
+    /// First failure wins; flips the abort flag and wakes every blocked
+    /// receiver so the whole pool stops in milliseconds. Tolerates a
+    /// poisoned failure slot (it is also called from the panic handler).
+    fn fail(&self, msg: String) {
+        if let Ok(mut f) = self.failure.lock() {
+            if f.is_none() {
+                *f = Some(msg);
+            }
+        }
+        self.abort.store(true, Ordering::SeqCst);
+        for q in &self.queues {
+            q.cv.notify_all();
+        }
+    }
+}
+
+/// A reusable pool of per-rank execution threads bound to one rank count.
+/// Create once (threads spawn here), call [`ExecEngine::execute`] many
+/// times; dropping the engine shuts the pool down.
+pub struct ExecEngine {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    generation: u64,
+    runs: usize,
+}
+
+impl ExecEngine {
+    /// Spawn the worker pool: one thread per rank.
+    pub fn new(num_ranks: usize) -> Self {
+        assert!(num_ranks > 0, "engine needs at least one rank");
+        let shared = Arc::new(Shared {
+            num_ranks,
+            barrier: PoolBarrier::new(num_ranks),
+            poisoned: AtomicBool::new(false),
+            queues: (0..num_ranks).map(|_| MsgQueue::new()).collect(),
+            boards: RwLock::new(Vec::new()),
+            abort: AtomicBool::new(false),
+            failure: Mutex::new(None),
+            vt_round: (0..num_ranks).map(|_| AtomicU64::new(0)).collect(),
+            vt_mid: (0..num_ranks).map(|_| AtomicU64::new(0)).collect(),
+            job: Mutex::new(JobCell { gen: 0, job: None, shutdown: false }),
+            job_cv: Condvar::new(),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+        });
+        let workers = (0..num_ranks)
+            .map(|r| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("mcomm-exec-{r}"))
+                    .spawn(move || worker_loop(r, &sh))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        Self { shared, workers, generation: 0, runs: 0 }
+    }
+
+    /// Ranks this pool serves (fixed at spawn).
+    pub fn num_ranks(&self) -> usize {
+        self.shared.num_ranks
+    }
+
+    /// Completed `execute` calls (counts failed runs too).
+    pub fn runs(&self) -> usize {
+        self.runs
+    }
+
+    /// Run a compiled plan over real data. `inputs[r]` seeds rank `r`'s
+    /// store (see [`super::initial_inputs`]).
+    pub fn execute(
+        &mut self,
+        plan: &Arc<ExecPlan>,
+        inputs: Vec<BufferStore>,
+        params: &ExecParams,
+    ) -> crate::Result<ExecReport> {
+        self.prepare(plan)?;
+        self.launch(plan, inputs, params)
+    }
+
+    /// Reset the reusable run state (queues, boards, flags, clocks) for
+    /// `plan`. Split from [`ExecEngine::launch`] so tests can interpose.
+    fn prepare(&mut self, plan: &ExecPlan) -> crate::Result<()> {
+        anyhow::ensure!(
+            !self.shared.poisoned.load(Ordering::SeqCst),
+            "engine pool poisoned by a worker panic; create a new engine"
+        );
+        anyhow::ensure!(
+            plan.num_ranks == self.shared.num_ranks,
+            "plan is for {} ranks, engine pool has {}",
+            plan.num_ranks,
+            self.shared.num_ranks
+        );
+        self.shared.abort.store(false, Ordering::SeqCst);
+        *self.shared.failure.lock().expect("failure slot") = None;
+        for q in &self.shared.queues {
+            q.clear();
+        }
+        {
+            let mut boards = self.shared.boards.write().expect("boards");
+            while boards.len() < plan.num_write_slots {
+                boards.push(Mutex::new(Vec::new()));
+            }
+            // Clear every slot, not just this plan's: slots past
+            // `num_write_slots` would otherwise pin the previous large
+            // run's payload buffers for the engine's whole lifetime.
+            for slot in boards.iter() {
+                slot.lock().expect("board slot").clear();
+            }
+        }
+        for s in self.shared.vt_round.iter().chain(self.shared.vt_mid.iter()) {
+            s.store(0, Ordering::SeqCst); // 0u64 == 0.0f64
+        }
+        *self.shared.done.lock().expect("done latch") = 0;
+        Ok(())
+    }
+
+    /// Dispatch the prepared job and collect the report.
+    fn launch(
+        &mut self,
+        plan: &Arc<ExecPlan>,
+        inputs: Vec<BufferStore>,
+        params: &ExecParams,
+    ) -> crate::Result<ExecReport> {
+        let n = self.shared.num_ranks;
+        anyhow::ensure!(inputs.len() == n, "need one input store per rank");
+        let record = params.record_deliveries;
+        let job = Arc::new(Job {
+            plan: Arc::clone(plan),
+            stores: inputs.into_iter().map(|s| Arc::new(RwLock::new(s))).collect(),
+            params: params.clone(),
+            record,
+            deliveries: if record {
+                (0..n).map(|_| Mutex::new(Vec::new())).collect()
+            } else {
+                Vec::new()
+            },
+        });
+
+        let t0 = Instant::now();
+        self.generation += 1;
+        {
+            let mut cell = self.shared.job.lock().expect("job cell");
+            cell.gen = self.generation;
+            cell.job = Some(Arc::clone(&job));
+            self.shared.job_cv.notify_all();
+        }
+        {
+            let mut d = self.shared.done.lock().expect("done latch");
+            while *d < n {
+                d = self.shared.done_cv.wait(d).expect("done latch");
+            }
+        }
+        let wall = t0.elapsed();
+        self.runs += 1;
+        self.shared.job.lock().expect("job cell").job = None;
+
+        let mut job = Arc::try_unwrap(job)
+            .map_err(|_| anyhow::anyhow!("exec worker retained the job"))?;
+        if let Some(e) = self.shared.failure.lock().expect("failure slot").take() {
+            anyhow::bail!("execution failed: {e}");
+        }
+        let virtual_time = params.virtual_time.then(|| {
+            self.shared
+                .vt_round
+                .iter()
+                .map(|s| f64::from_bits(s.load(Ordering::SeqCst)))
+                .fold(0.0f64, f64::max)
+        });
+        let outputs = job
+            .stores
+            .drain(..)
+            .map(|s| {
+                Arc::try_unwrap(s)
+                    .expect("workers released stores")
+                    .into_inner()
+                    .expect("store lock not poisoned")
+            })
+            .collect();
+        let mut deliveries = Vec::new();
+        if record {
+            for per_rank in &mut job.deliveries {
+                deliveries.append(per_rank.get_mut().expect("delivery log"));
+            }
+            deliveries.sort_unstable();
+        }
+        Ok(ExecReport { outputs, wall, virtual_time, deliveries })
+    }
+}
+
+impl Drop for ExecEngine {
+    fn drop(&mut self) {
+        {
+            let mut cell = self.shared.job.lock().expect("job cell");
+            cell.shutdown = true;
+            self.shared.job_cv.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker body: wait for jobs, run them, signal completion. Lives for
+/// the engine's whole lifetime.
+fn worker_loop(r: usize, sh: &Shared) {
+    let mut seen = 0u64;
+    // Per-rank arenas surviving across rounds *and* runs.
+    let mut staged: Vec<(Chunk, ContribSet, Arc<Vec<f32>>)> = Vec::new();
+    let mut inbox: Vec<Msg> = Vec::new();
+    loop {
+        let job = {
+            let mut cell = sh.job.lock().expect("job cell");
+            loop {
+                if cell.shutdown {
+                    return;
+                }
+                if cell.gen != seen {
+                    seen = cell.gen;
+                    break Arc::clone(cell.job.as_ref().expect("dispatched job"));
+                }
+                cell = sh.job_cv.wait(cell).expect("job cell");
+            }
+        };
+        // Contain panics: an unwinding worker has skipped its remaining
+        // barrier waits, so break the barrier (peers drain through their
+        // abort path), record the failure, and poison the pool — the
+        // dispatcher gets an error now and on every later attempt,
+        // instead of the permanent hang a lost barrier participant would
+        // cause.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_rounds(r, sh, &job, &mut staged, &mut inbox)
+        }));
+        if let Err(p) = outcome {
+            let what = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown panic".to_string());
+            sh.fail(format!("rank {r} worker panicked: {what}"));
+            sh.poisoned.store(true, Ordering::SeqCst);
+            sh.barrier.break_all();
+            staged = Vec::new(); // arenas may be in an arbitrary state
+            inbox = Vec::new();
+        }
+        drop(job); // release store/plan references before signaling
+        let mut d = sh.done.lock().expect("done latch");
+        *d += 1;
+        sh.done_cv.notify_all();
+    }
+}
+
+/// Execute every round of the job as rank `r`.
+fn run_rounds(
+    r: usize,
+    sh: &Shared,
+    job: &Job,
+    staged: &mut Vec<(Chunk, ContribSet, Arc<Vec<f32>>)>,
+    inbox: &mut Vec<Msg>,
+) {
+    let plan = &*job.plan;
+    let params = &job.params;
+    let vmode = params.virtual_time;
+    let boards = sh.boards.read().expect("boards");
+    let mut vt = 0.0f64;
+    let record = |ri: usize, src: usize, chunk: Chunk, external: bool| {
+        if job.record {
+            job.deliveries[r].lock().expect("delivery log").push(ExecDelivery {
+                round: ri as u32,
+                src: src as u32,
+                dst: r as u32,
+                chunk,
+                external,
+            });
+        }
+    };
+
+    for ri in 0..plan.num_rounds {
+        sh.barrier.wait(); // round start: all stores stable
+        if sh.abort.load(Ordering::SeqCst) {
+            sh.barrier.wait(); // keep the barrier schedule in lockstep
+            continue;
+        }
+        if vmode {
+            // All clocks published before the barrier; join to the max —
+            // exactly what the physical barrier does to wall clocks.
+            for s in &sh.vt_round {
+                vt = vt.max(f64::from_bits(s.load(Ordering::Acquire)));
+            }
+        }
+        staged.clear();
+
+        // ---- Phase 1: read pre-round state, post everything.
+        {
+            let me = job.stores[r].read().expect("own store");
+            for (act, payload) in plan.phase1(r, ri) {
+                match act.kind {
+                    ActKind::Send => {
+                        let dst = act.peer as usize;
+                        let mut items = Vec::with_capacity(payload.len());
+                        let mut bytes = 0usize;
+                        let mut ok = true;
+                        for (c, contrib) in payload {
+                            match me.assemble(*c, contrib) {
+                                Ok(data) => {
+                                    bytes += data.len() * 4;
+                                    items.push((*c, contrib.clone(), data));
+                                }
+                                Err(e) => {
+                                    sh.fail(format!("rank {r} round {ri} send: {e}"));
+                                    ok = false;
+                                    break;
+                                }
+                            }
+                        }
+                        if ok {
+                            let arrive_vt = if vmode {
+                                vt += params.send_secs(bytes);
+                                vt + params.latency_secs()
+                            } else {
+                                params.spin_send(bytes);
+                                0.0
+                            };
+                            sh.queues[dst].push(Msg {
+                                round: ri as u32,
+                                src: r as u32,
+                                items,
+                                available_at: Instant::now() + params.ext_latency,
+                                arrive_vt,
+                            });
+                        }
+                    }
+                    ActKind::Write => {
+                        let mut slot =
+                            boards[act.peer as usize].lock().expect("board slot");
+                        slot.clear();
+                        let mut ok = true;
+                        for (c, contrib) in payload {
+                            match me.assemble(*c, contrib) {
+                                Ok(data) => slot.push((*c, contrib.clone(), data)),
+                                Err(e) => {
+                                    sh.fail(format!("rank {r} round {ri} write: {e}"));
+                                    ok = false;
+                                    break;
+                                }
+                            }
+                        }
+                        if !ok {
+                            slot.clear();
+                        }
+                        drop(slot);
+                        if ok {
+                            if vmode {
+                                vt += params.write_secs();
+                            } else {
+                                params.spin_write();
+                            }
+                        }
+                    }
+                    ActKind::Read => {
+                        let src = act.peer as usize;
+                        let peer = job.stores[src].read().expect("peer store");
+                        for (c, contrib) in payload {
+                            match peer.assemble(*c, contrib) {
+                                Ok(data) => {
+                                    let bytes = data.len() * 4;
+                                    if vmode {
+                                        vt += params.read_secs(bytes);
+                                    } else {
+                                        params.spin_read(bytes);
+                                    }
+                                    record(ri, src, *c, false);
+                                    staged.push((*c, contrib.clone(), data));
+                                }
+                                Err(e) => sh.fail(format!(
+                                    "rank {r} round {ri} read from {src}: {e}"
+                                )),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        if vmode {
+            sh.vt_mid[r].store(vt.to_bits(), Ordering::Release);
+        }
+        sh.barrier.wait(); // all posts visible, all reads done
+        if sh.abort.load(Ordering::SeqCst) {
+            continue;
+        }
+        if vmode {
+            for s in &sh.vt_mid {
+                vt = vt.max(f64::from_bits(s.load(Ordering::Acquire)));
+            }
+        }
+
+        // ---- Phase 2: drain arrivals, apply deliveries.
+        for &(slot, writer) in plan.write_recvs(r, ri) {
+            let slot = boards[slot as usize].lock().expect("board slot");
+            if slot.is_empty() {
+                sh.fail(format!(
+                    "rank {r} round {ri}: publication from {writer} missing"
+                ));
+            } else {
+                for (c, contrib, data) in slot.iter() {
+                    record(ri, writer as usize, *c, false);
+                    staged.push((*c, contrib.clone(), data.clone()));
+                }
+            }
+        }
+        let mut drained_ok = true;
+        for _ in 0..plan.recvs(r, ri) {
+            match sh.queues[r].pop(&sh.abort) {
+                Some(msg) => {
+                    if msg.round as usize != ri {
+                        // Round-bleed guard: a message tagged for another
+                        // round must never be consumed as this round's
+                        // delivery.
+                        sh.fail(format!(
+                            "rank {r} round {ri}: stale message from rank {} \
+                             (round {}) rejected at drain",
+                            msg.src, msg.round
+                        ));
+                        drained_ok = false;
+                        break;
+                    }
+                    inbox.push(msg);
+                }
+                None => {
+                    drained_ok = false; // abort observed while waiting
+                    break;
+                }
+            }
+        }
+        if drained_ok {
+            if vmode {
+                // Arrival order off the queue depends on thread timing;
+                // the virtual clock must not. Account in (arrive, src)
+                // order — deterministic given the per-sender clocks.
+                inbox.sort_by(|a, b| {
+                    a.arrive_vt.total_cmp(&b.arrive_vt).then(a.src.cmp(&b.src))
+                });
+            }
+            for msg in inbox.drain(..) {
+                if vmode {
+                    vt = vt.max(msg.arrive_vt) + params.recv_secs();
+                } else {
+                    params.wait_until(msg.available_at);
+                    params.spin_recv();
+                }
+                for (c, _, _) in &msg.items {
+                    record(ri, msg.src as usize, *c, true);
+                }
+                staged.extend(msg.items);
+            }
+        } else {
+            inbox.clear();
+        }
+        if !staged.is_empty() && !sh.abort.load(Ordering::SeqCst) {
+            let mut me = job.stores[r].write().expect("own store");
+            for (c, contrib, data) in staged.drain(..) {
+                me.deliver(c, contrib, data);
+            }
+        } else {
+            staged.clear();
+        }
+        if vmode {
+            sh.vt_round[r].store(vt.to_bits(), Ordering::Release);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{allgather, alltoall, broadcast};
+    use crate::exec::initial_inputs;
+    use crate::sched::Chunk;
+    use crate::topology::{switched, Placement};
+
+    fn pat(r: usize, c: Chunk) -> Vec<f32> {
+        (0..3).map(|i| (r * 100 + c.0 as usize * 10 + i) as f32).collect()
+    }
+
+    #[test]
+    fn stale_message_rejected_at_drain() {
+        // Regression (round bleed): the seed's count-based drain would
+        // consume any queued message as the current round's delivery. A
+        // junk message planted ahead of the real one must now be flagged
+        // as stale, not silently delivered.
+        let cl = switched(2, 1, 1);
+        let pl = Placement::block(&cl);
+        let s = broadcast::binomial(&pl, 0); // round 0: 0 -> 1 external
+        let plan = Arc::new(ExecPlan::compile(&pl, &s).unwrap());
+        let mut engine = ExecEngine::new(2);
+        engine.prepare(&plan).unwrap();
+        engine.shared.queues[1].push(Msg {
+            round: 7,
+            src: 0,
+            items: vec![(Chunk(0), ContribSet::singleton(0), Arc::new(vec![-1.0]))],
+            available_at: Instant::now(),
+            arrive_vt: 0.0,
+        });
+        let t = Instant::now();
+        let err = engine
+            .launch(&plan, initial_inputs(&s, pat), &ExecParams::zero())
+            .unwrap_err();
+        assert!(err.to_string().contains("stale"), "{err}");
+        assert!(t.elapsed() < Duration::from_secs(2), "must not stall");
+    }
+
+    #[test]
+    fn failed_run_leaves_no_residue_for_the_next() {
+        // Regression (round bleed across runs): run 1 fails mid-collective
+        // with messages already queued; run 2 on the same pool must see
+        // clean queues/boards and produce correct bytes.
+        let cl = switched(2, 2, 1);
+        let pl = Placement::block(&cl);
+        let mut engine = ExecEngine::new(4);
+
+        let ag = allgather::ring(&pl);
+        let plan_ag = Arc::new(ExecPlan::compile(&pl, &ag).unwrap());
+        let mut inputs = initial_inputs(&ag, pat);
+        inputs[0] = BufferStore::default(); // rank 0 cannot assemble its sends
+        let t = Instant::now();
+        assert!(engine.execute(&plan_ag, inputs, &ExecParams::zero()).is_err());
+        assert!(t.elapsed() < Duration::from_secs(2), "failure must be fast");
+
+        let bc = broadcast::binomial(&pl, 1);
+        let plan_bc = Arc::new(ExecPlan::compile(&pl, &bc).unwrap());
+        let rep = engine
+            .execute(&plan_bc, initial_inputs(&bc, pat), &ExecParams::zero())
+            .unwrap();
+        let want = pat(1, Chunk(0));
+        for r in 0..4 {
+            assert_eq!(*rep.outputs[r].value(Chunk(0)).unwrap(), want, "rank {r}");
+        }
+        assert_eq!(engine.runs(), 2);
+    }
+
+    #[test]
+    fn engine_reuse_across_different_collectives() {
+        // Satellite: two different collectives back-to-back on one pool —
+        // arenas, boards and queues must reset cleanly between plans.
+        let cl = switched(3, 2, 1);
+        let pl = Placement::block(&cl);
+        let n = 6usize;
+        let mut engine = ExecEngine::new(n);
+
+        let bc = broadcast::mc_aware(
+            &cl,
+            &pl,
+            2,
+            crate::collectives::TargetHeuristic::FirstFit,
+        );
+        let plan_bc = Arc::new(ExecPlan::compile(&pl, &bc).unwrap());
+        let a2a = alltoall::leader_aggregated(&cl, &pl, 1);
+        let plan_a2a = Arc::new(ExecPlan::compile(&pl, &a2a).unwrap());
+
+        for _ in 0..2 {
+            let rep = engine
+                .execute(&plan_bc, initial_inputs(&bc, pat), &ExecParams::zero())
+                .unwrap();
+            let want = pat(2, Chunk(0));
+            for r in 0..n {
+                assert_eq!(*rep.outputs[r].value(Chunk(0)).unwrap(), want);
+            }
+
+            let rep = engine
+                .execute(&plan_a2a, initial_inputs(&a2a, pat), &ExecParams::zero())
+                .unwrap();
+            for d in 0..n {
+                for src in 0..n {
+                    let ch = Chunk((src * n + d) as u32);
+                    assert_eq!(*rep.outputs[d].value(ch).unwrap(), pat(src, ch));
+                }
+            }
+        }
+        assert_eq!(engine.runs(), 4);
+    }
+
+    #[test]
+    fn empty_contrib_payload_errors_cleanly() {
+        // An empty ContribSet passes shape + symbolic checks, and used to
+        // panic the worker inside BufferStore::assemble (`picked[0]`) —
+        // which would have hung the pool forever. It must now surface as
+        // a fast, clean error that leaves the pool healthy.
+        use crate::sched::{CollectiveOp, Payload, Round, Schedule, Xfer};
+        let cl = switched(2, 1, 1);
+        let pl = Placement::block(&cl);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 2, "empty");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 1, Payload::one(Chunk(0), ContribSet::new()))],
+        });
+        let plan = Arc::new(ExecPlan::compile(&pl, &s).unwrap());
+        let mut engine = ExecEngine::new(2);
+        let t = Instant::now();
+        let err = engine
+            .execute(&plan, initial_inputs(&s, pat), &ExecParams::zero())
+            .unwrap_err();
+        assert!(err.to_string().contains("empty contribution"), "{err}");
+        assert!(t.elapsed() < Duration::from_secs(2), "must not stall");
+        // Graceful failure does not poison the pool: a valid run follows.
+        let ok = broadcast::binomial(&pl, 0);
+        let plan_ok = Arc::new(ExecPlan::compile(&pl, &ok).unwrap());
+        engine
+            .execute(&plan_ok, initial_inputs(&ok, pat), &ExecParams::zero())
+            .unwrap();
+    }
+
+    #[test]
+    fn rejects_plan_with_wrong_rank_count() {
+        let cl = switched(2, 2, 1);
+        let pl = Placement::block(&cl);
+        let s = broadcast::binomial(&pl, 0);
+        let plan = Arc::new(ExecPlan::compile(&pl, &s).unwrap());
+        let mut engine = ExecEngine::new(2);
+        assert!(engine
+            .execute(&plan, initial_inputs(&s, pat), &ExecParams::zero())
+            .is_err());
+    }
+}

@@ -1,42 +1,68 @@
 //! Real in-process cluster executor: schedules run over real bytes.
 //!
 //! Machines become thread groups; every rank is an OS thread. Intra-
-//! machine transfers move `Arc`-shared buffers through a per-machine
-//! shared-memory board — a [`crate::sched::XferKind::LocalWrite`] really
+//! machine transfers move `Arc`-shared buffers through slot-indexed
+//! shared-memory boards — a [`crate::sched::XferKind::LocalWrite`] really
 //! is one publication that any number of co-located readers consume
 //! zero-copy (rule R1 made physical) — while external transfers flow
-//! through channels with optional injected latency/bandwidth costs so
-//! that algorithmic differences show up in wall-clock time (E6, E8).
+//! through per-rank queues with optional injected latency/bandwidth costs
+//! so that algorithmic differences show up in measured time (E6, E8).
+//!
+//! The subsystem follows the compile-once pattern of the simulator split
+//! (`sched::lowered` / `sim::lowered`):
+//!
+//! * [`ExecPlan`] — a schedule validated once
+//!   ([`Schedule::check_shape`] + [`crate::sched::symexec`]) and compiled
+//!   into flat per-rank round/action arrays. Plans are cached by the
+//!   [`crate::coordinator::Communicator`], so repeated `execute()` calls
+//!   skip validation and extraction.
+//! * [`ExecEngine`] — a persistent worker pool:
+//!   threads spawn once, run many collectives; queues, boards and staging
+//!   arenas are reused across runs; failure propagates through an abort
+//!   flag in milliseconds; messages are round-tagged so stale traffic
+//!   can never bleed into a later round's deliveries.
+//! * [`ExecParams::virtual_time`] — deterministic virtual clocks in place
+//!   of wall-clock spin-waits; [`ExecReport::virtual_time`] is
+//!   bit-reproducible for CI-stable exec-vs-sim validation.
 //!
 //! Execution follows the schedule's round structure with two barriers per
 //! round: during *phase 1* every rank snapshots its pre-round state and
 //! posts sends/writes/reads; after the mid-round barrier, *phase 2*
 //! drains arrivals and applies all deliveries. This reproduces exactly
-//! the concurrency semantics the symbolic executor
-//! ([`crate::sched::symexec`]) verifies — `run` symbolically validates
-//! the schedule first, so threads never deadlock on an ill-formed plan —
-//! and the tests check the computed bytes against per-op references.
+//! the concurrency semantics the symbolic executor verifies, and the
+//! tests check the computed bytes against per-op references.
+//!
+//! [`run`] is the one-shot convenience wrapper (compile + ephemeral
+//! engine); loops should go through `Communicator::execute` or hold an
+//! [`ExecEngine`] themselves.
 
 mod buffers;
+mod engine;
 mod params;
+mod plan;
 
 pub use buffers::{BufferStore, ChunkData};
+pub use engine::ExecEngine;
 pub use params::ExecParams;
+pub use plan::ExecPlan;
 
-use std::collections::HashMap;
-use std::sync::mpsc;
-use std::sync::{Arc, Barrier, Mutex, RwLock};
-use std::time::Instant;
+use std::sync::Arc;
 
-use crate::sched::{symexec, Chunk, ContribSet, Schedule, XferKind};
+use crate::sched::{Chunk, ContribSet, Schedule};
 use crate::topology::{Cluster, Placement};
 use crate::Rank;
 
-/// One message on the wire: chunks with contribution metadata and data.
-struct Msg {
-    items: Vec<(Chunk, ContribSet, Arc<Vec<f32>>)>,
-    /// Earliest instant the receiver may consume it (injected latency).
-    available_at: Instant,
+/// One delivered chunk (kept only when
+/// [`ExecParams::record_deliveries`] is set): rank `dst` absorbed `src`'s
+/// transfer of `chunk` in `round`. The differential suite checks this
+/// stream against the lowered simulator's `XferRecord`s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ExecDelivery {
+    pub round: u32,
+    pub src: u32,
+    pub dst: u32,
+    pub chunk: Chunk,
+    pub external: bool,
 }
 
 /// Execution result.
@@ -45,28 +71,20 @@ pub struct ExecReport {
     pub outputs: Vec<BufferStore>,
     /// Wall-clock time of the whole collective (excluding thread spawn).
     pub wall: std::time::Duration,
+    /// Deterministic makespan under [`ExecParams::virtual_time`]
+    /// (`None` in wall mode).
+    pub virtual_time: Option<f64>,
+    /// Per-chunk delivery records, sorted by (round, src, dst, chunk);
+    /// empty unless requested.
+    pub deliveries: Vec<ExecDelivery>,
 }
 
-/// Per-rank work extracted from one schedule round.
-#[derive(Default, Clone)]
-struct RankRound {
-    /// External sends: (dst, payload chunks).
-    ext_sends: Vec<(Rank, Vec<(Chunk, ContribSet)>)>,
-    /// Number of external messages to drain this round.
-    ext_recvs: usize,
-    /// Shared-memory publications (board slot = (round, src)).
-    writes: Vec<Vec<(Chunk, ContribSet)>>,
-    /// Reads I must perform: (src, payload chunks).
-    reads: Vec<(Rank, Vec<(Chunk, ContribSet)>)>,
-    /// Write publications I must consume (by writer).
-    write_recvs: Vec<Rank>,
-}
-
-type BoardSlot = Arc<Vec<(Chunk, ContribSet, Arc<Vec<f32>>)>>;
-type Board = Mutex<HashMap<(usize, Rank), BoardSlot>>;
-
-/// Run `schedule` over real data. `inputs[r]` seeds rank `r`'s store (use
-/// [`initial_inputs`] for op-conformant seeding).
+/// Run `schedule` over real data with a one-shot engine. `inputs[r]`
+/// seeds rank `r`'s store (use [`initial_inputs`] for op-conformant
+/// seeding). Compiles a fresh [`ExecPlan`] and spawns a fresh pool per
+/// call — callers in a loop should use
+/// [`crate::coordinator::Communicator::execute`] (cached plans,
+/// persistent pool) instead.
 pub fn run(
     cluster: &Cluster,
     placement: &Placement,
@@ -74,207 +92,17 @@ pub fn run(
     inputs: Vec<BufferStore>,
     params: &ExecParams,
 ) -> crate::Result<ExecReport> {
-    schedule.check_shape(placement)?;
-    // Fail fast on data-flow errors so threads can't deadlock waiting for
-    // messages that will never be sent.
-    symexec::run(schedule)?;
-    let n = schedule.num_ranks;
-    anyhow::ensure!(inputs.len() == n, "need one input store per rank");
-
-    // Compile the schedule into per-rank round plans.
-    let rounds = schedule.rounds.len();
-    let mut plans: Vec<Vec<RankRound>> = vec![vec![RankRound::default(); rounds]; n];
-    for (ri, round) in schedule.rounds.iter().enumerate() {
-        for x in &round.xfers {
-            let payload: Vec<(Chunk, ContribSet)> = x.payload.items.clone();
-            match x.kind {
-                XferKind::External => {
-                    plans[x.src][ri].ext_sends.push((x.dsts[0], payload));
-                    plans[x.dsts[0]][ri].ext_recvs += 1;
-                }
-                XferKind::LocalWrite => {
-                    plans[x.src][ri].writes.push(payload);
-                    for &d in &x.dsts {
-                        plans[d][ri].write_recvs.push(x.src);
-                    }
-                }
-                XferKind::LocalRead => {
-                    plans[x.dsts[0]][ri].reads.push((x.src, payload));
-                }
-            }
-        }
+    for r in 0..placement.num_ranks() {
+        anyhow::ensure!(
+            placement.machine_of(r) < cluster.num_machines(),
+            "placement maps rank {r} to machine {} of {}",
+            placement.machine_of(r),
+            cluster.num_machines()
+        );
     }
-
-    // Shared state.
-    let stores: Vec<Arc<RwLock<BufferStore>>> = inputs
-        .into_iter()
-        .map(|s| Arc::new(RwLock::new(s)))
-        .collect();
-    let (txs, rxs): (Vec<_>, Vec<_>) = (0..n).map(|_| mpsc::channel::<Msg>()).unzip();
-    let rxs: Vec<Mutex<mpsc::Receiver<Msg>>> = rxs.into_iter().map(Mutex::new).collect();
-    let boards: Vec<Board> = (0..cluster.num_machines())
-        .map(|_| Mutex::new(HashMap::new()))
-        .collect();
-    let barrier = Barrier::new(n);
-    let failed: Mutex<Option<String>> = Mutex::new(None);
-
-    let t0 = Instant::now();
-    std::thread::scope(|scope| {
-        for r in 0..n {
-            let plans = &plans;
-            let stores = &stores;
-            let txs = &txs;
-            let rxs = &rxs;
-            let boards = &boards;
-            let barrier = &barrier;
-            let failed = &failed;
-            let machine = placement.machine_of(r);
-            scope.spawn(move || {
-                let fail = |e: String| {
-                    let mut f = failed.lock().unwrap();
-                    if f.is_none() {
-                        *f = Some(e);
-                    }
-                };
-                for ri in 0..rounds {
-                    let plan = &plans[r][ri];
-                    barrier.wait(); // round start: all stores stable
-                    if failed.lock().unwrap().is_some() {
-                        barrier.wait();
-                        continue;
-                    }
-
-                    // ---- Phase 1: read pre-round state, post everything.
-                    let mut staged: Vec<(Chunk, ContribSet, Arc<Vec<f32>>)> = Vec::new();
-                    {
-                        let me = stores[r].read().unwrap();
-                        for (dst, payload) in &plan.ext_sends {
-                            let mut items = Vec::with_capacity(payload.len());
-                            let mut bytes = 0usize;
-                            let mut ok = true;
-                            for (c, contrib) in payload {
-                                match me.assemble(*c, contrib) {
-                                    Ok(data) => {
-                                        bytes += data.len() * 4;
-                                        items.push((*c, contrib.clone(), data));
-                                    }
-                                    Err(e) => {
-                                        fail(format!("rank {r} round {ri} send: {e}"));
-                                        ok = false;
-                                        break;
-                                    }
-                                }
-                            }
-                            if ok {
-                                params.spin_send(bytes);
-                                let _ = txs[*dst].send(Msg {
-                                    items,
-                                    available_at: Instant::now() + params.ext_latency,
-                                });
-                            }
-                        }
-                        for payload in &plan.writes {
-                            let mut items = Vec::with_capacity(payload.len());
-                            let mut ok = true;
-                            for (c, contrib) in payload {
-                                match me.assemble(*c, contrib) {
-                                    Ok(data) => items.push((*c, contrib.clone(), data)),
-                                    Err(e) => {
-                                        fail(format!("rank {r} round {ri} write: {e}"));
-                                        ok = false;
-                                        break;
-                                    }
-                                }
-                            }
-                            if ok {
-                                params.spin_write();
-                                boards[machine]
-                                    .lock()
-                                    .unwrap()
-                                    .insert((ri, r), Arc::new(items));
-                            }
-                        }
-                        for (src, payload) in &plan.reads {
-                            let peer = stores[*src].read().unwrap();
-                            for (c, contrib) in payload {
-                                match peer.assemble(*c, contrib) {
-                                    Ok(data) => {
-                                        params.spin_read(data.len() * 4);
-                                        staged.push((*c, contrib.clone(), data));
-                                    }
-                                    Err(e) => fail(format!(
-                                        "rank {r} round {ri} read from {src}: {e}"
-                                    )),
-                                }
-                            }
-                        }
-                    }
-
-                    barrier.wait(); // all posts visible, all reads done
-                    if failed.lock().unwrap().is_some() {
-                        continue;
-                    }
-
-                    // ---- Phase 2: drain arrivals, apply deliveries.
-                    for writer in &plan.write_recvs {
-                        let slot = boards[machine]
-                            .lock()
-                            .unwrap()
-                            .get(&(ri, *writer))
-                            .cloned();
-                        match slot {
-                            Some(items) => {
-                                for (c, contrib, data) in items.iter() {
-                                    staged.push((*c, contrib.clone(), data.clone()));
-                                }
-                            }
-                            None => fail(format!(
-                                "rank {r} round {ri}: publication from {writer} missing"
-                            )),
-                        }
-                    }
-                    for _ in 0..plan.ext_recvs {
-                        let res = {
-                            let rx = rxs[r].lock().unwrap();
-                            rx.recv_timeout(std::time::Duration::from_secs(10))
-                        };
-                        match res {
-                            Ok(msg) => {
-                                params.wait_until(msg.available_at);
-                                params.spin_recv();
-                                staged.extend(msg.items);
-                            }
-                            Err(e) => {
-                                fail(format!("rank {r} round {ri}: recv failed: {e}"));
-                                break;
-                            }
-                        }
-                    }
-                    if !staged.is_empty() {
-                        let mut me = stores[r].write().unwrap();
-                        for (c, contrib, data) in staged {
-                            me.deliver(c, contrib, data);
-                        }
-                    }
-                }
-            });
-        }
-    });
-    let wall = t0.elapsed();
-
-    if let Some(e) = failed.lock().unwrap().take() {
-        anyhow::bail!("execution failed: {e}");
-    }
-    let outputs = stores
-        .into_iter()
-        .map(|s| {
-            Arc::try_unwrap(s)
-                .expect("threads joined")
-                .into_inner()
-                .expect("lock not poisoned")
-        })
-        .collect();
-    Ok(ExecReport { outputs, wall })
+    let plan = Arc::new(ExecPlan::compile(placement, schedule)?);
+    let mut engine = ExecEngine::new(schedule.num_ranks);
+    engine.execute(&plan, inputs, params)
 }
 
 /// Seed stores per the op's initial-state semantics with caller-provided
@@ -336,15 +164,31 @@ pub fn initial_inputs(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::{allreduce, alltoall, broadcast, gather, scatter};
+    use crate::collectives::{allreduce, alltoall, broadcast, gather, reduce, scatter};
     use crate::sched::CollectiveOp as Op;
     use crate::topology::{switched, Placement};
+    use std::time::Instant;
 
     /// Deterministic data pattern per (rank, chunk).
     fn pat(r: Rank, c: Chunk) -> Vec<f32> {
         (0..4)
             .map(|i| (r as f32) * 100.0 + (c.0 as f32) * 10.0 + i as f32)
             .collect()
+    }
+
+    /// Check that every rank holds the fully reduced sum of `chunks`.
+    fn assert_all_reduced(rep: &ExecReport, n: usize, chunks: u32, ranks: &[usize]) {
+        for ch in 0..chunks {
+            let want: Vec<f32> = (0..4)
+                .map(|i| (0..n).map(|r| pat(r, Chunk(ch))[i]).sum())
+                .collect();
+            for &r in ranks {
+                let got = rep.outputs[r].reduced_value(Chunk(ch), n).expect("sum");
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-2, "rank {r} chunk {ch}: {g} vs {w}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -410,17 +254,8 @@ mod tests {
         let s = allreduce::ring(&p);
         let n = 8usize;
         let rep = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
-        for ch in 0..n as u32 {
-            let want: Vec<f32> = (0..4)
-                .map(|i| (0..n).map(|r| pat(r, Chunk(ch))[i]).sum())
-                .collect();
-            for r in 0..n {
-                let got = rep.outputs[r].reduced_value(Chunk(ch), n).expect("sum");
-                for (g, w) in got.iter().zip(&want) {
-                    assert!((g - w).abs() < 1e-2, "rank {r} chunk {ch}: {g} vs {w}");
-                }
-            }
-        }
+        let ranks: Vec<usize> = (0..n).collect();
+        assert_all_reduced(&rep, n, n as u32, &ranks);
     }
 
     #[test]
@@ -434,40 +269,151 @@ mod tests {
             _ => unreachable!(),
         };
         let rep = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
-        for ch in 0..chunks {
+        let ranks: Vec<usize> = (0..n).collect();
+        assert_all_reduced(&rep, n, chunks, &ranks);
+    }
+
+    #[test]
+    fn rabenseifner_allreduce_sums() {
+        // Coverage satellite: initial_inputs seeds this op, nothing
+        // executed it end-to-end before.
+        let c = switched(2, 4, 1);
+        let p = Placement::block(&c);
+        let s = allreduce::rabenseifner(&p).unwrap();
+        let n = 8usize;
+        let chunks = match s.op {
+            Op::Allreduce { chunks } => chunks,
+            _ => unreachable!(),
+        };
+        let rep = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
+        let ranks: Vec<usize> = (0..n).collect();
+        assert_all_reduced(&rep, n, chunks, &ranks);
+    }
+
+    #[test]
+    fn reduce_binomial_and_mc_aware_sum_to_root() {
+        // Coverage satellite: both reduce builders through the engine.
+        let c = switched(3, 3, 2);
+        let p = Placement::block(&c);
+        let n = 9usize;
+        for (name, s) in [
+            ("binomial", reduce::binomial(&p, 4)),
+            ("mc-aware", reduce::mc_aware(&c, &p, 4)),
+        ] {
+            let rep =
+                run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
             let want: Vec<f32> = (0..4)
-                .map(|i| (0..n).map(|r| pat(r, Chunk(ch))[i]).sum())
+                .map(|i| (0..n).map(|r| pat(r, Chunk(0))[i]).sum())
                 .collect();
-            for r in 0..n {
-                let got = rep.outputs[r].reduced_value(Chunk(ch), n).expect("sum");
-                for (g, w) in got.iter().zip(&want) {
-                    assert!((g - w).abs() < 1e-2, "rank {r} chunk {ch}: {g} vs {w}");
-                }
+            let got = rep.outputs[4]
+                .reduced_value(Chunk(0), n)
+                .unwrap_or_else(|| panic!("{name}: root not fully reduced"));
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-2, "{name}: {g} vs {w}");
             }
         }
     }
 
     #[test]
-    fn latency_injection_slows_execution() {
-        let c = switched(2, 2, 1);
+    fn reduce_scatter_executes() {
+        // Coverage satellite: no builder emits ReduceScatter yet, so
+        // exercise the op with hand-built schedules — external exchange
+        // across machines, local reads within one.
+        use crate::sched::{Payload, Round, Xfer};
+        let pat2 = |r: Rank, c: Chunk| vec![(r * 10 + c.0 as usize) as f32; 2];
+
+        // Two machines, one rank each: pairwise external exchange.
+        let c = switched(2, 1, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(Op::ReduceScatter, 2, "hand-ext");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 1, Payload::single(1, 0)),
+                Xfer::external(1, 0, Payload::single(0, 1)),
+            ],
+        });
+        let rep = run(&c, &p, &s, initial_inputs(&s, pat2), &ExecParams::zero()).unwrap();
+        for r in 0..2usize {
+            let got = rep.outputs[r].reduced_value(Chunk(r as u32), 2).expect("reduced");
+            let want: Vec<f32> =
+                (0..2).map(|i| pat2(0, Chunk(r as u32))[i] + pat2(1, Chunk(r as u32))[i]).collect();
+            assert_eq!(got, want, "rank {r}");
+        }
+
+        // One machine, two ranks: the same exchange as local reads.
+        let c = switched(1, 2, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(Op::ReduceScatter, 2, "hand-local");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::local_read(0, 1, Payload::single(1, 0)),
+                Xfer::local_read(1, 0, Payload::single(0, 1)),
+            ],
+        });
+        let rep = run(&c, &p, &s, initial_inputs(&s, pat2), &ExecParams::zero()).unwrap();
+        for r in 0..2usize {
+            assert!(rep.outputs[r].reduced_value(Chunk(r as u32), 2).is_some(), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn latency_injection_advances_virtual_time_deterministically() {
+        // Regression (flaky test): the wall-clock version of this test
+        // asserted elapsed-time deltas and could flake on loaded CI
+        // runners. Virtual time makes the injected latency contribution
+        // exact: every round containing an external transfer adds exactly
+        // one latency (plus one o_recv per drained message on the
+        // critical path), and nothing else costs anything here.
+        let c = switched(4, 2, 1);
         let p = Placement::block(&c);
         let s = broadcast::binomial(&p, 0);
-        let fast = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero())
-            .unwrap()
-            .wall;
-        let slow_params = ExecParams {
-            ext_latency: std::time::Duration::from_millis(20),
+        let lat = std::time::Duration::from_millis(20);
+        let o_recv = std::time::Duration::from_millis(1);
+        let params = ExecParams {
+            ext_latency: lat,
+            o_recv,
             ..ExecParams::zero()
-        };
-        let slow = run(&c, &p, &s, initial_inputs(&s, pat), &slow_params)
-            .unwrap()
-            .wall;
-        assert!(slow > fast + std::time::Duration::from_millis(10));
+        }
+        .with_virtual_time();
+
+        let a = run(&c, &p, &s, initial_inputs(&s, pat), &params).unwrap();
+        let b = run(&c, &p, &s, initial_inputs(&s, pat), &params).unwrap();
+        let vt = a.virtual_time.expect("virtual mode");
+
+        // Binomial broadcast: each receiving rank drains exactly one
+        // message, so the critical path is ext_rounds * (latency + o_recv).
+        let mut want = 0.0f64;
+        for _ in 0..s.external_rounds() {
+            want += lat.as_secs_f64() + o_recv.as_secs_f64();
+        }
+        assert!(s.external_rounds() >= 2, "topology should need 2+ network rounds");
+        assert!((vt - want).abs() < 1e-12, "virtual {vt} vs expected {want}");
+        // Bit-identical across runs — the property wall clocks never had.
+        assert_eq!(vt.to_bits(), b.virtual_time.unwrap().to_bits());
+        // Wall mode reports no virtual time.
+        let w = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
+        assert!(w.virtual_time.is_none());
+    }
+
+    #[test]
+    fn runtime_failure_stops_all_ranks_quickly() {
+        // Regression (failure stall): a rank that cannot assemble its
+        // send must stop every peer via the abort flag — milliseconds,
+        // not the seed's 10-second recv_timeout. Bound kept loose for
+        // slow CI runners; the old path could not beat 10 s.
+        let c = switched(2, 4, 2);
+        let p = Placement::block(&c);
+        let s = allreduce::ring(&p);
+        let inputs: Vec<BufferStore> = (0..8).map(|_| BufferStore::default()).collect();
+        let t = Instant::now();
+        let err = run(&c, &p, &s, inputs, &ExecParams::zero()).unwrap_err();
+        assert!(t.elapsed() < std::time::Duration::from_secs(2), "stalled");
+        assert!(err.to_string().contains("execution failed"), "{err}");
     }
 
     #[test]
     fn corrupted_schedule_fails_fast() {
-        use crate::sched::{Payload, Round, Schedule, Xfer};
+        use crate::sched::{Payload, Round, Xfer};
         let c = switched(2, 2, 1);
         let p = Placement::block(&c);
         let mut s = Schedule::new(Op::Broadcast { root: 0 }, 4, "bad");
@@ -476,6 +422,40 @@ mod tests {
         });
         let t = Instant::now();
         assert!(run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).is_err());
-        assert!(t.elapsed() < std::time::Duration::from_secs(1), "no deadlock");
+        // Tightened from 1 s: rejection now happens at plan compile time,
+        // before any thread exists.
+        assert!(t.elapsed() < std::time::Duration::from_millis(500), "no deadlock");
+    }
+
+    #[test]
+    fn deliveries_recorded_when_requested() {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let s = broadcast::binomial(&p, 0);
+        let params = ExecParams::zero().with_deliveries();
+        let rep = run(&c, &p, &s, initial_inputs(&s, pat), &params).unwrap();
+        // Every transfer's payload chunk shows up exactly once per
+        // destination, tagged with its round.
+        let mut want: Vec<ExecDelivery> = Vec::new();
+        for (ri, round) in s.rounds.iter().enumerate() {
+            for x in &round.xfers {
+                for &d in &x.dsts {
+                    for (ch, _) in &x.payload.items {
+                        want.push(ExecDelivery {
+                            round: ri as u32,
+                            src: x.src as u32,
+                            dst: d as u32,
+                            chunk: *ch,
+                            external: x.kind == crate::sched::XferKind::External,
+                        });
+                    }
+                }
+            }
+        }
+        want.sort_unstable();
+        assert_eq!(rep.deliveries, want);
+        // And none when not requested.
+        let rep = run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
+        assert!(rep.deliveries.is_empty());
     }
 }

@@ -1,14 +1,26 @@
 //! Injected cost parameters for the in-process executor.
 //!
 //! Zero by default (pure correctness / raw-speed runs). Non-zero values
-//! emulate a network in wall-clock time so that algorithmic differences
-//! (flat ring vs. hierarchical-mc allreduce, E8) are visible on a single
-//! host. Delays are implemented as spin-waits: at the microsecond scale
-//! OS sleep granularity would swamp the signal.
+//! emulate a network so that algorithmic differences (flat ring vs.
+//! hierarchical-mc allreduce, E8) are visible on a single host. Two
+//! timing modes exist:
+//!
+//! * **Wall mode** (default): delays are spin-waits — at the microsecond
+//!   scale OS sleep granularity would swamp the signal — and
+//!   [`crate::exec::ExecReport::wall`] is real elapsed time.
+//! * **Virtual mode** (`virtual_time = true`): no spinning at all. Each
+//!   rank advances a deterministic virtual clock by the *same*
+//!   o/latency/byte-time accounting, clocks synchronize at the round
+//!   barriers exactly where wall clocks would, and the report carries
+//!   the resulting makespan as `virtual_time`. Same schedule + same
+//!   params ⇒ bit-identical `virtual_time`, on any machine under any
+//!   load — this is what makes exec-vs-sim validation (E6) and the
+//!   latency tests CI-stable.
 
 use std::time::{Duration, Instant};
 
-/// Cost injection for [`super::run`].
+/// Cost injection for the executor ([`crate::exec::ExecEngine`] and the
+/// one-shot [`crate::exec::run`]).
 #[derive(Debug, Clone)]
 pub struct ExecParams {
     /// One-way latency added to every external message.
@@ -23,6 +35,11 @@ pub struct ExecParams {
     pub o_write: Duration,
     /// Assembly cost per byte on local reads (R1 read).
     pub int_byte_time: Duration,
+    /// Deterministic virtual clocks instead of wall-clock spin-waits.
+    pub virtual_time: bool,
+    /// Keep per-chunk delivery records in the report (costs memory; used
+    /// by the exec-vs-sim differential tests).
+    pub record_deliveries: bool,
 }
 
 impl ExecParams {
@@ -35,6 +52,8 @@ impl ExecParams {
             o_recv: Duration::ZERO,
             o_write: Duration::ZERO,
             int_byte_time: Duration::ZERO,
+            virtual_time: false,
+            record_deliveries: false,
         }
     }
 
@@ -49,8 +68,24 @@ impl ExecParams {
             o_recv: Duration::from_micros(2),
             o_write: Duration::from_micros(1),
             int_byte_time: Duration::from_nanos(0),
+            virtual_time: false,
+            record_deliveries: false,
         }
     }
+
+    /// Builder-style: switch to deterministic virtual-time accounting.
+    pub fn with_virtual_time(mut self) -> Self {
+        self.virtual_time = true;
+        self
+    }
+
+    /// Builder-style: enable per-chunk delivery records.
+    pub fn with_deliveries(mut self) -> Self {
+        self.record_deliveries = true;
+        self
+    }
+
+    // ---- wall mode: spin-waits -----------------------------------------
 
     #[inline]
     pub(crate) fn spin_send(&self, bytes: usize) {
@@ -78,6 +113,33 @@ impl ExecParams {
         while Instant::now() < t {
             std::hint::spin_loop();
         }
+    }
+
+    // ---- virtual mode: the same accounting as seconds ------------------
+
+    #[inline]
+    pub(crate) fn send_secs(&self, bytes: usize) -> f64 {
+        self.o_send.as_secs_f64() + self.ext_byte_time.as_secs_f64() * bytes as f64
+    }
+
+    #[inline]
+    pub(crate) fn recv_secs(&self) -> f64 {
+        self.o_recv.as_secs_f64()
+    }
+
+    #[inline]
+    pub(crate) fn write_secs(&self) -> f64 {
+        self.o_write.as_secs_f64()
+    }
+
+    #[inline]
+    pub(crate) fn read_secs(&self, bytes: usize) -> f64 {
+        self.int_byte_time.as_secs_f64() * bytes as f64
+    }
+
+    #[inline]
+    pub(crate) fn latency_secs(&self) -> f64 {
+        self.ext_latency.as_secs_f64()
     }
 }
 
@@ -115,5 +177,29 @@ mod tests {
         let t = Instant::now();
         p.spin_send(0);
         assert!(t.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn virtual_accounting_mirrors_spin_costs() {
+        let p = ExecParams {
+            o_send: Duration::from_micros(2),
+            ext_byte_time: Duration::from_nanos(10),
+            o_recv: Duration::from_micros(3),
+            o_write: Duration::from_micros(1),
+            int_byte_time: Duration::from_nanos(4),
+            ext_latency: Duration::from_micros(50),
+            ..ExecParams::zero()
+        };
+        assert!((p.send_secs(100) - (2e-6 + 100.0 * 10e-9)).abs() < 1e-15);
+        assert!((p.recv_secs() - 3e-6).abs() < 1e-15);
+        assert!((p.write_secs() - 1e-6).abs() < 1e-15);
+        assert!((p.read_secs(50) - 50.0 * 4e-9).abs() < 1e-15);
+        assert!((p.latency_secs() - 50e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn builders() {
+        let p = ExecParams::zero().with_virtual_time().with_deliveries();
+        assert!(p.virtual_time && p.record_deliveries);
     }
 }

@@ -1,0 +1,283 @@
+//! Compile-once execution plans: a [`crate::sched::Schedule`] turned into
+//! flat per-rank round/action arrays the worker threads can walk without
+//! touching the boxed schedule, re-validating, or hashing anything.
+//!
+//! Mirrors PR 2's `sched::lowered` compile-once pattern for the *real*
+//! executor: validation (structural [`Schedule::check_shape`] + the
+//! symbolic proof [`symexec::run`]) happens exactly once, at
+//! [`ExecPlan::compile`] time. An `ExecPlan` is immutable afterwards and
+//! safe to share across any number of [`super::ExecEngine`] runs — the
+//! `Communicator` caches plans keyed by schedule digest so repeated
+//! `execute()` calls skip both validation and plan extraction entirely.
+//!
+//! Layout: all per-rank, per-round state lives in CSR arrays indexed by
+//! `cell = rank * num_rounds + round`:
+//!
+//! * **Phase-1 actions** (`act_off`/`acts` + the `item_off`/`items`
+//!   payload arena): external sends, shared-memory writes and local
+//!   reads this rank performs, in schedule order.
+//! * **Phase-2 expectations**: `recv_count` (external messages to drain)
+//!   and `wrecv_off`/`wrecv` (board publications to consume).
+//!
+//! Every `LocalWrite` gets a dedicated **board slot id** at compile time
+//! (readers reference the slot directly), so the engine's boards are a
+//! flat slot array reused across runs — and two writes by one rank in
+//! one round can never clobber each other, which the seed executor's
+//! `(round, writer)`-keyed board allowed.
+
+use crate::sched::{symexec, Chunk, ContribSet, Schedule, XferKind};
+use crate::topology::Placement;
+
+/// What a phase-1 action does with its payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ActKind {
+    /// Send the assembled payload to rank `peer` over the network.
+    Send,
+    /// Publish the assembled payload into board slot `peer`.
+    Write,
+    /// Assemble the payload out of co-located rank `peer`'s store.
+    Read,
+}
+
+/// One phase-1 action; the payload lives in the plan's item arena.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Action {
+    pub kind: ActKind,
+    /// `Send`: destination rank. `Read`: source rank. `Write`: slot id.
+    pub peer: u32,
+}
+
+/// A schedule compiled for execution: validated once, flat thereafter.
+#[derive(Debug)]
+pub struct ExecPlan {
+    pub num_ranks: usize,
+    pub num_rounds: usize,
+    /// Total `LocalWrite` publications (= board slots the engine needs).
+    pub num_write_slots: usize,
+    /// CSR over `cell = rank * num_rounds + round` → phase-1 actions.
+    act_off: Vec<u32>,
+    acts: Vec<Action>,
+    /// CSR over actions → payload items.
+    item_off: Vec<u32>,
+    items: Vec<(Chunk, ContribSet)>,
+    /// Per cell: external messages this rank drains in phase 2.
+    recv_count: Vec<u32>,
+    /// CSR over cells → (board slot, writer rank) publications to consume.
+    wrecv_off: Vec<u32>,
+    wrecv: Vec<(u32, u32)>,
+}
+
+impl ExecPlan {
+    /// Validate `schedule` (shape + symbolic proof, the same gates the
+    /// seed executor ran per call) and extract the per-rank round plans.
+    pub fn compile(placement: &Placement, schedule: &Schedule) -> crate::Result<Self> {
+        schedule.check_shape(placement)?;
+        // Fail at compile time on data-flow errors so engine threads can
+        // never wait for messages that will not be sent.
+        symexec::run(schedule)?;
+
+        let n = schedule.num_ranks;
+        let rounds = schedule.rounds.len();
+        let cells = n * rounds;
+
+        // Gather per-cell, then flatten to CSR (compilation is cached, so
+        // clarity beats squeezing out the intermediate vectors).
+        let mut cell_acts: Vec<Vec<(Action, Vec<(Chunk, ContribSet)>)>> =
+            vec![Vec::new(); cells];
+        let mut recv_count = vec![0u32; cells];
+        let mut cell_wrecv: Vec<Vec<(u32, u32)>> = vec![Vec::new(); cells];
+        let mut num_write_slots = 0u32;
+        let cell = |r: usize, ri: usize| r * rounds + ri;
+
+        for (ri, round) in schedule.rounds.iter().enumerate() {
+            for x in &round.xfers {
+                let payload = x.payload.items.clone();
+                match x.kind {
+                    XferKind::External => {
+                        let dst = x.dsts[0];
+                        cell_acts[cell(x.src, ri)]
+                            .push((Action { kind: ActKind::Send, peer: dst as u32 }, payload));
+                        recv_count[cell(dst, ri)] += 1;
+                    }
+                    XferKind::LocalWrite => {
+                        let slot = num_write_slots;
+                        num_write_slots += 1;
+                        cell_acts[cell(x.src, ri)]
+                            .push((Action { kind: ActKind::Write, peer: slot }, payload));
+                        for &d in &x.dsts {
+                            cell_wrecv[cell(d, ri)].push((slot, x.src as u32));
+                        }
+                    }
+                    XferKind::LocalRead => {
+                        cell_acts[cell(x.dsts[0], ri)]
+                            .push((Action { kind: ActKind::Read, peer: x.src as u32 }, payload));
+                    }
+                }
+            }
+        }
+
+        let mut act_off = Vec::with_capacity(cells + 1);
+        let mut acts = Vec::new();
+        let mut item_off = vec![0u32];
+        let mut items = Vec::new();
+        act_off.push(0u32);
+        for bucket in &mut cell_acts {
+            for (act, payload) in bucket.drain(..) {
+                acts.push(act);
+                items.extend(payload);
+                item_off.push(items.len() as u32);
+            }
+            act_off.push(acts.len() as u32);
+        }
+        let mut wrecv_off = Vec::with_capacity(cells + 1);
+        let mut wrecv = Vec::new();
+        wrecv_off.push(0u32);
+        for bucket in &mut cell_wrecv {
+            wrecv.append(bucket);
+            wrecv_off.push(wrecv.len() as u32);
+        }
+
+        Ok(Self {
+            num_ranks: n,
+            num_rounds: rounds,
+            num_write_slots: num_write_slots as usize,
+            act_off,
+            acts,
+            item_off,
+            items,
+            recv_count,
+            wrecv_off,
+            wrecv,
+        })
+    }
+
+    #[inline]
+    fn cell(&self, r: usize, ri: usize) -> usize {
+        r * self.num_rounds + ri
+    }
+
+    /// Phase-1 actions of rank `r` in round `ri`, with their payloads.
+    #[inline]
+    pub(crate) fn phase1(
+        &self,
+        r: usize,
+        ri: usize,
+    ) -> impl Iterator<Item = (Action, &[(Chunk, ContribSet)])> + '_ {
+        let c = self.cell(r, ri);
+        let (lo, hi) = (self.act_off[c] as usize, self.act_off[c + 1] as usize);
+        (lo..hi).map(move |a| {
+            let (p0, p1) = (self.item_off[a] as usize, self.item_off[a + 1] as usize);
+            (self.acts[a], &self.items[p0..p1])
+        })
+    }
+
+    /// External messages rank `r` must drain in round `ri`.
+    #[inline]
+    pub(crate) fn recvs(&self, r: usize, ri: usize) -> u32 {
+        self.recv_count[self.cell(r, ri)]
+    }
+
+    /// Board publications `(slot, writer)` rank `r` consumes in round `ri`.
+    #[inline]
+    pub(crate) fn write_recvs(&self, r: usize, ri: usize) -> &[(u32, u32)] {
+        let c = self.cell(r, ri);
+        &self.wrecv[self.wrecv_off[c] as usize..self.wrecv_off[c + 1] as usize]
+    }
+
+    /// Total phase-1 actions (all ranks, all rounds).
+    pub fn num_actions(&self) -> usize {
+        self.acts.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{CollectiveOp, Payload, Round, Schedule, Xfer};
+    use crate::topology::{switched, Placement};
+
+    fn hand_schedule() -> (Placement, Schedule) {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "hand");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 2, Payload::single(0, 0)),
+                Xfer::local_write(0, vec![1], Payload::single(0, 0)),
+            ],
+        });
+        s.push_round(Round {
+            xfers: vec![Xfer::local_write(2, vec![3], Payload::single(0, 0))],
+        });
+        (p, s)
+    }
+
+    #[test]
+    fn csr_layout_matches_schedule() {
+        let (p, s) = hand_schedule();
+        let plan = ExecPlan::compile(&p, &s).unwrap();
+        assert_eq!(plan.num_ranks, 4);
+        assert_eq!(plan.num_rounds, 2);
+        assert_eq!(plan.num_write_slots, 2);
+        assert_eq!(plan.num_actions(), 3);
+
+        // Rank 0, round 0: one send to 2, one write into slot 0.
+        let acts: Vec<_> = plan.phase1(0, 0).collect();
+        assert_eq!(acts.len(), 2);
+        assert_eq!(acts[0].0.kind, ActKind::Send);
+        assert_eq!(acts[0].0.peer, 2);
+        assert_eq!(acts[1].0.kind, ActKind::Write);
+        assert_eq!(acts[1].0.peer, 0);
+        assert_eq!(acts[0].1.len(), 1);
+
+        // Rank 2 drains one message in round 0, writes slot 1 in round 1.
+        assert_eq!(plan.recvs(2, 0), 1);
+        let w: Vec<_> = plan.phase1(2, 1).collect();
+        assert_eq!(w[0].0.peer, 1);
+
+        // Readers reference the writer's slot directly.
+        assert_eq!(plan.write_recvs(1, 0), &[(0, 0)]);
+        assert_eq!(plan.write_recvs(3, 1), &[(1, 2)]);
+        assert_eq!(plan.write_recvs(3, 0), &[]);
+        assert_eq!(plan.recvs(1, 1), 0);
+    }
+
+    #[test]
+    fn compile_validates_shape_and_dataflow() {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+
+        // External between co-located ranks: shape violation.
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "bad");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(0, 1, Payload::single(0, 0))],
+        });
+        assert!(ExecPlan::compile(&p, &s).is_err());
+
+        // Shape-legal but semantically wrong (sender never held the
+        // data): the symbolic proof rejects it at compile time.
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "bad");
+        s.push_round(Round {
+            xfers: vec![Xfer::external(2, 1, Payload::single(0, 0))],
+        });
+        assert!(ExecPlan::compile(&p, &s).is_err());
+    }
+
+    #[test]
+    fn same_rank_writes_get_distinct_slots() {
+        // Two publications by one rank in one round must not clobber each
+        // other (the seed's (round, writer)-keyed board did).
+        let c = switched(1, 3, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 3, "w2");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::local_write(0, vec![1], Payload::single(0, 0)),
+                Xfer::local_write(0, vec![2], Payload::single(0, 0)),
+            ],
+        });
+        let plan = ExecPlan::compile(&p, &s).unwrap();
+        assert_eq!(plan.num_write_slots, 2);
+        assert_ne!(plan.write_recvs(1, 0)[0].0, plan.write_recvs(2, 0)[0].0);
+    }
+}

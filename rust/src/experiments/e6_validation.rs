@@ -7,8 +7,16 @@
 //! data volumes, which a round model deliberately abstracts away.)
 //! The multi-core model should track the simulator/executor; the
 //! locality-blind telephone baseline should track them worse.
+//!
+//! Execution goes through the [`crate::coordinator::Communicator`]'s
+//! persistent engine (one thread-pool spawn for the whole sweep) in
+//! **virtual-time mode**: the executor still moves real bytes, but its
+//! timing column is the deterministic virtual makespan of the injected
+//! costs, so the reported correlations are bit-reproducible on loaded CI
+//! runners instead of drifting with host noise.
 
 use crate::collectives::{allreduce, alltoall, broadcast, gather, TargetHeuristic};
+use crate::coordinator::Communicator;
 use crate::exec::{self, ExecParams};
 use crate::model::{legalize, CostModel, Multicore, Telephone};
 use crate::sched::Schedule;
@@ -76,11 +84,14 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
     // Small chunks: the round-based model abstracts bandwidth away, so
     // its claims live in the latency/overhead-dominated regime.
     let sim_params = SimParams::lan_2008(512);
-    let exec_params = ExecParams::lan_scaled();
+    // Virtual time: deterministic makespan of the injected LAN costs.
+    let exec_params = ExecParams::lan_scaled().with_virtual_time();
+    // One communicator = one worker pool + plan cache for the whole sweep.
+    let comm = Communicator::new(cl.clone(), pl.clone());
 
     let fams = families(&cl, &pl, &model);
     let mut table = Table::new(vec![
-        "family", "schedule", "mc cost", "telephone", "sim (ms)", "exec (ms)",
+        "family", "schedule", "mc cost", "telephone", "sim (ms)", "exec vt (ms)",
     ]);
 
     let mut mc_sim = Vec::new();
@@ -102,7 +113,10 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
                 .unwrap_or_else(|_| s.total_xfers() as f64);
             let st = simulate(&cl, &pl, s, &sim_params)?.t_end;
             let inputs = exec::initial_inputs(s, |_r, _c| vec![1.0f32; 128]);
-            let et = exec::run(&cl, &pl, s, inputs, &exec_params)?.wall.as_secs_f64();
+            let et = comm
+                .execute(s, inputs, &exec_params)?
+                .virtual_time
+                .expect("virtual mode");
             table.row(vec![
                 fam.to_string(),
                 s.algo.clone(),

@@ -85,7 +85,8 @@ fn dispatch(args: &[String]) -> mcomm::Result<()> {
                  usage:\n\
                  \x20 mcomm experiment <e1..e8|ablations|all> [--quick]\n\
                  \x20 mcomm train [--steps N] [--algo auto|ring|hier|recdoub|raben]\n\
-                 \x20        [--machines M --cores C --nics K] [--lan] [--lr F]\n\
+                 \x20        [--machines M --cores C --nics K] [--lan] [--virtual]\n\
+                 \x20        [--lr F]\n\
                  \x20 mcomm simulate --op bcast|gather|alltoall|allreduce\n\
                  \x20        [--algo NAME] [--machines M --cores C --nics K] [--bytes B]\n\
                  \x20 mcomm trace [--workload training|shuffle|mixed] [--suite flat|mc]\n\
@@ -108,6 +109,16 @@ fn parse_allreduce(name: &str) -> mcomm::Result<AllreduceAlgo> {
 }
 
 fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
+    // --virtual: deterministic virtual-time communication accounting
+    // (reproducible comm numbers regardless of host load).
+    let mut exec_params = if flags.contains_key("lan") {
+        ExecParams::lan_scaled()
+    } else {
+        ExecParams::zero()
+    };
+    if flags.contains_key("virtual") {
+        exec_params = exec_params.with_virtual_time();
+    }
     let cfg = TrainerCfg {
         machines: flag_usize(flags, "machines", 2),
         cores: flag_usize(flags, "cores", 4),
@@ -115,11 +126,7 @@ fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
         steps: flag_usize(flags, "steps", 200),
         lr: flags.get("lr").and_then(|v| v.parse().ok()).unwrap_or(0.5),
         algo: parse_allreduce(flags.get("algo").copied().unwrap_or("auto"))?,
-        exec_params: if flags.contains_key("lan") {
-            ExecParams::lan_scaled()
-        } else {
-            ExecParams::zero()
-        },
+        exec_params,
         seed: flag_usize(flags, "seed", 7) as u64,
         log_every: flag_usize(flags, "log-every", 10),
     };
@@ -138,6 +145,14 @@ fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
         ftime(rep.compute_time.as_secs_f64()),
         ftime(rep.comm_time.as_secs_f64()),
         rep.steps_per_sec()
+    );
+    if let Some(vt) = rep.comm_virtual {
+        println!("virtual comm time (deterministic): {}", ftime(vt));
+    }
+    let es = trainer.exec_stats();
+    println!(
+        "exec engine: {} pool spawn(s), {} runs, plan cache {}/{} hit/miss",
+        es.engine_spawns, es.engine_runs, es.plan_hits, es.plan_misses
     );
     Ok(())
 }

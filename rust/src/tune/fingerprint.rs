@@ -121,6 +121,65 @@ fn fnv(acc: u64, word: u64) -> u64 {
     (acc ^ word).wrapping_mul(0x100000001b3)
 }
 
+/// FNV-1a digest of a schedule's complete structure: op (root/chunks
+/// included), rank count, algorithm label, and every transfer's kind,
+/// endpoints and payload (chunk ids + contribution members) in round
+/// order.
+///
+/// This is the executor-side sibling of [`Fingerprint::digest`]: the
+/// [`crate::coordinator::Communicator`] buckets its compiled
+/// [`crate::exec::ExecPlan`]s by this digest and compares full schedules
+/// on probe, so a cache hit skips symbolic re-validation and plan
+/// extraction while collisions stay harmless.
+pub fn schedule_digest(s: &crate::sched::Schedule) -> u64 {
+    use crate::sched::{CollectiveOp, XferKind};
+    let mut h = 0xcbf29ce484222325u64;
+    let op_word = match s.op {
+        CollectiveOp::Broadcast { root } => 1u64 << 56 | root as u64,
+        CollectiveOp::Gather { root } => 2u64 << 56 | root as u64,
+        CollectiveOp::Scatter { root } => 3u64 << 56 | root as u64,
+        CollectiveOp::Allgather => 4u64 << 56,
+        CollectiveOp::AllToAll => 5u64 << 56,
+        CollectiveOp::Reduce { root, chunks } => {
+            6u64 << 56 | (chunks as u64) << 32 | root as u64
+        }
+        CollectiveOp::Allreduce { chunks } => 7u64 << 56 | chunks as u64,
+        CollectiveOp::ReduceScatter => 8u64 << 56,
+    };
+    h = fnv(h, op_word);
+    h = fnv(h, s.num_ranks as u64);
+    for &b in s.algo.as_bytes() {
+        h = fnv(h, b as u64);
+    }
+    for round in &s.rounds {
+        h = fnv(h, u64::MAX); // round boundary
+        for x in &round.xfers {
+            h = fnv(
+                h,
+                match x.kind {
+                    XferKind::External => 1,
+                    XferKind::LocalWrite => 2,
+                    XferKind::LocalRead => 3,
+                },
+            );
+            h = fnv(h, x.src as u64);
+            h = fnv(h, x.dsts.len() as u64);
+            for &d in &x.dsts {
+                h = fnv(h, d as u64);
+            }
+            h = fnv(h, x.payload.items.len() as u64);
+            for (c, contrib) in &x.payload.items {
+                h = fnv(h, c.0 as u64);
+                h = fnv(h, contrib.len() as u64);
+                for r in contrib.iter() {
+                    h = fnv(h, r as u64);
+                }
+            }
+        }
+    }
+    h
+}
+
 fn collective_tag(c: Collective) -> u64 {
     match c {
         Collective::Broadcast { root } => 1 << 56 | root as u64,
@@ -241,6 +300,32 @@ mod tests {
         let a = Fingerprint::new(&cl, &block, Collective::Allgather, &cfg);
         let b = Fingerprint::new(&cl, &rr, Collective::Allgather, &cfg);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn schedule_digest_discriminates_structure() {
+        use crate::collectives::{allreduce, broadcast, TargetHeuristic};
+        let cl = switched(2, 4, 1);
+        let pl = Placement::block(&cl);
+        let a = broadcast::binomial(&pl, 0);
+        assert_eq!(schedule_digest(&a), schedule_digest(&a.clone()));
+        // Different root, different algorithm, different op all diverge.
+        assert_ne!(schedule_digest(&a), schedule_digest(&broadcast::binomial(&pl, 1)));
+        assert_ne!(
+            schedule_digest(&a),
+            schedule_digest(&broadcast::mc_aware(
+                &cl,
+                &pl,
+                0,
+                TargetHeuristic::FirstFit
+            ))
+        );
+        assert_ne!(schedule_digest(&a), schedule_digest(&allreduce::ring(&pl)));
+        // A single dropped transfer changes the digest (the final
+        // binomial round has several, so the schedule stays non-empty).
+        let mut b = a.clone();
+        b.rounds.last_mut().unwrap().xfers.pop();
+        assert_ne!(schedule_digest(&a), schedule_digest(&b));
     }
 
     #[test]

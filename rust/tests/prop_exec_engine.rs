@@ -1,0 +1,178 @@
+//! Differential suite for the persistent executor: the engine's
+//! per-round delivered-chunk stream must agree with the lowered
+//! simulator's `XferRecord` stream on randomized switched topologies
+//! across every registry candidate.
+//!
+//! Both engines consume the same `Schedule`, so the schedule's own
+//! round/transfer structure is the meeting point: (1) the lowered
+//! simulator's record stream is checked against the schedule-derived
+//! stream record-for-record (it emits records in round-major transfer
+//! order — one per external/read, one per `LocalWrite` destination);
+//! (2) the executor's delivery records, gathered from the worker
+//! threads, must equal the same schedule-derived stream chunk-for-chunk
+//! (round, src, dst, chunk, external). Together: engine deliveries ==
+//! simulator records, with the chunk-level detail the `XferRecord`
+//! doesn't carry made explicit.
+//!
+//! One `ExecEngine` serves every candidate of a topology (same rank
+//! count), so this suite also hammers pool reuse across dozens of
+//! different plans back-to-back.
+
+use std::sync::Arc;
+
+use mcomm::exec::{self, ExecDelivery, ExecEngine, ExecParams, ExecPlan};
+use mcomm::sched::{Chunk, LoweredSchedule, Schedule, TopoCtx, XferKind};
+use mcomm::sim::{simulate_lowered, SimArena, SimParams};
+use mcomm::topology::{switched, Placement};
+use mcomm::tune::{candidates_for, Collective};
+use mcomm::util::Rng;
+
+fn pat(r: usize, c: Chunk) -> Vec<f32> {
+    vec![(r * 131 + c.0 as usize * 17) as f32, r as f32]
+}
+
+/// The schedule-derived delivery stream: every transfer's payload chunks,
+/// one entry per destination, tagged with round and kind.
+fn expected_deliveries(s: &Schedule) -> Vec<ExecDelivery> {
+    let mut out = Vec::new();
+    for (ri, round) in s.rounds.iter().enumerate() {
+        for x in &round.xfers {
+            for &d in &x.dsts {
+                for (ch, _) in &x.payload.items {
+                    out.push(ExecDelivery {
+                        round: ri as u32,
+                        src: x.src as u32,
+                        dst: d as u32,
+                        chunk: *ch,
+                        external: x.kind == XferKind::External,
+                    });
+                }
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// The schedule-derived record stream in the lowered simulator's
+/// emission order: (src, dst, external, payload chunks) per record.
+fn expected_records(s: &Schedule) -> Vec<(usize, usize, bool, usize)> {
+    let mut out = Vec::new();
+    for round in &s.rounds {
+        for x in &round.xfers {
+            let chunks = x.payload.items.len();
+            match x.kind {
+                XferKind::External | XferKind::LocalRead => {
+                    out.push((x.src, x.dsts[0], x.kind == XferKind::External, chunks));
+                }
+                XferKind::LocalWrite => {
+                    for &d in &x.dsts {
+                        out.push((x.src, d, false, chunks));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn engine_deliveries_match_lowered_simulator_records() {
+    let exec_params = ExecParams::zero().with_deliveries();
+    let sim_params = SimParams::lan_cluster(64).with_records();
+    let mut arena = SimArena::new();
+
+    for seed in 0..6u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xD1FF);
+        let cl = switched(
+            2 + rng.gen_range(0..3),
+            1 + rng.gen_range(0..3),
+            1 + rng.gen_range(0..2),
+        );
+        let pl = Placement::block(&cl);
+        let n = pl.num_ranks();
+        if n < 2 {
+            continue;
+        }
+        let root = rng.gen_range(0..n);
+        let ctx = TopoCtx::new(&cl, &pl);
+        // One pool for every candidate on this topology.
+        let mut engine = ExecEngine::new(n);
+        let mut cases = 0usize;
+
+        for coll in [
+            Collective::Broadcast { root },
+            Collective::Gather { root },
+            Collective::Scatter { root },
+            Collective::Reduce { root },
+            Collective::Allgather,
+            Collective::AllToAll,
+            Collective::Allreduce,
+        ] {
+            for cand in candidates_for(coll, &cl, &pl) {
+                let s = cand
+                    .build(&cl, &pl)
+                    .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", cand.label()));
+                let ctx_s = format!("seed {seed} {}", cand.label());
+
+                // Lowered simulator record stream == schedule stream.
+                let low = LoweredSchedule::compile(&ctx, &s)
+                    .unwrap_or_else(|e| panic!("{ctx_s}: lower: {e}"));
+                let sim = simulate_lowered(&low, &sim_params, &mut arena);
+                let want_records = expected_records(&s);
+                assert_eq!(sim.records.len(), want_records.len(), "{ctx_s}: record count");
+                for (rec, want) in sim.records.iter().zip(&want_records) {
+                    assert_eq!(
+                        (rec.src, rec.dst, rec.external),
+                        (want.0, want.1, want.2),
+                        "{ctx_s}"
+                    );
+                    assert_eq!(
+                        rec.bytes,
+                        want.3 as u64 * sim_params.chunk_bytes,
+                        "{ctx_s}: bytes"
+                    );
+                }
+
+                // Engine per-round deliveries == the same stream, with
+                // per-chunk detail.
+                let plan = Arc::new(
+                    ExecPlan::compile(&pl, &s)
+                        .unwrap_or_else(|e| panic!("{ctx_s}: plan: {e}")),
+                );
+                let rep = engine
+                    .execute(&plan, exec::initial_inputs(&s, pat), &exec_params)
+                    .unwrap_or_else(|e| panic!("{ctx_s}: exec: {e}"));
+                assert_eq!(rep.deliveries, expected_deliveries(&s), "{ctx_s}");
+                cases += 1;
+            }
+        }
+        assert!(cases >= 10, "seed {seed}: only {cases} candidates exercised");
+        assert_eq!(engine.runs(), cases, "pool must have served every candidate");
+    }
+}
+
+#[test]
+fn virtual_time_is_deterministic_across_pools() {
+    // The same plan under the same virtual-time params must produce a
+    // bit-identical makespan from two different engines (nothing about
+    // thread scheduling may leak into the clock).
+    let cl = switched(3, 2, 2);
+    let pl = Placement::block(&cl);
+    let s = mcomm::collectives::allreduce::hierarchical_mc(&cl, &pl);
+    let plan = Arc::new(ExecPlan::compile(&pl, &s).unwrap());
+    let params = ExecParams::lan_scaled().with_virtual_time();
+
+    let mut vts = Vec::new();
+    for _ in 0..2 {
+        let mut engine = ExecEngine::new(pl.num_ranks());
+        for _ in 0..3 {
+            let rep = engine
+                .execute(&plan, exec::initial_inputs(&s, pat), &params)
+                .unwrap();
+            vts.push(rep.virtual_time.expect("virtual mode").to_bits());
+        }
+    }
+    assert!(vts.iter().all(|&v| v == vts[0]), "virtual times diverged: {vts:?}");
+    assert!(f64::from_bits(vts[0]) > 0.0, "injected costs must show up");
+}
