@@ -147,6 +147,20 @@ fn main() {
         std::hint::black_box(engine.execute(&plan, inputs, &vt_params).unwrap());
     }));
 
+    // Calibration: the full probe → fit → profile pipeline in virtual
+    // time (the CI smoke path). Tracks how much machine time a
+    // recalibration costs as the probe suite grows.
+    let cal_comm = mcomm::coordinator::Communicator::block(switched(2, 4, 2));
+    let cal_cfg = mcomm::calibrate::CalibrateCfg {
+        repeats: 2,
+        ..mcomm::calibrate::CalibrateCfg::default()
+    };
+    stats.push(bench("calibrate: virtual probe suite (8 ranks)", || {
+        std::hint::black_box(
+            mcomm::calibrate::run_calibration(&cal_comm, &cal_cfg).unwrap(),
+        );
+    }));
+
     match write_json("hotpath", &stats) {
         Ok(path) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write bench JSON: {e}"),

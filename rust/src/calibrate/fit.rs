@@ -1,0 +1,282 @@
+//! Least-squares fit of the machine parameters over the probe matrix.
+//!
+//! [`fit`] assembles one row per [`ProbeRole::Fit`] sample — the probe's
+//! design vector against its measured per-round makespan — and solves
+//! the normal equations of the (row- and column-scaled) system with
+//! Gaussian elimination. The probe suite is constructed so the matrix
+//! has full column rank (see [`crate::calibrate::probes`]); on
+//! noise-free virtual-time measurements the system is *consistent*, so
+//! the least-squares solution recovers the injected parameters to
+//! floating-point precision, and on wall-clock measurements it is the
+//! usual noise-averaging fit.
+//!
+//! The NIC contention factor is deliberately fitted outside the linear
+//! system: fan-out samples ([`ProbeRole::Contention`]) are compared
+//! against their own 1-slot baseline, and the slope of the slowdown
+//! ratio over extra slots is the factor. Everything here is
+//! branch-deterministic — same samples in, bit-identical
+//! [`FitResult`] out.
+
+use super::probes::{ProbeRole, NPARAMS};
+use super::runner::ProbeSample;
+
+/// Fitted parameter vector plus fit diagnostics.
+#[derive(Debug, Clone)]
+pub struct FitResult {
+    /// Fitted parameters in [`super::probes::PARAM_NAMES`] order,
+    /// clamped at 0 (a tiny negative value is measurement noise).
+    pub theta: [f64; NPARAMS],
+    /// Per-NIC-slot contention factor: measured slowdown per additional
+    /// concurrently driven slot, 1.0 = perfectly parallel NICs.
+    pub nic_contention: f64,
+    /// RMS misfit over the linear rows, normalized by the largest
+    /// measured makespan (0 on noise-free virtual-time data).
+    pub residual: f64,
+}
+
+/// Solve `N x = b` (square, `NPARAMS`-sized) by Gaussian elimination
+/// with partial pivoting. Deterministic; errors on a (numerically)
+/// singular system.
+fn solve(mut n: [[f64; NPARAMS]; NPARAMS], mut b: [f64; NPARAMS]) -> crate::Result<[f64; NPARAMS]> {
+    for col in 0..NPARAMS {
+        let pivot = (col..NPARAMS)
+            .max_by(|&i, &j| n[i][col].abs().total_cmp(&n[j][col].abs()))
+            .expect("non-empty range");
+        if n[pivot][col].abs() < 1e-30 {
+            anyhow::bail!(
+                "probe matrix is rank-deficient (no probe constrains \
+                 parameter column {col}); the topology cannot host the \
+                 full probe suite"
+            );
+        }
+        n.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in col + 1..NPARAMS {
+            let f = n[row][col] / n[col][col];
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..NPARAMS {
+                n[row][k] -= f * n[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; NPARAMS];
+    for col in (0..NPARAMS).rev() {
+        let mut acc = b[col];
+        for k in col + 1..NPARAMS {
+            acc -= n[col][k] * x[k];
+        }
+        x[col] = acc / n[col][col];
+    }
+    Ok(x)
+}
+
+/// Fit all machine parameters from a probe sample set.
+pub fn fit(samples: &[ProbeSample]) -> crate::Result<FitResult> {
+    let rows: Vec<&ProbeSample> =
+        samples.iter().filter(|s| s.role == ProbeRole::Fit).collect();
+    anyhow::ensure!(rows.len() >= NPARAMS, "need >= {NPARAMS} fit probes, got {}", rows.len());
+
+    // Scale columns to unit infinity-norm so bytes-sized design entries
+    // (10^4-ish) and unit entries do not wreck the normal equations'
+    // conditioning; the solution is unscaled afterwards.
+    let mut col_scale = [0.0f64; NPARAMS];
+    for s in &rows {
+        for (c, &v) in s.design.iter().enumerate() {
+            col_scale[c] = col_scale[c].max(v.abs());
+        }
+    }
+    for (c, s) in col_scale.iter().enumerate() {
+        anyhow::ensure!(
+            *s > 0.0,
+            "probe matrix is rank-deficient: no probe constrains \
+             parameter column {c}"
+        );
+    }
+
+    let mut n = [[0.0f64; NPARAMS]; NPARAMS];
+    let mut b = [0.0f64; NPARAMS];
+    for s in &rows {
+        let a: Vec<f64> = (0..NPARAMS).map(|c| s.design[c] / col_scale[c]).collect();
+        for i in 0..NPARAMS {
+            for j in 0..NPARAMS {
+                n[i][j] += a[i] * a[j];
+            }
+            b[i] += a[i] * s.y;
+        }
+    }
+    let x = solve(n, b)?;
+    let mut theta = [0.0f64; NPARAMS];
+    for c in 0..NPARAMS {
+        theta[c] = (x[c] / col_scale[c]).max(0.0);
+    }
+
+    // Diagnostics: normalized RMS misfit of the clamped solution.
+    let y_max = rows.iter().map(|s| s.y.abs()).fold(0.0f64, f64::max).max(1e-30);
+    let mse: f64 = rows
+        .iter()
+        .map(|s| {
+            let yhat: f64 =
+                s.design.iter().zip(&theta).map(|(a, t)| a * t).sum();
+            (yhat - s.y).powi(2)
+        })
+        .sum::<f64>()
+        / rows.len() as f64;
+    let residual = mse.sqrt() / y_max;
+
+    Ok(FitResult {
+        theta,
+        nic_contention: fit_contention(samples),
+        residual,
+    })
+}
+
+/// Slope fit of the fan-out slowdown: `y_j / y_1 = 1 + gamma * (j - 1)`,
+/// reported as `1 + gamma`, clamped at 1.0 (sub-linear "speedup" from
+/// extra slots is noise). Returns 1.0 when the sweep is absent.
+fn fit_contention(samples: &[ProbeSample]) -> f64 {
+    let mut base = None;
+    let mut pts: Vec<(f64, f64)> = Vec::new(); // (j - 1, y_j)
+    for s in samples {
+        if let ProbeRole::Contention { slots } = s.role {
+            if slots == 1 {
+                base = Some(s.y);
+            } else {
+                pts.push(((slots - 1) as f64, s.y));
+            }
+        }
+    }
+    let Some(base) = base else { return 1.0 };
+    if base <= 0.0 || pts.is_empty() {
+        return 1.0;
+    }
+    let num: f64 = pts.iter().map(|&(dj, y)| (y / base - 1.0) * dj).sum();
+    let den: f64 = pts.iter().map(|&(dj, _)| dj * dj).sum();
+    if den <= 0.0 {
+        return 1.0;
+    }
+    (1.0 + num / den).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::probes::{
+        P_BYTE_EXT, P_BYTE_INT, P_LAT_EXT, P_O_RECV, P_O_SEND, P_O_WRITE, P_ROUND,
+    };
+
+    fn sample(design: [f64; NPARAMS], y: f64) -> ProbeSample {
+        ProbeSample { label: "t".into(), design, y, role: ProbeRole::Fit }
+    }
+
+    /// Synthesize the five probe families from known parameters; the fit
+    /// must return them exactly.
+    #[test]
+    fn recovers_exact_parameters_from_synthetic_rows() {
+        let truth = {
+            let mut t = [0.0; NPARAMS];
+            t[P_O_SEND] = 2e-6;
+            t[P_O_RECV] = 3e-6;
+            t[P_O_WRITE] = 1e-6;
+            t[P_LAT_EXT] = 50e-6;
+            t[P_BYTE_EXT] = 9e-9;
+            t[P_BYTE_INT] = 0.5e-9;
+            t[P_ROUND] = 0.0;
+            t
+        };
+        let mut samples = Vec::new();
+        let dot = |d: &[f64; NPARAMS]| -> f64 {
+            d.iter().zip(&truth).map(|(a, t)| a * t).sum()
+        };
+        for b in [64.0, 1024.0, 16384.0] {
+            let mut ping = [0.0; NPARAMS];
+            ping[P_O_SEND] = 1.0;
+            ping[P_O_RECV] = 1.0;
+            ping[P_LAT_EXT] = 1.0;
+            ping[P_BYTE_EXT] = b;
+            ping[P_ROUND] = 1.0;
+            samples.push(sample(ping, dot(&ping)));
+            let mut ds = ping;
+            ds[P_O_SEND] = 2.0;
+            ds[P_BYTE_EXT] = 2.0 * b;
+            samples.push(sample(ds, dot(&ds)));
+            let mut rd = [0.0; NPARAMS];
+            rd[P_BYTE_INT] = b;
+            rd[P_ROUND] = 1.0;
+            samples.push(sample(rd, dot(&rd)));
+        }
+        for k in [1.0, 2.0, 4.0] {
+            let mut fi = [0.0; NPARAMS];
+            fi[P_O_SEND] = 1.0;
+            fi[P_O_RECV] = k;
+            fi[P_LAT_EXT] = 1.0;
+            fi[P_BYTE_EXT] = 64.0;
+            fi[P_ROUND] = 1.0;
+            samples.push(sample(fi, dot(&fi)));
+            let mut wr = [0.0; NPARAMS];
+            wr[P_O_WRITE] = k;
+            wr[P_ROUND] = 1.0;
+            samples.push(sample(wr, dot(&wr)));
+        }
+        let f = fit(&samples).unwrap();
+        for (c, (&got, &want)) in f.theta.iter().zip(&truth).enumerate() {
+            // Relative where the truth has magnitude, absolute (at the
+            // nanosecond scale) where it is zero.
+            let err = (got - want).abs() / want.abs().max(1e-9);
+            assert!(err < 1e-4, "col {c}: fitted {got} vs truth {want}");
+        }
+        assert!(f.residual < 1e-6, "residual {}", f.residual);
+        assert_eq!(f.nic_contention, 1.0); // no fan-out samples
+    }
+
+    #[test]
+    fn fit_is_bit_deterministic() {
+        let rows: Vec<ProbeSample> = (0..12)
+            .map(|i| {
+                let mut d = [0.0; NPARAMS];
+                d[i % NPARAMS] = 1.0 + i as f64;
+                d[P_ROUND] = 1.0;
+                sample(d, 1e-6 * (i + 1) as f64)
+            })
+            .collect();
+        let a = fit(&rows).unwrap();
+        let b = fit(&rows).unwrap();
+        for c in 0..NPARAMS {
+            assert_eq!(a.theta[c].to_bits(), b.theta[c].to_bits());
+        }
+        assert_eq!(a.residual.to_bits(), b.residual.to_bits());
+    }
+
+    #[test]
+    fn contention_slope() {
+        let mk = |slots, y| ProbeSample {
+            label: format!("fan-out/{slots}"),
+            design: [0.0; NPARAMS],
+            y,
+            role: ProbeRole::Contention { slots },
+        };
+        // Perfectly parallel NICs: ratio 1 at every j.
+        assert_eq!(fit_contention(&[mk(1, 1e-4), mk(2, 1e-4), mk(4, 1e-4)]), 1.0);
+        // 50% slowdown per extra slot.
+        let f = fit_contention(&[mk(1, 1e-4), mk(2, 1.5e-4), mk(3, 2e-4)]);
+        assert!((f - 1.5).abs() < 1e-9, "{f}");
+        // Missing sweep: neutral factor.
+        assert_eq!(fit_contention(&[]), 1.0);
+    }
+
+    #[test]
+    fn rank_deficient_matrix_is_rejected() {
+        // No probe touches o_write's column.
+        let rows: Vec<ProbeSample> = (0..NPARAMS + 1)
+            .map(|i| {
+                let mut d = [0.0; NPARAMS];
+                d[P_O_SEND] = 1.0 + i as f64;
+                d[P_ROUND] = 1.0;
+                sample(d, 1e-6)
+            })
+            .collect();
+        assert!(fit(&rows).is_err());
+    }
+}

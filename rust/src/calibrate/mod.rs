@@ -1,0 +1,191 @@
+//! Empirical model calibration: measure the machine, fit the model,
+//! persist the profile — closing the exec → model → tune loop.
+//!
+//! Every other layer of this crate *assumes* physics: the `Multicore`
+//! model's `alpha`, the simulator's latency/bandwidth/overhead presets,
+//! the tuner's ranking — all built from hand-set constants. This module
+//! makes them *measured properties of a machine* instead, following the
+//! characterise-then-fit methodology of Barchet-Estefanel & Mounié
+//! (*Performance Characterisation of Intra-Cluster Collective
+//! Communications* / *Fast Tuning of Intra-Cluster Collective
+//! Communications*): run cheap micro-probes, fit the parameters once,
+//! and let the fitted model drive algorithm selection instead of
+//! exhaustive benchmarking.
+//!
+//! ## Pipeline
+//!
+//! ```text
+//!  probes::probe_suite      ping / double-send / fan-in / write / read
+//!        │                  sweeps + fan-out contention probes, as
+//!        ▼                  ordinary validated Schedules
+//!  runner::run_probes       executed on the Communicator's persistent
+//!        │                  ExecEngine (wall clock on real machines,
+//!        ▼                  deterministic virtual_time in CI),
+//!  fit::fit                 repeat-and-trim robust statistics
+//!        │                  least squares over the probe design matrix
+//!        ▼                  + NIC-slot contention ratio fit
+//!  profile::MachineProfile  versioned JSON artifact; plugs back in via
+//!        │                  Multicore::from_profile, SimParams::
+//!        ▼                  from_profile, TuneCfg::from_profile
+//!  tune::Fingerprint        profile digest keys the decision cache, so
+//!                           cached decisions die with the old machine
+//! ```
+//!
+//! Entry points: [`run_calibration`] (probes → fit → profile, one call),
+//! [`crate::coordinator::Communicator::calibrated`] (construct a
+//! communicator whose embedded tuner runs on the fitted physics), and
+//! the `mcomm calibrate` CLI subcommand (writes the JSON artifact).
+//!
+//! Topology requirements: some machine must host ≥ 2 ranks (shared-
+//! memory probes) and reach ≥ 2 ranks on other machines (network
+//! probes); [`probes::probe_suite`] errors otherwise.
+
+pub mod fit;
+pub mod probes;
+pub mod profile;
+pub mod runner;
+
+pub use fit::{fit, FitResult};
+pub use probes::{probe_suite, seed_inputs, Probe, ProbeRole, NPARAMS, PARAM_NAMES};
+pub use profile::{MachineProfile, PROFILE_VERSION};
+pub use runner::{run_probes, ProbeSample};
+
+use crate::coordinator::Communicator;
+use crate::exec::ExecParams;
+
+/// Calibration configuration: the executor timing mode plus the probe
+/// sweeps. Sweep values are clamped to what the topology can host.
+#[derive(Debug, Clone)]
+pub struct CalibrateCfg {
+    /// Executor parameters for the probe runs. With
+    /// [`ExecParams::virtual_time`] set, the injected costs *are* the
+    /// machine being measured (deterministic — CI mode, and the ground
+    /// truth for recovery tests); in wall mode the host's real timing is
+    /// measured.
+    pub exec: ExecParams,
+    /// Runs per probe schedule (outliers trimmed across these).
+    pub repeats: usize,
+    /// Identical rounds per probe schedule (amortizes per-run overhead).
+    pub rounds: usize,
+    /// Message-size sweep, bytes (multiples of 4; f32 payloads).
+    pub byte_sweep: Vec<usize>,
+    /// Fan-in widths (receiver-side message counts).
+    pub fan_sweep: Vec<usize>,
+    /// Shared-memory publication counts per round.
+    pub write_sweep: Vec<usize>,
+    /// Fan-out widths (concurrently driven NIC slots).
+    pub contention_sweep: Vec<usize>,
+    /// Fraction trimmed from each tail of the repeat distribution.
+    pub trim: f64,
+}
+
+impl Default for CalibrateCfg {
+    fn default() -> Self {
+        Self {
+            // Default to the emulated LAN in deterministic virtual time:
+            // reproducible everywhere, and what CI smoke-calibrates.
+            exec: ExecParams::lan_scaled().with_virtual_time(),
+            repeats: 5,
+            rounds: 4,
+            byte_sweep: vec![64, 1 << 10, 16 << 10],
+            fan_sweep: vec![1, 2, 4],
+            write_sweep: vec![1, 2, 4],
+            contention_sweep: vec![1, 2, 4],
+            trim: 0.25,
+        }
+    }
+}
+
+impl CalibrateCfg {
+    /// Wall-clock calibration of the host itself: no injected costs —
+    /// what gets measured is the real engine/memory/barrier timing.
+    pub fn wall() -> Self {
+        Self { exec: ExecParams::zero(), repeats: 9, ..Self::default() }
+    }
+
+    /// Calibrate against explicit injected physics in deterministic
+    /// virtual time (recovery experiments, CI).
+    pub fn virtual_with(exec: ExecParams) -> Self {
+        Self { exec: exec.with_virtual_time(), ..Self::default() }
+    }
+
+    /// `"virtual"` or `"wall"`, as recorded in the profile.
+    pub fn mode(&self) -> &'static str {
+        if self.exec.virtual_time {
+            "virtual"
+        } else {
+            "wall"
+        }
+    }
+}
+
+/// Measure, fit and package: the one-call calibration entry point.
+/// Probes run through `comm`'s persistent engine; the result is a
+/// self-describing [`MachineProfile`].
+pub fn run_calibration(
+    comm: &Communicator,
+    cfg: &CalibrateCfg,
+) -> crate::Result<MachineProfile> {
+    let samples = run_probes(comm, cfg)?;
+    let fitted = fit(&samples)?;
+    Ok(MachineProfile::from_fit(
+        &fitted,
+        cfg,
+        comm.cluster.num_machines(),
+        comm.num_ranks(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::switched;
+    use std::time::Duration;
+
+    #[test]
+    fn end_to_end_recovers_injected_virtual_physics() {
+        // The acceptance property, module-local edition: calibrate
+        // against known injected physics and recover every parameter
+        // within 5% (in practice: to float precision — the system is
+        // noise-free and consistent).
+        let exec = ExecParams {
+            ext_latency: Duration::from_micros(50),
+            o_send: Duration::from_micros(2),
+            ext_byte_time: Duration::from_nanos(9),
+            o_recv: Duration::from_micros(3),
+            o_write: Duration::from_micros(1),
+            int_byte_time: Duration::from_nanos(2),
+            ..ExecParams::zero()
+        };
+        let cfg = CalibrateCfg::virtual_with(exec.clone());
+        let comm = Communicator::block(switched(2, 2, 1));
+        let profile = run_calibration(&comm, &cfg).unwrap();
+
+        let truth = [
+            exec.o_send.as_secs_f64(),
+            exec.o_recv.as_secs_f64(),
+            exec.o_write.as_secs_f64(),
+            exec.ext_latency.as_secs_f64(),
+            exec.ext_byte_time.as_secs_f64(),
+            exec.int_byte_time.as_secs_f64(),
+            0.0,
+        ];
+        for ((name, got), want) in PARAM_NAMES.iter().zip(profile.theta()).zip(truth) {
+            let err = (got - want).abs() / want.abs().max(1e-9);
+            assert!(err < 0.05, "{name}: fitted {got} vs injected {want}");
+        }
+        assert!((profile.nic_contention - 1.0).abs() < 1e-9);
+        assert!(profile.residual < 1e-6, "residual {}", profile.residual);
+        assert_eq!(profile.mode, "virtual");
+        assert_eq!((profile.machines, profile.ranks), (2, 4));
+    }
+
+    #[test]
+    fn calibration_is_deterministic_in_virtual_mode() {
+        let cfg = CalibrateCfg::default();
+        let a = run_calibration(&Communicator::block(switched(2, 2, 1)), &cfg).unwrap();
+        let b = run_calibration(&Communicator::block(switched(2, 2, 1)), &cfg).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+    }
+}

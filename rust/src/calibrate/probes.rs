@@ -1,0 +1,381 @@
+//! Micro-probe schedules: tiny, hand-shaped [`Schedule`]s whose
+//! executor makespan is a *known linear function* of the machine
+//! parameters being fitted.
+//!
+//! Every probe is an ordinary schedule (shape-checked, symbolically
+//! validated, runnable on the persistent engine like any collective) of
+//! `rounds` identical rounds. Under the executor's timing accounting
+//! (wall spin-waits or deterministic virtual clocks — both charge the
+//! same o/latency/byte-time quantities, see [`crate::exec::ExecParams`]),
+//! one round of each family costs:
+//!
+//! | probe            | per-round makespan                              |
+//! |------------------|-------------------------------------------------|
+//! | `ping(b)`        | `o_send + b·byte_ext + lat_ext + o_recv`        |
+//! | `double-send(b)` | `2(o_send + b·byte_ext) + lat_ext + o_recv`     |
+//! | `fan-in(k)`      | `o_send + b₀·byte_ext + lat_ext + k·o_recv`     |
+//! | `write(m)`       | `m·o_write`                                     |
+//! | `read(b)`        | `b·byte_int`                                    |
+//!
+//! (plus a per-round constant, column [`P_ROUND`], absorbing barrier
+//! overhead in wall mode). The families are chosen for identifiability:
+//! a single message chain can never separate `o_send` from wire latency
+//! — both delay the arrival identically — but the *double-send* probe
+//! serializes two sends on one process, adding exactly one extra
+//! `o_send + b·byte_ext` over the ping, and the *fan-in* sweep isolates
+//! `o_recv` as the slope in `k`. Jointly the five families give the
+//! design matrix full column rank, so the least-squares fit
+//! ([`crate::calibrate::fit::fit`]) is exact on noise-free
+//! (virtual-time) data.
+//!
+//! The *fan-out* family ([`ProbeRole::Contention`]) is deliberately kept
+//! out of the linear system: `j` co-located ranks drive `j` NIC slots at
+//! once, and the ratio of measured to ideal time over the `j`-sweep fits
+//! the per-NIC-slot contention factor. Virtual clocks are per-rank and
+//! contention-free, so a virtual calibration recovers factor 1.0 — the
+//! injected physics' truth — while wall-clock runs on a real host expose
+//! actual serialization.
+
+use crate::sched::{CollectiveOp, Payload, Round, Schedule, Xfer};
+use crate::topology::{Cluster, Placement};
+use crate::Rank;
+
+use super::CalibrateCfg;
+
+/// Number of linearly fitted parameters.
+pub const NPARAMS: usize = 7;
+/// Column order of the design matrix / fitted vector.
+pub const PARAM_NAMES: [&str; NPARAMS] = [
+    "o_send",
+    "o_recv",
+    "o_write",
+    "lat_ext",
+    "byte_ext",
+    "byte_int",
+    "round_overhead",
+];
+pub const P_O_SEND: usize = 0;
+pub const P_O_RECV: usize = 1;
+pub const P_O_WRITE: usize = 2;
+pub const P_LAT_EXT: usize = 3;
+pub const P_BYTE_EXT: usize = 4;
+pub const P_BYTE_INT: usize = 5;
+pub const P_ROUND: usize = 6;
+
+/// How a probe's measurement is consumed by the fitter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeRole {
+    /// One row of the linear system: per-round makespan = `design · θ`.
+    Fit,
+    /// Fan-out over `slots` concurrent NIC slots; feeds the contention
+    /// ratio fit, not the linear system.
+    Contention { slots: usize },
+}
+
+/// One runnable probe: the schedule, how many identical rounds it
+/// repeats, and its design row.
+#[derive(Debug, Clone)]
+pub struct Probe {
+    pub label: String,
+    pub schedule: Schedule,
+    /// Identical rounds in `schedule`; the measured total divides by this.
+    pub rounds: usize,
+    /// Payload bytes per message in this probe.
+    pub bytes: usize,
+    /// Expected per-round makespan as a linear form over
+    /// [`PARAM_NAMES`] (meaningful for [`ProbeRole::Fit`] rows).
+    pub design: [f64; NPARAMS],
+    pub role: ProbeRole,
+}
+
+/// The ranks a probe suite is built around.
+#[derive(Debug, Clone)]
+struct Layout {
+    /// A machine hosting ≥ 2 ranks: local probes run here.
+    writer: Rank,
+    reader: Rank,
+    /// Ranks of the writer's machine, for fan-out sources.
+    local: Vec<Rank>,
+    /// Ranks off the writer's machine whose machine is connected to it,
+    /// for external probes (ping target, fan-in sources, fan-out sinks).
+    remote: Vec<Rank>,
+}
+
+fn layout(cluster: &Cluster, placement: &Placement) -> crate::Result<Layout> {
+    for m in 0..cluster.num_machines() {
+        let local = placement.ranks_on(m);
+        if local.len() < 2 {
+            continue;
+        }
+        let remote: Vec<Rank> = (0..placement.num_ranks())
+            .filter(|&r| {
+                placement.machine_of(r) != m
+                    && cluster.connected(placement.machine_of(r), m)
+            })
+            .collect();
+        if remote.len() < 2 {
+            continue;
+        }
+        return Ok(Layout {
+            writer: local[0],
+            reader: local[1],
+            local: local.to_vec(),
+            remote,
+        });
+    }
+    anyhow::bail!(
+        "calibration needs a machine with >= 2 ranks and >= 2 reachable \
+         ranks on other machines (got {} machines / {} ranks)",
+        cluster.num_machines(),
+        placement.num_ranks()
+    )
+}
+
+/// A schedule of `rounds` identical copies of `xfers`, declared as an
+/// allgather (non-reduction: duplicate deliveries across the repeated
+/// rounds are tolerated by both the symbolic executor and the engine).
+fn repeated(label: &str, n: usize, rounds: usize, xfers: Vec<Xfer>) -> Schedule {
+    let mut s = Schedule::new(CollectiveOp::Allgather, n, format!("probe/{label}"));
+    for _ in 0..rounds {
+        s.push_round(Round { xfers: xfers.clone() });
+    }
+    s
+}
+
+/// Rank `r`'s probe payload: its own allgather slot. Payload *size* is
+/// not part of the schedule — [`seed_inputs`] controls the bytes.
+fn own_chunk(r: Rank) -> Payload {
+    Payload::single(r as u32, r)
+}
+
+/// Build the full probe suite for this topology. Errors when the
+/// topology cannot host the probes (see [`CalibrateCfg`] docs).
+pub fn probe_suite(
+    cluster: &Cluster,
+    placement: &Placement,
+    cfg: &CalibrateCfg,
+) -> crate::Result<Vec<Probe>> {
+    let lay = layout(cluster, placement)?;
+    let n = placement.num_ranks();
+    let rounds = cfg.rounds.max(1);
+    let mut out = Vec::new();
+    anyhow::ensure!(!cfg.byte_sweep.is_empty(), "empty calibration byte sweep");
+    let b0 = cfg.byte_sweep[0];
+
+    // Ping: one external message writer -> remote[0].
+    for &b in &cfg.byte_sweep {
+        let xfers = vec![Xfer::external(lay.writer, lay.remote[0], own_chunk(lay.writer))];
+        let mut design = [0.0; NPARAMS];
+        design[P_O_SEND] = 1.0;
+        design[P_O_RECV] = 1.0;
+        design[P_LAT_EXT] = 1.0;
+        design[P_BYTE_EXT] = b as f64;
+        design[P_ROUND] = 1.0;
+        out.push(Probe {
+            label: format!("ping/{b}B"),
+            schedule: repeated(&format!("ping-{b}"), n, rounds, xfers),
+            rounds,
+            bytes: b,
+            design,
+            role: ProbeRole::Fit,
+        });
+    }
+
+    // Double-send: writer serializes two sends in one round; the second
+    // message's arrival carries 2(o_send + b·byte_ext) + lat.
+    for &b in &cfg.byte_sweep {
+        let xfers = vec![
+            Xfer::external(lay.writer, lay.remote[0], own_chunk(lay.writer)),
+            Xfer::external(lay.writer, lay.remote[1], own_chunk(lay.writer)),
+        ];
+        let mut design = [0.0; NPARAMS];
+        design[P_O_SEND] = 2.0;
+        design[P_O_RECV] = 1.0;
+        design[P_LAT_EXT] = 1.0;
+        design[P_BYTE_EXT] = 2.0 * b as f64;
+        design[P_ROUND] = 1.0;
+        out.push(Probe {
+            label: format!("double-send/{b}B"),
+            schedule: repeated(&format!("dsend-{b}"), n, rounds, xfers),
+            rounds,
+            bytes: b,
+            design,
+            role: ProbeRole::Fit,
+        });
+    }
+
+    // Fan-in: k remote senders into one receiver; the receiver drains
+    // k messages serially (slope in k = o_recv).
+    for &k in &cfg.fan_sweep {
+        let k = k.clamp(1, lay.remote.len());
+        if out.iter().any(|p: &Probe| p.label == format!("fan-in/{k}")) {
+            continue; // clamped duplicates
+        }
+        let xfers: Vec<Xfer> = lay.remote[..k]
+            .iter()
+            .map(|&s| Xfer::external(s, lay.writer, own_chunk(s)))
+            .collect();
+        let mut design = [0.0; NPARAMS];
+        design[P_O_SEND] = 1.0;
+        design[P_O_RECV] = k as f64;
+        design[P_LAT_EXT] = 1.0;
+        design[P_BYTE_EXT] = b0 as f64;
+        design[P_ROUND] = 1.0;
+        out.push(Probe {
+            label: format!("fan-in/{k}"),
+            schedule: repeated(&format!("fanin-{k}"), n, rounds, xfers),
+            rounds,
+            bytes: b0,
+            design,
+            role: ProbeRole::Fit,
+        });
+    }
+
+    // Shared-memory write: m publications by one rank in one round.
+    for &m in &cfg.write_sweep {
+        let m = m.max(1);
+        if out.iter().any(|p: &Probe| p.label == format!("write/{m}")) {
+            continue;
+        }
+        let xfers: Vec<Xfer> = (0..m)
+            .map(|_| {
+                Xfer::local_write(lay.writer, vec![lay.reader], own_chunk(lay.writer))
+            })
+            .collect();
+        let mut design = [0.0; NPARAMS];
+        design[P_O_WRITE] = m as f64;
+        design[P_ROUND] = 1.0;
+        out.push(Probe {
+            label: format!("write/{m}"),
+            schedule: repeated(&format!("write-{m}"), n, rounds, xfers),
+            rounds,
+            bytes: b0,
+            design,
+            role: ProbeRole::Fit,
+        });
+    }
+
+    // Shared-memory read: the reader assembles b bytes from a co-located
+    // store (slope in b = byte_int).
+    for &b in &cfg.byte_sweep {
+        let xfers = vec![Xfer::local_read(lay.writer, lay.reader, own_chunk(lay.writer))];
+        let mut design = [0.0; NPARAMS];
+        design[P_BYTE_INT] = b as f64;
+        design[P_ROUND] = 1.0;
+        out.push(Probe {
+            label: format!("read/{b}B"),
+            schedule: repeated(&format!("read-{b}"), n, rounds, xfers),
+            rounds,
+            bytes: b,
+            design,
+            role: ProbeRole::Fit,
+        });
+    }
+
+    // Fan-out (contention): j co-located ranks each drive one NIC slot
+    // toward a distinct remote rank. Ideal (contention-free) time is
+    // independent of j; the measured j-sweep ratio fits the factor.
+    let jmax = lay.local.len().min(lay.remote.len());
+    for &j in &cfg.contention_sweep {
+        let j = j.clamp(1, jmax);
+        if out
+            .iter()
+            .any(|p: &Probe| p.label == format!("fan-out/{j}"))
+        {
+            continue;
+        }
+        let xfers: Vec<Xfer> = (0..j)
+            .map(|i| Xfer::external(lay.local[i], lay.remote[i], own_chunk(lay.local[i])))
+            .collect();
+        out.push(Probe {
+            label: format!("fan-out/{j}"),
+            schedule: repeated(&format!("fanout-{j}"), n, rounds, xfers),
+            rounds,
+            bytes: b0,
+            design: [0.0; NPARAMS],
+            role: ProbeRole::Contention { slots: j },
+        });
+    }
+
+    Ok(out)
+}
+
+/// Seed every rank's store with its own allgather slot, `bytes` wide
+/// (f32 payloads: `bytes / 4` elements, at least one).
+pub fn seed_inputs(num_ranks: usize, bytes: usize) -> Vec<crate::exec::BufferStore> {
+    use crate::exec::BufferStore;
+    use crate::sched::{Chunk, ContribSet};
+    let elems = (bytes / 4).max(1);
+    (0..num_ranks)
+        .map(|r| {
+            let mut st = BufferStore::default();
+            st.seed(
+                Chunk(r as u32),
+                ContribSet::singleton(r),
+                vec![r as f32; elems],
+            );
+            st
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::symexec;
+    use crate::topology::switched;
+
+    #[test]
+    fn suite_builds_and_passes_plan_gates() {
+        // Every probe must survive exactly what ExecPlan::compile runs:
+        // shape check + symbolic data-flow.
+        let cl = switched(2, 2, 1);
+        let pl = Placement::block(&cl);
+        let cfg = CalibrateCfg::default();
+        let probes = probe_suite(&cl, &pl, &cfg).unwrap();
+        assert!(probes.len() >= 10);
+        for p in &probes {
+            p.schedule.check_shape(&pl).unwrap_or_else(|e| panic!("{}: {e}", p.label));
+            symexec::run(&p.schedule).unwrap_or_else(|e| panic!("{}: {e}", p.label));
+            assert_eq!(p.schedule.num_rounds(), p.rounds, "{}", p.label);
+        }
+        // All five fit families plus the contention family are present.
+        for fam in ["ping/", "double-send/", "fan-in/", "write/", "read/", "fan-out/"] {
+            assert!(
+                probes.iter().any(|p| p.label.starts_with(fam)),
+                "missing family {fam}"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_topologies_are_rejected() {
+        // Single machine: no external probes.
+        let cl = switched(1, 8, 1);
+        let pl = Placement::block(&cl);
+        assert!(probe_suite(&cl, &pl, &CalibrateCfg::default()).is_err());
+        // One rank per machine: no shared-memory probes.
+        let cl = switched(4, 1, 1);
+        let pl = Placement::block(&cl);
+        assert!(probe_suite(&cl, &pl, &CalibrateCfg::default()).is_err());
+    }
+
+    #[test]
+    fn sweeps_clamp_to_topology() {
+        // 2x2: fan-in can use at most 2 remote senders even though the
+        // default sweep asks for 4; clamped duplicates are dropped.
+        let cl = switched(2, 2, 2);
+        let pl = Placement::block(&cl);
+        let probes = probe_suite(&cl, &pl, &CalibrateCfg::default()).unwrap();
+        let fanin: Vec<&str> = probes
+            .iter()
+            .filter(|p| p.label.starts_with("fan-in/"))
+            .map(|p| p.label.as_str())
+            .collect();
+        assert_eq!(fanin, vec!["fan-in/1", "fan-in/2"]);
+        let mut labels: Vec<&str> = probes.iter().map(|p| p.label.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), probes.len(), "duplicate probe labels");
+    }
+}

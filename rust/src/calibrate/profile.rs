@@ -1,0 +1,287 @@
+//! Versioned machine profiles: the persisted product of a calibration.
+//!
+//! A [`MachineProfile`] is the fitted parameter set plus enough
+//! provenance (mode, repeats, topology shape, fit residual) to judge
+//! whether it should be trusted. Serialization is hand-rolled JSON with
+//! a fixed field order; floats are written with Rust's shortest
+//! round-trip formatting, so `from_json(to_json(p)) == p` holds
+//! bit-exactly — which is what lets [`MachineProfile::digest`] double as
+//! a cache-invalidation key in [`crate::tune::Fingerprint`]: recalibrate
+//! on a changed machine and every cached tuning decision keyed on the
+//! old physics stops matching.
+
+use super::probes::{
+    NPARAMS, P_BYTE_EXT, P_BYTE_INT, P_LAT_EXT, P_O_RECV, P_O_SEND, P_O_WRITE, P_ROUND,
+};
+use crate::util::json::Json;
+
+/// Current on-disk format version (bumped on incompatible change).
+pub const PROFILE_VERSION: u32 = 1;
+
+/// A fitted machine profile. All times in seconds, byte costs in
+/// seconds per byte.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineProfile {
+    pub version: u32,
+    /// Send-side CPU overhead per external message (LogP `o`).
+    pub o_send: f64,
+    /// Receive-side CPU overhead per external message.
+    pub o_recv: f64,
+    /// Cost of one shared-memory publication (rule R1's write).
+    pub o_write: f64,
+    /// Inter-machine wire latency.
+    pub lat_ext: f64,
+    /// NIC cost per byte (1 / network bandwidth).
+    pub byte_ext: f64,
+    /// Shared-memory cost per byte (1 / memory bandwidth).
+    pub byte_int: f64,
+    /// Per-round constant (barrier/runtime overhead; ~0 in virtual mode).
+    pub round_overhead: f64,
+    /// Slowdown factor per additional concurrently driven NIC slot
+    /// (1.0 = perfectly parallel NICs, rule R3's ideal).
+    pub nic_contention: f64,
+    /// Normalized RMS misfit of the linear fit (0 = exact).
+    pub residual: f64,
+    /// `"virtual"` (deterministic clocks) or `"wall"` (elapsed time).
+    pub mode: String,
+    /// Runs per probe schedule.
+    pub repeats: usize,
+    /// Identical rounds per probe schedule.
+    pub probe_rounds: usize,
+    /// Topology the probes ran on.
+    pub machines: usize,
+    pub ranks: usize,
+}
+
+impl MachineProfile {
+    /// Assemble a profile from a fit over this topology. The recorded
+    /// `mode` comes from `cfg` itself, so provenance can never disagree
+    /// with how the probes were actually timed.
+    pub fn from_fit(
+        fitted: &super::fit::FitResult,
+        cfg: &super::CalibrateCfg,
+        machines: usize,
+        ranks: usize,
+    ) -> Self {
+        Self {
+            version: PROFILE_VERSION,
+            o_send: fitted.theta[P_O_SEND],
+            o_recv: fitted.theta[P_O_RECV],
+            o_write: fitted.theta[P_O_WRITE],
+            lat_ext: fitted.theta[P_LAT_EXT],
+            byte_ext: fitted.theta[P_BYTE_EXT],
+            byte_int: fitted.theta[P_BYTE_INT],
+            round_overhead: fitted.theta[P_ROUND],
+            nic_contention: fitted.nic_contention,
+            residual: fitted.residual,
+            mode: cfg.mode().to_string(),
+            repeats: cfg.repeats.max(1),
+            probe_rounds: cfg.rounds.max(1),
+            machines,
+            ranks,
+        }
+    }
+
+    /// Fitted parameters in [`super::probes::PARAM_NAMES`] order.
+    pub fn theta(&self) -> [f64; NPARAMS] {
+        [
+            self.o_send,
+            self.o_recv,
+            self.o_write,
+            self.lat_ext,
+            self.byte_ext,
+            self.byte_int,
+            self.round_overhead,
+        ]
+    }
+
+    /// FNV-1a digest over every field — the cache-invalidation key
+    /// carried into [`crate::tune::Fingerprint`] via
+    /// [`crate::tune::TuneCfg::from_profile`].
+    pub fn digest(&self) -> u64 {
+        use crate::tune::fingerprint::{fnv, FNV_OFFSET};
+        let mut h = FNV_OFFSET;
+        h = fnv(h, self.version as u64);
+        for v in self.theta() {
+            h = fnv(h, v.to_bits());
+        }
+        h = fnv(h, self.nic_contention.to_bits());
+        h = fnv(h, self.residual.to_bits());
+        for &b in self.mode.as_bytes() {
+            h = fnv(h, b as u64);
+        }
+        for v in [self.repeats, self.probe_rounds, self.machines, self.ranks] {
+            h = fnv(h, v as u64);
+        }
+        h
+    }
+
+    /// Fixed-field-order JSON. Floats use shortest round-trip formatting
+    /// (`{:?}`), so parsing the output reproduces this profile bit-exactly.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"version\": {},\n  \"o_send\": {:?},\n  \"o_recv\": {:?},\n  \
+             \"o_write\": {:?},\n  \"lat_ext\": {:?},\n  \"byte_ext\": {:?},\n  \
+             \"byte_int\": {:?},\n  \"round_overhead\": {:?},\n  \
+             \"nic_contention\": {:?},\n  \"residual\": {:?},\n  \
+             \"mode\": \"{}\",\n  \"repeats\": {},\n  \"probe_rounds\": {},\n  \
+             \"machines\": {},\n  \"ranks\": {}\n}}\n",
+            self.version,
+            self.o_send,
+            self.o_recv,
+            self.o_write,
+            self.lat_ext,
+            self.byte_ext,
+            self.byte_int,
+            self.round_overhead,
+            self.nic_contention,
+            self.residual,
+            self.mode,
+            self.repeats,
+            self.probe_rounds,
+            self.machines,
+            self.ranks,
+        )
+    }
+
+    /// Parse a profile; rejects unknown versions.
+    pub fn from_json(s: &str) -> crate::Result<Self> {
+        let j = Json::parse(s)?;
+        let num = |key: &str| -> crate::Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid field {key:?}"))
+        };
+        let version = j.req_usize("version")? as u32;
+        anyhow::ensure!(
+            version == PROFILE_VERSION,
+            "unsupported MachineProfile version {version} (expected {PROFILE_VERSION})"
+        );
+        Ok(Self {
+            version,
+            o_send: num("o_send")?,
+            o_recv: num("o_recv")?,
+            o_write: num("o_write")?,
+            lat_ext: num("lat_ext")?,
+            byte_ext: num("byte_ext")?,
+            byte_int: num("byte_int")?,
+            round_overhead: num("round_overhead")?,
+            nic_contention: num("nic_contention")?,
+            residual: num("residual")?,
+            mode: j
+                .get("mode")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("missing/invalid field \"mode\""))?
+                .to_string(),
+            repeats: j.req_usize("repeats")?,
+            probe_rounds: j.req_usize("probe_rounds")?,
+            machines: j.req_usize("machines")?,
+            ranks: j.req_usize("ranks")?,
+        })
+    }
+
+    /// Write the profile JSON to `path` (parent directories created).
+    pub fn save(&self, path: &str) -> crate::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| anyhow::anyhow!("creating {}: {e}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
+    }
+
+    /// Load a profile JSON from `path`.
+    pub fn load(path: &str) -> crate::Result<Self> {
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Self::from_json(&s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_profile() -> MachineProfile {
+        MachineProfile {
+            version: PROFILE_VERSION,
+            o_send: 2e-6,
+            o_recv: 3.25e-6,
+            o_write: 1e-6,
+            lat_ext: 5.0000000001e-5, // not exactly representable in decimal-short form
+            byte_ext: 9e-9,
+            byte_int: 1.0 / 3e9,
+            round_overhead: 0.0,
+            nic_contention: 1.0,
+            residual: 1.2345e-16,
+            mode: "virtual".into(),
+            repeats: 5,
+            probe_rounds: 4,
+            machines: 2,
+            ranks: 4,
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_exact() {
+        let p = sample_profile();
+        let back = MachineProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        // Bitwise, not just PartialEq: the digest must survive the trip.
+        assert_eq!(p.digest(), back.digest());
+        for (a, b) in p.theta().iter().zip(back.theta().iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn digest_discriminates_every_physical_field() {
+        let base = sample_profile();
+        let mut variants = Vec::new();
+        for i in 0..NPARAMS {
+            let mut p = base.clone();
+            match i {
+                0 => p.o_send *= 2.0,
+                1 => p.o_recv *= 2.0,
+                2 => p.o_write *= 2.0,
+                3 => p.lat_ext *= 2.0,
+                4 => p.byte_ext *= 2.0,
+                5 => p.byte_int *= 2.0,
+                _ => p.round_overhead = 1e-9,
+            }
+            variants.push(p);
+        }
+        let mut cont = base.clone();
+        cont.nic_contention = 1.5;
+        variants.push(cont);
+        for v in variants {
+            assert_ne!(base.digest(), v.digest());
+        }
+        assert_eq!(base.digest(), base.clone().digest());
+    }
+
+    #[test]
+    fn version_gate_and_garbage_rejected() {
+        let mut p = sample_profile();
+        p.version = PROFILE_VERSION + 1;
+        assert!(MachineProfile::from_json(&p.to_json()).is_err());
+        assert!(MachineProfile::from_json("{}").is_err());
+        assert!(MachineProfile::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn save_load_round_trips_via_disk() {
+        let p = sample_profile();
+        let dir = std::env::temp_dir();
+        let path = dir
+            .join(format!("mcomm_profile_test_{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        p.save(&path).unwrap();
+        let back = MachineProfile::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(p, back);
+    }
+}

@@ -1,0 +1,139 @@
+//! Probe execution: run the suite on a [`Communicator`]'s persistent
+//! [`crate::exec::ExecEngine`] and condense repeats into robust
+//! per-round measurements.
+//!
+//! Probes go through [`Communicator::execute`] like any collective, so
+//! they exercise (and benefit from) the production path: the compiled
+//! plan cache absorbs the repeats and the worker pool spawns once for
+//! the whole suite. In virtual-time mode
+//! ([`crate::exec::ExecParams::virtual_time`]) the measurement is the
+//! deterministic `virtual_time` makespan — bit-identical across repeats,
+//! so CI calibration is exactly reproducible. In wall mode it is elapsed
+//! time, and the repeat-and-trim statistic
+//! ([`crate::util::stats::trimmed_mean`]) discards scheduler-noise
+//! outliers from both tails.
+
+use crate::coordinator::Communicator;
+use crate::util::stats::trimmed_mean;
+
+use super::probes::{probe_suite, seed_inputs, ProbeRole, NPARAMS};
+use super::CalibrateCfg;
+
+/// One measured probe: its design row and robust per-round makespan.
+#[derive(Debug, Clone)]
+pub struct ProbeSample {
+    pub label: String,
+    pub design: [f64; NPARAMS],
+    /// Per-round makespan, seconds (trimmed mean over repeats).
+    pub y: f64,
+    pub role: ProbeRole,
+}
+
+/// Run the full probe suite for this communicator's topology.
+pub fn run_probes(
+    comm: &Communicator,
+    cfg: &CalibrateCfg,
+) -> crate::Result<Vec<ProbeSample>> {
+    let probes = probe_suite(&comm.cluster, &comm.placement, cfg)?;
+    let repeats = cfg.repeats.max(1);
+    let mut out = Vec::with_capacity(probes.len());
+    for probe in probes {
+        let mut ys = Vec::with_capacity(repeats);
+        for _ in 0..repeats {
+            let inputs = seed_inputs(comm.num_ranks(), probe.bytes);
+            let rep = comm.execute(&probe.schedule, inputs, &cfg.exec)?;
+            let total = match rep.virtual_time {
+                Some(vt) => vt,
+                None => rep.wall.as_secs_f64(),
+            };
+            ys.push(total / probe.rounds as f64);
+        }
+        out.push(ProbeSample {
+            label: probe.label,
+            design: probe.design,
+            y: trimmed_mean(&ys, cfg.trim),
+            role: probe.role,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecParams;
+    use crate::topology::switched;
+    use std::time::Duration;
+
+    fn virtual_cfg() -> CalibrateCfg {
+        CalibrateCfg {
+            exec: ExecParams {
+                ext_latency: Duration::from_micros(50),
+                o_send: Duration::from_micros(2),
+                ext_byte_time: Duration::from_nanos(9),
+                o_recv: Duration::from_micros(3),
+                o_write: Duration::from_micros(1),
+                int_byte_time: Duration::from_nanos(2),
+                ..ExecParams::zero()
+            }
+            .with_virtual_time(),
+            ..CalibrateCfg::default()
+        }
+    }
+
+    #[test]
+    fn probe_measurements_match_the_forward_model() {
+        // The whole calibration design rests on this: each probe's
+        // measured virtual per-round makespan equals design · θ for the
+        // injected θ. Checked per probe, not just in aggregate.
+        let cl = switched(2, 2, 1);
+        let comm = Communicator::block(cl);
+        let cfg = virtual_cfg();
+        let p = &cfg.exec;
+        let theta = [
+            p.o_send.as_secs_f64(),
+            p.o_recv.as_secs_f64(),
+            p.o_write.as_secs_f64(),
+            p.ext_latency.as_secs_f64(),
+            p.ext_byte_time.as_secs_f64(),
+            p.int_byte_time.as_secs_f64(),
+            0.0, // virtual rounds have no barrier overhead
+        ];
+        let samples = run_probes(&comm, &cfg).unwrap();
+        for s in samples.iter().filter(|s| s.role == ProbeRole::Fit) {
+            let want: f64 = s.design.iter().zip(&theta).map(|(a, t)| a * t).sum();
+            assert!(
+                (s.y - want).abs() < 1e-12,
+                "{}: measured {} vs forward model {}",
+                s.label,
+                s.y,
+                want
+            );
+        }
+        // Virtual clocks are contention-free: fan-out time is flat in j.
+        let fanout: Vec<f64> = samples
+            .iter()
+            .filter(|s| matches!(s.role, ProbeRole::Contention { .. }))
+            .map(|s| s.y)
+            .collect();
+        assert!(fanout.len() >= 2);
+        for y in &fanout {
+            assert!((y - fanout[0]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn repeats_ride_the_plan_cache_and_one_pool() {
+        let cl = switched(2, 2, 1);
+        let comm = Communicator::block(cl);
+        let cfg = CalibrateCfg { repeats: 3, ..virtual_cfg() };
+        let samples = run_probes(&comm, &cfg).unwrap();
+        let st = comm.exec_stats();
+        // One compile per distinct probe schedule, repeats are hits, and
+        // the worker pool spawned exactly once for the whole suite.
+        assert_eq!(st.plan_misses, samples.len());
+        assert_eq!(st.plan_hits, samples.len() * 2);
+        assert_eq!(st.engine_spawns, 1);
+        assert_eq!(st.engine_runs, samples.len() * 3);
+    }
+}

@@ -32,6 +32,7 @@ pub mod broadcast;
 pub mod gather;
 pub mod helpers;
 pub mod reduce;
+pub mod reduce_scatter;
 pub mod scatter;
 
 pub use broadcast::TargetHeuristic;

@@ -1,0 +1,176 @@
+//! Reduce-scatter schedule builders: rank `r` ends with the fully
+//! reduced chunk `r` (the op requires `chunks == P`).
+//!
+//! Reduce-scatter is the first half of every bandwidth-optimal allreduce
+//! ([`super::allreduce::ring`], [`super::allreduce::rabenseifner`]) and a
+//! collective in its own right (sharded optimizers consume exactly this
+//! pattern). Until this module existed the executor tests had to
+//! hand-build `ReduceScatter` schedules; these builders are the real
+//! thing, registered with the autotuner
+//! ([`crate::tune::Collective::ReduceScatter`]).
+//!
+//! * [`ring`] — bandwidth-optimal flat ring: `P - 1` rounds, one chunk
+//!   per hop. With block placement most hops are intra-machine.
+//! * [`recursive_halving`] — latency-optimal butterfly (power-of-two
+//!   ranks): `log2 P` rounds of recursive halving, each shipping half of
+//!   the sender's remaining chunk range.
+
+use crate::sched::{Chunk, CollectiveOp, ContribSet, Payload, Round, Schedule, Xfer};
+use crate::topology::Placement;
+
+use super::helpers::pt2pt;
+
+/// Flat ring reduce-scatter over `P` chunks in `P - 1` rounds.
+///
+/// Step `t`, rank `i` ships its accumulated copy of chunk
+/// `(i - t - 1) mod P` to rank `i + 1`; chunk `c` finishes its trip
+/// around the ring exactly at rank `c`.
+///
+/// ```
+/// use mcomm::collectives::reduce_scatter;
+/// use mcomm::sched::symexec;
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(2, 2, 1);            // 4 ranks
+/// let placement = Placement::block(&cluster);
+/// let s = reduce_scatter::ring(&placement);
+/// symexec::verify(&s).unwrap();   // rank r ends with full chunk r
+/// assert_eq!(s.num_rounds(), 3);  // P - 1
+/// ```
+pub fn ring(placement: &Placement) -> Schedule {
+    let n = placement.num_ranks();
+    let mut s = Schedule::new(CollectiveOp::ReduceScatter, n, "ring");
+    if n == 1 {
+        return s;
+    }
+    // contrib[c][i] = set folded into rank i's copy of chunk c.
+    let mut contrib: Vec<Vec<ContribSet>> = (0..n)
+        .map(|_| (0..n).map(ContribSet::singleton).collect())
+        .collect();
+    for t in 0..n - 1 {
+        let mut xfers = Vec::new();
+        let mut updates = Vec::new();
+        for i in 0..n {
+            let c = (i + n - t - 1) % n;
+            let dst = (i + 1) % n;
+            let payload = Payload::one(Chunk(c as u32), contrib[c][i].clone());
+            xfers.push(pt2pt(placement, i, dst, payload));
+            updates.push((c, dst, contrib[c][i].clone()));
+        }
+        s.push_round(Round { xfers });
+        for (c, dst, inc) in updates {
+            contrib[c][dst].union_with(&inc);
+        }
+    }
+    s
+}
+
+/// Recursive halving (requires power-of-two ranks): round `k`, rank `i`
+/// exchanges with the partner differing in bit `log2(P) - 1 - k` and
+/// ships the half of its remaining chunk range that belongs to the
+/// partner's side — exactly the reduce-scatter phase of
+/// [`super::allreduce::rabenseifner`], as a standalone collective.
+///
+/// ```
+/// use mcomm::collectives::reduce_scatter;
+/// use mcomm::sched::symexec;
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(2, 4, 2);            // 8 ranks
+/// let placement = Placement::block(&cluster);
+/// let s = reduce_scatter::recursive_halving(&placement).unwrap();
+/// symexec::verify(&s).unwrap();
+/// assert_eq!(s.num_rounds(), 3);  // log2 P
+/// ```
+pub fn recursive_halving(placement: &Placement) -> crate::Result<Schedule> {
+    let n = placement.num_ranks();
+    if !n.is_power_of_two() {
+        anyhow::bail!("recursive_halving requires power-of-two ranks, got {n}");
+    }
+    let mut s = Schedule::new(CollectiveOp::ReduceScatter, n, "recursive-halving");
+    if n == 1 {
+        return Ok(s);
+    }
+    let kbits = n.trailing_zeros() as usize;
+    let mut contrib: Vec<Vec<ContribSet>> = (0..n)
+        .map(|_| (0..n).map(ContribSet::singleton).collect())
+        .collect();
+    for k in 0..kbits {
+        let bit = kbits - 1 - k;
+        let dist = 1usize << bit;
+        let mut xfers = Vec::new();
+        let mut updates = Vec::new();
+        for i in 0..n {
+            let peer = i ^ dist;
+            // Chunks still in i's range agree with i on the bits above
+            // `bit`; ship the ones matching the partner's side.
+            let items: Vec<(Chunk, ContribSet)> = (0..n)
+                .filter(|&c| {
+                    (c >> (bit + 1)) == (i >> (bit + 1))
+                        && (c >> bit) & 1 == (peer >> bit) & 1
+                })
+                .map(|c| (Chunk(c as u32), contrib[c][i].clone()))
+                .collect();
+            for (c, inc) in &items {
+                updates.push((c.0 as usize, peer, inc.clone()));
+            }
+            xfers.push(pt2pt(placement, i, peer, Payload { items }));
+        }
+        s.push_round(Round { xfers });
+        for (c, dst, inc) in updates {
+            contrib[c][dst].union_with(&inc);
+        }
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CostModel, Multicore};
+    use crate::sched::symexec;
+    use crate::topology::{switched, Placement};
+
+    #[test]
+    fn ring_verifies_various_sizes() {
+        for (m, c) in [(1usize, 2usize), (2, 2), (2, 3), (4, 2), (1, 7)] {
+            let cl = switched(m, c, 1);
+            let p = Placement::block(&cl);
+            let s = ring(&p);
+            symexec::verify(&s).unwrap();
+            let n = m * c;
+            assert_eq!(s.num_rounds(), n - 1, "P={n}");
+        }
+    }
+
+    #[test]
+    fn ring_is_nic_legal_with_block_placement() {
+        // One boundary send per machine per round, like the allreduce
+        // ring's reduce-scatter phase.
+        let cl = switched(4, 4, 1);
+        let p = Placement::block(&cl);
+        Multicore::default().validate(&cl, &p, &ring(&p)).unwrap();
+    }
+
+    #[test]
+    fn recursive_halving_verifies() {
+        for (m, c) in [(2usize, 4usize), (4, 2), (1, 8), (2, 2), (2, 1)] {
+            let cl = switched(m, c, 2);
+            let p = Placement::block(&cl);
+            let s = recursive_halving(&p).unwrap();
+            symexec::verify(&s).unwrap();
+            let n = m * c;
+            assert_eq!(s.num_rounds() as u32, n.trailing_zeros(), "P={n}");
+        }
+        assert!(recursive_halving(&Placement::block(&switched(1, 6, 1))).is_err());
+    }
+
+    #[test]
+    fn halving_matches_rabenseifner_first_phase_round_count() {
+        let cl = switched(2, 4, 2);
+        let p = Placement::block(&cl);
+        let rs = recursive_halving(&p).unwrap();
+        let ar = crate::collectives::allreduce::rabenseifner(&p).unwrap();
+        assert_eq!(rs.num_rounds() * 2, ar.num_rounds());
+    }
+}

@@ -20,6 +20,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::calibrate::MachineProfile;
 use crate::collectives::{allgather, allreduce, alltoall, broadcast, gather, reduce, scatter};
 use crate::collectives::TargetHeuristic;
 use crate::exec::{BufferStore, ExecEngine, ExecParams, ExecPlan, ExecReport};
@@ -160,6 +161,28 @@ impl Communicator {
             exec: Mutex::new(ExecState::default()),
             engine: Mutex::new(None),
         }
+    }
+
+    /// Construct a communicator whose autotuner runs on *measured*
+    /// physics: run the calibration probe suite
+    /// ([`crate::calibrate::run_calibration`]) on this topology's own
+    /// persistent engine, fit a [`MachineProfile`], and rebuild the
+    /// embedded tuner from it ([`TuneCfg::from_profile`], at
+    /// `chunk_bytes` reference payload). The profile is returned
+    /// alongside so callers can persist it (`mcomm calibrate` does).
+    ///
+    /// The probe plans stay in the plan cache and the worker pool stays
+    /// warm, so the calibration run doubles as engine warm-up.
+    pub fn calibrated(
+        cluster: Cluster,
+        placement: Placement,
+        cal: &crate::calibrate::CalibrateCfg,
+        chunk_bytes: u64,
+    ) -> crate::Result<(Self, MachineProfile)> {
+        let mut comm = Self::new(cluster, placement);
+        let profile = crate::calibrate::run_calibration(&comm, cal)?;
+        comm.tuner = Tuned::new(TuneCfg::from_profile(&profile, chunk_bytes));
+        Ok((comm, profile))
     }
 
     pub fn num_ranks(&self) -> usize {
@@ -407,6 +430,7 @@ mod tests {
             Collective::Allgather,
             Collective::AllToAll,
             Collective::Allreduce,
+            Collective::ReduceScatter,
         ] {
             let d = comm.tuned_decision(coll).unwrap();
             symexec::verify(&d.schedule).unwrap_or_else(|e| panic!("{}: {e}", coll.name()));
@@ -418,7 +442,7 @@ mod tests {
                 d.sim_time
             );
         }
-        assert_eq!(comm.tune_stats().entries, 7);
+        assert_eq!(comm.tune_stats().entries, 8);
     }
 
     #[test]
@@ -453,6 +477,23 @@ mod tests {
             .unwrap();
         let st = comm.exec_stats();
         assert_eq!((st.plan_misses, st.engine_spawns, st.engine_runs), (2, 1, 3));
+    }
+
+    #[test]
+    fn calibrated_constructor_rebuilds_tuner_from_profile() {
+        use crate::calibrate::CalibrateCfg;
+        let cl = switched(2, 2, 1);
+        let pl = crate::topology::Placement::block(&cl);
+        let (comm, profile) =
+            Communicator::calibrated(cl, pl, &CalibrateCfg::default(), 16 << 10).unwrap();
+        // The embedded tuner carries the profile's digest, so its cache
+        // fingerprints can never alias a default-constants communicator.
+        assert_eq!(comm.tuner.cfg.profile_digest, profile.digest());
+        assert_ne!(comm.tuner.cfg.profile_digest, 0);
+        // Probe runs warmed the engine; tuning still works end to end.
+        assert_eq!(comm.exec_stats().engine_spawns, 1);
+        let s = comm.tuned(Collective::Allreduce).unwrap();
+        crate::sched::symexec::verify(&s).unwrap();
     }
 
     #[test]

@@ -315,10 +315,38 @@ mod tests {
     }
 
     #[test]
+    fn reduce_scatter_builders_execute() {
+        // The real builders (collectives::reduce_scatter) through the
+        // engine: every rank must end with the full sum of its own chunk.
+        use crate::collectives::reduce_scatter;
+        let c = switched(2, 4, 2);
+        let p = Placement::block(&c);
+        let n = 8usize;
+        for (name, s) in [
+            ("ring", reduce_scatter::ring(&p)),
+            ("recursive-halving", reduce_scatter::recursive_halving(&p).unwrap()),
+        ] {
+            let rep =
+                run(&c, &p, &s, initial_inputs(&s, pat), &ExecParams::zero()).unwrap();
+            for r in 0..n {
+                let ch = Chunk(r as u32);
+                let want: Vec<f32> = (0..4)
+                    .map(|i| (0..n).map(|src| pat(src, ch)[i]).sum())
+                    .collect();
+                let got = rep.outputs[r]
+                    .reduced_value(ch, n)
+                    .unwrap_or_else(|| panic!("{name}: rank {r} not fully reduced"));
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-2, "{name} rank {r}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn reduce_scatter_executes() {
-        // Coverage satellite: no builder emits ReduceScatter yet, so
-        // exercise the op with hand-built schedules — external exchange
-        // across machines, local reads within one.
+        // Minimal hand-built schedules kept as engine regressions:
+        // external exchange across machines, local reads within one.
         use crate::sched::{Payload, Round, Xfer};
         let pat2 = |r: Rank, c: Chunk| vec![(r * 10 + c.0 as usize) as f32; 2];
 

@@ -48,6 +48,7 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
         model,
         sim: params.clone(),
         shortlist: usize::MAX,
+        ..TuneCfg::default()
     };
 
     let mut ext_rounds: Vec<Vec<f64>> = vec![Vec::new(); HEURISTICS.len()];

@@ -27,6 +27,10 @@
 //! * **autotuned**: [`tune`] enumerates every applicable builder,
 //!   ranks candidates by model cost, confirms with the simulator, and
 //!   caches the decision per topology fingerprint,
+//! * **calibrated**: [`calibrate`] measures the machine with micro-probe
+//!   schedules, fits the model parameters by least squares, and persists
+//!   a versioned [`calibrate::MachineProfile`] that the model, simulator
+//!   and tuner rebuild themselves from,
 //! * and **driven from the coordinator** for end-to-end workloads such as
 //!   data-parallel training with AOT-compiled JAX compute ([`coordinator`],
 //!   [`runtime`]).
@@ -37,6 +41,7 @@
 //! `EXPERIMENTS.md` for the reproduction of every quantitative claim in
 //! the paper.
 
+pub mod calibrate;
 pub mod collectives;
 pub mod coordinator;
 pub mod exec;

@@ -1,9 +1,13 @@
 //! `mcomm` CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   experiment <e1..e8|ablations|all> [--quick]  reproduce a paper claim
-//!   train [--steps N] [--algo A] [...]       end-to-end data-parallel run
+//!   experiment <e1..e8,e10|ablations|all> [--quick]  reproduce a paper claim
+//!   train [--steps N] [--algo A] [--virtual] [...]  end-to-end data-parallel
+//!                                            run (--virtual: deterministic
+//!                                            virtual-time comm accounting)
 //!   simulate --op OP --algo A [...]          one collective, sim-timed
+//!   calibrate [--wall] [--out PATH] [...]    measure the machine, fit the
+//!                                            model, write MachineProfile.json
 //!   trace --workload W --suite S [...]       workload-trace replay
 //!   validate                                 artifact + runtime smoke test
 //!
@@ -76,6 +80,7 @@ fn dispatch(args: &[String]) -> mcomm::Result<()> {
         }
         Some("train") => cmd_train(&flags),
         Some("simulate") => cmd_simulate(&flags),
+        Some("calibrate") => cmd_calibrate(&flags),
         Some("trace") => cmd_trace(&flags),
         Some("validate") => cmd_validate(&flags),
         _ => {
@@ -83,12 +88,23 @@ fn dispatch(args: &[String]) -> mcomm::Result<()> {
                 "mcomm — communication modeling for multi-core clusters\n\
                  \n\
                  usage:\n\
-                 \x20 mcomm experiment <e1..e8|ablations|all> [--quick]\n\
+                 \x20 mcomm experiment <e1..e8,e10|ablations|all> [--quick]\n\
                  \x20 mcomm train [--steps N] [--algo auto|ring|hier|recdoub|raben]\n\
                  \x20        [--machines M --cores C --nics K] [--lan] [--virtual]\n\
                  \x20        [--lr F]\n\
+                 \x20        --algo raben = rabenseifner allreduce (pow2 ranks);\n\
+                 \x20        --virtual   = deterministic virtual-time comm\n\
+                 \x20                      accounting (bit-reproducible times)\n\
                  \x20 mcomm simulate --op bcast|gather|alltoall|allreduce\n\
                  \x20        [--algo NAME] [--machines M --cores C --nics K] [--bytes B]\n\
+                 \x20 mcomm calibrate [--machines M --cores C --nics K]\n\
+                 \x20        [--virtual | --wall] [--repeats N] [--rounds N]\n\
+                 \x20        [--bytes B] [--out PATH] [--artifacts DIR]\n\
+                 \x20        run micro-probes, fit the machine model, write the\n\
+                 \x20        MachineProfile JSON (default: deterministic virtual\n\
+                 \x20        mode against the emulated LAN; --wall measures the\n\
+                 \x20        real host; --bytes = reference payload for the\n\
+                 \x20        rebuilt tuner's model/simulator)\n\
                  \x20 mcomm trace [--workload training|shuffle|mixed] [--suite flat|mc]\n\
                  \x20 mcomm validate [--artifacts DIR]"
             );
@@ -234,6 +250,73 @@ fn cmd_simulate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
         ]);
     }
     table.print();
+    Ok(())
+}
+
+fn cmd_calibrate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
+    use mcomm::calibrate::{CalibrateCfg, PARAM_NAMES};
+
+    let cluster = switched(
+        flag_usize(flags, "machines", 2),
+        flag_usize(flags, "cores", 4),
+        flag_usize(flags, "nics", 2),
+    );
+    let placement = mcomm::topology::Placement::block(&cluster);
+    let wall = flags.contains_key("wall");
+    anyhow::ensure!(
+        !(wall && flags.contains_key("virtual")),
+        "--wall and --virtual are mutually exclusive"
+    );
+    let mut cal = if wall {
+        CalibrateCfg::wall()
+    } else {
+        // Default: deterministic virtual-time calibration against the
+        // emulated LAN — bit-reproducible, which is what CI smokes.
+        CalibrateCfg::default()
+    };
+    if flags.contains_key("virtual") {
+        // Pin the mode even if the default ever changes: CI passes
+        // --virtual and depends on bit-reproducible profiles.
+        cal.exec.virtual_time = true;
+    }
+    cal.repeats = flag_usize(flags, "repeats", cal.repeats);
+    cal.rounds = flag_usize(flags, "rounds", cal.rounds);
+
+    println!(
+        "calibrating {} machines x {} ranks in {} mode ({} repeats/probe)",
+        cluster.num_machines(),
+        placement.num_ranks(),
+        cal.mode(),
+        cal.repeats
+    );
+    let chunk_bytes = flag_usize(flags, "bytes", 16 << 10) as u64;
+    let (comm, profile) =
+        Communicator::calibrated(cluster, placement, &cal, chunk_bytes)?;
+
+    let mut table = Table::new(vec!["parameter", "fitted"]);
+    for (name, v) in PARAM_NAMES.iter().zip(profile.theta()) {
+        let cell = if name.contains("byte") {
+            format!("{v:.3e} s/B")
+        } else {
+            ftime(v)
+        };
+        table.row(vec![name.to_string(), cell]);
+    }
+    table.row(vec!["nic_contention".to_string(), format!("{:.3}x", profile.nic_contention)]);
+    table.row(vec!["fit residual".to_string(), format!("{:.2e}", profile.residual)]);
+    table.print();
+    println!(
+        "derived model alpha: {:.4} | profile digest: {:016x}",
+        comm.tuner.cfg.model.alpha,
+        profile.digest()
+    );
+
+    let out = flags
+        .get("out")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| format!("{}/MachineProfile.json", artifact_dir(flags)));
+    profile.save(&out)?;
+    println!("profile written to {out}");
     Ok(())
 }
 

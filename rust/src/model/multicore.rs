@@ -71,6 +71,27 @@ impl Default for Multicore {
     }
 }
 
+impl Multicore {
+    /// Build the round model from a measured
+    /// [`crate::calibrate::MachineProfile`] at a reference message size.
+    ///
+    /// The model has exactly one free physical knob, `alpha`: how long
+    /// one unit of intra-machine work is relative to one network round.
+    /// From the fitted parameters, a network round moving `bytes` costs
+    /// `o_send + bytes·byte_ext + lat_ext + o_recv` and a local action
+    /// costs `o_write` (R1's write) or `bytes·byte_int` (R1's read) —
+    /// the model charges both action kinds one unit, so their mean is
+    /// the unit's length. `alpha` is the ratio, clamped to `[1e-4, 1]`
+    /// (R2 presumes local edges are *short*; a profile claiming
+    /// otherwise saturates at parity rather than inverting the rule).
+    pub fn from_profile(p: &crate::calibrate::MachineProfile, bytes: u64) -> Self {
+        let ext = p.o_send + bytes as f64 * p.byte_ext + p.lat_ext + p.o_recv;
+        let int = 0.5 * (p.o_write + bytes as f64 * p.byte_int);
+        let alpha = if ext > 0.0 { (int / ext).clamp(1e-4, 1.0) } else { 0.1 };
+        Self { duplex: Duplex::Full, alpha }
+    }
+}
+
 /// Round-model cost under [`Multicore`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct McCost {
@@ -537,6 +558,39 @@ mod tests {
         let low = LoweredSchedule::compile(&ctx1, &s).unwrap();
         assert!(Multicore::default().cost_detail_lowered(&low).is_err());
         assert!(Multicore::default().cost_detail(&c1, &p1, &s).is_err());
+    }
+
+    #[test]
+    fn from_profile_derives_alpha_from_measured_costs() {
+        let mut p = crate::calibrate::MachineProfile {
+            version: crate::calibrate::PROFILE_VERSION,
+            o_send: 2e-6,
+            o_recv: 2e-6,
+            o_write: 1e-6,
+            lat_ext: 50e-6,
+            byte_ext: 9e-9,
+            byte_int: 0.0,
+            round_overhead: 0.0,
+            nic_contention: 1.0,
+            residual: 0.0,
+            mode: "virtual".into(),
+            repeats: 1,
+            probe_rounds: 1,
+            machines: 2,
+            ranks: 4,
+        };
+        let m = Multicore::from_profile(&p, 16 << 10);
+        // ext = 2+2+50 µs + 16KiB * 9ns ≈ 201.5 µs; int = 0.5 µs.
+        let want = 0.5e-6 / (54e-6 + 16384.0 * 9e-9);
+        assert!((m.alpha - want).abs() < 1e-9, "alpha {} vs {want}", m.alpha);
+        assert_eq!(m.duplex, Duplex::Full);
+
+        // A profile claiming local work costs more than a network round
+        // saturates at parity; a near-free one floors at 1e-4.
+        p.o_write = 1.0;
+        assert_eq!(Multicore::from_profile(&p, 1024).alpha, 1.0);
+        p.o_write = 1e-15;
+        assert_eq!(Multicore::from_profile(&p, 1024).alpha, 1e-4);
     }
 
     #[test]

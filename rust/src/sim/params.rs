@@ -114,6 +114,36 @@ impl SimParams {
         }
     }
 
+    /// Simulator physics taken from a measured
+    /// [`crate::calibrate::MachineProfile`] instead of a preset.
+    ///
+    /// Direct mappings: per-message overheads, wire latency and both
+    /// per-byte costs are the fitted values. Derived mappings: the LogP
+    /// `gap` is the fitted send overhead (the executor serializes
+    /// successive sends of one process by exactly that much), the
+    /// intra-machine latency is the fitted per-round constant (shared
+    /// memory has no separately measurable wire), and NIC tokens are
+    /// enforced only when the fan-out probes actually observed
+    /// contention (factor > 1.01) — a machine whose slots measured as
+    /// perfectly parallel should not be simulated with serialization it
+    /// does not have.
+    pub fn from_profile(p: &crate::calibrate::MachineProfile, chunk_bytes: u64) -> Self {
+        Self {
+            o_send: p.o_send,
+            o_recv: p.o_recv,
+            o_write: p.o_write,
+            gap: p.o_send,
+            lat_ext: p.lat_ext,
+            lat_int: p.round_overhead,
+            byte_time_ext: p.byte_ext,
+            byte_time_int: p.byte_int,
+            chunk_bytes,
+            nic_limited: p.nic_contention > 1.01,
+            respect_speed: false,
+            record_xfers: false,
+        }
+    }
+
     /// Builder-style: enable per-transfer records.
     pub fn with_records(mut self) -> Self {
         self.record_xfers = true;
@@ -148,5 +178,41 @@ mod tests {
         let p = SimParams::lan_cluster(1).with_records().with_chunk_bytes(77);
         assert!(p.record_xfers);
         assert_eq!(p.chunk_bytes, 77);
+    }
+
+    #[test]
+    fn from_profile_maps_measured_physics() {
+        let mut prof = crate::calibrate::MachineProfile {
+            version: crate::calibrate::PROFILE_VERSION,
+            o_send: 2e-6,
+            o_recv: 3e-6,
+            o_write: 1e-6,
+            lat_ext: 50e-6,
+            byte_ext: 9e-9,
+            byte_int: 0.4e-9,
+            round_overhead: 0.2e-6,
+            nic_contention: 1.0,
+            residual: 0.0,
+            mode: "virtual".into(),
+            repeats: 1,
+            probe_rounds: 1,
+            machines: 2,
+            ranks: 4,
+        };
+        let p = SimParams::from_profile(&prof, 4096);
+        assert_eq!(p.o_send, 2e-6);
+        assert_eq!(p.o_recv, 3e-6);
+        assert_eq!(p.o_write, 1e-6);
+        assert_eq!(p.gap, 2e-6);
+        assert_eq!(p.lat_ext, 50e-6);
+        assert_eq!(p.lat_int, 0.2e-6);
+        assert_eq!(p.byte_time_ext, 9e-9);
+        assert_eq!(p.byte_time_int, 0.4e-9);
+        assert_eq!(p.chunk_bytes, 4096);
+        // Perfectly parallel slots measured => no simulated NIC tokens;
+        // observed contention switches them on.
+        assert!(!p.nic_limited);
+        prof.nic_contention = 1.5;
+        assert!(SimParams::from_profile(&prof, 4096).nic_limited);
     }
 }

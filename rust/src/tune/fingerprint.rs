@@ -46,6 +46,9 @@ pub struct Fingerprint {
     /// Stage-2 pool width — decides which candidates get simulated, so
     /// decisions made under different widths must not alias.
     shortlist: usize,
+    /// Digest of the machine profile the configuration was calibrated
+    /// from (0 = defaults) — recalibrating invalidates cached decisions.
+    profile: u64,
 }
 
 impl Fingerprint {
@@ -88,13 +91,14 @@ impl Fingerprint {
             alpha_bits: cfg.model.alpha.to_bits(),
             sim_bits: sim_digest(&cfg.sim),
             shortlist: cfg.shortlist,
+            profile: cfg.profile_digest,
         }
     }
 
     /// Short stable digest for logs and reports (FNV-1a over the full
     /// key). Collisions here are cosmetic; the cache compares full keys.
     pub fn digest(&self) -> u64 {
-        let mut h = 0xcbf29ce484222325u64;
+        let mut h = FNV_OFFSET;
         for &(c, n, s) in &self.machines {
             h = fnv(h, c as u64);
             h = fnv(h, n as u64);
@@ -113,11 +117,17 @@ impl Fingerprint {
         h = fnv(h, self.alpha_bits);
         h = fnv(h, self.sim_bits);
         h = fnv(h, self.shortlist as u64);
+        h = fnv(h, self.profile);
         h
     }
 }
 
-fn fnv(acc: u64, word: u64) -> u64 {
+/// FNV-1a offset basis — start value for every digest in the crate.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// FNV-1a fold step, shared by the fingerprint/schedule digests here and
+/// [`crate::calibrate::MachineProfile::digest`].
+pub(crate) fn fnv(acc: u64, word: u64) -> u64 {
     (acc ^ word).wrapping_mul(0x100000001b3)
 }
 
@@ -133,7 +143,7 @@ fn fnv(acc: u64, word: u64) -> u64 {
 /// extraction while collisions stay harmless.
 pub fn schedule_digest(s: &crate::sched::Schedule) -> u64 {
     use crate::sched::{CollectiveOp, XferKind};
-    let mut h = 0xcbf29ce484222325u64;
+    let mut h = FNV_OFFSET;
     let op_word = match s.op {
         CollectiveOp::Broadcast { root } => 1u64 << 56 | root as u64,
         CollectiveOp::Gather { root } => 2u64 << 56 | root as u64,
@@ -189,11 +199,12 @@ fn collective_tag(c: Collective) -> u64 {
         Collective::Allgather => 5 << 56,
         Collective::AllToAll => 6 << 56,
         Collective::Allreduce => 7 << 56,
+        Collective::ReduceScatter => 8 << 56,
     }
 }
 
 fn sim_digest(p: &SimParams) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
+    let mut h = FNV_OFFSET;
     for bits in [
         p.o_send.to_bits(),
         p.o_recv.to_bits(),
@@ -289,6 +300,15 @@ mod tests {
         let mut wide = TuneCfg::default();
         wide.shortlist = usize::MAX;
         assert_ne!(base, fp(&switched(3, 4, 2), &wide));
+
+        // Machine-profile provenance: identical model/sim knobs but a
+        // different calibration digest must not alias (recalibration
+        // invalidates cached decisions).
+        let mut recal = TuneCfg::default();
+        recal.profile_digest = 0xDEADBEEF;
+        let fp_recal = fp(&switched(3, 4, 2), &recal);
+        assert_ne!(base, fp_recal);
+        assert_ne!(base.digest(), fp_recal.digest());
     }
 
     #[test]

@@ -16,7 +16,8 @@
 //!   bottleneck `min(degree, cores)`.
 
 use crate::collectives::{
-    allgather, allreduce, alltoall, broadcast, gather, reduce, scatter, TargetHeuristic,
+    allgather, allreduce, alltoall, broadcast, gather, reduce, reduce_scatter, scatter,
+    TargetHeuristic,
 };
 use crate::sched::Schedule;
 use crate::topology::{Cluster, Interconnect, Placement};
@@ -33,6 +34,7 @@ pub enum Collective {
     Allgather,
     AllToAll,
     Allreduce,
+    ReduceScatter,
 }
 
 impl Collective {
@@ -46,6 +48,7 @@ impl Collective {
             Collective::Allgather => "allgather",
             Collective::AllToAll => "alltoall",
             Collective::Allreduce => "allreduce",
+            Collective::ReduceScatter => "reduce_scatter",
         }
     }
 }
@@ -76,6 +79,8 @@ pub enum CandidateId {
     AllreduceRecursiveDoubling,
     AllreduceRabenseifner,
     AllreduceHierarchicalMc,
+    ReduceScatterRing,
+    ReduceScatterRecursiveHalving,
 }
 
 impl CandidateId {
@@ -109,6 +114,10 @@ impl CandidateId {
             CandidateId::AllreduceRecursiveDoubling => "allreduce/recursive-doubling".into(),
             CandidateId::AllreduceRabenseifner => "allreduce/rabenseifner".into(),
             CandidateId::AllreduceHierarchicalMc => "allreduce/hierarchical-mc".into(),
+            CandidateId::ReduceScatterRing => "reduce_scatter/ring".into(),
+            CandidateId::ReduceScatterRecursiveHalving => {
+                "reduce_scatter/recursive-halving".into()
+            }
         }
     }
 
@@ -151,6 +160,10 @@ impl CandidateId {
             CandidateId::AllreduceRabenseifner => allreduce::rabenseifner(placement)?,
             CandidateId::AllreduceHierarchicalMc => {
                 allreduce::hierarchical_mc(cluster, placement)
+            }
+            CandidateId::ReduceScatterRing => reduce_scatter::ring(placement),
+            CandidateId::ReduceScatterRecursiveHalving => {
+                reduce_scatter::recursive_halving(placement)?
             }
         })
     }
@@ -257,6 +270,14 @@ pub fn candidates_for(
                 out.push(CandidateId::AllreduceHierarchicalMc);
             }
         }
+        Collective::ReduceScatter => {
+            if switch {
+                out.push(CandidateId::ReduceScatterRing);
+                if n.is_power_of_two() {
+                    out.push(CandidateId::ReduceScatterRecursiveHalving);
+                }
+            }
+        }
     }
     out
 }
@@ -276,6 +297,7 @@ pub fn flat_baseline(collective: Collective, cluster: &Cluster) -> Option<Candid
         Collective::Allgather => CandidateId::AllgatherRing,
         Collective::AllToAll => CandidateId::AlltoallPairwise,
         Collective::Allreduce => CandidateId::AllreduceRing,
+        Collective::ReduceScatter => CandidateId::ReduceScatterRing,
     })
 }
 
@@ -327,6 +349,7 @@ mod tests {
             Collective::Allgather,
             Collective::AllToAll,
             Collective::Allreduce,
+            Collective::ReduceScatter,
         ] {
             let ids = candidates_for(coll, &cl, &pl);
             assert!(!ids.is_empty(), "{}", coll.name());
@@ -349,5 +372,25 @@ mod tests {
         assert!(!ids.contains(&CandidateId::AllreduceRecursiveDoubling));
         assert!(!ids.contains(&CandidateId::AllreduceRabenseifner));
         assert!(ids.contains(&CandidateId::AllreduceRing));
+        let rs = candidates_for(Collective::ReduceScatter, &cl, &pl);
+        assert_eq!(rs, vec![CandidateId::ReduceScatterRing]);
+    }
+
+    #[test]
+    fn reduce_scatter_registered_with_baseline() {
+        let cl = switched(2, 4, 2); // 8 ranks: pow2, halving applies
+        let pl = Placement::block(&cl);
+        let ids = candidates_for(Collective::ReduceScatter, &cl, &pl);
+        assert_eq!(
+            ids,
+            vec![
+                CandidateId::ReduceScatterRing,
+                CandidateId::ReduceScatterRecursiveHalving
+            ]
+        );
+        assert_eq!(
+            flat_baseline(Collective::ReduceScatter, &cl),
+            Some(CandidateId::ReduceScatterRing)
+        );
     }
 }

@@ -58,6 +58,12 @@ pub struct TuneCfg {
     /// trade tuning time for decision quality; `usize::MAX` simulates
     /// every candidate (exhaustive mode, used by ablations).
     pub shortlist: usize,
+    /// Digest of the [`crate::calibrate::MachineProfile`] this
+    /// configuration was derived from (0 = hand-set constants). Part of
+    /// the decision-cache [`crate::tune::Fingerprint`], so decisions
+    /// tuned against one machine's measured physics are never served
+    /// after a recalibration changes them.
+    pub profile_digest: u64,
 }
 
 impl Default for TuneCfg {
@@ -66,6 +72,22 @@ impl Default for TuneCfg {
             model: Multicore::default(),
             sim: SimParams::lan_cluster(16 << 10),
             shortlist: 4,
+            profile_digest: 0,
+        }
+    }
+}
+
+impl TuneCfg {
+    /// Tuner configuration derived from a measured machine profile:
+    /// stage-1 ranking under [`Multicore::from_profile`], stage-2
+    /// confirmation under [`SimParams::from_profile`], and the profile's
+    /// digest folded into every cache fingerprint.
+    pub fn from_profile(p: &crate::calibrate::MachineProfile, chunk_bytes: u64) -> Self {
+        Self {
+            model: Multicore::from_profile(p, chunk_bytes),
+            sim: SimParams::from_profile(p, chunk_bytes),
+            shortlist: 4,
+            profile_digest: p.digest(),
         }
     }
 }

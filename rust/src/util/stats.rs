@@ -26,6 +26,21 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
+/// Trimmed mean: drop the lowest and highest `frac` of samples (rounded
+/// down, at least 0) and average the middle. The calibration runner's
+/// robust statistic — outliers from scheduler noise on loaded hosts fall
+/// off both ends. `frac` in [0, 0.5); empty input yields 0.
+pub fn trimmed_mean(xs: &[f64], frac: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cut = ((v.len() as f64) * frac.clamp(0.0, 0.49)) as usize;
+    let kept = &v[cut..v.len() - cut];
+    mean(kept)
+}
+
 /// p-th percentile (nearest-rank, p in [0,100]).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
@@ -100,6 +115,18 @@ mod tests {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
         assert_eq!(mean(&[]), 0.0);
         assert!((stddev(&[2.0, 4.0]) - std::f64::consts::SQRT_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_tails() {
+        // 25% trim on 8 samples drops 2 from each end.
+        let xs = [100.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, -50.0];
+        assert!((trimmed_mean(&xs, 0.25) - 3.5).abs() < 1e-12);
+        // No trim = plain mean; empty input is 0.
+        assert_eq!(trimmed_mean(&[2.0, 4.0], 0.0), 3.0);
+        assert_eq!(trimmed_mean(&[], 0.25), 0.0);
+        // Tiny samples never trim everything away.
+        assert_eq!(trimmed_mean(&[7.0], 0.4), 7.0);
     }
 
     #[test]

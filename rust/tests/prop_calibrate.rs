@@ -1,0 +1,211 @@
+//! Property tests for the calibration subsystem — the acceptance gates
+//! of the exec → model → tune loop:
+//!
+//! * **Round-trip**: `MachineProfile` JSON serialization is bit-exact,
+//!   including digests, across randomized profiles.
+//! * **Determinism**: the same probe data fits to a bit-identical
+//!   profile (virtual-time probes are themselves deterministic, so two
+//!   full calibrations agree bitwise).
+//! * **Recovery**: on synthetic virtual-time probes with injected
+//!   physics, every fitted parameter lands within 5% of the injected
+//!   value (in practice: float precision) across randomized topologies
+//!   *and* randomized injected parameters.
+//! * **Decisions move**: `tune::select` under a profile calibrated on a
+//!   skewed machine (slow NIC or slow shared memory) disagrees with the
+//!   default-constants configuration on at least one collective.
+
+use std::time::Duration;
+
+use mcomm::calibrate::{run_calibration, CalibrateCfg, MachineProfile, PARAM_NAMES};
+use mcomm::coordinator::Communicator;
+use mcomm::exec::ExecParams;
+use mcomm::topology::{switched, Placement};
+use mcomm::tune::{select, Collective, TuneCfg};
+use mcomm::util::Rng;
+
+fn random_profile(rng: &mut Rng) -> MachineProfile {
+    // Drive the fields through a real calibration? No — this exercises
+    // the codec against arbitrary magnitudes, including awkward
+    // non-terminating decimals.
+    MachineProfile {
+        version: mcomm::calibrate::PROFILE_VERSION,
+        o_send: rng.gen_f64() * 1e-4,
+        o_recv: rng.gen_f64() * 1e-4,
+        o_write: rng.gen_f64() * 1e-5,
+        lat_ext: rng.gen_f64() * 1e-2,
+        byte_ext: rng.gen_f64() / 3e9,
+        byte_int: rng.gen_f64() / 7e9,
+        round_overhead: rng.gen_f64() * 1e-6,
+        nic_contention: 1.0 + rng.gen_f64(),
+        residual: rng.gen_f64() * 1e-12,
+        mode: if rng.gen_bool(0.5) { "virtual".into() } else { "wall".into() },
+        repeats: 1 + rng.gen_range(0..9),
+        probe_rounds: 1 + rng.gen_range(0..8),
+        machines: 1 + rng.gen_range(0..16),
+        ranks: 1 + rng.gen_range(0..128),
+    }
+}
+
+#[test]
+fn profile_json_round_trip_is_bit_exact_randomized() {
+    let mut rng = Rng::seed_from_u64(0xCA11B);
+    for i in 0..200 {
+        let p = random_profile(&mut rng);
+        let back = MachineProfile::from_json(&p.to_json())
+            .unwrap_or_else(|e| panic!("iteration {i}: {e}\n{}", p.to_json()));
+        assert_eq!(p, back, "iteration {i}");
+        assert_eq!(p.digest(), back.digest(), "iteration {i}");
+        for (a, b) in p.theta().iter().zip(back.theta().iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "iteration {i}");
+        }
+    }
+}
+
+fn random_exec(rng: &mut Rng) -> ExecParams {
+    // Whole-nanosecond draws: Duration stores nanoseconds, so these are
+    // exactly the values the engine will account with.
+    fn micros(rng: &mut Rng, lo: u64, hi: u64) -> Duration {
+        Duration::from_nanos(1000 * (lo + rng.gen_range(0..(hi - lo) as usize) as u64))
+    }
+    ExecParams {
+        o_send: micros(rng, 1, 30),
+        o_recv: micros(rng, 1, 30),
+        o_write: micros(rng, 1, 10),
+        ext_latency: micros(rng, 10, 200),
+        ext_byte_time: Duration::from_nanos(1 + rng.gen_range(0..40) as u64),
+        int_byte_time: Duration::from_nanos(rng.gen_range(0..4) as u64),
+        ..ExecParams::zero()
+    }
+}
+
+/// The headline acceptance property: inject known virtual-time physics,
+/// calibrate, recover every parameter within 5% — across randomized
+/// topologies and randomized injected parameters.
+#[test]
+fn fitter_recovers_injected_physics_within_five_percent() {
+    let mut rng = Rng::seed_from_u64(0xF17);
+    for seed in 0..8 {
+        let machines = 2 + rng.gen_range(0..3);
+        let cores = 2 + rng.gen_range(0..3);
+        let nics = 1 + rng.gen_range(0..2);
+        let exec = random_exec(&mut rng);
+        let cfg = CalibrateCfg::virtual_with(exec.clone());
+        let comm = Communicator::block(switched(machines, cores, nics));
+        let profile = run_calibration(&comm, &cfg)
+            .unwrap_or_else(|e| panic!("seed {seed} ({machines}x{cores}): {e}"));
+
+        let truth = [
+            exec.o_send.as_secs_f64(),
+            exec.o_recv.as_secs_f64(),
+            exec.o_write.as_secs_f64(),
+            exec.ext_latency.as_secs_f64(),
+            exec.ext_byte_time.as_secs_f64(),
+            exec.int_byte_time.as_secs_f64(),
+            0.0,
+        ];
+        for ((name, want), got) in PARAM_NAMES.iter().zip(truth).zip(profile.theta()) {
+            let err = (got - want).abs() / want.abs().max(1e-9);
+            assert!(
+                err < 0.05,
+                "seed {seed} {name}: fitted {got} vs injected {want} (err {err:.2e})"
+            );
+        }
+        // Virtual clocks are contention-free by construction.
+        assert!(
+            (profile.nic_contention - 1.0).abs() < 1e-9,
+            "seed {seed}: contention {}",
+            profile.nic_contention
+        );
+        assert!(profile.residual < 1e-6, "seed {seed}: residual {}", profile.residual);
+    }
+}
+
+/// Same probe data ⇒ bit-identical profile. Virtual-time measurements
+/// are deterministic, so two independent end-to-end calibrations (fresh
+/// communicator, fresh engine, fresh fit) must agree bitwise — this
+/// pins both the runner and the fitter.
+#[test]
+fn calibration_is_bit_deterministic() {
+    for (m, c, k) in [(2usize, 2usize, 1usize), (3, 4, 2)] {
+        let cfg = CalibrateCfg::default();
+        let a = run_calibration(&Communicator::block(switched(m, c, k)), &cfg).unwrap();
+        let b = run_calibration(&Communicator::block(switched(m, c, k)), &cfg).unwrap();
+        assert_eq!(a, b, "{m}x{c}x{k}");
+        assert_eq!(a.digest(), b.digest());
+        for (x, y) in a.theta().iter().zip(b.theta().iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{m}x{c}x{k}");
+        }
+        // And the serialized artifact is byte-identical.
+        assert_eq!(a.to_json(), b.to_json());
+    }
+}
+
+/// Calibrating a skewed machine must actually *move* tuning decisions:
+/// select with the calibrated TuneCfg disagrees with the
+/// default-constants TuneCfg somewhere. Two opposite skews are swept
+/// (slow NIC / slow shared memory) over several topologies and every
+/// collective; at least one decision must change.
+#[test]
+fn calibrated_profile_changes_tuning_decisions_on_skewed_machines() {
+    // Slow NIC: millisecond latency, ~1 MB/s wire, free shared memory.
+    let slow_nic = ExecParams {
+        ext_latency: Duration::from_millis(10),
+        o_send: Duration::from_millis(1),
+        o_recv: Duration::from_millis(1),
+        ext_byte_time: Duration::from_micros(1),
+        o_write: Duration::from_nanos(10),
+        int_byte_time: Duration::from_nanos(0),
+        ..ExecParams::zero()
+    };
+    // Slow shared memory: reads/writes cost milliseconds against a fast,
+    // low-latency NIC.
+    let slow_shm = ExecParams {
+        ext_latency: Duration::from_micros(1),
+        o_send: Duration::from_micros(1),
+        o_recv: Duration::from_micros(1),
+        ext_byte_time: Duration::from_nanos(1),
+        o_write: Duration::from_millis(5),
+        int_byte_time: Duration::from_micros(1),
+        ..ExecParams::zero()
+    };
+
+    let probe_topo = Communicator::block(switched(2, 2, 1));
+    let default_cfg = TuneCfg::default();
+    let root = 0;
+    let colls = [
+        Collective::Broadcast { root },
+        Collective::Gather { root },
+        Collective::Scatter { root },
+        Collective::Reduce { root },
+        Collective::Allgather,
+        Collective::AllToAll,
+        Collective::Allreduce,
+        Collective::ReduceScatter,
+    ];
+    let topologies = [switched(4, 4, 2), switched(2, 8, 1), switched(8, 2, 2)];
+
+    let mut changed = 0usize;
+    let mut total = 0usize;
+    for exec in [slow_nic, slow_shm] {
+        let profile =
+            run_calibration(&probe_topo, &CalibrateCfg::virtual_with(exec)).unwrap();
+        let calibrated_cfg = TuneCfg::from_profile(&profile, 16 << 10);
+        assert_eq!(calibrated_cfg.profile_digest, profile.digest());
+        for cl in &topologies {
+            let pl = Placement::block(cl);
+            for coll in colls {
+                let d_def = select(cl, &pl, coll, &default_cfg).unwrap();
+                let d_cal = select(cl, &pl, coll, &calibrated_cfg).unwrap();
+                total += 1;
+                if d_def.choice != d_cal.choice {
+                    changed += 1;
+                }
+            }
+        }
+    }
+    assert!(
+        changed >= 1,
+        "calibrated physics changed no decision across {total} (collective, \
+         topology, skew) combinations — the profile is not reaching the tuner"
+    );
+}

@@ -108,6 +108,7 @@ fn engine_deliveries_match_lowered_simulator_records() {
             Collective::Allgather,
             Collective::AllToAll,
             Collective::Allreduce,
+            Collective::ReduceScatter,
         ] {
             for cand in candidates_for(coll, &cl, &pl) {
                 let s = cand

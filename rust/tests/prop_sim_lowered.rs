@@ -107,6 +107,7 @@ fn lowered_simulator_matches_reference_exactly() {
             Collective::Allgather,
             Collective::AllToAll,
             Collective::Allreduce,
+            Collective::ReduceScatter,
         ];
         for coll in colls {
             for id in candidates_for(coll, &cl, &pl) {

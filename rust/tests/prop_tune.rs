@@ -33,6 +33,7 @@ fn collectives_under_test(n: usize, rng: &mut Rng) -> Vec<Collective> {
         Collective::Allgather,
         Collective::AllToAll,
         Collective::Allreduce,
+        Collective::ReduceScatter,
     ]
 }
 
