@@ -26,10 +26,12 @@ fn main() -> mcomm::Result<()> {
         let br = legalize(&model, &cl, &pl, &alltoall::bruck(&pl));
         let la = alltoall::leader_aggregated(&cl, &pl, k.min(c));
         for bytes in [512u64, 4096] {
-            let params = SimParams::lan_2008(bytes);
-            let tp = simulate(&cl, &pl, &pw, &params)?.t_end;
-            let tb = simulate(&cl, &pl, &br, &params)?.t_end;
-            let tl = simulate(&cl, &pl, &la, &params)?.t_end;
+            let params = SimParams::lan_2008();
+            // `bytes` per pair block: the op moves n^2 blocks.
+            let n = pl.num_ranks() as u64;
+            let tp = simulate(&cl, &pl, &pw.clone().with_total_bytes(bytes * n * n), &params)?.t_end;
+            let tb = simulate(&cl, &pl, &br.clone().with_total_bytes(bytes * n * n), &params)?.t_end;
+            let tl = simulate(&cl, &pl, &la.clone().with_total_bytes(bytes * n * n), &params)?.t_end;
             table.row(vec![
                 format!("{m}x{c}x{k}"),
                 format!("{bytes}B"),

@@ -9,7 +9,6 @@
 //!
 //! Run: `cargo run --release --example autotune_study`
 
-use mcomm::sim::SimParams;
 use mcomm::topology::{switched, Placement};
 use mcomm::tune::{Collective, TuneCfg, Tuned};
 use mcomm::util::table::{ftime, Table};
@@ -70,10 +69,7 @@ fn main() -> mcomm::Result<()> {
     let pl = Placement::block(&cl);
     let mut table = Table::new(vec!["payload", "tuned pick", "tuned", "baseline"]);
     for kib in [1u64, 16, 256, 4096] {
-        let tuner = Tuned::new(TuneCfg {
-            sim: SimParams::lan_cluster(kib << 10),
-            ..TuneCfg::default()
-        });
+        let tuner = Tuned::new(TuneCfg::default().with_msg_bytes(kib << 10));
         let d = tuner.decision(&cl, &pl, Collective::Broadcast { root: 0 })?;
         table.row(vec![
             format!("{kib} KiB"),

@@ -15,7 +15,8 @@ use mcomm::util::table::{ftime, Table};
 
 fn main() -> mcomm::Result<()> {
     let model = Multicore::default();
-    let params = SimParams::lan_cluster(64 << 10);
+    let params = SimParams::lan_cluster();
+    let bytes = 64u64 << 10;
 
     println!("== broadcast across cluster shapes (64 KiB payload) ==");
     let mut table = Table::new(vec![
@@ -31,7 +32,8 @@ fn main() -> mcomm::Result<()> {
                 "binomial" => legalize(&model, &cl, &pl, &broadcast::binomial(&pl, 0)),
                 "hier" => broadcast::hierarchical(&cl, &pl, 0),
                 _ => broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit),
-            };
+            }
+            .with_total_bytes(bytes);
             let cost = model.cost_detail(&cl, &pl, &s)?;
             let t = simulate(&cl, &pl, &s, &params)?.t_end;
             cells.push(format!("{} rds / {}", cost.ext_rounds, ftime(t)));

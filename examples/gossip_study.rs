@@ -28,11 +28,13 @@ fn main() -> mcomm::Result<()> {
         let cl = switched(m, c, k);
         let pl = Placement::block(&cl);
         let slots = k.min(c);
-        let ring = legalize(&model, &cl, &pl, &allgather::ring(&pl));
-        let mc = allgather::mc_aware(&cl, &pl, slots);
+        // 2 KiB per rank slot.
+        let bytes = 2048 * pl.num_ranks() as u64;
+        let ring = legalize(&model, &cl, &pl, &allgather::ring(&pl).with_total_bytes(bytes));
+        let mc = allgather::mc_aware(&cl, &pl, slots).with_total_bytes(bytes);
         let cr = model.cost_detail(&cl, &pl, &ring)?;
         let cm = model.cost_detail(&cl, &pl, &mc)?;
-        let params = SimParams::lan_2008(2048);
+        let params = SimParams::lan_2008();
         let tr = simulate(&cl, &pl, &ring, &params)?.t_end;
         let tm = simulate(&cl, &pl, &mc, &params)?.t_end;
         t.row(vec![

@@ -30,8 +30,11 @@ fn main() -> mcomm::Result<()> {
     let flat = comm.broadcast(BroadcastAlgo::Binomial, 0);
     // Flat algorithms oversubscribe NICs; legalize serializes them the
     // way a real cluster would.
-    let flat = legalize(&model, &comm.cluster, &comm.placement, &flat);
-    let mc = comm.broadcast(BroadcastAlgo::McAware(TargetHeuristic::CoverageAware), 0);
+    let flat = legalize(&model, &comm.cluster, &comm.placement, &flat)
+        .with_total_bytes(64 << 10);
+    let mc = comm
+        .broadcast(BroadcastAlgo::McAware(TargetHeuristic::CoverageAware), 0)
+        .with_total_bytes(64 << 10);
 
     let mut table = Table::new(vec![
         "algorithm", "verified", "ext rounds", "int units", "sim (64 KiB)", "real exec",
@@ -42,7 +45,7 @@ fn main() -> mcomm::Result<()> {
         // 2. Price it under the paper's model.
         let cost = model.cost_detail(&comm.cluster, &comm.placement, s)?;
         // 3. Time it on the simulated testbed.
-        let sim = comm.simulate(s, &SimParams::lan_cluster(64 << 10))?;
+        let sim = comm.simulate(s, &SimParams::lan_cluster())?;
         // 4. Move real bytes through real threads.
         let inputs = initial_inputs(s, |_r, _c| vec![42.0f32; 1024]);
         let rep = comm.execute(s, inputs, &ExecParams::zero())?;

@@ -14,7 +14,7 @@ use mcomm::util::table::{ftime, Table};
 fn main() -> mcomm::Result<()> {
     let comm = Communicator::block(switched(8, 8, 2));
     // 2008-class MPI stack: per-message overheads dominate small transfers
-    let params = SimParams::lan_2008(1);
+    let params = SimParams::lan_2008();
 
     let workloads: Vec<(&str, Trace)> = vec![
         ("training (50 steps, 4 MiB grads)", Trace::training(50, 4 << 20)),

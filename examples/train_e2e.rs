@@ -37,6 +37,7 @@ fn main() -> mcomm::Result<()> {
             exec_params: ExecParams::lan_scaled(),
             seed: 7,
             log_every: (steps / 10).max(1),
+            ..Default::default()
         };
         let trainer = Trainer::new(&dir, &cfg)?;
         println!(

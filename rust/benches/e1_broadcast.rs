@@ -16,8 +16,9 @@ fn main() {
     bench("mc_aware broadcast build (64x8)", || {
         std::hint::black_box(broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit));
     });
-    let s = broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit);
-    let params = SimParams::lan_cluster(64 << 10);
+    let s = broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit)
+        .with_total_bytes(64 << 10);
+    let params = SimParams::lan_cluster();
     bench("simulate mc broadcast (64x8)", || {
         std::hint::black_box(simulate(&cl, &pl, &s, &params).unwrap());
     });

@@ -79,7 +79,7 @@ fn main() {
     // Simulator throughput: transfers per second on a big schedule.
     // Steady state (the autotuner's stage-2 regime): compiled once,
     // arena scratch reused across runs.
-    let params = SimParams::lan_cluster(4 << 10);
+    let params = SimParams::lan_cluster();
     let total_xfers = ring.total_xfers();
     println!("(ring schedule: {total_xfers} transfers)");
     // "simulate:" keeps its pre-PR-2 semantics (the one-shot wrapper:
@@ -92,6 +92,24 @@ fn main() {
     let mut arena = SimArena::new();
     stats.push(bench("simulate steady-state: ring (128)", || {
         std::hint::black_box(simulate_lowered(&ring_low, &params, &mut arena));
+    }));
+
+    // Segmented pipeline transform + its simulation: the sized-scheduling
+    // additions (per-candidate cost of the segment sweep, and engine
+    // throughput over a pipelined schedule's overlapping rounds).
+    let chain = broadcast::chain_mc(&cl, &pl, 0).with_total_bytes(16 << 20);
+    stats.push(bench("segmented: transform chain S=8 (128)", || {
+        std::hint::black_box(
+            mcomm::collectives::segmented(&cl, &pl, &chain, 8).unwrap(),
+        );
+    }));
+    let seg = mcomm::collectives::segmented(&cl, &pl, &chain, 8).unwrap();
+    let seg_low = LoweredSchedule::compile(&ctx, &seg).unwrap();
+    stats.push(bench("segmented: simulate chain S=8 (128)", || {
+        std::hint::black_box(simulate_lowered(&seg_low, &params, &mut arena));
+    }));
+    stats.push(bench("segmented: model cost chain S=8 (128)", || {
+        std::hint::black_box(model.cost_detail_lowered(&seg_low).unwrap());
     }));
 
     // Autotuner end-to-end (the e9 scenario's topology): cold select and

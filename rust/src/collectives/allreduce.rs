@@ -208,7 +208,7 @@ pub fn rabenseifner(placement: &Placement) -> crate::Result<Schedule> {
 /// model.validate(&cluster, &placement, &s).unwrap(); // legal as built
 /// // Round-model cost and continuous-time cost, same schedule value.
 /// assert!(model.cost(&cluster, &placement, &s).unwrap() > 0.0);
-/// let t = simulate(&cluster, &placement, &s, &SimParams::lan_cluster(1024))
+/// let t = simulate(&cluster, &placement, &s, &SimParams::lan_cluster())
 ///     .unwrap()
 ///     .t_end;
 /// assert!(t > 0.0);

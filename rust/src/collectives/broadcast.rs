@@ -210,6 +210,73 @@ pub fn hierarchical(cluster: &Cluster, placement: &Placement, root: Rank) -> Sch
     s
 }
 
+/// Machine-level chain (pipeline) broadcast: machines form a line
+/// starting at the root's machine; per round, the current head's
+/// representative forwards the message to the next machine's leader over
+/// the network *and* publishes it locally with one shared-memory write
+/// (R2: the write rides free inside the network round).
+///
+/// Alone this is a poor broadcast — `M - 1` external rounds against the
+/// dissemination builders' `log` — but it is the canonical *pipelining*
+/// substrate: every process sends in exactly one round, so
+/// [`fn@crate::collectives::segmented`] can overlap `S` payload waves into
+/// `M + S - 2` external rounds of `1/S`-sized messages each. For
+/// bandwidth-dominated payloads that beats every tree that ships the
+/// full message per hop ("Fast Tuning of Intra-Cluster Collective
+/// Communications" finds exactly this segmented-chain regime for large
+/// messages). Requires a switched interconnect (the machine line is not
+/// edge-aware).
+///
+/// ```
+/// use mcomm::collectives::broadcast;
+/// use mcomm::sched::symexec;
+/// use mcomm::topology::{switched, Placement};
+///
+/// let cluster = switched(4, 2, 1);
+/// let placement = Placement::block(&cluster);
+/// let s = broadcast::chain_mc(&cluster, &placement, 0);
+/// symexec::verify(&s).unwrap();
+/// assert_eq!(s.external_rounds(), 3); // M - 1 hops
+/// ```
+pub fn chain_mc(cluster: &Cluster, placement: &Placement, root: Rank) -> Schedule {
+    let n = placement.num_ranks();
+    let mut s = Schedule::new(CollectiveOp::Broadcast { root }, n, "chain-mc");
+    let root_m = placement.machine_of(root);
+    let m_count = cluster.num_machines();
+    let payload = || Payload::single(0, root);
+
+    // Chain order: root's machine first, the rest in ascending id order.
+    let order: Vec<usize> = std::iter::once(root_m)
+        .chain((0..m_count).filter(|&m| m != root_m))
+        .collect();
+    let rep = |m: usize| -> Rank {
+        if m == root_m {
+            root
+        } else {
+            placement.machine_leader(m)
+        }
+    };
+
+    for (i, &m) in order.iter().enumerate() {
+        let sender = rep(m);
+        let mut xfers = Vec::new();
+        if i + 1 < m_count {
+            xfers.push(Xfer::external(sender, rep(order[i + 1]), payload()));
+        }
+        let dsts: Vec<Rank> = placement
+            .ranks_on(m)
+            .iter()
+            .copied()
+            .filter(|&x| x != sender)
+            .collect();
+        if !dsts.is_empty() {
+            xfers.push(Xfer::local_write(sender, dsts, payload()));
+        }
+        s.push_round(Round { xfers });
+    }
+    s
+}
+
 /// Multi-core-aware broadcast (the paper's algorithm).
 ///
 /// Per external round, every process that holds the value and whose
@@ -454,6 +521,31 @@ mod tests {
         let sg = hierarchical(&g, &pg, 0);
         symexec::verify(&sg).unwrap();
         Multicore::default().validate(&g, &pg, &sg).unwrap();
+    }
+
+    #[test]
+    fn chain_mc_verifies_all_roots_and_counts() {
+        let c = switched(4, 3, 1);
+        let p = Placement::block(&c);
+        for root in 0..12 {
+            let s = chain_mc(&c, &p, root);
+            symexec::verify(&s).unwrap();
+            Multicore::default().validate(&c, &p, &s).unwrap();
+            // M - 1 hops; every round also publishes locally (R2-free in
+            // the hop rounds, one trailing write round on the last link).
+            assert_eq!(s.external_rounds(), 3, "root {root}");
+            assert_eq!(s.external_messages(), 3, "root {root}");
+        }
+    }
+
+    #[test]
+    fn chain_mc_single_machine_is_one_write() {
+        let c = switched(1, 6, 1);
+        let p = Placement::block(&c);
+        let s = chain_mc(&c, &p, 4);
+        symexec::verify(&s).unwrap();
+        assert_eq!(s.external_messages(), 0);
+        assert_eq!(s.num_rounds(), 1);
     }
 
     #[test]

@@ -15,6 +15,10 @@
 //!   local broadcast (R1), cheap local edges (R2) and all NICs driven in
 //!   parallel (R3).
 //!
+//! Orthogonally, [`fn@segmented`] pipelines any builder's output into `S`
+//! payload waves (1/S-sized messages, overlapping rounds) — the
+//! large-message lever the tuner sweeps per (topology, size) pair.
+//!
 //! Every builder's output is symbolically verified
 //! ([`crate::sched::symexec`]) in this module's tests and hammered with
 //! randomized topologies in `rust/tests/prop_collectives.rs` — under
@@ -34,5 +38,7 @@ pub mod helpers;
 pub mod reduce;
 pub mod reduce_scatter;
 pub mod scatter;
+pub mod segmented;
 
 pub use broadcast::TargetHeuristic;
+pub use segmented::segmented;

@@ -167,9 +167,9 @@ impl Communicator {
     /// physics: run the calibration probe suite
     /// ([`crate::calibrate::run_calibration`]) on this topology's own
     /// persistent engine, fit a [`MachineProfile`], and rebuild the
-    /// embedded tuner from it ([`TuneCfg::from_profile`], at
-    /// `chunk_bytes` reference payload). The profile is returned
-    /// alongside so callers can persist it (`mcomm calibrate` does).
+    /// embedded tuner from it ([`TuneCfg::from_profile`], tuning for
+    /// `msg_bytes` total payload). The profile is returned alongside so
+    /// callers can persist it (`mcomm calibrate` does).
     ///
     /// The probe plans stay in the plan cache and the worker pool stays
     /// warm, so the calibration run doubles as engine warm-up.
@@ -177,11 +177,11 @@ impl Communicator {
         cluster: Cluster,
         placement: Placement,
         cal: &crate::calibrate::CalibrateCfg,
-        chunk_bytes: u64,
+        msg_bytes: u64,
     ) -> crate::Result<(Self, MachineProfile)> {
         let mut comm = Self::new(cluster, placement);
         let profile = crate::calibrate::run_calibration(&comm, cal)?;
-        comm.tuner = Tuned::new(TuneCfg::from_profile(&profile, chunk_bytes));
+        comm.tuner = Tuned::new(TuneCfg::from_profile(&profile, msg_bytes));
         Ok((comm, profile))
     }
 
@@ -503,7 +503,7 @@ mod tests {
         let c = comm.cost(&Multicore::default(), &s).unwrap();
         assert!(c >= 1.0);
         let r = comm
-            .simulate(&s, &crate::sim::SimParams::lan_cluster(1024))
+            .simulate(&s, &crate::sim::SimParams::lan_cluster())
             .unwrap();
         assert!(r.t_end > 0.0);
     }

@@ -12,4 +12,6 @@ pub use comm::{
     GatherAlgo,
 };
 pub use data::Corpus;
-pub use trainer::{TrainReport, Trainer, TrainerCfg};
+pub use trainer::{
+    collect_reduced_grads, seed_grad_store, TrainReport, Trainer, TrainerCfg,
+};

@@ -46,6 +46,10 @@ pub struct TrainerCfg {
     pub seed: u64,
     /// Print a progress line every N steps (0 = silent).
     pub log_every: usize,
+    /// Payload size the embedded autotuner assumes when
+    /// [`AllreduceAlgo::Auto`] picks the gradient schedule (`mcomm train
+    /// --bytes`). `None` = the real gradient size, `4 × num_params`.
+    pub tune_bytes: Option<u64>,
 }
 
 impl Default for TrainerCfg {
@@ -60,6 +64,7 @@ impl Default for TrainerCfg {
             exec_params: ExecParams::zero(),
             seed: 0,
             log_every: 10,
+            tune_bytes: None,
         }
     }
 }
@@ -94,8 +99,6 @@ pub struct Trainer {
     apply: Artifact,
     comm: Communicator,
     schedule: Schedule,
-    chunks: usize,
-    chunk_len: usize,
     corpus: Corpus,
 }
 
@@ -104,17 +107,24 @@ impl Trainer {
         let runtime = Runtime::cpu(artifact_dir)?;
         let grad = runtime.load("grad")?;
         let apply = runtime.load("apply")?;
-        let cluster = crate::topology::switched(cfg.machines, cfg.cores, cfg.nics);
-        let comm = Communicator::block(cluster);
-        let schedule = comm.allreduce(cfg.algo)?;
-        let chunks = match schedule.op {
-            CollectiveOp::Allreduce { chunks } => chunks as usize,
-            _ => unreachable!("allreduce schedule"),
-        };
         let p = runtime.meta.num_params;
-        let chunk_len = p.div_ceil(chunks);
+        let grad_bytes = 4 * p as u64; // f32 gradients
+        let cluster = crate::topology::switched(cfg.machines, cfg.cores, cfg.nics);
+        let placement = crate::topology::Placement::block(&cluster);
+        // Size the autotuner for the gradient payload so `Auto` picks
+        // the right algorithm (and segment count) for what we actually
+        // ship — not for a default reference size.
+        let tune_cfg = crate::tune::TuneCfg::default()
+            .with_msg_bytes(cfg.tune_bytes.unwrap_or(grad_bytes));
+        let comm = Communicator::with_tune_cfg(cluster, placement, tune_cfg);
+        let mut schedule = comm.allreduce(cfg.algo)?;
+        // The executed schedule carries the true payload: f32 elements,
+        // uneven tail chunk priced exactly (MsgSpec's div_ceil split
+        // matches the gradient bucketing below).
+        schedule.set_payload(grad_bytes, 4);
+        debug_assert!(matches!(schedule.op, CollectiveOp::Allreduce { .. }));
         let corpus = Corpus::synthetic(1 << 16, cfg.seed ^ 0xC0FFEE);
-        Ok(Self { runtime, grad, apply, comm, schedule, chunks, chunk_len, corpus })
+        Ok(Self { runtime, grad, apply, comm, schedule, corpus })
     }
 
     pub fn workers(&self) -> usize {
@@ -234,41 +244,142 @@ impl Trainer {
         let w = self.workers();
         anyhow::ensure!(worker_grads.len() == w, "one gradient per worker");
         let p = self.num_params();
-        let (chunks, chunk_len) = (self.chunks, self.chunk_len);
 
         let inputs: Vec<BufferStore> = (0..w)
-            .map(|r| {
-                let mut store = BufferStore::default();
-                for c in 0..chunks {
-                    let lo = c * chunk_len;
-                    let hi = ((c + 1) * chunk_len).min(p);
-                    let mut data = worker_grads[r][lo..hi].to_vec();
-                    data.resize(chunk_len, 0.0); // pad the tail chunk
-                    store.seed(Chunk(c as u32), ContribSet::singleton(r), data);
-                }
-                store
-            })
+            .map(|r| seed_grad_store(&self.schedule, r, &worker_grads[r]))
             .collect();
 
         let report = self.comm.execute(&self.schedule, inputs, exec_params)?;
-
-        // Reassemble rank 0's reduced chunks into the flat vector.
-        let mut out = vec![0.0f32; p];
-        for c in 0..chunks {
-            let sum = report.outputs[0]
-                .reduced_value(Chunk(c as u32), w)
-                .ok_or_else(|| anyhow::anyhow!("chunk {c} not fully reduced"))?;
-            let lo = c * chunk_len;
-            let hi = ((c + 1) * chunk_len).min(p);
-            out[lo..hi].copy_from_slice(&sum[..hi - lo]);
-        }
+        let out = collect_reduced_grads(&self.schedule, &report.outputs[0], w, p)?;
         Ok((out, report.virtual_time))
     }
+}
+
+/// Seed one worker's gradient vector into a [`BufferStore`] chunk by
+/// chunk, following the schedule's [`crate::sched::MsgSpec`] exactly:
+/// every raw chunk (segments included) gets the *true* slice of the
+/// gradient — the uneven tail chunk is seeded at its real length, never
+/// padded, so the executor moves (and the models price) exactly
+/// `4 × num_params` bytes.
+pub fn seed_grad_store(schedule: &Schedule, rank: usize, grad: &[f32]) -> BufferStore {
+    let spec = schedule.msg;
+    let mut store = BufferStore::default();
+    for raw in 0..spec.num_chunks() {
+        let (lo, hi) = spec.chunk_elem_range_raw(raw);
+        store.seed(
+            Chunk(raw),
+            ContribSet::singleton(rank),
+            grad[lo as usize..hi as usize].to_vec(),
+        );
+    }
+    store
+}
+
+/// Reassemble the fully-reduced gradient (length `num_params`) from a
+/// rank's output store, chunk ranges from the schedule's
+/// [`crate::sched::MsgSpec`].
+pub fn collect_reduced_grads(
+    schedule: &Schedule,
+    output: &BufferStore,
+    num_workers: usize,
+    num_params: usize,
+) -> crate::Result<Vec<f32>> {
+    let spec = schedule.msg;
+    let mut out = vec![0.0f32; num_params];
+    for raw in 0..spec.num_chunks() {
+        let (lo, hi) = spec.chunk_elem_range_raw(raw);
+        if lo == hi {
+            continue; // empty tail chunk (more chunks than elements)
+        }
+        let sum = output
+            .reduced_value(Chunk(raw), num_workers)
+            .ok_or_else(|| anyhow::anyhow!("chunk {raw} not fully reduced"))?;
+        anyhow::ensure!(
+            sum.len() == (hi - lo) as usize,
+            "chunk {raw}: reduced {} elements, expected {}",
+            sum.len(),
+            hi - lo
+        );
+        out[lo as usize..hi as usize].copy_from_slice(&sum);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Regression (uneven gradient chunking): `num_params % chunks != 0`
+    /// must seed the true tail length (no padding), execute to the exact
+    /// sum, and account exactly `4 × num_params` bytes in both the
+    /// model's and the simulator's view. Runs the real executor through
+    /// the Communicator without any compiled artifacts.
+    #[test]
+    fn uneven_gradient_chunks_reduce_exactly() {
+        use crate::sim::{simulate, SimParams};
+        let comm = Communicator::block(crate::topology::switched(2, 2, 1));
+        let w = comm.num_ranks(); // 4 workers → ring uses 4 chunks
+        let p = 10usize; // 10 % 4 != 0: chunk elems 3,3,3,1
+        let mut schedule = comm.allreduce(AllreduceAlgo::Ring).unwrap();
+        schedule.set_payload(4 * p as u64, 4);
+        assert_eq!(schedule.msg.chunk_bytes(0), 12);
+        assert_eq!(schedule.msg.chunk_bytes(3), 4); // the uneven tail
+
+        let grads: Vec<Vec<f32>> = (0..w)
+            .map(|r| (0..p).map(|i| (r * 100 + i) as f32 * 0.5).collect())
+            .collect();
+        // Seeded stores carry true lengths — the tail chunk is 1 element.
+        let store = seed_grad_store(&schedule, 3, &grads[3]);
+        assert_eq!(store.buffers(Chunk(3))[0].data.len(), 1);
+
+        let inputs: Vec<BufferStore> =
+            (0..w).map(|r| seed_grad_store(&schedule, r, &grads[r])).collect();
+        let rep = comm.execute(&schedule, inputs, &ExecParams::zero()).unwrap();
+        let out = collect_reduced_grads(&schedule, &rep.outputs[0], w, p).unwrap();
+        for i in 0..p {
+            let want: f32 = (0..w).map(|r| grads[r][i]).sum();
+            assert!((out[i] - want).abs() < 1e-4, "i={i}: {} vs {want}", out[i]);
+        }
+
+        // The models price exactly the real bytes: the simulator's
+        // external byte count is a whole multiple of true chunk sizes,
+        // never of a padded chunk length.
+        let sim = simulate(
+            &comm.cluster,
+            &comm.placement,
+            &schedule,
+            &SimParams::lan_cluster(),
+        )
+        .unwrap();
+        let per_chunk: Vec<u64> = (0..4).map(|c| schedule.msg.chunk_bytes(c)).collect();
+        assert_eq!(per_chunk.iter().sum::<u64>(), 4 * p as u64);
+        // Ring allreduce moves each chunk around the ring: bytes are a
+        // sum of true per-chunk sizes; padded 3-element chunks would
+        // inflate this by 2 bytes-per-element × transfers.
+        let ext_per_lap: u64 = per_chunk.iter().sum();
+        assert_eq!(sim.ext_bytes % ext_per_lap, 0, "{} bytes", sim.ext_bytes);
+    }
+
+    /// More chunks than elements: trailing chunks are empty, reduction
+    /// still completes and reassembles.
+    #[test]
+    fn more_chunks_than_params_is_handled() {
+        let comm = Communicator::block(crate::topology::switched(2, 4, 1));
+        let w = comm.num_ranks(); // 8 workers → ring uses 8 chunks
+        let p = 5usize; // chunks 0..5 get 1 elem, 5..8 get none
+        let mut schedule = comm.allreduce(AllreduceAlgo::Ring).unwrap();
+        schedule.set_payload(4 * p as u64, 4);
+        let grads: Vec<Vec<f32>> =
+            (0..w).map(|r| (0..p).map(|i| (r + i) as f32).collect()).collect();
+        let inputs: Vec<BufferStore> =
+            (0..w).map(|r| seed_grad_store(&schedule, r, &grads[r])).collect();
+        let rep = comm.execute(&schedule, inputs, &ExecParams::zero()).unwrap();
+        let out = collect_reduced_grads(&schedule, &rep.outputs[0], w, p).unwrap();
+        for i in 0..p {
+            let want: f32 = (0..w).map(|r| grads[r][i]).sum();
+            assert!((out[i] - want).abs() < 1e-4, "i={i}");
+        }
+    }
 
     fn artifacts_dir() -> Option<&'static str> {
         let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");

@@ -107,53 +107,57 @@ pub fn run(
 
 /// Seed stores per the op's initial-state semantics with caller-provided
 /// data: `data(rank, chunk)` returns the values rank `rank` contributes
-/// for `chunk`.
+/// for `chunk`. Chunk ids are *raw* ids — for a segmented schedule
+/// (`msg.segments > 1`, see [`crate::sched::MsgSpec`]) every base chunk
+/// `c` is seeded as its `segments` raw chunks `c * segments + k`, each
+/// queried separately, mirroring [`crate::sched::symexec::initial_state`].
 pub fn initial_inputs(
     schedule: &Schedule,
     mut data: impl FnMut(Rank, Chunk) -> Vec<f32>,
 ) -> Vec<BufferStore> {
     use crate::sched::CollectiveOp as Op;
     let n = schedule.num_ranks;
+    let segs = schedule.msg.segments.max(1);
     let mut stores: Vec<BufferStore> = (0..n).map(|_| BufferStore::default()).collect();
+    let mut seed = |stores: &mut Vec<BufferStore>, rank: Rank, base: u32| {
+        for k in 0..segs {
+            let c = Chunk(base * segs + k);
+            let d = data(rank, c);
+            stores[rank].seed(c, ContribSet::singleton(rank), d);
+        }
+    };
     match schedule.op {
         Op::Broadcast { root } => {
-            let d = data(root, Chunk(0));
-            stores[root].seed(Chunk(0), ContribSet::singleton(root), d);
+            seed(&mut stores, root, 0);
         }
         Op::Gather { .. } | Op::Allgather => {
             for r in 0..n {
-                let d = data(r, Chunk(r as u32));
-                stores[r].seed(Chunk(r as u32), ContribSet::singleton(r), d);
+                seed(&mut stores, r, r as u32);
             }
         }
         Op::Scatter { root } => {
             for c in 0..n {
-                let d = data(root, Chunk(c as u32));
-                stores[root].seed(Chunk(c as u32), ContribSet::singleton(root), d);
+                seed(&mut stores, root, c as u32);
             }
         }
         Op::AllToAll => {
             for s in 0..n {
                 for dch in 0..n {
-                    let c = Chunk((s * n + dch) as u32);
-                    let d = data(s, c);
-                    stores[s].seed(c, ContribSet::singleton(s), d);
+                    seed(&mut stores, s, (s * n + dch) as u32);
                 }
             }
         }
         Op::Reduce { chunks, .. } | Op::Allreduce { chunks } => {
             for r in 0..n {
                 for c in 0..chunks {
-                    let d = data(r, Chunk(c));
-                    stores[r].seed(Chunk(c), ContribSet::singleton(r), d);
+                    seed(&mut stores, r, c);
                 }
             }
         }
         Op::ReduceScatter => {
             for r in 0..n {
                 for c in 0..n {
-                    let d = data(r, Chunk(c as u32));
-                    stores[r].seed(Chunk(c as u32), ContribSet::singleton(r), d);
+                    seed(&mut stores, r, c as u32);
                 }
             }
         }
@@ -381,6 +385,115 @@ mod tests {
         let rep = run(&c, &p, &s, initial_inputs(&s, pat2), &ExecParams::zero()).unwrap();
         for r in 0..2usize {
             assert!(rep.outputs[r].reduced_value(Chunk(r as u32), 2).is_some(), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn segmented_chain_broadcast_matches_unsegmented_bitwise() {
+        // segmented(S) must deliver exactly the bytes the unsegmented
+        // schedule delivers: reassembling the segment chunks of every
+        // rank reproduces the base chunk bit for bit (uneven tail
+        // segment included: 10 f32 over S=4 → 3,3,3,1).
+        use crate::collectives::{broadcast, segmented::segmented};
+        let c = switched(3, 2, 1);
+        let p = Placement::block(&c);
+        let elems: Vec<f32> = (0..10).map(|i| i as f32 * 1.5 + 3.0).collect();
+        let mut plain = broadcast::chain_mc(&c, &p, 0);
+        plain.set_payload(4 * elems.len() as u64, 4);
+        let piped = segmented(&c, &p, &plain, 4).unwrap();
+
+        let plain_rep = run(
+            &c,
+            &p,
+            &plain,
+            initial_inputs(&plain, |_r, _c| elems.clone()),
+            &ExecParams::zero(),
+        )
+        .unwrap();
+        let spec = piped.msg;
+        let piped_rep = run(
+            &c,
+            &p,
+            &piped,
+            initial_inputs(&piped, |_r, c| {
+                let (lo, hi) = spec.chunk_elem_range_raw(c.0);
+                elems[lo as usize..hi as usize].to_vec()
+            }),
+            &ExecParams::zero(),
+        )
+        .unwrap();
+
+        for r in 0..6usize {
+            assert_eq!(*plain_rep.outputs[r].value(Chunk(0)).unwrap(), elems);
+            let mut got: Vec<f32> = Vec::new();
+            for k in 0..4u32 {
+                got.extend(piped_rep.outputs[r].value(Chunk(k)).unwrap());
+            }
+            assert_eq!(got, elems, "rank {r}: segmented reassembly diverged");
+        }
+    }
+
+    #[test]
+    fn segmented_allreduce_sums_match_unsegmented_bitwise() {
+        // Reductions: the segmented schedule applies the same merge tree
+        // per segment that the unsegmented one applies per chunk, so the
+        // per-element reduction order — and therefore every f32 bit — is
+        // identical.
+        use crate::collectives::{allreduce, segmented::segmented};
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let n = 4usize;
+        // 7 elements per base chunk: uneven against 2 segments.
+        let base_data = |r: usize, base: u32| -> Vec<f32> {
+            (0..7).map(|i| (r * 13 + base as usize * 5 + i) as f32 * 0.37).collect()
+        };
+        let mut plain = allreduce::ring(&p);
+        plain.set_payload(4 * 7 * plain.msg.chunks as u64, 4);
+        let piped = segmented(&c, &p, &plain, 2).unwrap();
+
+        let plain_rep = run(
+            &c,
+            &p,
+            &plain,
+            initial_inputs(&plain, |r, c| base_data(r, c.0)),
+            &ExecParams::zero(),
+        )
+        .unwrap();
+        let spec = piped.msg;
+        let piped_rep = run(
+            &c,
+            &p,
+            &piped,
+            initial_inputs(&piped, |r, c| {
+                let base = c.0 / 2;
+                let (lo, hi) = spec.chunk_elem_range_raw(c.0);
+                let (blo, _) = spec.chunk_elem_range(base);
+                base_data(r, base)[(lo - blo) as usize..(hi - blo) as usize].to_vec()
+            }),
+            &ExecParams::zero(),
+        )
+        .unwrap();
+
+        for r in 0..n {
+            for base in 0..plain.msg.chunks {
+                let want = plain_rep.outputs[r]
+                    .reduced_value(Chunk(base), n)
+                    .expect("plain reduced");
+                let mut got: Vec<f32> = Vec::new();
+                for k in 0..2u32 {
+                    got.extend(
+                        piped_rep.outputs[r]
+                            .reduced_value(Chunk(base * 2 + k), n)
+                            .expect("segment reduced"),
+                    );
+                }
+                // Bit-exact: same reduction tree per element.
+                assert_eq!(
+                    got.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    "rank {r} base chunk {base}"
+                );
+            }
         }
     }
 

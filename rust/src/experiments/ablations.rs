@@ -33,7 +33,7 @@ pub fn run(_quick: bool) -> crate::Result<Summary> {
     ]);
     let mut winner_stable = true;
     for &alpha in &[0.0, 0.05, 0.1, 0.25, 0.5, 1.0] {
-        let model = Multicore { duplex: Duplex::Full, alpha };
+        let model = Multicore { duplex: Duplex::Full, alpha, ..Multicore::default() };
         let fb = model.cost_detail(
             &cl,
             &pl,
@@ -70,8 +70,8 @@ pub fn run(_quick: bool) -> crate::Result<Summary> {
     // --- duplex ablation.
     println!("== duplex ablation (R3 strictness) ==");
     let hier = allreduce::hierarchical_mc(&cl, &pl);
-    let full = Multicore { duplex: Duplex::Full, alpha: 0.1 };
-    let half = Multicore { duplex: Duplex::Half, alpha: 0.1 };
+    let full = Multicore::default();
+    let half = Multicore { duplex: Duplex::Half, ..Multicore::default() };
     let cf = full.cost_detail(&cl, &pl, &legalize(&full, &cl, &pl, &hier))?;
     let ch = half.cost_detail(&cl, &pl, &legalize(&half, &cl, &pl, &hier))?;
     let mut t = Table::new(vec!["duplex", "hier-mc ext rounds"]);
@@ -86,12 +86,14 @@ pub fn run(_quick: bool) -> crate::Result<Summary> {
 
     // --- slots ablation: marginal value of each NIC plane.
     println!("== slots ablation (parallel NIC planes, alltoall 1 KiB) ==");
-    let params = SimParams::lan_2008(1024);
+    let params = SimParams::lan_2008();
     let mut t = Table::new(vec!["slots", "alltoall sim", "speedup vs slots=1"]);
     let mut slots_times = Vec::new();
     let mut base = 0.0;
     for slots in 1..=4usize {
-        let s = alltoall::leader_aggregated(&cl, &pl, slots);
+        let n = pl.num_ranks() as u64;
+        let s = alltoall::leader_aggregated(&cl, &pl, slots)
+            .with_total_bytes(1024 * n * n); // 1 KiB per pair block
         let time = simulate(&cl, &pl, &s, &params)?.t_end;
         if slots == 1 {
             base = time;

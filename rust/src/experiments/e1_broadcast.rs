@@ -44,7 +44,8 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
     };
     let nics = 2;
     let model = Multicore::default();
-    let params = SimParams::lan_cluster(64 << 10); // 64 KiB message
+    let bytes = 64 << 10; // 64 KiB message
+    let params = SimParams::lan_cluster();
     let mut table = Table::new(vec![
         "machines", "cores", "ranks", "flat ext-rounds", "hier ext-rounds",
         "mc ext-rounds", "flat sim", "hier sim", "mc sim", "mc speedup",
@@ -56,9 +57,15 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
         let pl = Placement::block(&cl);
         let root = 0;
 
-        let flat = legalize(&model, &cl, &pl, &broadcast::binomial(&pl, root));
-        let hier = broadcast::hierarchical(&cl, &pl, root);
-        let mc = broadcast::mc_aware(&cl, &pl, root, TargetHeuristic::FirstFit);
+        let flat = legalize(
+            &model,
+            &cl,
+            &pl,
+            &broadcast::binomial(&pl, root).with_total_bytes(bytes),
+        );
+        let hier = broadcast::hierarchical(&cl, &pl, root).with_total_bytes(bytes);
+        let mc = broadcast::mc_aware(&cl, &pl, root, TargetHeuristic::FirstFit)
+            .with_total_bytes(bytes);
 
         let cf = model.cost_detail(&cl, &pl, &flat)?;
         let ch = model.cost_detail(&cl, &pl, &hier)?;

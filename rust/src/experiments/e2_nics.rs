@@ -19,7 +19,8 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
     let cores = 8;
     let nic_sweep = [1usize, 2, 4, 8];
     let model = Multicore::default();
-    let params = SimParams::lan_cluster(64 << 10);
+    let bytes = 64 << 10;
+    let params = SimParams::lan_cluster();
 
     let mut table = Table::new(vec![
         "NICs/machine", "mc ext-rounds", "mc sim", "flat ext-rounds", "flat sim",
@@ -28,8 +29,14 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
     for &k in &nic_sweep {
         let cl = switched(machines, cores, k);
         let pl = Placement::block(&cl);
-        let mc = broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit);
-        let flat = legalize(&model, &cl, &pl, &broadcast::binomial(&pl, 0));
+        let mc = broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit)
+            .with_total_bytes(bytes);
+        let flat = legalize(
+            &model,
+            &cl,
+            &pl,
+            &broadcast::binomial(&pl, 0).with_total_bytes(bytes),
+        );
         let cm = model.cost_detail(&cl, &pl, &mc)?;
         let cf = model.cost_detail(&cl, &pl, &flat)?;
         let tm = simulate(&cl, &pl, &mc, &params)?.t_end;

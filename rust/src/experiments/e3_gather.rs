@@ -28,7 +28,8 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
     let nics = 2;
     let cores_sweep: Vec<usize> = if quick { vec![2, 8] } else { vec![1, 2, 4, 8, 16] };
     let model = Multicore::default();
-    let params = SimParams::lan_cluster(16 << 10);
+    let slot_bytes = 16u64 << 10; // per-rank contribution
+    let params = SimParams::lan_cluster();
 
     let mut table = Table::new(vec![
         "cores", "bcast int-units", "gather int-units", "bcast ext", "gather ext",
@@ -38,9 +39,16 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
     for &c in &cores_sweep {
         let cl = switched(machines, c, nics);
         let pl = Placement::block(&cl);
-        let b = broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit);
-        let g = gather::mc_aware(&cl, &pl, 0);
-        let inv = legalize(&model, &cl, &pl, &gather::inverse_binomial(&pl, 0));
+        let n = pl.num_ranks() as u64;
+        let b = broadcast::mc_aware(&cl, &pl, 0, TargetHeuristic::FirstFit)
+            .with_total_bytes(slot_bytes);
+        let g = gather::mc_aware(&cl, &pl, 0).with_total_bytes(slot_bytes * n);
+        let inv = legalize(
+            &model,
+            &cl,
+            &pl,
+            &gather::inverse_binomial(&pl, 0).with_total_bytes(slot_bytes * n),
+        );
         let cb = model.cost_detail(&cl, &pl, &b)?;
         let cg = model.cost_detail(&cl, &pl, &g)?;
         let t_inv = simulate(&cl, &pl, &inv, &params)?.t_end;

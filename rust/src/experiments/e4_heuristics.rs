@@ -41,7 +41,8 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
     // paper's scenario where high-degree targets are redundant.
     let (n_comm, comm_size, intra_p) = (6usize, 5usize, 0.8);
     let model = Multicore::default();
-    let params = SimParams::lan_cluster(16 << 10);
+    let bytes = 16u64 << 10;
+    let params = SimParams::lan_cluster();
     // Exhaustive tuning: simulate every candidate so the tuned pick is
     // the true per-topology optimum among the registered builders.
     let tune_cfg = TuneCfg {
@@ -62,7 +63,7 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
         let pl = Placement::block(&cl);
         let mut trial_rounds = Vec::new();
         for (i, &h) in HEURISTICS.iter().enumerate() {
-            let s = broadcast::mc_aware(&cl, &pl, 0, h);
+            let s = broadcast::mc_aware(&cl, &pl, 0, h).with_total_bytes(bytes);
             let c = model.cost_detail(&cl, &pl, &s)?;
             let t = simulate(&cl, &pl, &s, &params)?.t_end;
             ext_rounds[i].push(c.ext_rounds as f64);

@@ -83,13 +83,21 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
     let telephone = Telephone;
     // Small chunks: the round-based model abstracts bandwidth away, so
     // its claims live in the latency/overhead-dominated regime.
-    let sim_params = SimParams::lan_2008(512);
+    let sim_params = SimParams::lan_2008();
     // Virtual time: deterministic makespan of the injected LAN costs.
     let exec_params = ExecParams::lan_scaled().with_virtual_time();
     // One communicator = one worker pool + plan cache for the whole sweep.
     let comm = Communicator::new(cl.clone(), pl.clone());
 
-    let fams = families(&cl, &pl, &model);
+    let mut fams = families(&cl, &pl, &model);
+    // 512 B per chunk — matching the 128 × f32 buffers the executor
+    // moves below, so sim and exec price the same bytes.
+    for (_, schedules) in &mut fams {
+        for s in schedules.iter_mut() {
+            let chunks = s.msg.chunks as u64;
+            s.set_total_bytes(512 * chunks);
+        }
+    }
     let mut table = Table::new(vec![
         "family", "schedule", "mc cost", "telephone", "sim (ms)", "exec vt (ms)",
     ]);

@@ -5,7 +5,6 @@
 //! rings — hierarchical-mc should win (or tie) across the sweep.
 
 use crate::collectives::allreduce;
-use crate::sched::CollectiveOp;
 use crate::sim::{simulate, SimParams};
 use crate::topology::{switched, Placement};
 use crate::util::table::{ftime, Table};
@@ -37,19 +36,17 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
     let raben = allreduce::rabenseifner(&pl)?;
     let hier = allreduce::hierarchical_mc(&cl, &pl);
 
-    let chunks_of = |s: &crate::sched::Schedule| match s.op {
-        CollectiveOp::Allreduce { chunks } => chunks as u64,
-        _ => unreachable!(),
-    };
-
     let mut table = Table::new(vec![
         "vector bytes", "ring", "rec-doubling", "rabenseifner", "hier-mc", "best",
     ]);
     let mut rows = Vec::new();
     for &bytes in &sizes {
+        // `bytes` is the whole vector: MsgSpec deals it across each
+        // algorithm's own chunk count (recursive doubling ships full
+        // vectors, the rings ship 1/chunks slices — priced honestly now).
         let t = |s: &crate::sched::Schedule| -> crate::Result<f64> {
-            let params = SimParams::lan_cluster((bytes / chunks_of(s)).max(1));
-            Ok(simulate(&cl, &pl, s, &params)?.t_end)
+            let params = SimParams::lan_cluster();
+            Ok(simulate(&cl, &pl, &s.clone().with_total_bytes(bytes), &params)?.t_end)
         };
         let tr = t(&ring)?;
         let td = t(&recdoub)?;

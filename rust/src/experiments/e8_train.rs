@@ -35,6 +35,7 @@ pub fn run(quick: bool, artifact_dir: &str) -> crate::Result<Summary> {
             exec_params: ExecParams::lan_scaled(),
             seed: 7,
             log_every: if quick { 0 } else { 20 },
+            ..Default::default()
         };
         let trainer = Trainer::new(artifact_dir, &cfg)?;
         let rep = trainer.run(&cfg)?;

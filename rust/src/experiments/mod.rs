@@ -1,12 +1,14 @@
-//! Experiment harnesses E1–E10: one function per quantitative claim in
+//! Experiment harnesses E1–E11: one function per quantitative claim in
 //! the paper (the paper has no numbered tables/figures; DESIGN.md maps
 //! each claim to an experiment id), plus E10 for the calibration
-//! subsystem grown on top of it. Each harness prints the table the
-//! paper's evaluation would contain and returns machine-checkable
-//! summary numbers that the integration tests and benches assert on.
+//! subsystem and E11 for the payload-size crossover grown on top of it.
+//! Each harness prints the table the paper's evaluation would contain
+//! and returns machine-checkable summary numbers that the integration
+//! tests and benches assert on.
 
 pub mod ablations;
 pub mod e10_calibration;
+pub mod e11_size_crossover;
 pub mod e1_broadcast;
 pub mod e2_nics;
 pub mod e3_gather;
@@ -16,7 +18,7 @@ pub mod e6_validation;
 pub mod e7_allreduce;
 pub mod e8_train;
 
-/// Run an experiment by id ("e1".."e10" or "all"). `quick` trims sweeps
+/// Run an experiment by id ("e1".."e11" or "all"). `quick` trims sweeps
 /// for CI-speed runs.
 pub fn run(id: &str, quick: bool, artifact_dir: &str) -> crate::Result<()> {
     match id {
@@ -47,19 +49,23 @@ pub fn run(id: &str, quick: bool, artifact_dir: &str) -> crate::Result<()> {
         "e10" => {
             e10_calibration::run(quick)?;
         }
+        "e11" => {
+            e11_size_crossover::run(quick)?;
+        }
         "ablations" => {
             ablations::run(quick)?;
         }
         "all" => {
-            for id in
-                ["e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e10", "ablations"]
-            {
+            for id in [
+                "e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e10", "e11",
+                "ablations",
+            ] {
                 println!("\n================ {} ================", id.to_uppercase());
                 run(id, quick, artifact_dir)?;
             }
         }
         other => anyhow::bail!(
-            "unknown experiment {other:?} (e1..e8, e10, ablations or all; \
+            "unknown experiment {other:?} (e1..e8, e10, e11, ablations or all; \
              e9 is the autotune bench, not an experiment)"
         ),
     }

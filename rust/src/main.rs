@@ -1,7 +1,7 @@
 //! `mcomm` CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   experiment <e1..e8,e10|ablations|all> [--quick]  reproduce a paper claim
+//!   experiment <e1..e8,e10,e11|ablations|all> [--quick]  reproduce a paper claim
 //!   train [--steps N] [--algo A] [--virtual] [...]  end-to-end data-parallel
 //!                                            run (--virtual: deterministic
 //!                                            virtual-time comm accounting)
@@ -88,23 +88,29 @@ fn dispatch(args: &[String]) -> mcomm::Result<()> {
                 "mcomm — communication modeling for multi-core clusters\n\
                  \n\
                  usage:\n\
-                 \x20 mcomm experiment <e1..e8,e10|ablations|all> [--quick]\n\
+                 \x20 mcomm experiment <e1..e8,e10,e11|ablations|all> [--quick]\n\
                  \x20 mcomm train [--steps N] [--algo auto|ring|hier|recdoub|raben]\n\
                  \x20        [--machines M --cores C --nics K] [--lan] [--virtual]\n\
-                 \x20        [--lr F]\n\
+                 \x20        [--lr F] [--bytes B]\n\
                  \x20        --algo raben = rabenseifner allreduce (pow2 ranks);\n\
                  \x20        --virtual   = deterministic virtual-time comm\n\
-                 \x20                      accounting (bit-reproducible times)\n\
+                 \x20                      accounting (bit-reproducible times);\n\
+                 \x20        --bytes     = payload size the autotuner assumes\n\
+                 \x20                      for --algo auto (default: the real\n\
+                 \x20                      gradient size, 4 x num_params)\n\
                  \x20 mcomm simulate --op bcast|gather|alltoall|allreduce\n\
                  \x20        [--algo NAME] [--machines M --cores C --nics K] [--bytes B]\n\
+                 \x20        --bytes = total payload of the collective; sizes\n\
+                 \x20                  flow through schedule, model, simulator\n\
+                 \x20                  and tuner (the auto row re-tunes per size)\n\
                  \x20 mcomm calibrate [--machines M --cores C --nics K]\n\
                  \x20        [--virtual | --wall] [--repeats N] [--rounds N]\n\
                  \x20        [--bytes B] [--out PATH] [--artifacts DIR]\n\
                  \x20        run micro-probes, fit the machine model, write the\n\
                  \x20        MachineProfile JSON (default: deterministic virtual\n\
                  \x20        mode against the emulated LAN; --wall measures the\n\
-                 \x20        real host; --bytes = reference payload for the\n\
-                 \x20        rebuilt tuner's model/simulator)\n\
+                 \x20        real host; --bytes = payload size the rebuilt\n\
+                 \x20        tuner's cached decisions are tuned for)\n\
                  \x20 mcomm trace [--workload training|shuffle|mixed] [--suite flat|mc]\n\
                  \x20 mcomm validate [--artifacts DIR]"
             );
@@ -145,6 +151,9 @@ fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
         exec_params,
         seed: flag_usize(flags, "seed", 7) as u64,
         log_every: flag_usize(flags, "log-every", 10),
+        // --bytes: what payload the autotuner sizes `auto` decisions for
+        // (default inside Trainer::new: the real 4 * num_params).
+        tune_bytes: flags.get("bytes").and_then(|v| v.parse().ok()),
     };
     let trainer = Trainer::new(&artifact_dir(flags), &cfg)?;
     println!(
@@ -183,15 +192,13 @@ fn cmd_simulate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
         flag_usize(flags, "nics", 2),
     );
     let placement = mcomm::topology::Placement::block(&cluster);
-    // The tuner must judge candidates under the same payload assumption
-    // the table rows are simulated with, or its row would be misleading.
+    // The tuner judges candidates at the same payload size the table
+    // rows are simulated with, so the `auto` row (algorithm + segment
+    // count) is specific to this --bytes.
     let comm = Communicator::with_tune_cfg(
         cluster,
         placement,
-        mcomm::tune::TuneCfg {
-            sim: SimParams::lan_cluster(bytes),
-            ..Default::default()
-        },
+        mcomm::tune::TuneCfg::default().with_msg_bytes(bytes),
     );
     use mcomm::tune::Collective;
     let schedules = match op {
@@ -227,21 +234,15 @@ fn cmd_simulate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
         if !algo.is_empty() && !name.contains(algo) {
             continue;
         }
+        // Size the schedule itself: the simulator reads per-chunk bytes
+        // from the schedule's MsgSpec, whatever the chunk layout.
         let legal = mcomm::model::legalize(
             &mcomm::model::Multicore::default(),
             &comm.cluster,
             &comm.placement,
-            &s,
+            &s.with_total_bytes(bytes),
         );
-        let chunks = legal
-            .rounds
-            .iter()
-            .flat_map(|r| r.xfers.iter())
-            .map(|x| x.payload.num_chunks())
-            .max()
-            .unwrap_or(1) as u64;
-        let params = SimParams::lan_cluster((bytes / chunks.max(1)).max(1));
-        let rep = comm.simulate(&legal, &params)?;
+        let rep = comm.simulate(&legal, &SimParams::lan_cluster())?;
         table.row(vec![
             name.to_string(),
             legal.num_rounds().to_string(),
@@ -332,7 +333,7 @@ fn cmd_trace(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
         "mixed" => Trace::mixed(flag_usize(flags, "steps", 30), 42),
         o => anyhow::bail!("unknown workload {o:?}"),
     };
-    let params = SimParams::lan_cluster(1);
+    let params = SimParams::lan_cluster();
     let mut table = Table::new(vec!["suite", "total time", "ext msgs"]);
     for suite in [Suite::Flat, Suite::McAware] {
         if let Some(want) = flags.get("suite") {

@@ -35,6 +35,8 @@ pub fn legalize(
         schedule.num_ranks,
         format!("{}+legalized", schedule.algo),
     );
+    // Carry the payload spec: legalization reshapes rounds, not sizes.
+    out.msg = schedule.msg;
     let mut caps = SubRoundCaps::new(cluster, placement.num_ranks(), model.duplex);
     for round in &schedule.rounds {
         let mut pending: Vec<Xfer> = round.xfers.clone();

@@ -20,22 +20,19 @@ pub struct LogP {
     pub l: f64,
     pub o: f64,
     pub g: f64,
-    /// Bytes per schedule chunk (LogP classically prices fixed-size
-    /// messages; the byte size only matters through `g`-spacing here).
-    pub chunk_bytes: u64,
 }
 
 impl Default for LogP {
     /// Parameters of the same order as the original paper's measurements
     /// (µs-scale LAN).
     fn default() -> Self {
-        Self { l: 10e-6, o: 2e-6, g: 4e-6, chunk_bytes: 1024 }
+        Self { l: 10e-6, o: 2e-6, g: 4e-6 }
     }
 }
 
 impl LogP {
     pub fn params(&self) -> SimParams {
-        SimParams::flat_logp(self.l, self.o, self.g, self.chunk_bytes)
+        SimParams::flat_logp(self.l, self.o, self.g)
     }
 }
 

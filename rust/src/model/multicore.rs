@@ -35,13 +35,30 @@
 //!   process — local actions by different processes are parallel, local
 //!   actions by one process are serial.
 //!
-//! Cost is reported as [`McCost`]: external rounds, internal work units,
-//! and the scalar `ext + alpha * int`.
+//! * **Serialized bytes.** The paper prices *rounds*; which algorithm
+//!   fits a round budget depends on how many bytes each round carries
+//!   (Barchet-Estefanel & Mounié, *Performance Characterisation of
+//!   Intra-Cluster Collective Communications*). An external round is
+//!   therefore `1 + byte_ext · B` round units, where `B` is the largest
+//!   single message it moves — all NICs drive in parallel under R3, so
+//!   the round lasts as long as its longest serialization. A local read
+//!   of `b` bytes costs `1 + byte_int · b` work units (R1's write stays
+//!   constant-time: publication cost is size-independent in shared
+//!   memory). Per-chunk sizes come from the schedule's
+//!   [`crate::sched::MsgSpec`]; `byte_ext`/`byte_int` default to values
+//!   consistent with [`crate::sim::SimParams::lan_cluster`] and are
+//!   calibrated from a measured [`crate::calibrate::MachineProfile`] by
+//!   [`Multicore::from_profile`]. Setting both to zero
+//!   ([`Multicore::rounds_only`]) recovers the paper's pure round count.
+//!
+//! Cost is reported as [`McCost`]: external rounds (+ byte extension),
+//! internal work units (+ byte extension), and the scalar
+//! `ext + ext_bytes + alpha * int`.
 
 use std::collections::HashMap;
 
 use super::CostModel;
-use crate::sched::{LoweredSchedule, Schedule, XferKind};
+use crate::sched::{LoweredSchedule, MsgSpec, Schedule, XferKind};
 use crate::topology::{Cluster, Placement};
 
 /// NIC duplexing assumption (R3 cap applies per direction or in sum).
@@ -55,7 +72,8 @@ pub enum Duplex {
     Half,
 }
 
-/// The paper's multi-core cluster model.
+/// The paper's multi-core cluster model, extended with serialized-byte
+/// terms so costing is payload-size-aware (see module docs).
 #[derive(Debug, Clone, Copy)]
 pub struct Multicore {
     pub duplex: Duplex,
@@ -63,32 +81,63 @@ pub struct Multicore {
     /// round (the paper folds this "extra cost" into the round estimate;
     /// we keep it explicit). Typical value: 0.05–0.2.
     pub alpha: f64,
+    /// Round-equivalents per serialized byte of an external round's
+    /// longest message (0 = byte-blind round counting).
+    pub byte_ext: f64,
+    /// Internal-work-unit-equivalents per byte assembled by a local read
+    /// (R1's write stays constant-time; 0 = byte-blind).
+    pub byte_int: f64,
 }
 
 impl Default for Multicore {
+    /// Byte weights consistent with [`crate::sim::SimParams::lan_cluster`]:
+    /// a zero-byte network round is `o_send + lat_ext + o_recv = 54 µs`,
+    /// gigabit wire time extends it by `byte_time_ext / 54 µs` rounds per
+    /// byte, and a byte read through shared memory costs
+    /// `byte_time_int / (alpha · 54 µs)` internal units.
     fn default() -> Self {
-        Self { duplex: Duplex::Full, alpha: 0.1 }
+        let round = 2e-6 + 50e-6 + 2e-6;
+        let alpha = 0.1;
+        Self {
+            duplex: Duplex::Full,
+            alpha,
+            byte_ext: (1.0 / 110e6) / round,
+            byte_int: (1.0 / 3e9) / (alpha * round),
+        }
     }
 }
 
 impl Multicore {
+    /// The paper's pure round-counting model: byte terms zeroed. Useful
+    /// when a test (or an ablation) wants size-blind round arithmetic.
+    pub fn rounds_only() -> Self {
+        Self { duplex: Duplex::Full, alpha: 0.1, byte_ext: 0.0, byte_int: 0.0 }
+    }
+
     /// Build the round model from a measured
-    /// [`crate::calibrate::MachineProfile`] at a reference message size.
+    /// [`crate::calibrate::MachineProfile`].
     ///
-    /// The model has exactly one free physical knob, `alpha`: how long
-    /// one unit of intra-machine work is relative to one network round.
-    /// From the fitted parameters, a network round moving `bytes` costs
-    /// `o_send + bytes·byte_ext + lat_ext + o_recv` and a local action
-    /// costs `o_write` (R1's write) or `bytes·byte_int` (R1's read) —
-    /// the model charges both action kinds one unit, so their mean is
-    /// the unit's length. `alpha` is the ratio, clamped to `[1e-4, 1]`
-    /// (R2 presumes local edges are *short*; a profile claiming
-    /// otherwise saturates at parity rather than inverting the rule).
-    pub fn from_profile(p: &crate::calibrate::MachineProfile, bytes: u64) -> Self {
-        let ext = p.o_send + bytes as f64 * p.byte_ext + p.lat_ext + p.o_recv;
-        let int = 0.5 * (p.o_write + bytes as f64 * p.byte_int);
-        let alpha = if ext > 0.0 { (int / ext).clamp(1e-4, 1.0) } else { 0.1 };
-        Self { duplex: Duplex::Full, alpha }
+    /// A zero-byte network round costs `o_send + lat_ext + o_recv`
+    /// seconds; that is the model's cost unit. `alpha` is the measured
+    /// constant local action (`o_write / 2`, charging the write side of
+    /// R1; reads add their bytes via `byte_int`) relative to that round,
+    /// clamped to `[1e-4, 1]` (R2 presumes local edges are *short*; a
+    /// profile claiming otherwise saturates at parity rather than
+    /// inverting the rule). The byte weights are the fitted per-byte
+    /// costs expressed in round units (`byte_ext / round`) and internal
+    /// units (`byte_int / (alpha · round)`).
+    pub fn from_profile(p: &crate::calibrate::MachineProfile) -> Self {
+        let round = p.o_send + p.lat_ext + p.o_recv;
+        if round <= 0.0 {
+            return Self::rounds_only();
+        }
+        let alpha = (0.5 * p.o_write / round).clamp(1e-4, 1.0);
+        Self {
+            duplex: Duplex::Full,
+            alpha,
+            byte_ext: (p.byte_ext / round).max(0.0),
+            byte_int: (p.byte_int / (alpha * round)).max(0.0),
+        }
     }
 }
 
@@ -98,38 +147,61 @@ pub struct McCost {
     /// Rounds containing at least one network message.
     pub ext_rounds: usize,
     /// Total internal work units across internal-only rounds (per round:
-    /// max local actions by any single process).
+    /// max local actions by any single process), byte-blind.
     pub int_units: usize,
     /// Total network messages (bandwidth proxy).
     pub ext_messages: usize,
+    /// Byte extension of the external rounds, in round units: per
+    /// external round, `byte_ext ×` the largest single message it moves
+    /// (R3: NICs are parallel, the round lasts its longest
+    /// serialization), summed.
+    pub ext_byte_units: f64,
+    /// Internal work *including* read bytes: per internal-only round,
+    /// the bottleneck process's `actions + byte_int × read_bytes`,
+    /// summed. Equals `int_units` when `byte_int` is zero.
+    pub int_weighted: f64,
 }
 
 impl McCost {
-    /// Scalar cost at a given `alpha`.
+    /// Scalar cost at a given `alpha` (byte terms were folded in with
+    /// the pricing model's weights).
     pub fn total(&self, alpha: f64) -> f64 {
-        self.ext_rounds as f64 + alpha * self.int_units as f64
+        self.ext_rounds as f64 + self.ext_byte_units + alpha * self.int_weighted
     }
 }
 
+/// Per-round cost tally from validation: per-proc local work (action
+/// count + bytes assembled by reads) and the largest single external
+/// message's serialized size.
+struct RoundTally {
+    /// proc → (local actions, read bytes).
+    local: HashMap<usize, (usize, u64)>,
+    max_ext_bytes: u64,
+}
+
 impl Multicore {
-    /// Validate one round's resource usage; returns per-proc local action
-    /// counts for cost accounting.
+    /// Validate one round's resource usage; returns the per-proc tally
+    /// for cost accounting.
     fn check_round(
         &self,
         cluster: &Cluster,
         placement: &Placement,
+        msg: &MsgSpec,
         ri: usize,
         round: &crate::sched::Round,
-    ) -> crate::Result<HashMap<usize, usize>> {
+    ) -> crate::Result<RoundTally> {
         let m_count = cluster.num_machines();
         let mut proc_send: HashMap<usize, usize> = HashMap::new();
         let mut proc_recv: HashMap<usize, usize> = HashMap::new();
         let mut mach_send = vec![0usize; m_count];
         let mut mach_recv = vec![0usize; m_count];
         let mut edge_use: HashMap<(usize, usize), usize> = HashMap::new();
-        let mut local_actions: HashMap<usize, usize> = HashMap::new();
+        let mut local: HashMap<usize, (usize, u64)> = HashMap::new();
+        let mut max_ext_bytes = 0u64;
 
         for x in &round.xfers {
+            let bytes: u64 =
+                x.payload.items.iter().map(|(c, _)| msg.chunk_bytes(c.0)).sum();
             match x.kind {
                 XferKind::External => {
                     let dst = x.dsts[0];
@@ -145,15 +217,19 @@ impl Multicore {
                     mach_send[ms] += 1;
                     mach_recv[md] += 1;
                     *edge_use.entry((ms, md)).or_default() += 1;
+                    max_ext_bytes = max_ext_bytes.max(bytes);
                 }
                 XferKind::LocalWrite => {
                     // One constant-time action for the writer (R1);
-                    // readers of shared memory are free.
-                    *local_actions.entry(x.src).or_default() += 1;
+                    // readers of shared memory are free, and publication
+                    // cost is size-independent.
+                    local.entry(x.src).or_default().0 += 1;
                 }
                 XferKind::LocalRead => {
-                    // Assembly cost lands on the reader (R1).
-                    *local_actions.entry(x.dsts[0]).or_default() += 1;
+                    // Assembly cost lands on the reader (R1), per byte.
+                    let e = local.entry(x.dsts[0]).or_default();
+                    e.0 += 1;
+                    e.1 += bytes;
                 }
             }
         }
@@ -205,7 +281,7 @@ impl Multicore {
                 }
             }
         }
-        Ok(local_actions)
+        Ok(RoundTally { local, max_ext_bytes })
     }
 
     /// Full cost breakdown over the lowered IR (validates as it goes).
@@ -223,6 +299,7 @@ impl Multicore {
         let mut proc_send = vec![0u32; p];
         let mut proc_recv = vec![0u32; p];
         let mut local_actions = vec![0u32; p];
+        let mut read_bytes = vec![0u64; p];
         let mut mach_send = vec![0u32; m];
         let mut mach_recv = vec![0u32; m];
         let mut edge_use = if low.ctx.is_graph { vec![0u32; m * m] } else { Vec::new() };
@@ -234,11 +311,14 @@ impl Multicore {
 
         let mut ext_rounds = 0usize;
         let mut int_units = 0usize;
+        let mut ext_byte_units = 0.0f64;
+        let mut int_weighted = 0.0f64;
         for ri in 0..low.num_rounds {
             for &i in &touched_procs {
                 proc_send[i as usize] = 0;
                 proc_recv[i as usize] = 0;
                 local_actions[i as usize] = 0;
+                read_bytes[i as usize] = 0;
             }
             touched_procs.clear();
             for &mm in &touched_machines {
@@ -253,11 +333,13 @@ impl Multicore {
 
             let mut has_external = false;
             let mut has_local = false;
+            let mut max_ext_bytes = 0u64;
             for xi in low.round_off[ri] as usize..low.round_off[ri + 1] as usize {
                 let src = low.src[xi] as usize;
                 match low.kind[xi] {
                     XferKind::External => {
                         has_external = true;
+                        max_ext_bytes = max_ext_bytes.max(low.payload_bytes[xi]);
                         let dst = low.dst0[xi] as usize;
                         let (ms, md) = (
                             low.src_machine[xi] as usize,
@@ -337,22 +419,39 @@ impl Multicore {
                         let dst = low.dst0[xi] as usize;
                         touched_procs.push(dst as u32);
                         local_actions[dst] += 1;
+                        read_bytes[dst] += low.payload_bytes[xi];
                     }
                 }
             }
             if has_external {
-                // R2: local work rides inside a network round for free.
+                // R2: local work rides inside a network round for free;
+                // the round lasts as long as its longest serialization.
                 ext_rounds += 1;
+                ext_byte_units += self.byte_ext * max_ext_bytes as f64;
             } else if has_local {
-                // Internal-only round: costs the longest per-proc chain.
+                // Internal-only round: costs the longest per-proc chain
+                // (actions plus the bytes its reads assemble).
                 int_units += touched_procs
                     .iter()
                     .map(|&i| local_actions[i as usize] as usize)
                     .max()
                     .unwrap_or(0);
+                int_weighted += touched_procs
+                    .iter()
+                    .map(|&i| {
+                        local_actions[i as usize] as f64
+                            + self.byte_int * read_bytes[i as usize] as f64
+                    })
+                    .fold(0.0f64, f64::max);
             }
         }
-        Ok(McCost { ext_rounds, int_units, ext_messages: low.ext_messages })
+        Ok(McCost {
+            ext_rounds,
+            int_units,
+            ext_messages: low.ext_messages,
+            ext_byte_units,
+            int_weighted,
+        })
     }
 
     /// Scalar cost over the lowered IR at this model's `alpha`.
@@ -370,20 +469,33 @@ impl Multicore {
         schedule.check_shape(placement)?;
         let mut ext_rounds = 0usize;
         let mut int_units = 0usize;
+        let mut ext_byte_units = 0.0f64;
+        let mut int_weighted = 0.0f64;
         for (ri, round) in schedule.rounds.iter().enumerate() {
-            let local_actions = self.check_round(cluster, placement, ri, round)?;
+            let tally =
+                self.check_round(cluster, placement, &schedule.msg, ri, round)?;
             if round.has_external() {
-                // R2: local work rides inside a network round for free.
+                // R2: local work rides inside a network round for free;
+                // the round lasts as long as its longest serialization.
                 ext_rounds += 1;
+                ext_byte_units += self.byte_ext * tally.max_ext_bytes as f64;
             } else {
-                // Internal-only round: costs the longest per-proc chain.
-                int_units += local_actions.values().copied().max().unwrap_or(0);
+                // Internal-only round: costs the longest per-proc chain
+                // (actions plus the bytes its reads assemble).
+                int_units += tally.local.values().map(|&(a, _)| a).max().unwrap_or(0);
+                int_weighted += tally
+                    .local
+                    .values()
+                    .map(|&(a, b)| a as f64 + self.byte_int * b as f64)
+                    .fold(0.0f64, f64::max);
             }
         }
         Ok(McCost {
             ext_rounds,
             int_units,
             ext_messages: schedule.external_messages(),
+            ext_byte_units,
+            int_weighted,
         })
     }
 }
@@ -479,10 +591,10 @@ mod tests {
                 Xfer::external(5, 1, Payload::single(5, 5)),
             ],
         });
-        Multicore { duplex: Duplex::Full, alpha: 0.1 }
+        Multicore { duplex: Duplex::Full, ..Multicore::default() }
             .validate(&c, &p, &s)
             .unwrap();
-        assert!(Multicore { duplex: Duplex::Half, alpha: 0.1 }
+        assert!(Multicore { duplex: Duplex::Half, ..Multicore::default() }
             .validate(&c, &p, &s)
             .is_err());
     }
@@ -513,7 +625,65 @@ mod tests {
         let cost = Multicore::default().cost_detail(&c, &p, &s).unwrap();
         assert_eq!(cost.ext_rounds, 1);
         assert_eq!(cost.int_units, 0);
-        assert!((cost.total(0.1) - 1.0).abs() < 1e-12);
+        // Pure round counting (byte terms zeroed) gives exactly 1 round.
+        let blind = Multicore::rounds_only().cost_detail(&c, &p, &s).unwrap();
+        assert!((blind.total(0.1) - 1.0).abs() < 1e-12);
+        // The byte-aware default additionally charges the serialized
+        // payload of the round's one external message.
+        let model = Multicore::default();
+        let want = 1.0 + model.byte_ext * s.msg.chunk_bytes(0) as f64;
+        assert!((cost.total(model.alpha) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn external_round_charges_longest_message() {
+        // Two externals of different sizes in one round: the round costs
+        // 1 + byte_ext * max bytes (parallel NICs, longest serialization).
+        let (c, p) = cluster(2);
+        let mut s =
+            Schedule::new(CollectiveOp::Allgather, 8, "t").with_total_bytes(8 * 1000);
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 4, Payload::single(0, 0)),
+                Xfer::external(
+                    1,
+                    5,
+                    Payload {
+                        items: vec![
+                            (crate::sched::Chunk(1), crate::sched::ContribSet::singleton(1)),
+                            (crate::sched::Chunk(2), crate::sched::ContribSet::singleton(2)),
+                        ],
+                    },
+                ),
+            ],
+        });
+        let model = Multicore::default();
+        let cost = model.cost_detail(&c, &p, &s).unwrap();
+        assert_eq!(cost.ext_rounds, 1);
+        let want = model.byte_ext * 2000.0; // the 2-chunk message dominates
+        assert!((cost.ext_byte_units - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn internal_round_charges_read_bytes_not_write_bytes() {
+        let (c, p) = cluster(1);
+        let mut s = Schedule::new(CollectiveOp::Gather { root: 0 }, 8, "t")
+            .with_total_bytes(8 * 500);
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::local_read(1, 0, Payload::single(1, 1)),
+                Xfer::local_read(2, 0, Payload::single(2, 2)),
+            ],
+        });
+        // A write in a separate internal round: size-independent (R1).
+        s.push_round(Round {
+            xfers: vec![Xfer::local_write(0, vec![1, 2], Payload::single(1, 1))],
+        });
+        let model = Multicore::default();
+        let cost = model.cost_detail(&c, &p, &s).unwrap();
+        assert_eq!(cost.int_units, 3); // 2 reads by rank 0 + 1 write
+        let want = (2.0 + model.byte_int * 1000.0) + 1.0;
+        assert!((cost.int_weighted - want).abs() < 1e-12, "{}", cost.int_weighted);
     }
 
     #[test]
@@ -530,8 +700,9 @@ mod tests {
             allreduce::ring(&p),
         ];
         for model in [
-            Multicore { duplex: Duplex::Full, alpha: 0.1 },
-            Multicore { duplex: Duplex::Half, alpha: 0.07 },
+            Multicore::default(),
+            Multicore { duplex: Duplex::Half, alpha: 0.07, ..Multicore::default() },
+            Multicore::rounds_only(),
         ] {
             for s in &schedules {
                 let low = LoweredSchedule::compile(&ctx, s).unwrap();
@@ -561,7 +732,7 @@ mod tests {
     }
 
     #[test]
-    fn from_profile_derives_alpha_from_measured_costs() {
+    fn from_profile_derives_alpha_and_byte_weights() {
         let mut p = crate::calibrate::MachineProfile {
             version: crate::calibrate::PROFILE_VERSION,
             o_send: 2e-6,
@@ -569,7 +740,7 @@ mod tests {
             o_write: 1e-6,
             lat_ext: 50e-6,
             byte_ext: 9e-9,
-            byte_int: 0.0,
+            byte_int: 0.4e-9,
             round_overhead: 0.0,
             nic_contention: 1.0,
             residual: 0.0,
@@ -579,18 +750,21 @@ mod tests {
             machines: 2,
             ranks: 4,
         };
-        let m = Multicore::from_profile(&p, 16 << 10);
-        // ext = 2+2+50 µs + 16KiB * 9ns ≈ 201.5 µs; int = 0.5 µs.
-        let want = 0.5e-6 / (54e-6 + 16384.0 * 9e-9);
-        assert!((m.alpha - want).abs() < 1e-9, "alpha {} vs {want}", m.alpha);
+        let m = Multicore::from_profile(&p);
+        // Zero-byte round = 2+2+50 µs; constant local action = 0.5 µs.
+        let round = 54e-6;
+        let want_alpha = 0.5e-6 / round;
+        assert!((m.alpha - want_alpha).abs() < 1e-9, "alpha {} vs {want_alpha}", m.alpha);
+        assert!((m.byte_ext - 9e-9 / round).abs() < 1e-9);
+        assert!((m.byte_int - 0.4e-9 / (m.alpha * round)).abs() < 1e-9);
         assert_eq!(m.duplex, Duplex::Full);
 
         // A profile claiming local work costs more than a network round
         // saturates at parity; a near-free one floors at 1e-4.
         p.o_write = 1.0;
-        assert_eq!(Multicore::from_profile(&p, 1024).alpha, 1.0);
+        assert_eq!(Multicore::from_profile(&p).alpha, 1.0);
         p.o_write = 1e-15;
-        assert_eq!(Multicore::from_profile(&p, 1024).alpha, 1e-4);
+        assert_eq!(Multicore::from_profile(&p).alpha, 1e-4);
     }
 
     #[test]

@@ -158,6 +158,10 @@ pub struct LoweredSchedule<'t> {
     /// preserved.
     pub payload_off: Vec<u32>,
     pub payload_chunks: Vec<u32>,
+    /// Per-transfer serialized bytes (sum of the payload's per-chunk
+    /// sizes from the schedule's [`crate::sched::MsgSpec`]), interned at
+    /// compile time so the hot engines never re-derive sizes.
+    pub payload_bytes: Vec<u64>,
     /// CSR: transfer `x` delivers to `dsts[dst_off[x]..dst_off[x+1]]`
     /// (length 1 except for `LocalWrite`).
     pub dst_off: Vec<u32>,
@@ -185,6 +189,7 @@ impl<'t> LoweredSchedule<'t> {
         let mut dst_machine = Vec::with_capacity(total);
         let mut payload_off = Vec::with_capacity(total + 1);
         let mut payload_chunks = Vec::new();
+        let mut payload_bytes = Vec::with_capacity(total);
         let mut dst_off = Vec::with_capacity(total + 1);
         let mut dsts_v = Vec::with_capacity(total);
         let mut interner = ChunkInterner::new();
@@ -261,9 +266,12 @@ impl<'t> LoweredSchedule<'t> {
                 dst0_v.push(d0 as u32);
                 src_machine.push(ctx.machine_of[src]);
                 dst_machine.push(ctx.machine_of[d0]);
+                let mut bytes = 0u64;
                 for (c, _) in &x.payload.items {
                     payload_chunks.push(interner.intern(c.0));
+                    bytes += schedule.msg.chunk_bytes(c.0);
                 }
+                payload_bytes.push(bytes);
                 payload_off.push(payload_chunks.len() as u32);
                 if x.kind == XferKind::LocalWrite {
                     for &d in &x.dsts {
@@ -290,6 +298,7 @@ impl<'t> LoweredSchedule<'t> {
             dst_machine,
             payload_off,
             payload_chunks,
+            payload_bytes,
             dst_off,
             dsts: dsts_v,
         })
@@ -341,6 +350,35 @@ mod tests {
         // LocalWrite keeps its full destination list.
         assert_eq!(low.dst_off, vec![0, 1, 2, 3]);
         assert_eq!(low.dsts, vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn payload_bytes_interned_from_msg_spec() {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let ctx = TopoCtx::new(&c, &p);
+        // Allgather over 4 ranks, 100 bytes total → chunk sizes 25.
+        let mut s = Schedule::new(CollectiveOp::Allgather, 4, "t").with_total_bytes(100);
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 2, Payload::single(0, 0)),
+                Xfer::local_write(1, vec![0], Payload::single(1, 1)),
+            ],
+        });
+        s.push_round(Round {
+            xfers: vec![Xfer::external(
+                2,
+                0,
+                Payload {
+                    items: vec![
+                        (crate::sched::Chunk(2), crate::sched::ContribSet::singleton(2)),
+                        (crate::sched::Chunk(3), crate::sched::ContribSet::singleton(3)),
+                    ],
+                },
+            )],
+        });
+        let low = LoweredSchedule::compile(&ctx, &s).unwrap();
+        assert_eq!(low.payload_bytes, vec![25, 25, 50]);
     }
 
     #[test]

@@ -31,14 +31,114 @@ use crate::Rank;
 
 /// Identifier of an op-defined unit of data.
 ///
-/// Meaning per op (with `P` ranks):
+/// Meaning per op (with `P` ranks), for an unsegmented schedule:
 /// * `Broadcast`: single chunk `0`.
 /// * `Gather`/`Allgather`/`Scatter`: chunk `r` = rank `r`'s slot.
 /// * `AllToAll`: chunk `s * P + d` = the block rank `s` sends to rank `d`.
 /// * `Reduce`/`Allreduce`/`ReduceScatter`: chunk `c` = segment `c` of the
 ///   vector being reduced (`num_chunks` segments).
+///
+/// A pipelined schedule ([`fn@crate::collectives::segmented`]) splits every
+/// *base* chunk `c` above into `S` waves; the raw chunk id is then
+/// `c * S + k` for wave `k` (see [`MsgSpec::segments`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Chunk(pub u32);
+
+/// Payload-size specification of a schedule: how many serialized bytes
+/// the whole collective moves and how they are divided over the op's
+/// chunk space. This is what makes every layer of the stack byte-aware —
+/// the [`crate::model::Multicore`] cost model, the continuous-time
+/// simulator and the tuner all read sizes from here instead of a global
+/// per-chunk constant.
+///
+/// `total_bytes` is the op's *whole* payload: the full vector for
+/// (all)reduce, the concatenation of every rank's slot for
+/// gather/allgather/scatter/reduce-scatter, all `P²` blocks for
+/// all-to-all, and the one message for broadcast.
+///
+/// Byte boundaries fall on multiples of `elem_bytes` (4 for the f32
+/// gradients the trainer ships; 1 by default): `total_bytes /
+/// elem_bytes` elements are dealt to the `chunks` base chunks by a
+/// `ceil(total/chunks)`-sized split, so every chunk except possibly the
+/// last has equal size and the last carries the (smaller, possibly
+/// zero) remainder — exactly the trainer's `div_ceil` gradient
+/// bucketing. Segmentation subdivides each base chunk the same way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MsgSpec {
+    /// Total serialized bytes across the whole collective payload.
+    pub total_bytes: u64,
+    /// Number of op-defined *base* chunks (before segmentation).
+    pub chunks: u32,
+    /// Pipeline segments each base chunk is split into (1 = none).
+    pub segments: u32,
+    /// Granularity of chunk/segment boundaries (element width in bytes).
+    pub elem_bytes: u64,
+}
+
+impl MsgSpec {
+    /// Default payload assumption per base chunk when a builder has not
+    /// been told the real size (callers override with
+    /// [`Schedule::set_total_bytes`]).
+    pub const DEFAULT_CHUNK_BYTES: u64 = 1024;
+
+    /// Even split of `total_bytes` over `chunks` base chunks, byte
+    /// granularity, unsegmented.
+    pub fn even(total_bytes: u64, chunks: u32) -> Self {
+        Self { total_bytes, chunks: chunks.max(1), segments: 1, elem_bytes: 1 }
+    }
+
+    /// Total elements (`total_bytes / elem_bytes`; constructors keep the
+    /// total divisible).
+    pub fn elems(&self) -> u64 {
+        self.total_bytes / self.elem_bytes.max(1)
+    }
+
+    /// Size of the raw chunk-id space (`chunks * segments`).
+    pub fn num_chunks(&self) -> u32 {
+        self.chunks.max(1) * self.segments.max(1)
+    }
+
+    /// Elements of part `idx` when `total` elements are dealt to `parts`
+    /// slots in `ceil(total/parts)` bites (short tail, zero past it).
+    fn split(total: u64, parts: u32, idx: u32) -> u64 {
+        let per = total.div_ceil(parts.max(1) as u64);
+        total.saturating_sub(idx as u64 * per).min(per)
+    }
+
+    /// Elements of base chunk `base`.
+    pub fn chunk_elems(&self, base: u32) -> u64 {
+        Self::split(self.elems(), self.chunks, base)
+    }
+
+    /// Element range `[lo, hi)` of base chunk `base` within the flat
+    /// payload (the trainer slices gradients with this).
+    pub fn chunk_elem_range(&self, base: u32) -> (u64, u64) {
+        let per = self.elems().div_ceil(self.chunks.max(1) as u64);
+        let lo = (base as u64 * per).min(self.elems());
+        (lo, lo + self.chunk_elems(base))
+    }
+
+    /// Serialized bytes of raw chunk id `raw` (= `base * segments + k`).
+    /// Ids outside the spec's chunk space carry zero bytes.
+    pub fn chunk_bytes(&self, raw: u32) -> u64 {
+        let s = self.segments.max(1);
+        let (base, seg) = (raw / s, raw % s);
+        Self::split(self.chunk_elems(base), s, seg) * self.elem_bytes.max(1)
+    }
+
+    /// Element range `[lo, hi)` of *raw* chunk id `raw` within the flat
+    /// payload: the base chunk's range, narrowed to the segment's slice.
+    /// Equals [`MsgSpec::chunk_elem_range`] when unsegmented.
+    pub fn chunk_elem_range_raw(&self, raw: u32) -> (u64, u64) {
+        let s = self.segments.max(1);
+        let (base, seg) = (raw / s, raw % s);
+        let (lo, hi) = self.chunk_elem_range(base);
+        let ce = hi - lo;
+        let per = ce.div_ceil(s as u64);
+        let slo = (seg as u64 * per).min(ce);
+        (lo + slo, lo + slo + Self::split(ce, s, seg))
+    }
+}
 
 /// The collective operation a schedule implements.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -69,6 +169,23 @@ impl CollectiveOp {
                 | CollectiveOp::Allreduce { .. }
                 | CollectiveOp::ReduceScatter
         )
+    }
+
+    /// Number of op-defined *base* chunks over `num_ranks` ranks (the raw
+    /// chunk-id space of an unsegmented schedule; see [`Chunk`]).
+    pub fn base_chunks(&self, num_ranks: usize) -> u32 {
+        let p = num_ranks as u32;
+        match *self {
+            CollectiveOp::Broadcast { .. } => 1,
+            CollectiveOp::Gather { .. }
+            | CollectiveOp::Scatter { .. }
+            | CollectiveOp::Allgather
+            | CollectiveOp::ReduceScatter => p.max(1),
+            CollectiveOp::AllToAll => (p * p).max(1),
+            CollectiveOp::Reduce { chunks, .. } | CollectiveOp::Allreduce { chunks } => {
+                chunks.max(1)
+            }
+        }
     }
 
     /// Short, stable name for reports.
@@ -182,11 +299,41 @@ pub struct Schedule {
     pub rounds: Vec<Round>,
     /// Human-readable algorithm name ("binomial", "mc-aware", …).
     pub algo: String,
+    /// Payload sizing: how many bytes the collective moves and how they
+    /// map onto the chunk-id space. Defaults to
+    /// [`MsgSpec::DEFAULT_CHUNK_BYTES`] per base chunk; size-aware
+    /// callers override via [`Schedule::set_total_bytes`] /
+    /// [`Schedule::set_payload`].
+    pub msg: MsgSpec,
 }
 
 impl Schedule {
     pub fn new(op: CollectiveOp, num_ranks: usize, algo: impl Into<String>) -> Self {
-        Self { op, num_ranks, rounds: Vec::new(), algo: algo.into() }
+        let chunks = op.base_chunks(num_ranks);
+        let msg = MsgSpec::even(chunks as u64 * MsgSpec::DEFAULT_CHUNK_BYTES, chunks);
+        Self { op, num_ranks, rounds: Vec::new(), algo: algo.into(), msg }
+    }
+
+    /// Set the collective's total payload size, keeping the chunk layout
+    /// (chunk count, segmentation, element granularity). The total is
+    /// floored to a multiple of `elem_bytes`.
+    pub fn set_total_bytes(&mut self, total_bytes: u64) {
+        let e = self.msg.elem_bytes.max(1);
+        self.msg.total_bytes = (total_bytes / e) * e;
+    }
+
+    /// Builder-style [`Schedule::set_total_bytes`].
+    pub fn with_total_bytes(mut self, total_bytes: u64) -> Self {
+        self.set_total_bytes(total_bytes);
+        self
+    }
+
+    /// Set both the total payload size and the element granularity
+    /// (chunk/segment boundaries fall on `elem_bytes` multiples — the
+    /// trainer uses 4 so chunks never split an f32).
+    pub fn set_payload(&mut self, total_bytes: u64, elem_bytes: u64) {
+        self.msg.elem_bytes = elem_bytes.max(1);
+        self.set_total_bytes(total_bytes);
     }
 
     /// Append a round (dropped if empty).
@@ -380,6 +527,55 @@ mod tests {
         let mut s = Schedule::new(CollectiveOp::Allgather, 4, "t");
         s.push_round(Round::default());
         assert_eq!(s.num_rounds(), 0);
+    }
+
+    #[test]
+    fn msg_spec_even_split_with_uneven_tail() {
+        // 10 elements over 4 chunks: ceil = 3 → sizes 3,3,3,1 (the
+        // trainer's div_ceil gradient bucketing, uneven tail included).
+        let m = MsgSpec { total_bytes: 40, chunks: 4, segments: 1, elem_bytes: 4 };
+        assert_eq!(m.elems(), 10);
+        let sizes: Vec<u64> = (0..4).map(|c| m.chunk_bytes(c)).collect();
+        assert_eq!(sizes, vec![12, 12, 12, 4]);
+        assert_eq!(sizes.iter().sum::<u64>(), m.total_bytes);
+        assert_eq!(m.chunk_elem_range(0), (0, 3));
+        assert_eq!(m.chunk_elem_range(3), (9, 10));
+        // Out-of-space ids carry nothing.
+        assert_eq!(m.chunk_bytes(9), 0);
+    }
+
+    #[test]
+    fn msg_spec_segments_subdivide_base_chunks() {
+        // 2 base chunks of 8 elems, 4 segments each: every raw id
+        // (base * 4 + k) carries 2 elems; totals are preserved.
+        let m = MsgSpec { total_bytes: 16, chunks: 2, segments: 4, elem_bytes: 1 };
+        assert_eq!(m.num_chunks(), 8);
+        let total: u64 = (0..8).map(|r| m.chunk_bytes(r)).sum();
+        assert_eq!(total, 16);
+        assert!((0..8).all(|r| m.chunk_bytes(r) == 2));
+        // Uneven base chunk: 5 elems over 2 segments → 3 + 2.
+        let m = MsgSpec { total_bytes: 5, chunks: 1, segments: 2, elem_bytes: 1 };
+        assert_eq!((m.chunk_bytes(0), m.chunk_bytes(1)), (3, 2));
+        // Raw ranges tile the base chunk contiguously.
+        assert_eq!(m.chunk_elem_range_raw(0), (0, 3));
+        assert_eq!(m.chunk_elem_range_raw(1), (3, 5));
+        let m = MsgSpec { total_bytes: 10, chunks: 2, segments: 2, elem_bytes: 1 };
+        assert_eq!(m.chunk_elem_range_raw(2), (5, 8)); // base 1, seg 0
+        assert_eq!(m.chunk_elem_range_raw(3), (8, 10));
+    }
+
+    #[test]
+    fn schedule_payload_setters() {
+        let mut s = Schedule::new(CollectiveOp::Allreduce { chunks: 4 }, 4, "t");
+        assert_eq!(s.msg.chunks, 4);
+        assert_eq!(s.msg.total_bytes, 4 * MsgSpec::DEFAULT_CHUNK_BYTES);
+        s.set_payload(42, 4); // floored to elem multiple
+        assert_eq!(s.msg.total_bytes, 40);
+        assert_eq!(s.msg.elem_bytes, 4);
+        let s = Schedule::new(CollectiveOp::AllToAll, 3, "t").with_total_bytes(90);
+        assert_eq!(s.msg.chunks, 9);
+        assert_eq!(s.msg.total_bytes, 90);
+        assert_eq!(s.msg.chunk_bytes(0), 10);
     }
 
     #[test]

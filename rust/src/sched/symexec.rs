@@ -91,45 +91,51 @@ pub struct SymState {
     pub state: Vec<Holdings>,
 }
 
-/// Initial holdings implied by the op's semantics.
-pub fn initial_state(op: CollectiveOp, num_ranks: usize) -> Vec<Holdings> {
+/// Initial holdings implied by the op's semantics. A pipelined schedule
+/// (`segments > 1`, see [`crate::sched::MsgSpec`]) splits every base
+/// chunk `c` into raw chunks `c * segments + k`; each segment starts
+/// (and must end) exactly where the base chunk would.
+pub fn initial_state(op: CollectiveOp, num_ranks: usize, segments: u32) -> Vec<Holdings> {
+    let s = segments.max(1);
     let mut st = vec![Holdings::default(); num_ranks];
+    let mut seed = |rank: usize, base: u32, contrib: ContribSet| {
+        for k in 0..s {
+            st[rank].insert(Chunk(base * s + k), contrib.clone());
+        }
+    };
     match op {
         CollectiveOp::Broadcast { root } => {
-            st[root].insert(Chunk(0), ContribSet::singleton(root));
+            seed(root, 0, ContribSet::singleton(root));
         }
         CollectiveOp::Gather { .. } | CollectiveOp::Allgather => {
             for r in 0..num_ranks {
-                st[r].insert(Chunk(r as u32), ContribSet::singleton(r));
+                seed(r, r as u32, ContribSet::singleton(r));
             }
         }
         CollectiveOp::Scatter { root } => {
             for r in 0..num_ranks {
-                st[root].insert(Chunk(r as u32), ContribSet::singleton(root));
+                seed(root, r as u32, ContribSet::singleton(root));
             }
         }
         CollectiveOp::AllToAll => {
             let p = num_ranks as u32;
-            for s in 0..num_ranks {
+            for src in 0..num_ranks {
                 for d in 0..num_ranks {
-                    st[s].insert(
-                        Chunk(s as u32 * p + d as u32),
-                        ContribSet::singleton(s),
-                    );
+                    seed(src, src as u32 * p + d as u32, ContribSet::singleton(src));
                 }
             }
         }
         CollectiveOp::Reduce { chunks, .. } | CollectiveOp::Allreduce { chunks } => {
             for r in 0..num_ranks {
                 for c in 0..chunks {
-                    st[r].insert(Chunk(c), ContribSet::singleton(r));
+                    seed(r, c, ContribSet::singleton(r));
                 }
             }
         }
         CollectiveOp::ReduceScatter => {
             for r in 0..num_ranks {
                 for c in 0..num_ranks {
-                    st[r].insert(Chunk(c as u32), ContribSet::singleton(r));
+                    seed(r, c as u32, ContribSet::singleton(r));
                 }
             }
         }
@@ -141,7 +147,7 @@ pub fn initial_state(op: CollectiveOp, num_ranks: usize) -> Vec<Holdings> {
 pub fn run(schedule: &Schedule) -> crate::Result<SymState> {
     let op = schedule.op;
     let reduction = op.is_reduction();
-    let mut st = initial_state(op, schedule.num_ranks);
+    let mut st = initial_state(op, schedule.num_ranks, schedule.msg.segments);
 
     for (ri, round) in schedule.rounds.iter().enumerate() {
         // All sends read pre-round state (transfers within a round are
@@ -199,81 +205,84 @@ pub fn run(schedule: &Schedule) -> crate::Result<SymState> {
     Ok(SymState { state: st })
 }
 
-/// Check the op's postcondition over a final symbolic state.
+/// Check the op's postcondition over a final symbolic state. Segmented
+/// schedules must satisfy the base-chunk postcondition for *every*
+/// segment of the base chunk.
 pub fn check_final(schedule: &Schedule, st: &SymState) -> crate::Result<()> {
     let p = schedule.num_ranks;
     let full = ContribSet::full(p);
     let reduction = schedule.op.is_reduction();
-    let require = |r: Rank, c: Chunk, want: &ContribSet| -> crate::Result<()> {
-        let have = if reduction {
-            st.state[r].max_disjoint_union(c)
-        } else {
-            st.state[r].union(c)
-        };
-        if want.is_subset(&have) {
-            Ok(())
-        } else if have.is_empty() {
-            Err(anyhow::anyhow!("rank {r} never received chunk {:?}", c))
-        } else {
-            Err(anyhow::anyhow!(
+    let segs = schedule.msg.segments.max(1);
+    let require = |r: Rank, base: u32, want: &ContribSet| -> crate::Result<()> {
+        for k in 0..segs {
+            let c = Chunk(base * segs + k);
+            let have = if reduction {
+                st.state[r].max_disjoint_union(c)
+            } else {
+                st.state[r].union(c)
+            };
+            if want.is_subset(&have) {
+                continue;
+            }
+            if have.is_empty() {
+                anyhow::bail!("rank {r} never received chunk {:?}", c);
+            }
+            anyhow::bail!(
                 "rank {r} holds chunk {:?} with {} but needs {}",
                 c,
                 have,
                 want
-            ))
+            );
         }
+        Ok(())
     };
     match schedule.op {
         CollectiveOp::Broadcast { root } => {
             let want = ContribSet::singleton(root);
             for r in 0..p {
-                require(r, Chunk(0), &want)?;
+                require(r, 0, &want)?;
             }
         }
         CollectiveOp::Gather { root } => {
             for s in 0..p {
-                require(root, Chunk(s as u32), &ContribSet::singleton(s))?;
+                require(root, s as u32, &ContribSet::singleton(s))?;
             }
         }
         CollectiveOp::Scatter { root } => {
             let want = ContribSet::singleton(root);
             for r in 0..p {
-                require(r, Chunk(r as u32), &want)?;
+                require(r, r as u32, &want)?;
             }
         }
         CollectiveOp::Allgather => {
             for r in 0..p {
                 for s in 0..p {
-                    require(r, Chunk(s as u32), &ContribSet::singleton(s))?;
+                    require(r, s as u32, &ContribSet::singleton(s))?;
                 }
             }
         }
         CollectiveOp::AllToAll => {
             for d in 0..p {
                 for s in 0..p {
-                    require(
-                        d,
-                        Chunk(s as u32 * p as u32 + d as u32),
-                        &ContribSet::singleton(s),
-                    )?;
+                    require(d, s as u32 * p as u32 + d as u32, &ContribSet::singleton(s))?;
                 }
             }
         }
         CollectiveOp::Reduce { root, chunks } => {
             for c in 0..chunks {
-                require(root, Chunk(c), &full)?;
+                require(root, c, &full)?;
             }
         }
         CollectiveOp::Allreduce { chunks } => {
             for r in 0..p {
                 for c in 0..chunks {
-                    require(r, Chunk(c), &full)?;
+                    require(r, c, &full)?;
                 }
             }
         }
         CollectiveOp::ReduceScatter => {
             for r in 0..p {
-                require(r, Chunk(r as u32), &full)?;
+                require(r, r as u32, &full)?;
             }
         }
     }

@@ -218,7 +218,7 @@ pub fn simulate_lowered(
             let src = low.src[xi] as usize;
             let (p0, p1) =
                 (low.payload_off[xi] as usize, low.payload_off[xi + 1] as usize);
-            let size_bytes = (p1 - p0) as u64 * params.chunk_bytes;
+            let size_bytes = low.payload_bytes[xi];
             let mut data_ready = 0.0f64;
             for &c in &low.payload_chunks[p0..p1] {
                 data_ready = data_ready.max(ready[src * nc + c as usize]);
@@ -405,7 +405,7 @@ mod tests {
     fn arena_reuse_across_topologies_is_clean() {
         // Simulate on a big topology, then a small one, then the big one
         // again: the arena must resize/reset correctly every time.
-        let params = SimParams::lan_cluster(1024);
+        let params = SimParams::lan_cluster();
         let mut arena = SimArena::new();
         let mk = |machines: usize| {
             let c = switched(machines, 2, 1);

@@ -91,7 +91,7 @@ mod tests {
     #[test]
     fn deterministic() {
         let (c, p, s) = bcast_2x2();
-        let params = SimParams::lan_cluster(1024);
+        let params = SimParams::lan_cluster();
         let a = simulate(&c, &p, &s, &params).unwrap();
         let b = simulate(&c, &p, &s, &params).unwrap();
         assert_eq!(a.t_end, b.t_end);
@@ -101,7 +101,7 @@ mod tests {
     #[test]
     fn local_write_cheaper_than_external() {
         let (c, p, _) = bcast_2x2();
-        let params = SimParams::lan_cluster(1024);
+        let params = SimParams::lan_cluster();
 
         let mut ext = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "e");
         ext.push_round(Round {
@@ -120,13 +120,15 @@ mod tests {
     fn dependency_chains_serialize() {
         let c = switched(3, 1, 1);
         let p = Placement::block(&c);
-        let params = SimParams::lan_cluster(1 << 20);
+        let params = SimParams::lan_cluster();
 
-        let mut one = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 3, "1");
+        let mut one = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 3, "1")
+            .with_total_bytes(1 << 20);
         one.push_round(Round {
             xfers: vec![Xfer::external(0, 1, Payload::single(0, 0))],
         });
-        let mut two = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 3, "2");
+        let mut two = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 3, "2")
+            .with_total_bytes(1 << 20);
         two.push_round(Round {
             xfers: vec![Xfer::external(0, 1, Payload::single(0, 0))],
         });
@@ -145,7 +147,9 @@ mod tests {
         let mk = |nics| {
             let c = switched(2, 4, nics);
             let p = Placement::block(&c);
-            let mut s = Schedule::new(CollectiveOp::Allgather, 8, "t");
+            // 1 MiB per slot chunk: bandwidth-dominated.
+            let mut s = Schedule::new(CollectiveOp::Allgather, 8, "t")
+                .with_total_bytes(8 << 20);
             s.push_round(Round {
                 xfers: (0..4)
                     .map(|i| Xfer::external(i, 4 + i, Payload::single(i as u32, i)))
@@ -153,7 +157,7 @@ mod tests {
             });
             (c, p, s)
         };
-        let params = SimParams::lan_cluster(1 << 20); // 1 MiB: bw-dominated
+        let params = SimParams::lan_cluster();
         let (c1, p1, s1) = mk(1);
         let (c4, p4, s4) = mk(4);
         let t1 = simulate(&c1, &p1, &s1, &params).unwrap().t_end;
@@ -167,7 +171,7 @@ mod tests {
     #[test]
     fn flat_logp_ignores_locality() {
         let (c, p, _) = bcast_2x2();
-        let params = SimParams::flat_logp(10e-6, 2e-6, 3e-6, 1024);
+        let params = SimParams::flat_logp(10e-6, 2e-6, 3e-6);
         let mut loc = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "l");
         loc.push_round(Round {
             xfers: vec![Xfer::local_read(0, 1, Payload::single(0, 0))],
@@ -187,11 +191,32 @@ mod tests {
 
     #[test]
     fn bytes_and_messages_accounted() {
-        let (c, p, s) = bcast_2x2();
-        let params = SimParams::lan_cluster(4096);
+        let (c, p, mut s) = bcast_2x2();
+        s.set_total_bytes(4096);
+        let params = SimParams::lan_cluster();
         let r = simulate(&c, &p, &s, &params).unwrap();
         assert_eq!(r.ext_messages, 1);
         assert_eq!(r.ext_bytes, 4096);
+    }
+
+    #[test]
+    fn payload_size_scales_simulated_time() {
+        // The size dimension end-to-end: the same schedule value, sized
+        // 1 KiB vs 64 MiB, must price serialization from the schedule's
+        // MsgSpec (SimParams no longer carries a chunk size at all).
+        let (c, p, s) = bcast_2x2();
+        let params = SimParams::lan_cluster();
+        let small = simulate(&c, &p, &s.clone().with_total_bytes(1 << 10), &params)
+            .unwrap();
+        let big = simulate(&c, &p, &s.with_total_bytes(64 << 20), &params).unwrap();
+        assert_eq!(small.ext_bytes, 1 << 10);
+        assert_eq!(big.ext_bytes, 64 << 20);
+        assert!(
+            big.t_end > 100.0 * small.t_end,
+            "64 MiB {} should dwarf 1 KiB {}",
+            big.t_end,
+            small.t_end
+        );
     }
 
     #[test]
@@ -200,7 +225,8 @@ mod tests {
         // be spaced by at least g.
         let c = switched(5, 1, 4);
         let p = Placement::block(&c);
-        let mut s = Schedule::new(CollectiveOp::Scatter { root: 0 }, 5, "t");
+        let mut s =
+            Schedule::new(CollectiveOp::Scatter { root: 0 }, 5, "t").with_total_bytes(320);
         // Four rounds so per-round proc-send caps don't apply here.
         for d in 1..5usize {
             s.push_round(Round {
@@ -211,7 +237,7 @@ mod tests {
                 )],
             });
         }
-        let mut params = SimParams::lan_cluster(64);
+        let mut params = SimParams::lan_cluster();
         params.gap = 1.0; // enormous gap dominates
         let r = simulate(&c, &p, &s, &params).unwrap();
         assert!(r.t_end >= 3.0, "4 sends with g=1 need ≥ 3s, got {}", r.t_end);
@@ -230,10 +256,11 @@ mod tests {
         ]);
         let p = Placement::block(&slow);
         let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 2, "t");
+        s.set_total_bytes(64);
         s.push_round(Round {
             xfers: vec![Xfer::external(0, 1, Payload::single(0, 0))],
         });
-        let mut params = SimParams::lan_cluster(64);
+        let mut params = SimParams::lan_cluster();
         params.respect_speed = true;
         params.o_send = 1.0; // make overhead dominate
         let ts = simulate(&slow, &p, &s, &params).unwrap().t_end;
@@ -251,7 +278,7 @@ mod tests {
         s.push_round(Round {
             xfers: vec![Xfer::local_write(0, vec![1, 2, 3], Payload::single(0, 0))],
         });
-        let params = SimParams::lan_cluster(1024).with_records();
+        let params = SimParams::lan_cluster().with_records();
         let r = simulate(&c, &p, &s, &params).unwrap();
         assert_eq!(r.records.len(), 3);
         let dsts: Vec<usize> = r.records.iter().map(|x| x.dst).collect();

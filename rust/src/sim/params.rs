@@ -1,5 +1,11 @@
 //! Simulation parameter sets.
-
+//!
+//! `SimParams` describes the machine's *physics* only: overheads,
+//! latencies and per-byte costs. How many bytes each transfer carries is
+//! a property of the schedule ([`crate::sched::MsgSpec`]), not of the
+//! simulator — the engines read per-chunk sizes from the schedule (or
+//! the sizes interned into the lowered IR), so the same parameter set
+//! prices a 1 KB and a 1 GB collective honestly.
 
 /// Physical parameters for the continuous-time engine.
 ///
@@ -22,8 +28,6 @@ pub struct SimParams {
     pub byte_time_ext: f64,
     /// Seconds per byte through shared memory.
     pub byte_time_int: f64,
-    /// Bytes carried per schedule chunk.
-    pub chunk_bytes: u64,
     /// Enforce per-machine NIC tokens and per-edge occupancy (rule R3 made
     /// physical). Off for flat-LogP emulation.
     pub nic_limited: bool,
@@ -37,7 +41,7 @@ impl SimParams {
     /// A realistic commodity cluster (≈2008 hardware, matching the paper's
     /// setting): gigabit Ethernet (≈50 µs latency, ≈110 MB/s), multi-GB/s
     /// shared memory with sub-µs visibility.
-    pub fn lan_cluster(chunk_bytes: u64) -> Self {
+    pub fn lan_cluster() -> Self {
         Self {
             o_send: 2e-6,
             o_recv: 2e-6,
@@ -47,7 +51,6 @@ impl SimParams {
             lat_int: 0.3e-6,
             byte_time_ext: 1.0 / 110e6,
             byte_time_int: 1.0 / 3e9,
-            chunk_bytes,
             nic_limited: true,
             respect_speed: false,
             record_xfers: false,
@@ -58,7 +61,7 @@ impl SimParams {
     /// measured against: per-message CPU overheads in the tens of
     /// microseconds dominate small transfers — exactly the regime where
     /// shared-memory aggregation pays (E5).
-    pub fn lan_2008(chunk_bytes: u64) -> Self {
+    pub fn lan_2008() -> Self {
         Self {
             o_send: 15e-6,
             o_recv: 15e-6,
@@ -68,7 +71,6 @@ impl SimParams {
             lat_int: 0.5e-6,
             byte_time_ext: 1.0 / 110e6,
             byte_time_int: 1.0 / 2e9,
-            chunk_bytes,
             nic_limited: true,
             respect_speed: false,
             record_xfers: false,
@@ -77,7 +79,7 @@ impl SimParams {
 
     /// A modern datacenter network (≈5 µs latency, 25 GbE) — used to check
     /// that the paper's qualitative conclusions survive parameter shifts.
-    pub fn datacenter(chunk_bytes: u64) -> Self {
+    pub fn datacenter() -> Self {
         Self {
             o_send: 0.5e-6,
             o_recv: 0.5e-6,
@@ -87,7 +89,6 @@ impl SimParams {
             lat_int: 0.1e-6,
             byte_time_ext: 1.0 / 3.1e9,
             byte_time_int: 1.0 / 20e9,
-            chunk_bytes,
             nic_limited: true,
             respect_speed: false,
             record_xfers: false,
@@ -97,7 +98,7 @@ impl SimParams {
     /// Pure LogP: flat network (locality-blind: intra-machine transfers
     /// cost the same as network transfers), no NIC sharing, no bandwidth
     /// term beyond the per-process gap.
-    pub fn flat_logp(l: f64, o: f64, g: f64, chunk_bytes: u64) -> Self {
+    pub fn flat_logp(l: f64, o: f64, g: f64) -> Self {
         Self {
             o_send: o,
             o_recv: o,
@@ -107,7 +108,6 @@ impl SimParams {
             lat_int: l,
             byte_time_ext: 0.0,
             byte_time_int: 0.0,
-            chunk_bytes,
             nic_limited: false,
             respect_speed: false,
             record_xfers: false,
@@ -127,7 +127,7 @@ impl SimParams {
     /// contention (factor > 1.01) — a machine whose slots measured as
     /// perfectly parallel should not be simulated with serialization it
     /// does not have.
-    pub fn from_profile(p: &crate::calibrate::MachineProfile, chunk_bytes: u64) -> Self {
+    pub fn from_profile(p: &crate::calibrate::MachineProfile) -> Self {
         Self {
             o_send: p.o_send,
             o_recv: p.o_recv,
@@ -137,7 +137,6 @@ impl SimParams {
             lat_int: p.round_overhead,
             byte_time_ext: p.byte_ext,
             byte_time_int: p.byte_int,
-            chunk_bytes,
             nic_limited: p.nic_contention > 1.01,
             respect_speed: false,
             record_xfers: false,
@@ -149,12 +148,6 @@ impl SimParams {
         self.record_xfers = true;
         self
     }
-
-    /// Builder-style: set chunk size.
-    pub fn with_chunk_bytes(mut self, b: u64) -> Self {
-        self.chunk_bytes = b;
-        self
-    }
 }
 
 #[cfg(test)]
@@ -163,21 +156,20 @@ mod tests {
 
     #[test]
     fn presets_are_sane() {
-        let lan = SimParams::lan_cluster(1024);
+        let lan = SimParams::lan_cluster();
         assert!(lan.lat_ext > lan.lat_int * 10.0);
         assert!(lan.byte_time_ext > lan.byte_time_int);
         assert!(lan.nic_limited);
 
-        let flat = SimParams::flat_logp(10e-6, 2e-6, 3e-6, 1024);
+        let flat = SimParams::flat_logp(10e-6, 2e-6, 3e-6);
         assert_eq!(flat.lat_ext, flat.lat_int);
         assert!(!flat.nic_limited);
     }
 
     #[test]
     fn builders() {
-        let p = SimParams::lan_cluster(1).with_records().with_chunk_bytes(77);
+        let p = SimParams::lan_cluster().with_records();
         assert!(p.record_xfers);
-        assert_eq!(p.chunk_bytes, 77);
     }
 
     #[test]
@@ -199,7 +191,7 @@ mod tests {
             machines: 2,
             ranks: 4,
         };
-        let p = SimParams::from_profile(&prof, 4096);
+        let p = SimParams::from_profile(&prof);
         assert_eq!(p.o_send, 2e-6);
         assert_eq!(p.o_recv, 3e-6);
         assert_eq!(p.o_write, 1e-6);
@@ -208,11 +200,10 @@ mod tests {
         assert_eq!(p.lat_int, 0.2e-6);
         assert_eq!(p.byte_time_ext, 9e-9);
         assert_eq!(p.byte_time_int, 0.4e-9);
-        assert_eq!(p.chunk_bytes, 4096);
         // Perfectly parallel slots measured => no simulated NIC tokens;
         // observed contention switches them on.
         assert!(!p.nic_limited);
         prof.nic_contention = 1.5;
-        assert!(SimParams::from_profile(&prof, 4096).nic_limited);
+        assert!(SimParams::from_profile(&prof).nic_limited);
     }
 }

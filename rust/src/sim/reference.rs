@@ -107,7 +107,10 @@ pub fn simulate_reference(
         in_cursor.copy_from_slice(&proc_busy_until);
         let mut deliveries: Vec<(usize, Chunk, f64)> = Vec::new();
         for x in &round.xfers {
-            let size_bytes = x.payload.num_chunks() as u64 * params.chunk_bytes;
+            // Serialized size of the transfer: the schedule's payload
+            // spec prices every chunk it carries (uneven tails included).
+            let size_bytes: u64 =
+                x.payload.items.iter().map(|(c, _)| schedule.msg.chunk_bytes(c.0)).sum();
             let data_ready = x
                 .payload
                 .items

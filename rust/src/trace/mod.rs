@@ -12,7 +12,7 @@ use crate::collectives::TargetHeuristic;
 use crate::coordinator::{
     AllreduceAlgo, AlltoallAlgo, BroadcastAlgo, Communicator, GatherAlgo,
 };
-use crate::sched::{CollectiveOp, Schedule};
+use crate::sched::Schedule;
 use crate::sim::{simulate, SimParams};
 use crate::util::Rng;
 
@@ -151,22 +151,10 @@ pub fn replay(
                 )
             }
         };
-        // Spread the op's total payload over the schedule's chunk space.
-        let chunk_count = match schedule.op {
-            CollectiveOp::Broadcast { .. } => 1,
-            CollectiveOp::Gather { .. }
-            | CollectiveOp::Scatter { .. }
-            | CollectiveOp::Allgather => schedule.num_ranks,
-            CollectiveOp::AllToAll => schedule.num_ranks * schedule.num_ranks,
-            CollectiveOp::Reduce { chunks, .. } | CollectiveOp::Allreduce { chunks } => {
-                chunks as usize
-            }
-            CollectiveOp::ReduceScatter => schedule.num_ranks,
-        };
-        let params = base_params
-            .clone()
-            .with_chunk_bytes((total_bytes / chunk_count.max(1) as u64).max(1));
-        let rep = simulate(&comm.cluster, &comm.placement, &schedule, &params)?;
+        // Size the schedule itself: MsgSpec spreads the op's total
+        // payload over the schedule's chunk space.
+        let schedule = schedule.with_total_bytes(total_bytes);
+        let rep = simulate(&comm.cluster, &comm.placement, &schedule, base_params)?;
         total += rep.t_end;
         ext_messages += rep.ext_messages;
         per_op.push(rep.t_end);
@@ -197,7 +185,7 @@ mod tests {
     fn mc_suite_beats_flat_on_training_trace() {
         let comm = Communicator::block(switched(4, 4, 2));
         let trace = Trace::training(10, 4 << 20);
-        let params = SimParams::lan_cluster(1);
+        let params = SimParams::lan_cluster();
         let flat = replay(&comm, &trace, Suite::Flat, &params).unwrap();
         let mc = replay(&comm, &trace, Suite::McAware, &params).unwrap();
         assert!(
@@ -212,7 +200,8 @@ mod tests {
     fn replay_reports_per_op() {
         let comm = Communicator::block(switched(2, 2, 1));
         let trace = Trace::mixed(8, 1);
-        let rep = replay(&comm, &trace, Suite::McAware, &SimParams::lan_cluster(1)).unwrap();
+        let rep =
+            replay(&comm, &trace, Suite::McAware, &SimParams::lan_cluster()).unwrap();
         assert_eq!(rep.per_op.len(), 8);
         assert!(rep.total_time > 0.0);
     }

@@ -2,11 +2,14 @@
 //!
 //! A [`Fingerprint`] captures everything the tuner's decision depends on:
 //! the cluster (machine specs + interconnect), the placement, the
-//! requested collective (including its root), and the evaluation
-//! parameters (duplex assumption, `alpha`, simulator physics). Two
-//! lookups with equal fingerprints are guaranteed to want the same
-//! schedule, so the cached [`crate::tune::Decision`] — rank numbers and
-//! all — can be reused verbatim.
+//! requested collective (including its root), the payload size class
+//! (`TuneCfg::msg_bytes` — algorithm choice is message-size-dependent,
+//! so a 1 KB and a 1 GB request must tune independently), and the
+//! evaluation parameters (duplex assumption, `alpha`, byte weights,
+//! simulator physics). Two lookups with equal fingerprints are
+//! guaranteed to want the same schedule, so the cached
+//! [`crate::tune::Decision`] — rank numbers and all — can be reused
+//! verbatim.
 //!
 //! **Canonical** here means *normalized representation*, not graph
 //! isomorphism: floats are compared bit-exactly, graph adjacency is
@@ -37,9 +40,15 @@ pub struct Fingerprint {
     machine_of: Vec<usize>,
     /// The requested operation, root included.
     collective: Collective,
-    /// Model knobs: half-duplex NICs and the internal-work weight.
+    /// Total payload bytes the decision is tuned for (size class): a
+    /// small and a large request must never alias.
+    msg_bytes: u64,
+    /// Model knobs: half-duplex NICs, the internal-work weight, and the
+    /// serialized-byte weights.
     duplex_half: bool,
     alpha_bits: u64,
+    byte_ext_bits: u64,
+    byte_int_bits: u64,
     /// Digest of the simulator physics (`record_xfers` excluded: it never
     /// changes timing).
     sim_bits: u64,
@@ -87,8 +96,11 @@ impl Fingerprint {
             switch,
             machine_of,
             collective,
+            msg_bytes: cfg.msg_bytes,
             duplex_half: matches!(cfg.model.duplex, crate::model::Duplex::Half),
             alpha_bits: cfg.model.alpha.to_bits(),
+            byte_ext_bits: cfg.model.byte_ext.to_bits(),
+            byte_int_bits: cfg.model.byte_int.to_bits(),
             sim_bits: sim_digest(&cfg.sim),
             shortlist: cfg.shortlist,
             profile: cfg.profile_digest,
@@ -113,8 +125,11 @@ impl Fingerprint {
             h = fnv(h, m as u64);
         }
         h = fnv(h, collective_tag(self.collective));
+        h = fnv(h, self.msg_bytes);
         h = fnv(h, self.duplex_half as u64);
         h = fnv(h, self.alpha_bits);
+        h = fnv(h, self.byte_ext_bits);
+        h = fnv(h, self.byte_int_bits);
         h = fnv(h, self.sim_bits);
         h = fnv(h, self.shortlist as u64);
         h = fnv(h, self.profile);
@@ -158,6 +173,13 @@ pub fn schedule_digest(s: &crate::sched::Schedule) -> u64 {
     };
     h = fnv(h, op_word);
     h = fnv(h, s.num_ranks as u64);
+    // Payload sizing is part of the schedule's identity: the same round
+    // structure at a different size (or segmentation) prices and executes
+    // differently.
+    h = fnv(h, s.msg.total_bytes);
+    h = fnv(h, s.msg.chunks as u64);
+    h = fnv(h, s.msg.segments as u64);
+    h = fnv(h, s.msg.elem_bytes);
     for &b in s.algo.as_bytes() {
         h = fnv(h, b as u64);
     }
@@ -214,7 +236,6 @@ fn sim_digest(p: &SimParams) -> u64 {
         p.lat_int.to_bits(),
         p.byte_time_ext.to_bits(),
         p.byte_time_int.to_bits(),
-        p.chunk_bytes,
         p.nic_limited as u64,
         p.respect_speed as u64,
     ] {
@@ -285,15 +306,22 @@ mod tests {
 
         // Model knobs.
         let mut half = TuneCfg::default();
-        half.model = Multicore { duplex: Duplex::Half, alpha: 0.1 };
+        half.model = Multicore { duplex: Duplex::Half, ..Multicore::default() };
         assert_ne!(base, fp(&switched(3, 4, 2), &half));
         let mut alpha = TuneCfg::default();
-        alpha.model = Multicore { duplex: Duplex::Full, alpha: 0.2 };
+        alpha.model = Multicore { alpha: 0.2, ..Multicore::default() };
         assert_ne!(base, fp(&switched(3, 4, 2), &alpha));
+        let mut bytes_w = TuneCfg::default();
+        bytes_w.model = Multicore { byte_ext: 0.0, ..Multicore::default() };
+        assert_ne!(base, fp(&switched(3, 4, 2), &bytes_w));
+
+        // Payload size class: a 1 KB and a 1 GB request never alias.
+        let sized = TuneCfg::default().with_msg_bytes(1 << 30);
+        assert_ne!(base, fp(&switched(3, 4, 2), &sized));
 
         // Simulator physics.
         let mut sim = TuneCfg::default();
-        sim.sim = crate::sim::SimParams::lan_cluster(1 << 20);
+        sim.sim.lat_ext = 10e-6;
         assert_ne!(base, fp(&switched(3, 4, 2), &sim));
 
         // Stage-2 pool width (decides what gets simulated).
@@ -341,6 +369,11 @@ mod tests {
             ))
         );
         assert_ne!(schedule_digest(&a), schedule_digest(&allreduce::ring(&pl)));
+        // Payload sizing is part of the schedule's identity.
+        assert_ne!(
+            schedule_digest(&a),
+            schedule_digest(&a.clone().with_total_bytes(1 << 20))
+        );
         // A single dropped transfer changes the digest (the final
         // binomial round has several, so the schedule stays non-empty).
         let mut b = a.clone();

@@ -10,23 +10,32 @@
 //! Mounié's *Fast Tuning of Intra-Cluster Collective Communications*: a
 //! static decision stage refined by measurement, memoized per topology).
 //!
+//! Selection is **payload-size-aware**: every candidate (and the flat
+//! baseline) is sized to [`TuneCfg::msg_bytes`] before pricing, the
+//! registry sweeps pipeline segment counts
+//! ([`fn@crate::collectives::segmented`] over the chain substrate), and the
+//! size class is part of the cache fingerprint — so the decision is the
+//! best (algorithm, segment count) for this topology *at this size*.
+//!
 //! Pipeline (see `rust/src/README.md` for the full diagram):
 //!
 //! ```text
-//! (Cluster, Placement, Collective, TuneCfg)
+//! (Cluster, Placement, Collective, TuneCfg{msg_bytes, …})
 //!        │
 //!        ▼
 //!  registry::candidates_for        every applicable builder variant,
-//!        │                         parameter sweeps included
+//!        │                         heuristic / slot / segment sweeps
 //!        ▼
-//!  stage 1: Multicore model cost   build + legalize + price in rounds,
-//!        │                         keep the `shortlist` best
+//!  stage 1: Multicore model cost   build + size + legalize + price in
+//!        │                         byte-weighted rounds, keep the
+//!        │                         `shortlist` best
 //!        ▼
 //!  stage 2: sim::simulate          continuous-time confirmation over the
 //!        │                         shortlist ∪ {flat baseline}
 //!        ▼
-//!  Decision ──▶ DecisionCache      keyed by canonical Fingerprint;
-//!                                  repeat lookups are one hash probe
+//!  Decision ──▶ DecisionCache      keyed by canonical Fingerprint
+//!                                  (size class included); repeat
+//!                                  lookups are one hash probe
 //! ```
 //!
 //! Contract: the selected schedule's simulated time never exceeds the
@@ -56,7 +65,9 @@ pub mod selector;
 
 pub use cache::{CacheStats, DecisionCache};
 pub use fingerprint::Fingerprint;
-pub use registry::{candidates_for, flat_baseline, CandidateId, Collective};
+pub use registry::{
+    candidates_for, flat_baseline, CandidateId, Collective, SegBase, SEGMENT_SWEEP,
+};
 pub use selector::{select, select_many, Decision, TuneCfg};
 
 use std::sync::Mutex;

@@ -17,11 +17,16 @@
 
 use crate::collectives::{
     allgather, allreduce, alltoall, broadcast, gather, reduce, reduce_scatter, scatter,
-    TargetHeuristic,
+    segmented::segmented, TargetHeuristic,
 };
 use crate::sched::Schedule;
 use crate::topology::{Cluster, Interconnect, Placement};
 use crate::Rank;
+
+/// Segment counts the tuner sweeps for pipelined candidates. Powers of
+/// two: the crossover moves roughly geometrically with payload size, so
+/// a geometric sweep brackets it.
+pub const SEGMENT_SWEEP: [u32; 3] = [2, 4, 8];
 
 /// A collective request, parameterized the way a caller sees it (no
 /// algorithm choice — that is the tuner's job).
@@ -81,6 +86,37 @@ pub enum CandidateId {
     AllreduceHierarchicalMc,
     ReduceScatterRing,
     ReduceScatterRecursiveHalving,
+    /// Machine-chain pipeline broadcast (unsegmented substrate).
+    BcastChainMc { root: Rank },
+    /// [`fn@crate::collectives::segmented`] applied to `base` with this
+    /// wave count — the tuner picks algorithm *and* segment size.
+    Segmented { base: SegBase, segments: u32 },
+}
+
+/// Inner builders the segmentation sweep applies to. A subset of the
+/// registry: pipelining pays on schedules with idle-NIC structure (the
+/// chain), and the ring variants keep the differential suites honest on
+/// reduction/segment interaction (they never win stage 1 — segmenting an
+/// always-busy ring only adds round constants — but they must stay
+/// *correct*).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SegBase {
+    BcastChainMc { root: Rank },
+    AllreduceRing,
+    ReduceScatterRing,
+    AllgatherRing,
+}
+
+impl SegBase {
+    /// The unsegmented candidate this base corresponds to.
+    pub fn id(&self) -> CandidateId {
+        match *self {
+            SegBase::BcastChainMc { root } => CandidateId::BcastChainMc { root },
+            SegBase::AllreduceRing => CandidateId::AllreduceRing,
+            SegBase::ReduceScatterRing => CandidateId::ReduceScatterRing,
+            SegBase::AllgatherRing => CandidateId::AllgatherRing,
+        }
+    }
 }
 
 impl CandidateId {
@@ -117,6 +153,10 @@ impl CandidateId {
             CandidateId::ReduceScatterRing => "reduce_scatter/ring".into(),
             CandidateId::ReduceScatterRecursiveHalving => {
                 "reduce_scatter/recursive-halving".into()
+            }
+            CandidateId::BcastChainMc { .. } => "bcast/chain-mc".into(),
+            CandidateId::Segmented { base, segments } => {
+                format!("{}+seg{segments}", base.id().label())
             }
         }
     }
@@ -165,6 +205,13 @@ impl CandidateId {
             CandidateId::ReduceScatterRecursiveHalving => {
                 reduce_scatter::recursive_halving(placement)?
             }
+            CandidateId::BcastChainMc { root } => {
+                broadcast::chain_mc(cluster, placement, root)
+            }
+            CandidateId::Segmented { base, segments } => {
+                let inner = base.id().build(cluster, placement)?;
+                segmented(cluster, placement, &inner, segments)?
+            }
         })
     }
 }
@@ -212,6 +259,17 @@ pub fn candidates_for(
             if switch {
                 out.push(CandidateId::BcastFlatTree { root });
                 out.push(CandidateId::BcastBinomial { root });
+                if cluster.num_machines() >= 2 {
+                    // The pipeline substrate plus its segment sweep: the
+                    // tuner picks the wave count per (topology, size).
+                    out.push(CandidateId::BcastChainMc { root });
+                    for segments in SEGMENT_SWEEP {
+                        out.push(CandidateId::Segmented {
+                            base: SegBase::BcastChainMc { root },
+                            segments,
+                        });
+                    }
+                }
             }
             out.push(CandidateId::BcastHierarchical { root });
             for heuristic in [
@@ -246,6 +304,12 @@ pub fn candidates_for(
         Collective::Allgather => {
             if switch {
                 out.push(CandidateId::AllgatherRing);
+                if n > 1 {
+                    out.push(CandidateId::Segmented {
+                        base: SegBase::AllgatherRing,
+                        segments: 2,
+                    });
+                }
                 for slots in slot_sweep(min_slots(cluster, placement)) {
                     out.push(CandidateId::AllgatherMcAware { slots });
                 }
@@ -263,6 +327,12 @@ pub fn candidates_for(
         Collective::Allreduce => {
             if switch {
                 out.push(CandidateId::AllreduceRing);
+                if n > 1 {
+                    out.push(CandidateId::Segmented {
+                        base: SegBase::AllreduceRing,
+                        segments: 2,
+                    });
+                }
                 if n.is_power_of_two() {
                     out.push(CandidateId::AllreduceRecursiveDoubling);
                     out.push(CandidateId::AllreduceRabenseifner);
@@ -273,6 +343,12 @@ pub fn candidates_for(
         Collective::ReduceScatter => {
             if switch {
                 out.push(CandidateId::ReduceScatterRing);
+                if n > 1 {
+                    out.push(CandidateId::Segmented {
+                        base: SegBase::ReduceScatterRing,
+                        segments: 2,
+                    });
+                }
                 if n.is_power_of_two() {
                     out.push(CandidateId::ReduceScatterRecursiveHalving);
                 }
@@ -313,10 +389,19 @@ mod tests {
         let bcast = candidates_for(Collective::Broadcast { root: 0 }, &cl, &pl);
         assert!(bcast.contains(&CandidateId::BcastBinomial { root: 0 }));
         assert!(bcast.iter().any(|c| matches!(c, CandidateId::BcastMcAware { .. })));
-        assert_eq!(bcast.len(), 7);
+        // Pipelining: the chain substrate plus one candidate per swept
+        // segment count.
+        assert!(bcast.contains(&CandidateId::BcastChainMc { root: 0 }));
+        for segments in SEGMENT_SWEEP {
+            assert!(bcast.contains(&CandidateId::Segmented {
+                base: SegBase::BcastChainMc { root: 0 },
+                segments,
+            }));
+        }
+        assert_eq!(bcast.len(), 7 + 1 + SEGMENT_SWEEP.len());
 
         let ar = candidates_for(Collective::Allreduce, &cl, &pl);
-        assert_eq!(ar.len(), 4); // 16 ranks: pow2 variants apply
+        assert_eq!(ar.len(), 5); // 16 ranks: pow2 variants + segmented ring
     }
 
     #[test]
@@ -373,7 +458,13 @@ mod tests {
         assert!(!ids.contains(&CandidateId::AllreduceRabenseifner));
         assert!(ids.contains(&CandidateId::AllreduceRing));
         let rs = candidates_for(Collective::ReduceScatter, &cl, &pl);
-        assert_eq!(rs, vec![CandidateId::ReduceScatterRing]);
+        assert_eq!(
+            rs,
+            vec![
+                CandidateId::ReduceScatterRing,
+                CandidateId::Segmented { base: SegBase::ReduceScatterRing, segments: 2 }
+            ]
+        );
     }
 
     #[test]
@@ -385,6 +476,7 @@ mod tests {
             ids,
             vec![
                 CandidateId::ReduceScatterRing,
+                CandidateId::Segmented { base: SegBase::ReduceScatterRing, segments: 2 },
                 CandidateId::ReduceScatterRecursiveHalving
             ]
         );

@@ -47,9 +47,9 @@ const STAGE1_PAR_MIN_WORK: usize = 1 << 12;
 const STAGE2_PAR_MIN_XFERS: usize = 1 << 13;
 
 /// Tuner configuration: the cost model used for stage-1 ranking (its
-/// duplex assumption and `alpha` are part of the cache fingerprint), the
-/// simulator physics used for stage-2 confirmation, and the shortlist
-/// width.
+/// duplex assumption, `alpha` and byte weights are part of the cache
+/// fingerprint), the simulator physics used for stage-2 confirmation,
+/// the payload size the decision is for, and the shortlist width.
 #[derive(Debug, Clone)]
 pub struct TuneCfg {
     pub model: Multicore,
@@ -58,6 +58,13 @@ pub struct TuneCfg {
     /// trade tuning time for decision quality; `usize::MAX` simulates
     /// every candidate (exhaustive mode, used by ablations).
     pub shortlist: usize,
+    /// Total payload bytes the decision is tuned for: every candidate
+    /// (and the flat baseline) is sized to this before pricing, so the
+    /// winner — algorithm *and* segment count — is specific to the
+    /// (topology, size) pair. Folded into the cache
+    /// [`crate::tune::Fingerprint`], so a 1 KB and a 1 GB request never
+    /// share a cached decision.
+    pub msg_bytes: u64,
     /// Digest of the [`crate::calibrate::MachineProfile`] this
     /// configuration was derived from (0 = hand-set constants). Part of
     /// the decision-cache [`crate::tune::Fingerprint`], so decisions
@@ -70,8 +77,9 @@ impl Default for TuneCfg {
     fn default() -> Self {
         Self {
             model: Multicore::default(),
-            sim: SimParams::lan_cluster(16 << 10),
+            sim: SimParams::lan_cluster(),
             shortlist: 4,
+            msg_bytes: 16 << 10,
             profile_digest: 0,
         }
     }
@@ -79,16 +87,24 @@ impl Default for TuneCfg {
 
 impl TuneCfg {
     /// Tuner configuration derived from a measured machine profile:
-    /// stage-1 ranking under [`Multicore::from_profile`], stage-2
-    /// confirmation under [`SimParams::from_profile`], and the profile's
-    /// digest folded into every cache fingerprint.
-    pub fn from_profile(p: &crate::calibrate::MachineProfile, chunk_bytes: u64) -> Self {
+    /// stage-1 ranking under [`Multicore::from_profile`] (byte weights
+    /// included), stage-2 confirmation under [`SimParams::from_profile`],
+    /// decisions sized for `msg_bytes`, and the profile's digest folded
+    /// into every cache fingerprint.
+    pub fn from_profile(p: &crate::calibrate::MachineProfile, msg_bytes: u64) -> Self {
         Self {
-            model: Multicore::from_profile(p, chunk_bytes),
-            sim: SimParams::from_profile(p, chunk_bytes),
+            model: Multicore::from_profile(p),
+            sim: SimParams::from_profile(p),
             shortlist: 4,
+            msg_bytes,
             profile_digest: p.digest(),
         }
+    }
+
+    /// Builder-style payload size override.
+    pub fn with_msg_bytes(mut self, msg_bytes: u64) -> Self {
+        self.msg_bytes = msg_bytes;
+        self
     }
 }
 
@@ -117,6 +133,14 @@ impl Decision {
     pub fn win_margin(&self) -> Option<f64> {
         self.baseline_sim
             .map(|b| if b > 0.0 { 1.0 - self.sim_time / b } else { 0.0 })
+    }
+
+    /// The chosen pipeline segment count (1 = unsegmented winner).
+    pub fn segments(&self) -> u32 {
+        match self.choice {
+            CandidateId::Segmented { segments, .. } => segments,
+            _ => 1,
+        }
     }
 }
 
@@ -184,17 +208,20 @@ where
 /// re-lowering.
 type Priced<'t> = (CandidateId, Schedule, f64, LoweredSchedule<'t>);
 
-/// Build one candidate and price it under `model` over the lowered IR,
-/// legalizing first when the raw builder output is not legal (exactly as
-/// a real NIC-constrained cluster would serialize it).
+/// Build one candidate, size it to the configured payload, and price it
+/// under `model` over the lowered IR, legalizing first when the raw
+/// builder output is not legal (exactly as a real NIC-constrained
+/// cluster would serialize it).
 fn build_and_price<'t>(
     ctx: &'t TopoCtx,
     model: &Multicore,
     cluster: &Cluster,
     placement: &Placement,
+    msg_bytes: u64,
     id: CandidateId,
 ) -> crate::Result<Priced<'t>> {
-    let built = id.build(cluster, placement)?;
+    let mut built = id.build(cluster, placement)?;
+    built.set_total_bytes(msg_bytes);
     if let Ok(low) = LoweredSchedule::compile(ctx, &built) {
         if let Ok(detail) = model.cost_detail_lowered(&low) {
             return Ok((id, built, detail.total(model.alpha), low));
@@ -261,7 +288,9 @@ pub fn select_many(
         jobs.len(),
         workers1,
         || (),
-        |_scratch, i| build_and_price(&ctx, &cfg.model, cluster, placement, jobs[i]),
+        |_scratch, i| {
+            build_and_price(&ctx, &cfg.model, cluster, placement, cfg.msg_bytes, jobs[i])
+        },
     );
     let mut ranked_all: Vec<Priced<'_>> = Vec::with_capacity(jobs.len());
     for result in priced {
@@ -410,6 +439,37 @@ mod tests {
         assert!(d.sim_time <= d.baseline_sim.unwrap());
         assert!(d.considered >= 4);
         assert!(d.simulated <= d.considered);
+    }
+
+    #[test]
+    fn selection_is_size_aware_with_segment_sweep() {
+        // The whole point of the sized pipeline: on the same topology the
+        // winner changes with payload size, and for a bandwidth-dominated
+        // payload the pick is a *segmented* pipeline that beats the flat
+        // baseline in simulated time.
+        let cl = switched(8, 4, 2);
+        let pl = Placement::block(&cl);
+        let coll = Collective::Broadcast { root: 0 };
+        let small = select(&cl, &pl, coll, &TuneCfg::default().with_msg_bytes(512))
+            .unwrap();
+        let large = select(&cl, &pl, coll, &TuneCfg::default().with_msg_bytes(64 << 20))
+            .unwrap();
+        assert_ne!(
+            small.choice, large.choice,
+            "512 B and 64 MiB must tune differently: both chose {}",
+            small.choice.label()
+        );
+        assert!(
+            matches!(large.choice, CandidateId::Segmented { .. }),
+            "64 MiB should pick a pipelined candidate, got {}",
+            large.choice.label()
+        );
+        assert!(large.segments() > 1);
+        assert_eq!(small.segments(), 1);
+        assert!(large.sim_time < large.baseline_sim.unwrap());
+        symexec::verify(&large.schedule).unwrap();
+        // The schedule the decision carries is sized for the request.
+        assert_eq!(large.schedule.msg.total_bytes, 64 << 20);
     }
 
     #[test]

@@ -79,6 +79,7 @@ fn ring_and_hierarchical_training_trajectories_agree() {
             exec_params: ExecParams::zero(),
             seed: 11,
             log_every: 0,
+            ..Default::default()
         };
         let trainer = Trainer::new(&dir, &cfg).unwrap();
         let rep = trainer.run(&cfg).unwrap();
@@ -106,6 +107,7 @@ fn recursive_doubling_trains() {
         exec_params: ExecParams::zero(),
         seed: 11,
         log_every: 0,
+        ..Default::default()
     };
     let trainer = Trainer::new(&dir, &cfg).unwrap();
     let rep = trainer.run(&cfg).unwrap();

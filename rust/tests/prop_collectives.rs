@@ -41,7 +41,7 @@ fn check_schedule(cl: &Cluster, pl: &Placement, s: &Schedule, ctx: &str) {
         .validate(cl, pl, &legal)
         .unwrap_or_else(|e| panic!("{ctx}: validate: {e}"));
     symexec::verify(&legal).unwrap_or_else(|e| panic!("{ctx}: legalized symexec: {e}"));
-    simulate(cl, pl, &legal, &SimParams::lan_cluster(512))
+    simulate(cl, pl, &legal, &SimParams::lan_cluster())
         .unwrap_or_else(|e| panic!("{ctx}: simulate: {e}"));
 }
 
@@ -154,13 +154,64 @@ fn all_builders_verify_on_random_topologies() {
     }
 }
 
+/// Segmentation sweep: `segmented(S)` of a builder's output must (a)
+/// verify symbolically (per-segment initial/final state), (b) stay — or
+/// legalize — model-legal, (c) simulate, and (d) preserve the total
+/// payload while multiplying the chunk space by S.
+#[test]
+fn segmented_builders_verify_on_random_topologies() {
+    use mcomm::collectives::segmented::segmented;
+    for seed in 0..20u64 {
+        let cl = random_cluster(seed);
+        let pl = Placement::block(&cl);
+        let n = pl.num_ranks();
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5E6);
+        let root = rng.gen_range(0..n);
+        let segments = [2u32, 3, 4][rng.gen_range(0..3)];
+        let bytes = 1 + rng.gen_range(0..(1 << 20)) as u64;
+        let is_switch = matches!(
+            cl.interconnect,
+            mcomm::topology::Interconnect::FullSwitch
+        );
+
+        let mut inners = vec![
+            broadcast::mc_aware(&cl, &pl, root, TargetHeuristic::CoverageAware),
+            gather::mc_aware(&cl, &pl, root),
+            scatter::mc_aware(&cl, &pl, root),
+            reduce::mc_aware(&cl, &pl, root),
+        ];
+        if is_switch {
+            inners.push(broadcast::chain_mc(&cl, &pl, root));
+            inners.push(broadcast::binomial(&pl, root));
+            inners.push(allgather::ring(&pl));
+            if n > 1 {
+                inners.push(allreduce::ring(&pl));
+            }
+        }
+        for inner in inners {
+            let inner = inner.with_total_bytes(bytes);
+            let ctx = format!("seed {seed} seg{segments} ({})", inner.algo);
+            let piped = segmented(&cl, &pl, &inner, segments)
+                .unwrap_or_else(|e| panic!("{ctx}: segmented: {e}"));
+            assert_eq!(piped.msg.total_bytes, inner.msg.total_bytes, "{ctx}");
+            assert_eq!(piped.msg.segments, segments, "{ctx}");
+            assert_eq!(
+                piped.external_messages(),
+                segments as usize * inner.external_messages(),
+                "{ctx}"
+            );
+            check_schedule(&cl, &pl, &piped, &ctx);
+        }
+    }
+}
+
 /// Half-duplex sweep: every builder output — constructed assuming full
 /// duplex — must legalize to a schedule that satisfies the stricter
 /// `sends + receives <= k` cap, still verify symbolically, and still
 /// simulate. This is the `Duplex::Half` counterpart of the sweep above.
 #[test]
 fn half_duplex_legalization_on_random_topologies() {
-    let model = Multicore { duplex: Duplex::Half, alpha: 0.1 };
+    let model = Multicore { duplex: Duplex::Half, ..Multicore::default() };
     let check = |cl: &Cluster, pl: &Placement, s: &Schedule, ctx: &str| {
         symexec::verify(s).unwrap_or_else(|e| panic!("{ctx}: symexec: {e}"));
         let legal = legalize(&model, cl, pl, s);
@@ -169,7 +220,7 @@ fn half_duplex_legalization_on_random_topologies() {
             .unwrap_or_else(|e| panic!("{ctx}: half-duplex validate: {e}"));
         symexec::verify(&legal)
             .unwrap_or_else(|e| panic!("{ctx}: legalized symexec: {e}"));
-        simulate(cl, pl, &legal, &SimParams::lan_cluster(512))
+        simulate(cl, pl, &legal, &SimParams::lan_cluster())
             .unwrap_or_else(|e| panic!("{ctx}: simulate: {e}"));
     };
     for seed in 0..25u64 {

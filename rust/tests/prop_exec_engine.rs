@@ -55,19 +55,21 @@ fn expected_deliveries(s: &Schedule) -> Vec<ExecDelivery> {
 }
 
 /// The schedule-derived record stream in the lowered simulator's
-/// emission order: (src, dst, external, payload chunks) per record.
-fn expected_records(s: &Schedule) -> Vec<(usize, usize, bool, usize)> {
+/// emission order: (src, dst, external, serialized bytes per the
+/// schedule's MsgSpec) per record.
+fn expected_records(s: &Schedule) -> Vec<(usize, usize, bool, u64)> {
     let mut out = Vec::new();
     for round in &s.rounds {
         for x in &round.xfers {
-            let chunks = x.payload.items.len();
+            let bytes: u64 =
+                x.payload.items.iter().map(|(c, _)| s.msg.chunk_bytes(c.0)).sum();
             match x.kind {
                 XferKind::External | XferKind::LocalRead => {
-                    out.push((x.src, x.dsts[0], x.kind == XferKind::External, chunks));
+                    out.push((x.src, x.dsts[0], x.kind == XferKind::External, bytes));
                 }
                 XferKind::LocalWrite => {
                     for &d in &x.dsts {
-                        out.push((x.src, d, false, chunks));
+                        out.push((x.src, d, false, bytes));
                     }
                 }
             }
@@ -79,7 +81,7 @@ fn expected_records(s: &Schedule) -> Vec<(usize, usize, bool, usize)> {
 #[test]
 fn engine_deliveries_match_lowered_simulator_records() {
     let exec_params = ExecParams::zero().with_deliveries();
-    let sim_params = SimParams::lan_cluster(64).with_records();
+    let sim_params = SimParams::lan_cluster().with_records();
     let mut arena = SimArena::new();
 
     for seed in 0..6u64 {
@@ -111,9 +113,12 @@ fn engine_deliveries_match_lowered_simulator_records() {
             Collective::ReduceScatter,
         ] {
             for cand in candidates_for(coll, &cl, &pl) {
+                // Randomized total size: record bytes must follow the
+                // schedule's MsgSpec (uneven chunk tails included).
                 let s = cand
                     .build(&cl, &pl)
-                    .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", cand.label()));
+                    .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", cand.label()))
+                    .with_total_bytes(1 + rng.gen_range(0..(1 << 16)) as u64);
                 let ctx_s = format!("seed {seed} {}", cand.label());
 
                 // Lowered simulator record stream == schedule stream.
@@ -128,11 +133,7 @@ fn engine_deliveries_match_lowered_simulator_records() {
                         (want.0, want.1, want.2),
                         "{ctx_s}"
                     );
-                    assert_eq!(
-                        rec.bytes,
-                        want.3 as u64 * sim_params.chunk_bytes,
-                        "{ctx_s}: bytes"
-                    );
+                    assert_eq!(rec.bytes, want.3, "{ctx_s}: bytes");
                 }
 
                 // Engine per-round deliveries == the same stream, with

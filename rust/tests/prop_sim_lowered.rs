@@ -19,13 +19,13 @@ use mcomm::tune::{candidates_for, Collective};
 use mcomm::util::Rng;
 
 fn param_grid() -> Vec<SimParams> {
-    let mut speedy = SimParams::lan_cluster(2048).with_records();
+    let mut speedy = SimParams::lan_cluster().with_records();
     speedy.respect_speed = true;
     vec![
-        SimParams::lan_cluster(4096).with_records(),
-        SimParams::lan_2008(512).with_records(),
-        SimParams::datacenter(1 << 16).with_records(),
-        SimParams::flat_logp(10e-6, 2e-6, 3e-6, 1024).with_records(),
+        SimParams::lan_cluster().with_records(),
+        SimParams::lan_2008().with_records(),
+        SimParams::datacenter().with_records(),
+        SimParams::flat_logp(10e-6, 2e-6, 3e-6).with_records(),
         speedy,
     ]
 }
@@ -115,12 +115,23 @@ fn lowered_simulator_matches_reference_exactly() {
                     Ok(s) => s,
                     Err(_) => continue, // builder inapplicable (e.g. pow2)
                 };
-                let label = format!("seed {seed} {} {}", coll.name(), id.label());
+                // Randomized payload size: the engines read per-chunk
+                // bytes from the schedule's MsgSpec (uneven tails
+                // included), so the differential sweep must cover the
+                // size dimension, not just the default sizing.
+                let built =
+                    built.with_total_bytes(1 + rng.gen_range(0..(4 << 20)) as u64);
+                let label = format!(
+                    "seed {seed} {} {} ({} B)",
+                    coll.name(),
+                    id.label(),
+                    built.msg.total_bytes
+                );
                 check_exact(&label, &cl, &pl, &ctx, &built, &params, &mut arena);
                 schedules_checked += 1;
                 // Both duplex legalizations of the raw candidate.
                 for duplex in [Duplex::Full, Duplex::Half] {
-                    let model = Multicore { duplex, alpha: 0.1 };
+                    let model = Multicore { duplex, ..Multicore::default() };
                     let legal = legalize(&model, &cl, &pl, &built);
                     let label = format!("{label} legalized/{duplex:?}");
                     check_exact(&label, &cl, &pl, &ctx, &legal, &params, &mut arena);
@@ -139,7 +150,7 @@ fn lowered_simulator_matches_reference_exactly() {
 /// the reference too, including on error cases.
 #[test]
 fn wrapper_matches_reference() {
-    let params = SimParams::lan_cluster(8192).with_records();
+    let params = SimParams::lan_cluster().with_records();
     for seed in [3u64, 11, 27] {
         let cl = switched(1 + (seed as usize % 5), 2, 1);
         let pl = Placement::block(&cl);

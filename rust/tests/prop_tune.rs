@@ -60,9 +60,10 @@ fn tuned_choice_never_loses_to_flat_baseline() {
                 .validate(&cl, &pl, &d.schedule)
                 .unwrap_or_else(|e| panic!("{ctx}: validate: {e}"));
 
-            // (c) the contract, against an independently computed baseline.
+            // (c) the contract, against an independently computed
+            // baseline, sized exactly as the tuner sizes its candidates.
             let base_id = flat_baseline(coll, &cl).expect("switched => baseline");
-            let built = base_id.build(&cl, &pl).unwrap();
+            let built = base_id.build(&cl, &pl).unwrap().with_total_bytes(cfg.msg_bytes);
             let base = if cfg.model.validate(&cl, &pl, &built).is_ok() {
                 built
             } else {
@@ -84,6 +85,51 @@ fn tuned_choice_never_loses_to_flat_baseline() {
             );
         }
     }
+}
+
+/// Size-aware selection: across a randomized switched family, the tuned
+/// decision must *change* between a small and a large payload on at
+/// least one topology, and on large payloads the winning pick must be a
+/// segmented pipeline that strictly beats the unsegmented flat baseline
+/// in simulated time on at least one topology. (Seeds are fixed, so
+/// this is deterministic.)
+#[test]
+fn tuned_decision_changes_across_size_sweep() {
+    let small_cfg = TuneCfg::default().with_msg_bytes(512);
+    let large_cfg = TuneCfg::default().with_msg_bytes(32 << 20);
+    let mut decision_changed = 0usize;
+    let mut segmented_wins = 0usize;
+    let mut multi_machine = 0usize;
+    for seed in 0..12u64 {
+        let cl = random_switched(seed);
+        let pl = Placement::block(&cl);
+        if cl.num_machines() < 2 {
+            continue; // single machine: no network, size cannot matter
+        }
+        multi_machine += 1;
+        let coll = Collective::Broadcast { root: 0 };
+        let small = tune::select(&cl, &pl, coll, &small_cfg).unwrap();
+        let large = tune::select(&cl, &pl, coll, &large_cfg).unwrap();
+        symexec::verify(&large.schedule).unwrap();
+        if small.choice != large.choice {
+            decision_changed += 1;
+        }
+        let base = large.baseline_sim.expect("switched => baseline");
+        if large.segments() > 1 && large.sim_time < base {
+            segmented_wins += 1;
+        }
+        // Small payloads should never pay for pipelining overhead.
+        assert_eq!(small.segments(), 1, "seed {seed}: 512 B picked segmentation");
+    }
+    assert!(multi_machine >= 5, "degenerate sweep: {multi_machine} topologies");
+    assert!(
+        decision_changed >= 1,
+        "no topology re-tuned between 512 B and 32 MiB"
+    );
+    assert!(
+        segmented_wins >= 1,
+        "no large-payload pick was a segmented pipeline beating the flat baseline"
+    );
 }
 
 /// Cache contract: same fingerprint => hit, identical decision; the

@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_hotpath.json against the committed baseline.
+
+The baseline (rust/BENCH_hotpath.baseline.json) is the *contract* for the
+hot-path bench suite: every key listed there must be present in the
+fresh run — a silently dropped bench key is how perf trajectories die.
+Medians in the baseline are optional (null until a maintainer pins them
+from a CI artifact); when present, the script reports the delta and only
+*fails* on order-of-magnitude regressions (smoke mode on shared CI
+runners is too noisy for tight gates — the artifact trail is the real
+trend tracker).
+
+Usage: bench_compare.py <fresh.json> <baseline.json>
+Exit codes: 0 ok, 1 missing keys / malformed input, 2 gross regression.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 1
+    try:
+        with open(sys.argv[1]) as f:
+            fresh = json.load(f)
+        with open(sys.argv[2]) as f:
+            base = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_compare: cannot read inputs: {e}")
+        return 1
+
+    base_results = base.get("results")
+    if not base_results:
+        print("bench_compare: FAIL — baseline has no 'results' entries "
+              "(malformed baseline would make the key contract vacuous)")
+        return 1
+    fresh_by_name = {r["name"]: r for r in fresh.get("results", [])}
+    missing = []
+    regressed = []
+    for want in base_results:
+        name = want["name"]
+        got = fresh_by_name.get(name)
+        if got is None:
+            missing.append(name)
+            continue
+        pinned = want.get("median_s")
+        median = got.get("median_s")
+        if not isinstance(median, (int, float)):
+            missing.append(f"{name} (no median_s in fresh results)")
+            continue
+        if pinned:
+            ratio = median / pinned
+            marker = ""
+            if ratio > 10.0:
+                regressed.append((name, ratio))
+                marker = "  <-- REGRESSION"
+            print(f"  {name}: {median:.3e}s vs pinned "
+                  f"{pinned:.3e}s ({ratio:.2f}x){marker}")
+        else:
+            print(f"  {name}: {median:.3e}s (no pinned baseline)")
+
+    extra = sorted(set(fresh_by_name) - {r["name"] for r in base_results})
+    for name in extra:
+        print(f"  NEW KEY (add to baseline): {name}")
+
+    if missing:
+        print("bench_compare: FAIL — baseline keys missing from this run:")
+        for name in missing:
+            print(f"  - {name}")
+        return 1
+    if regressed:
+        print("bench_compare: FAIL — gross regressions (>10x vs pinned):")
+        for name, ratio in regressed:
+            print(f"  - {name}: {ratio:.1f}x")
+        return 2
+    print(f"bench_compare: OK — {len(base_results)} keys present"
+          f"{', ' + str(len(extra)) + ' new' if extra else ''}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
