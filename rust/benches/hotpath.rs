@@ -2,8 +2,9 @@
 //! EXPERIMENTS.md): schedule building, symbolic verification, lowering,
 //! the continuous simulator's throughput (steady-state lowered engine
 //! and cold compile+run), model costing over both representations,
-//! legalization, autotuner selection, and the real executor's per-round
-//! overhead.
+//! legalization, autotuner selection (clean and robustness-scored), the
+//! fault-injection branch, online re-planning, and the real executor's
+//! per-round overhead.
 //!
 //! Emits `BENCH_hotpath.json` (see `bench_harness::write_json`) so CI
 //! can track the trajectory of every number here PR-over-PR. Run with
@@ -136,6 +137,25 @@ fn main() {
             )
             .unwrap(),
         );
+    }));
+
+    // Robustness additions: the k-draw stage-2b scoring cost on top of
+    // a clean select, the simulator's injection branch, and the online
+    // re-plan path (fresh communicator per iteration — the rebuild is
+    // the thing being measured).
+    let robust_cfg = TuneCfg::default().with_robustness(4, 0xB0B, 8.0);
+    stats.push(bench("robust: tune::select draws=4 (8x8)", || {
+        std::hint::black_box(
+            tune::select(&t_cl, &t_pl, Collective::Allreduce, &robust_cfg).unwrap(),
+        );
+    }));
+    let slow_params = SimParams::lan_cluster().with_slowdown(3, 8.0);
+    stats.push(bench("robust: simulate straggler ring (128)", || {
+        std::hint::black_box(simulate_lowered(&ring_low, &slow_params, &mut arena));
+    }));
+    stats.push(bench("robust: replan 6 -> 5 ranks", || {
+        let mut comm = mcomm::coordinator::Communicator::block(switched(3, 2, 1));
+        std::hint::black_box(comm.replan_without(&[5], &[]).unwrap());
     }));
 
     // Real executor: per-round overhead with zero injected cost.

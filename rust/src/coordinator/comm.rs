@@ -16,6 +16,14 @@
 //! digest probe + job dispatch: no thread spawn, no symbolic
 //! re-validation, no plan extraction (the trainer executes one allreduce
 //! per step, so this is its steady state).
+//!
+//! When a rank dies mid-run (the executor's abort error, or
+//! [`crate::exec::ExecReport::dead_rank`] in suppression mode) or
+//! membership shrinks between steps, [`Communicator::replan_without`]
+//! rebuilds the surviving topology in place: stale decisions are
+//! invalidated by fingerprint, stale plans and the worker pool are
+//! dropped, and the requested collectives re-tune through the same
+//! decision cache — the loop continues on the survivors.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -27,9 +35,9 @@ use crate::exec::{BufferStore, ExecEngine, ExecParams, ExecPlan, ExecReport};
 use crate::model::CostModel;
 use crate::sched::Schedule;
 use crate::sim::{simulate, SimParams, SimReport};
-use crate::topology::{Cluster, Placement};
+use crate::topology::{Cluster, Interconnect, MachineSpec, Placement};
 use crate::tune::fingerprint::schedule_digest;
-use crate::tune::{CacheStats, Collective, Decision, TuneCfg, Tuned};
+use crate::tune::{CacheStats, Collective, Decision, Fingerprint, TuneCfg, Tuned};
 use crate::Rank;
 
 /// Broadcast algorithm selector.
@@ -98,6 +106,21 @@ pub struct ExecStats {
     pub plan_misses: usize,
     pub engine_spawns: usize,
     pub engine_runs: usize,
+}
+
+/// What an online re-plan did ([`Communicator::replan_without`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplanReport {
+    /// Ranks in the rebuilt placement.
+    pub survivors: usize,
+    /// Machines in the rebuilt cluster (machines that lost every rank
+    /// disappear).
+    pub machines: usize,
+    /// Stale tuning decisions dropped by fingerprint.
+    pub invalidated_decisions: usize,
+    /// Compiled plans dropped (all of them — they embed the old rank
+    /// numbering).
+    pub dropped_plans: usize,
 }
 
 /// Total cached plans per communicator. Schedules are topology-shaped,
@@ -280,6 +303,111 @@ impl Communicator {
     /// Autotuner cache counters.
     pub fn tune_stats(&self) -> CacheStats {
         self.tuner.stats()
+    }
+
+    // ---- online re-planning ------------------------------------------
+
+    /// Rebuild this communicator for the topology that survives losing
+    /// `dead_ranks` — the executor reported a death
+    /// ([`crate::exec::ExecReport::dead_rank`], or the abort-mode error),
+    /// or membership shrank between trainer steps.
+    ///
+    /// Surviving ranks are renumbered densely in their old order; each
+    /// machine keeps its NICs and speed but shrinks to its surviving
+    /// cores, and machines that lost every rank disappear (a graph
+    /// interconnect is re-indexed over the survivors). The old
+    /// topology's cached decisions for `retune` are invalidated by
+    /// fingerprint, every compiled plan is dropped (old rank numbering),
+    /// the worker pool is torn down (wrong rank count), and the `retune`
+    /// collectives are tuned afresh through the existing decision cache.
+    pub fn replan_without(
+        &mut self,
+        dead_ranks: &[Rank],
+        retune: &[Collective],
+    ) -> crate::Result<ReplanReport> {
+        let n = self.placement.num_ranks();
+        let mut dead = vec![false; n];
+        for &r in dead_ranks {
+            anyhow::ensure!(r < n, "dead rank {r} out of range ({n} ranks)");
+            dead[r] = true;
+        }
+        let survivors: Vec<Rank> = (0..n).filter(|&r| !dead[r]).collect();
+        anyhow::ensure!(!survivors.is_empty(), "no surviving ranks to re-plan for");
+        anyhow::ensure!(survivors.len() < n, "no dead ranks given; nothing to re-plan");
+
+        // Invalidate stale decisions by fingerprint before the topology
+        // they describe is gone.
+        let mut invalidated = 0usize;
+        for &coll in retune {
+            let fp = Fingerprint::new(&self.cluster, &self.placement, coll, &self.tuner.cfg);
+            if self.tuner.invalidate(&fp) {
+                invalidated += 1;
+            }
+        }
+
+        // The surviving cluster: old machine order, shrunk core counts.
+        let mut cores_left = vec![0usize; self.cluster.num_machines()];
+        for &r in &survivors {
+            cores_left[self.placement.machine_of(r)] += 1;
+        }
+        let mut new_of_old = vec![usize::MAX; self.cluster.num_machines()];
+        let mut machines = Vec::new();
+        for (m, &cores) in cores_left.iter().enumerate() {
+            if cores > 0 {
+                new_of_old[m] = machines.len();
+                let old = self.cluster.machines[m];
+                machines.push(MachineSpec::with_speed(cores, old.nics, old.speed));
+            }
+        }
+        let interconnect = match &self.cluster.interconnect {
+            Interconnect::FullSwitch => Interconnect::FullSwitch,
+            Interconnect::Graph { adj } => Interconnect::Graph {
+                adj: (0..self.cluster.num_machines())
+                    .filter(|&m| new_of_old[m] != usize::MAX)
+                    .map(|m| {
+                        adj[m]
+                            .iter()
+                            .filter(|&&nb| new_of_old[nb] != usize::MAX)
+                            .map(|&nb| new_of_old[nb])
+                            .collect()
+                    })
+                    .collect(),
+            },
+        };
+        let cluster = Cluster::new(machines, interconnect)?;
+        anyhow::ensure!(
+            cluster.is_connected(),
+            "surviving cluster is disconnected; cannot re-plan"
+        );
+        let machine_of: Vec<usize> = survivors
+            .iter()
+            .map(|&r| new_of_old[self.placement.machine_of(r)])
+            .collect();
+        let placement = Placement::explicit(&cluster, machine_of)?;
+
+        // Swap in; drop plans and pool compiled for the dead topology.
+        let dropped_plans = {
+            let mut st = self.exec.lock().expect("exec state poisoned");
+            let dropped = st.entries;
+            st.plans.clear();
+            st.entries = 0;
+            dropped
+        };
+        *self.engine.lock().expect("engine poisoned") = None;
+        self.cluster = cluster;
+        self.placement = placement;
+
+        // Re-tune through the existing decision cache: the survivors'
+        // fingerprints are new, so these are honest misses.
+        for &coll in retune {
+            self.tuner.decision(&self.cluster, &self.placement, coll)?;
+        }
+        Ok(ReplanReport {
+            survivors: survivors.len(),
+            machines: self.cluster.num_machines(),
+            invalidated_decisions: invalidated,
+            dropped_plans,
+        })
     }
 
     // ---- evaluation ---------------------------------------------------
@@ -494,6 +622,94 @@ mod tests {
         assert_eq!(comm.exec_stats().engine_spawns, 1);
         let s = comm.tuned(Collective::Allreduce).unwrap();
         crate::sched::symexec::verify(&s).unwrap();
+    }
+
+    #[test]
+    fn replan_after_rank_death_completes_on_survivors() {
+        // The acceptance flow: a tuned allreduce step dies mid-collective
+        // (abort mode), the communicator re-plans for the survivors, and
+        // the next step completes over real bytes on the new topology.
+        use crate::exec::initial_inputs;
+        use crate::sched::Chunk;
+        let pat = |r: usize, c: Chunk| vec![(r * 10 + c.0 as usize) as f32; 4];
+        let mut comm = Communicator::block(switched(3, 2, 1));
+        let s = comm.allreduce(AllreduceAlgo::Auto).unwrap();
+        comm.execute(&s, initial_inputs(&s, pat), &crate::exec::ExecParams::zero())
+            .unwrap();
+
+        // Step 2: rank 4 dies at round 0 — clean abort, pool survives.
+        let dying = crate::exec::ExecParams::zero()
+            .with_dead_rank(4, 0)
+            .with_abort_on_death();
+        let err = comm
+            .execute(&s, initial_inputs(&s, pat), &dying)
+            .unwrap_err();
+        assert!(err.to_string().contains("rank 4 died"), "{err}");
+
+        let rep = comm
+            .replan_without(&[4], &[crate::tune::Collective::Allreduce])
+            .unwrap();
+        assert_eq!((rep.survivors, rep.machines), (5, 3));
+        assert_eq!(rep.invalidated_decisions, 1, "stale Auto decision dropped");
+        assert!(rep.dropped_plans >= 1);
+        assert_eq!(comm.num_ranks(), 5);
+        // Machine 2 lost one of its two ranks.
+        assert_eq!(comm.cluster.machines[2].cores, 1);
+        assert_eq!(comm.placement.ranks_on(2), &[4]);
+
+        // Step 3 on the survivors: the re-tuned schedule executes and
+        // fully reduces on every remaining rank.
+        let s2 = comm.allreduce(AllreduceAlgo::Auto).unwrap();
+        assert_eq!(s2.num_ranks, 5);
+        let rep2 = comm
+            .execute(&s2, initial_inputs(&s2, pat), &crate::exec::ExecParams::zero())
+            .unwrap();
+        let chunks = match s2.op {
+            crate::sched::CollectiveOp::Allreduce { chunks } => chunks,
+            _ => unreachable!(),
+        };
+        for ch in 0..chunks {
+            let want: Vec<f32> = (0..4)
+                .map(|i| (0..5).map(|r| pat(r, Chunk(ch))[i]).sum())
+                .collect();
+            for r in 0..5 {
+                let got = rep2.outputs[r].reduced_value(Chunk(ch), 5).expect("sum");
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-2, "rank {r} chunk {ch}: {g} vs {w}");
+                }
+            }
+        }
+        // The old pool was torn down; the survivor run spawned a new one.
+        assert_eq!(comm.exec_stats().engine_spawns, 2);
+    }
+
+    #[test]
+    fn replan_drops_emptied_machines_and_rejects_degenerate_shrinks() {
+        let mut comm = Communicator::block(switched(3, 2, 1));
+        // Killing both ranks of machine 1 removes the machine entirely.
+        let rep = comm.replan_without(&[2, 3], &[]).unwrap();
+        assert_eq!((rep.survivors, rep.machines), (4, 2));
+        assert_eq!(comm.cluster.num_machines(), 2);
+        assert_eq!(comm.placement.machine_of(2), 1, "old rank 4 renumbered onto machine 1");
+        // Degenerate shrinks are rejected without touching state.
+        assert!(comm.replan_without(&[], &[]).is_err(), "nothing to re-plan");
+        assert!(comm.replan_without(&[0, 1, 2, 3], &[]).is_err(), "nobody left");
+        assert!(comm.replan_without(&[9], &[]).is_err(), "out of range");
+        assert_eq!(comm.num_ranks(), 4);
+    }
+
+    #[test]
+    fn replan_reindexes_graph_interconnect() {
+        // Line topology 0-1-2: machine 1 dying would disconnect 0 and 2,
+        // which must be rejected; dropping an *end* machine re-indexes
+        // the surviving edge.
+        let mut comm = Communicator::block(crate::topology::line(3, 2, 1));
+        let err = comm.replan_without(&[2, 3], &[]).unwrap_err();
+        assert!(err.to_string().contains("disconnected"), "{err}");
+        let rep = comm.replan_without(&[0, 1], &[]).unwrap();
+        assert_eq!((rep.survivors, rep.machines), (4, 2));
+        assert!(comm.cluster.connected(0, 1));
+        assert!(comm.cluster.is_connected());
     }
 
     #[test]

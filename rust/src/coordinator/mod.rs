@@ -9,7 +9,7 @@ mod trainer;
 
 pub use comm::{
     AllgatherAlgo, AllreduceAlgo, AlltoallAlgo, BroadcastAlgo, Communicator, ExecStats,
-    GatherAlgo,
+    GatherAlgo, ReplanReport,
 };
 pub use data::Corpus;
 pub use trainer::{

@@ -223,6 +223,27 @@ impl Trainer {
         self.comm.exec_stats()
     }
 
+    /// Online re-planning between steps: drop `dead_ranks` (a death the
+    /// executor reported, or an external membership shrink), rebuild the
+    /// communicator's topology for the survivors, and re-tune + re-size
+    /// the gradient schedule. The next step's allreduce runs on the
+    /// shrunken cluster with fewer workers.
+    pub fn replan_without(
+        &mut self,
+        dead_ranks: &[usize],
+        cfg: &TrainerCfg,
+    ) -> crate::Result<super::comm::ReplanReport> {
+        let rep = self
+            .comm
+            .replan_without(dead_ranks, &[crate::tune::Collective::Allreduce])?;
+        let grad_bytes = 4 * self.runtime.meta.num_params as u64;
+        let mut schedule = self.comm.allreduce(cfg.algo)?;
+        schedule.set_payload(grad_bytes, 4);
+        debug_assert!(matches!(schedule.op, CollectiveOp::Allreduce { .. }));
+        self.schedule = schedule;
+        Ok(rep)
+    }
+
     /// Allreduce the workers' gradient vectors through the real executor;
     /// returns the summed gradient (length `num_params`).
     pub fn allreduce_grads(
@@ -404,6 +425,18 @@ mod tests {
         let got = t.allreduce_grads(&grads, &ExecParams::zero()).unwrap();
         for i in (0..p).step_by(7919) {
             let want: f32 = (0..w).map(|r| grads[r][i]).sum();
+            assert!((got[i] - want).abs() < 1e-4, "i={i}: {} vs {want}", got[i]);
+        }
+
+        // Re-plan without worker 1: the same loop continues with fewer
+        // workers on the rebuilt schedule.
+        let mut t = t;
+        let rep = t.replan_without(&[1], &cfg).unwrap();
+        assert_eq!(rep.survivors, w - 1);
+        assert_eq!(t.workers(), w - 1);
+        let got = t.allreduce_grads(&grads[..w - 1], &ExecParams::zero()).unwrap();
+        for i in (0..p).step_by(7919) {
+            let want: f32 = (0..w - 1).map(|r| grads[r][i]).sum();
             assert!((got[i] - want).abs() < 1e-4, "i={i}: {} vs {want}", got[i]);
         }
     }

@@ -33,6 +33,16 @@
 //!   the two per-round barriers — exactly where wall clocks physically
 //!   synchronize — and the final makespan is reported as
 //!   [`ExecReport::virtual_time`].
+//! * **Injected faults and stragglers** — [`ExecParams::slowdown`]
+//!   multiplies a rank's virtual-clock costs; [`ExecParams::dead_rank`]
+//!   kills a rank at the start of a round. With
+//!   [`ExecParams::abort_on_death`] the death aborts the run through the
+//!   normal failure path (clean error, reusable pool — the production
+//!   behavior a trainer re-plans from); without it the dead rank's
+//!   traffic is suppressed exactly like the simulator suppresses it
+//!   (dead rank posts nothing and drains nothing, live ranks skip sends
+//!   to / reads from the corpse and expect only live senders), so
+//!   exec-vs-sim stays differential under injected faults.
 //!
 //! Execution semantics are unchanged from the seed: two barriers per
 //! round; phase 1 reads pre-round state and posts sends/writes/reads,
@@ -384,7 +394,13 @@ impl ExecEngine {
             }
             deliveries.sort_unstable();
         }
-        Ok(ExecReport { outputs, wall, virtual_time, deliveries })
+        // Reported only when the injected death actually bit a round of
+        // this plan (the abort path errors out above instead).
+        let dead_rank = params
+            .dead_rank
+            .filter(|&(_, rd)| (rd as usize) < plan.num_rounds)
+            .map(|(dr, _)| dr);
+        Ok(ExecReport { outputs, wall, virtual_time, deliveries, dead_rank })
     }
 }
 
@@ -461,6 +477,7 @@ fn run_rounds(
     let plan = &*job.plan;
     let params = &job.params;
     let vmode = params.virtual_time;
+    let sf = params.slow_of(r as u32);
     let boards = sh.boards.read().expect("boards");
     let mut vt = 0.0f64;
     let record = |ri: usize, src: usize, chunk: Chunk, external: bool| {
@@ -481,6 +498,21 @@ fn run_rounds(
             sh.barrier.wait(); // keep the barrier schedule in lockstep
             continue;
         }
+        if let Some((dr, dround)) = params.dead_rank {
+            // Abort mode: every rank reaches the death round together
+            // (the round-start barrier just passed) and posts the same
+            // message — first one wins, the rest keep the barrier
+            // schedule through the abort path. The pool stays reusable.
+            if params.abort_on_death && ri as u32 >= dround {
+                sh.fail(format!("rank {dr} died at round {dround}"));
+                sh.barrier.wait();
+                continue;
+            }
+        }
+        // Suppression mode: a dead rank keeps its barrier schedule (the
+        // pool's lockstep must survive) but posts nothing, reads
+        // nothing and drains nothing from its death round on.
+        let me_dead = !params.abort_on_death && params.killed(r as u32, ri as u32);
         if vmode {
             // All clocks published before the barrier; join to the max —
             // exactly what the physical barrier does to wall clocks.
@@ -491,11 +523,14 @@ fn run_rounds(
         staged.clear();
 
         // ---- Phase 1: read pre-round state, post everything.
-        {
+        if !me_dead {
             let me = job.stores[r].read().expect("own store");
             for (act, payload) in plan.phase1(r, ri) {
                 match act.kind {
                     ActKind::Send => {
+                        if params.killed(act.peer, ri as u32) {
+                            continue; // no traffic to a dead rank
+                        }
                         let dst = act.peer as usize;
                         let mut items = Vec::with_capacity(payload.len());
                         let mut bytes = 0usize;
@@ -515,7 +550,7 @@ fn run_rounds(
                         }
                         if ok {
                             let arrive_vt = if vmode {
-                                vt += params.send_secs(bytes);
+                                vt += params.send_secs(bytes) * sf;
                                 vt + params.latency_secs()
                             } else {
                                 params.spin_send(bytes);
@@ -551,13 +586,16 @@ fn run_rounds(
                         drop(slot);
                         if ok {
                             if vmode {
-                                vt += params.write_secs();
+                                vt += params.write_secs() * sf;
                             } else {
                                 params.spin_write();
                             }
                         }
                     }
                     ActKind::Read => {
+                        if params.killed(act.peer, ri as u32) {
+                            continue; // no reads from a dead rank
+                        }
                         let src = act.peer as usize;
                         let peer = job.stores[src].read().expect("peer store");
                         for (c, contrib) in payload {
@@ -565,7 +603,7 @@ fn run_rounds(
                                 Ok(data) => {
                                     let bytes = data.len() * 4;
                                     if vmode {
-                                        vt += params.read_secs(bytes);
+                                        vt += params.read_secs(bytes) * sf;
                                     } else {
                                         params.spin_read(bytes);
                                     }
@@ -597,6 +635,9 @@ fn run_rounds(
 
         // ---- Phase 2: drain arrivals, apply deliveries.
         for &(slot, writer) in plan.write_recvs(r, ri) {
+            if me_dead || params.killed(writer, ri as u32) {
+                continue; // dead reader consumes nothing; dead writer published nothing
+            }
             let slot = boards[slot as usize].lock().expect("board slot");
             if slot.is_empty() {
                 sh.fail(format!(
@@ -609,8 +650,15 @@ fn run_rounds(
                 }
             }
         }
+        // Only live senders' messages are in flight: a dead sender never
+        // posted, and a dead receiver drains nothing at all.
+        let expected = if me_dead {
+            0
+        } else {
+            plan.recv_srcs(r, ri).iter().filter(|&&s| !params.killed(s, ri as u32)).count()
+        };
         let mut drained_ok = true;
-        for _ in 0..plan.recvs(r, ri) {
+        for _ in 0..expected {
             match sh.queues[r].pop(&sh.abort) {
                 Some(msg) => {
                     if msg.round as usize != ri {
@@ -644,7 +692,7 @@ fn run_rounds(
             }
             for msg in inbox.drain(..) {
                 if vmode {
-                    vt = vt.max(msg.arrive_vt) + params.recv_secs();
+                    vt = vt.max(msg.arrive_vt) + params.recv_secs() * sf;
                 } else {
                     params.wait_until(msg.available_at);
                     params.spin_recv();
@@ -807,6 +855,102 @@ mod tests {
         engine
             .execute(&plan_ok, initial_inputs(&ok, pat), &ExecParams::zero())
             .unwrap();
+    }
+
+    #[test]
+    fn injected_death_aborts_cleanly_and_pool_survives() {
+        // Production path: a rank dying mid-collective must abort the
+        // whole run with a clean, deterministic error — and leave the
+        // pool healthy for the re-planned run that follows.
+        let cl = switched(2, 2, 1);
+        let pl = Placement::block(&cl);
+        let s = allgather::ring(&pl);
+        let plan = Arc::new(ExecPlan::compile(&pl, &s).unwrap());
+        let mut engine = ExecEngine::new(4);
+        let params = ExecParams::zero().with_dead_rank(2, 1).with_abort_on_death();
+        let t = Instant::now();
+        let err = engine
+            .execute(&plan, initial_inputs(&s, pat), &params)
+            .unwrap_err();
+        assert!(err.to_string().contains("rank 2 died at round 1"), "{err}");
+        assert!(t.elapsed() < Duration::from_secs(2), "abort must be fast");
+        let rep = engine
+            .execute(&plan, initial_inputs(&s, pat), &ExecParams::zero())
+            .unwrap();
+        for r in 0..4 {
+            for src in 0..4usize {
+                let ch = Chunk(src as u32);
+                assert_eq!(*rep.outputs[r].value(ch).unwrap(), pat(src, ch), "rank {r}");
+            }
+        }
+        assert!(rep.dead_rank.is_none());
+    }
+
+    #[test]
+    fn suppressed_death_completes_on_surviving_ranks() {
+        // Suppression mode (the exec-vs-sim differential path): the
+        // corpse receives nothing, everyone else completes, and the
+        // report names the dead rank.
+        let cl = switched(2, 2, 1);
+        let pl = Placement::block(&cl);
+        let s = broadcast::binomial(&pl, 0);
+        let plan = Arc::new(ExecPlan::compile(&pl, &s).unwrap());
+        let mut engine = ExecEngine::new(4);
+        let params = ExecParams::zero().with_dead_rank(3, 0);
+        let rep = engine.execute(&plan, initial_inputs(&s, pat), &params).unwrap();
+        assert_eq!(rep.dead_rank, Some(3));
+        let want = pat(0, Chunk(0));
+        for r in 0..3 {
+            assert_eq!(*rep.outputs[r].value(Chunk(0)).unwrap(), want, "rank {r}");
+        }
+        assert!(rep.outputs[3].value(Chunk(0)).is_none(), "corpse must stay empty");
+        // A death round past the plan has no effect and is not reported.
+        let late = ExecParams::zero().with_dead_rank(1, 99);
+        let rep = engine.execute(&plan, initial_inputs(&s, pat), &late).unwrap();
+        assert!(rep.dead_rank.is_none());
+        assert_eq!(*rep.outputs[1].value(Chunk(0)).unwrap(), want);
+    }
+
+    #[test]
+    fn straggler_slowdown_scales_virtual_costs_exactly() {
+        // 0 -> 1 broadcast, one external round: vt = o_send + latency +
+        // o_recv with every cost attributed to a known rank, so scaling
+        // one rank's clock stretches exactly that rank's share.
+        let cl = switched(2, 1, 1);
+        let pl = Placement::block(&cl);
+        let s = broadcast::binomial(&pl, 0);
+        let plan = Arc::new(ExecPlan::compile(&pl, &s).unwrap());
+        let o_send = Duration::from_micros(10);
+        let o_recv = Duration::from_micros(3);
+        let lat = Duration::from_micros(50);
+        let base = ExecParams {
+            o_send,
+            o_recv,
+            ext_latency: lat,
+            ..ExecParams::zero()
+        }
+        .with_virtual_time();
+        let mut engine = ExecEngine::new(2);
+        let vt_of = |engine: &mut ExecEngine, p: &ExecParams| {
+            engine
+                .execute(&plan, initial_inputs(&s, pat), p)
+                .unwrap()
+                .virtual_time
+                .unwrap()
+        };
+        let healthy = vt_of(&mut engine, &base);
+        let want = o_send.as_secs_f64() + lat.as_secs_f64() + o_recv.as_secs_f64();
+        assert!((healthy - want).abs() < 1e-12, "{healthy} vs {want}");
+        // Slow the receiver 4x: only its o_recv stretches.
+        let vt = vt_of(&mut engine, &base.clone().with_slowdown(1, 4.0));
+        let want =
+            o_send.as_secs_f64() + lat.as_secs_f64() + 4.0 * o_recv.as_secs_f64();
+        assert!((vt - want).abs() < 1e-12, "{vt} vs {want}");
+        // Slow the sender 3x: only its o_send stretches.
+        let vt = vt_of(&mut engine, &base.clone().with_slowdown(0, 3.0));
+        let want =
+            3.0 * o_send.as_secs_f64() + lat.as_secs_f64() + o_recv.as_secs_f64();
+        assert!((vt - want).abs() < 1e-12, "{vt} vs {want}");
     }
 
     #[test]

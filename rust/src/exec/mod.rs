@@ -66,6 +66,7 @@ pub struct ExecDelivery {
 }
 
 /// Execution result.
+#[derive(Debug)]
 pub struct ExecReport {
     /// Final buffer stores per rank.
     pub outputs: Vec<BufferStore>,
@@ -77,6 +78,11 @@ pub struct ExecReport {
     /// Per-chunk delivery records, sorted by (round, src, dst, chunk);
     /// empty unless requested.
     pub deliveries: Vec<ExecDelivery>,
+    /// The injected [`ExecParams::dead_rank`], reported when its death
+    /// round fell inside this plan (suppression mode — the abort path
+    /// returns an error instead). The coordinator uses this to trigger
+    /// online re-planning.
+    pub dead_rank: Option<u32>,
 }
 
 /// Run `schedule` over real data with a one-shot engine. `inputs[r]`

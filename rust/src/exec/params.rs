@@ -40,6 +40,19 @@ pub struct ExecParams {
     /// Keep per-chunk delivery records in the report (costs memory; used
     /// by the exec-vs-sim differential tests).
     pub record_deliveries: bool,
+    /// Injected stragglers: `(rank, factor)` pairs. In virtual mode every
+    /// cost that rank's clock pays is multiplied by the composed factor;
+    /// wall mode ignores stragglers (spin-waits are already real time).
+    pub slowdown: Vec<(u32, f64)>,
+    /// Injected fault: `(rank, round)` — the rank dies at the start of
+    /// that round, mirroring [`crate::sim::SimParams::dead_rank`].
+    pub dead_rank: Option<(u32, u32)>,
+    /// What a dead rank does to the run: `true` aborts the whole
+    /// execution with a clean error at the death round (the default
+    /// production behavior — a trainer catches it and re-plans); `false`
+    /// suppresses the dead rank's traffic exactly like the simulator, so
+    /// exec-vs-sim stays differential under injected faults.
+    pub abort_on_death: bool,
 }
 
 impl ExecParams {
@@ -54,6 +67,9 @@ impl ExecParams {
             int_byte_time: Duration::ZERO,
             virtual_time: false,
             record_deliveries: false,
+            slowdown: Vec::new(),
+            dead_rank: None,
+            abort_on_death: true,
         }
     }
 
@@ -70,6 +86,9 @@ impl ExecParams {
             int_byte_time: Duration::from_nanos(0),
             virtual_time: false,
             record_deliveries: false,
+            slowdown: Vec::new(),
+            dead_rank: None,
+            abort_on_death: true,
         }
     }
 
@@ -83,6 +102,51 @@ impl ExecParams {
     pub fn with_deliveries(mut self) -> Self {
         self.record_deliveries = true;
         self
+    }
+
+    /// Builder-style: slow `rank`'s virtual clock down by `factor`
+    /// (factors for one rank compose multiplicatively).
+    pub fn with_slowdown(mut self, rank: u32, factor: f64) -> Self {
+        self.slowdown.push((rank, factor));
+        self
+    }
+
+    /// Builder-style: kill `rank` at the start of `round`. Suppression
+    /// mode (for exec-vs-sim differential runs) — the run completes on
+    /// the surviving traffic and reports the dead rank.
+    pub fn with_dead_rank(mut self, rank: u32, round: u32) -> Self {
+        self.dead_rank = Some((rank, round));
+        self.abort_on_death = false;
+        self
+    }
+
+    /// Builder-style: make the injected death abort the run with a clean
+    /// error instead of suppressing traffic (the production path a
+    /// trainer re-plans from).
+    pub fn with_abort_on_death(mut self) -> Self {
+        self.abort_on_death = true;
+        self
+    }
+
+    /// Composite virtual-clock slowdown for `rank` (1.0 when healthy).
+    #[inline]
+    pub(crate) fn slow_of(&self, rank: u32) -> f64 {
+        let mut f = 1.0;
+        for &(r, s) in &self.slowdown {
+            if r == rank {
+                f *= s;
+            }
+        }
+        f
+    }
+
+    /// Is `rank` dead during `round` under the injected fault?
+    #[inline]
+    pub(crate) fn killed(&self, rank: u32, round: u32) -> bool {
+        match self.dead_rank {
+            Some((r, rd)) => rank == r && round >= rd,
+            None => false,
+        }
     }
 
     // ---- wall mode: spin-waits -----------------------------------------
@@ -201,5 +265,21 @@ mod tests {
     fn builders() {
         let p = ExecParams::zero().with_virtual_time().with_deliveries();
         assert!(p.virtual_time && p.record_deliveries);
+        let p = p.with_slowdown(2, 4.0).with_dead_rank(1, 3);
+        assert_eq!(p.slowdown, vec![(2, 4.0)]);
+        assert_eq!(p.dead_rank, Some((1, 3)));
+        assert!(!p.abort_on_death, "with_dead_rank defaults to suppression");
+        assert!(p.with_abort_on_death().abort_on_death);
+    }
+
+    #[test]
+    fn injection_helpers() {
+        let p = ExecParams::zero().with_slowdown(1, 2.0).with_slowdown(1, 3.0);
+        assert_eq!(p.slow_of(1), 6.0);
+        assert_eq!(p.slow_of(0), 1.0);
+        let p = p.with_dead_rank(2, 1);
+        assert!(!p.killed(2, 0));
+        assert!(p.killed(2, 1) && p.killed(2, 9));
+        assert!(!p.killed(0, 9));
     }
 }

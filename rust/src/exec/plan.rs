@@ -16,8 +16,10 @@
 //! * **Phase-1 actions** (`act_off`/`acts` + the `item_off`/`items`
 //!   payload arena): external sends, shared-memory writes and local
 //!   reads this rank performs, in schedule order.
-//! * **Phase-2 expectations**: `recv_count` (external messages to drain)
-//!   and `wrecv_off`/`wrecv` (board publications to consume).
+//! * **Phase-2 expectations**: `recv_off`/`recv_srcs` (the external
+//!   senders to drain, so a fault-injected engine knows which expected
+//!   messages died with their sender) and `wrecv_off`/`wrecv` (board
+//!   publications to consume).
 //!
 //! Every `LocalWrite` gets a dedicated **board slot id** at compile time
 //! (readers reference the slot directly), so the engine's boards are a
@@ -60,8 +62,10 @@ pub struct ExecPlan {
     /// CSR over actions → payload items.
     item_off: Vec<u32>,
     items: Vec<(Chunk, ContribSet)>,
-    /// Per cell: external messages this rank drains in phase 2.
-    recv_count: Vec<u32>,
+    /// CSR over cells → the sender ranks of the external messages this
+    /// rank drains in phase 2, in schedule order.
+    recv_off: Vec<u32>,
+    recv_srcs: Vec<u32>,
     /// CSR over cells → (board slot, writer rank) publications to consume.
     wrecv_off: Vec<u32>,
     wrecv: Vec<(u32, u32)>,
@@ -84,7 +88,7 @@ impl ExecPlan {
         // clarity beats squeezing out the intermediate vectors).
         let mut cell_acts: Vec<Vec<(Action, Vec<(Chunk, ContribSet)>)>> =
             vec![Vec::new(); cells];
-        let mut recv_count = vec![0u32; cells];
+        let mut cell_recv: Vec<Vec<u32>> = vec![Vec::new(); cells];
         let mut cell_wrecv: Vec<Vec<(u32, u32)>> = vec![Vec::new(); cells];
         let mut num_write_slots = 0u32;
         let cell = |r: usize, ri: usize| r * rounds + ri;
@@ -97,7 +101,7 @@ impl ExecPlan {
                         let dst = x.dsts[0];
                         cell_acts[cell(x.src, ri)]
                             .push((Action { kind: ActKind::Send, peer: dst as u32 }, payload));
-                        recv_count[cell(dst, ri)] += 1;
+                        cell_recv[cell(dst, ri)].push(x.src as u32);
                     }
                     XferKind::LocalWrite => {
                         let slot = num_write_slots;
@@ -129,6 +133,13 @@ impl ExecPlan {
             }
             act_off.push(acts.len() as u32);
         }
+        let mut recv_off = Vec::with_capacity(cells + 1);
+        let mut recv_srcs = Vec::new();
+        recv_off.push(0u32);
+        for bucket in &mut cell_recv {
+            recv_srcs.append(bucket);
+            recv_off.push(recv_srcs.len() as u32);
+        }
         let mut wrecv_off = Vec::with_capacity(cells + 1);
         let mut wrecv = Vec::new();
         wrecv_off.push(0u32);
@@ -145,7 +156,8 @@ impl ExecPlan {
             acts,
             item_off,
             items,
-            recv_count,
+            recv_off,
+            recv_srcs,
             wrecv_off,
             wrecv,
         })
@@ -174,7 +186,16 @@ impl ExecPlan {
     /// External messages rank `r` must drain in round `ri`.
     #[inline]
     pub(crate) fn recvs(&self, r: usize, ri: usize) -> u32 {
-        self.recv_count[self.cell(r, ri)]
+        self.recv_srcs(r, ri).len() as u32
+    }
+
+    /// Sender ranks of the external messages rank `r` drains in round
+    /// `ri`, in schedule order (fault injection filters this by the
+    /// senders still alive).
+    #[inline]
+    pub(crate) fn recv_srcs(&self, r: usize, ri: usize) -> &[u32] {
+        let c = self.cell(r, ri);
+        &self.recv_srcs[self.recv_off[c] as usize..self.recv_off[c + 1] as usize]
     }
 
     /// Board publications `(slot, writer)` rank `r` consumes in round `ri`.
@@ -230,8 +251,11 @@ mod tests {
         assert_eq!(acts[1].0.peer, 0);
         assert_eq!(acts[0].1.len(), 1);
 
-        // Rank 2 drains one message in round 0, writes slot 1 in round 1.
+        // Rank 2 drains one message (from rank 0) in round 0, writes
+        // slot 1 in round 1.
         assert_eq!(plan.recvs(2, 0), 1);
+        assert_eq!(plan.recv_srcs(2, 0), &[0]);
+        assert_eq!(plan.recv_srcs(2, 1), &[] as &[u32]);
         let w: Vec<_> = plan.phase1(2, 1).collect();
         assert_eq!(w[0].0.peer, 1);
 

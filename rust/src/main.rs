@@ -1,7 +1,7 @@
 //! `mcomm` CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   experiment <e1..e8,e10,e11|ablations|all> [--quick]  reproduce a paper claim
+//!   experiment <e1..e8,e10..e12|ablations|all> [--quick]  reproduce a paper claim
 //!   train [--steps N] [--algo A] [--virtual] [...]  end-to-end data-parallel
 //!                                            run (--virtual: deterministic
 //!                                            virtual-time comm accounting)
@@ -88,7 +88,7 @@ fn dispatch(args: &[String]) -> mcomm::Result<()> {
                 "mcomm — communication modeling for multi-core clusters\n\
                  \n\
                  usage:\n\
-                 \x20 mcomm experiment <e1..e8,e10,e11|ablations|all> [--quick]\n\
+                 \x20 mcomm experiment <e1..e8,e10..e12|ablations|all> [--quick]\n\
                  \x20 mcomm train [--steps N] [--algo auto|ring|hier|recdoub|raben]\n\
                  \x20        [--machines M --cores C --nics K] [--lan] [--virtual]\n\
                  \x20        [--lr F] [--bytes B]\n\

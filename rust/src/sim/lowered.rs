@@ -113,6 +113,9 @@ pub struct SimArena {
     /// (graph interconnects under NIC limits only).
     edge_free: Vec<f64>,
     deliveries: Vec<(u32, u32, f64)>,
+    /// Per-machine injected slowdown factor (1.0 when healthy) — the
+    /// dense mirror of [`SimParams::slowdown_of`].
+    slow: Vec<f64>,
 }
 
 impl SimArena {
@@ -171,6 +174,8 @@ impl SimArena {
             self.edge_free.clear();
         }
         self.deliveries.clear();
+        self.slow.clear();
+        self.slow.extend((0..m).map(|mi| params.slowdown_of(mi)));
     }
 }
 
@@ -194,6 +199,7 @@ pub fn simulate_lowered(
         nic_in,
         edge_free,
         deliveries,
+        slow,
     } = arena;
 
     let p = low.ctx.num_ranks;
@@ -207,6 +213,7 @@ pub fn simulate_lowered(
     let mut t_end = 0.0f64;
     let mut ext_msgs = 0usize;
     let mut ext_bytes = 0u64;
+    let mut skipped = 0usize;
 
     for round in 0..low.num_rounds {
         out_cursor.copy_from_slice(proc_busy_until.as_slice());
@@ -229,8 +236,15 @@ pub fn simulate_lowered(
                     let dst = low.dst0[xi] as usize;
                     let (ms, md) =
                         (low.src_machine[xi] as usize, low.dst_machine[xi] as usize);
-                    let s_src = if params.respect_speed { speed[src] } else { 1.0 };
-                    let s_dst = if params.respect_speed { speed[dst] } else { 1.0 };
+                    // Dead endpoint: the transfer never happens.
+                    if params.killed(src, round) || params.killed(dst, round) {
+                        skipped += 1;
+                        continue;
+                    }
+                    let s_src =
+                        if params.respect_speed { speed[src] } else { 1.0 } / slow[ms];
+                    let s_dst =
+                        if params.respect_speed { speed[dst] } else { 1.0 } / slow[md];
                     let o_s = params.o_send / s_src;
                     let o_r = params.o_recv / s_dst;
                     let ser = size_bytes as f64 * params.byte_time_ext;
@@ -278,17 +292,29 @@ pub fn simulate_lowered(
                     }
                 }
                 XferKind::LocalWrite => {
+                    // Dead writer: the publication never happens.
+                    let (d0, d1) =
+                        (low.dst_off[xi] as usize, low.dst_off[xi + 1] as usize);
+                    if params.killed(src, round) {
+                        skipped += d1 - d0;
+                        continue;
+                    }
                     // One constant-time shared-memory publication (R1):
                     // cost is independent of the destination count.
-                    let s_src = if params.respect_speed { speed[src] } else { 1.0 };
+                    let s_src = if params.respect_speed { speed[src] } else { 1.0 }
+                        / slow[low.src_machine[xi] as usize];
                     let o_w = params.o_write / s_src;
                     let start = data_ready.max(out_cursor[src]);
                     let done = start + o_w + params.lat_int;
                     out_cursor[src] = start + o_w;
                     t_end = t_end.max(done);
-                    let (d0, d1) =
-                        (low.dst_off[xi] as usize, low.dst_off[xi + 1] as usize);
                     for &d in &low.dsts[d0..d1] {
+                        // A live writer still publishes once, but a dead
+                        // reader never picks the data up.
+                        if params.killed(d as usize, round) {
+                            skipped += 1;
+                            continue;
+                        }
                         // One record per destination so traces match the
                         // delivered chunks (the publication itself still
                         // costs once).
@@ -310,7 +336,12 @@ pub fn simulate_lowered(
                 XferKind::LocalRead => {
                     // Reader assembles the message: per-message cost (R1).
                     let dst = low.dst0[xi] as usize;
-                    let s_dst = if params.respect_speed { speed[dst] } else { 1.0 };
+                    if params.killed(src, round) || params.killed(dst, round) {
+                        skipped += 1;
+                        continue;
+                    }
+                    let s_dst = if params.respect_speed { speed[dst] } else { 1.0 }
+                        / slow[low.dst_machine[xi] as usize];
                     let o_r = params.o_recv / s_dst;
                     let copy = size_bytes as f64 * params.byte_time_int;
                     let start = (data_ready + params.lat_int) // shm visibility
@@ -356,6 +387,7 @@ pub fn simulate_lowered(
         ext_bytes,
         nic_utilization: nic_util,
         records,
+        skipped_xfers: skipped,
     }
 }
 

@@ -269,6 +269,68 @@ mod tests {
     }
 
     #[test]
+    fn slowdown_stretches_straggler_machine() {
+        // A slowdown on the sender's machine scales its CPU-overhead
+        // terms; the healthy run is untouched (factor 1.0 everywhere).
+        let (c, p, s) = bcast_2x2();
+        let mut params = SimParams::lan_cluster();
+        params.o_send = 1.0; // overhead-dominated
+        let healthy = simulate(&c, &p, &s, &params).unwrap().t_end;
+        let straggler = simulate(&c, &p, &s, &params.clone().with_slowdown(0, 4.0))
+            .unwrap()
+            .t_end;
+        assert!(
+            straggler > 3.0 * healthy,
+            "4x straggler {straggler} vs healthy {healthy}"
+        );
+        // Slowing the *other* machine's receive side also shows up.
+        let mut prx = SimParams::lan_cluster();
+        prx.o_recv = 1.0;
+        let h = simulate(&c, &p, &s, &prx).unwrap().t_end;
+        let d = simulate(&c, &p, &s, &prx.clone().with_slowdown(1, 4.0)).unwrap().t_end;
+        assert!(d > 2.0 * h, "receiver straggler {d} vs healthy {h}");
+    }
+
+    #[test]
+    fn dead_rank_suppresses_transfers_from_death_round() {
+        // Rank 2 dies at round 1: the round-0 external still runs, but
+        // rank 2's round-1 publication to rank 3 is suppressed.
+        let (c, p, s) = bcast_2x2();
+        let params = SimParams::lan_cluster().with_records();
+        let healthy = simulate(&c, &p, &s, &params).unwrap();
+        assert_eq!(healthy.skipped_xfers, 0);
+        let dead = simulate(&c, &p, &s, &params.clone().with_dead_rank(2, 1)).unwrap();
+        assert_eq!(dead.ext_messages, 1, "round-0 send predates the death");
+        assert_eq!(dead.skipped_xfers, 1, "rank 2's write must be skipped");
+        assert_eq!(dead.records.len(), healthy.records.len() - 1);
+        assert!(
+            dead.records.iter().all(|r| !(r.src == 2 && !r.external)),
+            "the dead rank must not publish after its death round"
+        );
+        // Death at round 0 kills the external too.
+        let dead0 = simulate(&c, &p, &s, &params.clone().with_dead_rank(2, 0)).unwrap();
+        assert_eq!(dead0.ext_messages, 0);
+        assert_eq!(dead0.skipped_xfers, 2);
+    }
+
+    #[test]
+    fn dead_reader_does_not_stop_live_write() {
+        // A LocalWrite from a live rank still costs once and reaches the
+        // surviving destinations; only the dead reader's record vanishes.
+        let c = switched(1, 4, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "t");
+        s.push_round(Round {
+            xfers: vec![Xfer::local_write(0, vec![1, 2, 3], Payload::single(0, 0))],
+        });
+        let params = SimParams::lan_cluster().with_records().with_dead_rank(2, 0);
+        let r = simulate(&c, &p, &s, &params).unwrap();
+        assert_eq!(r.skipped_xfers, 1);
+        let dsts: Vec<usize> = r.records.iter().map(|x| x.dst).collect();
+        assert_eq!(dsts, vec![1, 3]);
+    }
+
+    #[test]
     fn local_write_records_one_per_destination() {
         // Trace fidelity: a LocalWrite delivering to 3 ranks must emit 3
         // records (one per destination), matching the delivered chunks.

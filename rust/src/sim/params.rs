@@ -35,6 +35,16 @@ pub struct SimParams {
     pub respect_speed: bool,
     /// Keep per-transfer records in the report (costs memory).
     pub record_xfers: bool,
+    /// Injected stragglers: `(machine, factor)` pairs. Every CPU-overhead
+    /// term a rank on that machine pays (`o_send`, `o_recv`, `o_write`,
+    /// `gap`) is multiplied by `factor`; entries for the same machine
+    /// compose multiplicatively. Empty = healthy cluster.
+    pub slowdown: Vec<(usize, f64)>,
+    /// Injected fault: `(rank, round)` — the rank dies at the start of
+    /// that round. Every transfer in round >= `round` that the dead rank
+    /// sends or should receive is suppressed (counted in
+    /// [`SimReport::skipped_xfers`](crate::sim::SimReport)). `None` = healthy.
+    pub dead_rank: Option<(usize, usize)>,
 }
 
 impl SimParams {
@@ -54,6 +64,8 @@ impl SimParams {
             nic_limited: true,
             respect_speed: false,
             record_xfers: false,
+            slowdown: Vec::new(),
+            dead_rank: None,
         }
     }
 
@@ -74,6 +86,8 @@ impl SimParams {
             nic_limited: true,
             respect_speed: false,
             record_xfers: false,
+            slowdown: Vec::new(),
+            dead_rank: None,
         }
     }
 
@@ -92,6 +106,8 @@ impl SimParams {
             nic_limited: true,
             respect_speed: false,
             record_xfers: false,
+            slowdown: Vec::new(),
+            dead_rank: None,
         }
     }
 
@@ -111,6 +127,8 @@ impl SimParams {
             nic_limited: false,
             respect_speed: false,
             record_xfers: false,
+            slowdown: Vec::new(),
+            dead_rank: None,
         }
     }
 
@@ -140,6 +158,8 @@ impl SimParams {
             nic_limited: p.nic_contention > 1.01,
             respect_speed: false,
             record_xfers: false,
+            slowdown: Vec::new(),
+            dead_rank: None,
         }
     }
 
@@ -147,6 +167,40 @@ impl SimParams {
     pub fn with_records(mut self) -> Self {
         self.record_xfers = true;
         self
+    }
+
+    /// Builder-style: slow every rank on `machine` down by `factor`
+    /// (applied to CPU-overhead terms; factors for one machine compose).
+    pub fn with_slowdown(mut self, machine: usize, factor: f64) -> Self {
+        self.slowdown.push((machine, factor));
+        self
+    }
+
+    /// Builder-style: kill `rank` at the start of `round`.
+    pub fn with_dead_rank(mut self, rank: usize, round: usize) -> Self {
+        self.dead_rank = Some((rank, round));
+        self
+    }
+
+    /// Composite slowdown factor for `machine` (1.0 when healthy). Both
+    /// engines divide their effective speed by this, so the fold order
+    /// here is part of the bit-exactness contract.
+    pub fn slowdown_of(&self, machine: usize) -> f64 {
+        let mut f = 1.0;
+        for &(m, s) in &self.slowdown {
+            if m == machine {
+                f *= s;
+            }
+        }
+        f
+    }
+
+    /// Is `rank` dead during `round` under the injected fault?
+    pub fn killed(&self, rank: usize, round: usize) -> bool {
+        match self.dead_rank {
+            Some((r, rd)) => rank == r && round >= rd,
+            None => false,
+        }
     }
 }
 
@@ -170,6 +224,30 @@ mod tests {
     fn builders() {
         let p = SimParams::lan_cluster().with_records();
         assert!(p.record_xfers);
+        let p = p.with_slowdown(1, 4.0).with_dead_rank(3, 2);
+        assert_eq!(p.slowdown, vec![(1, 4.0)]);
+        assert_eq!(p.dead_rank, Some((3, 2)));
+    }
+
+    #[test]
+    fn slowdown_composes_per_machine() {
+        let p = SimParams::lan_cluster()
+            .with_slowdown(0, 2.0)
+            .with_slowdown(1, 3.0)
+            .with_slowdown(0, 1.5);
+        assert_eq!(p.slowdown_of(0), 3.0);
+        assert_eq!(p.slowdown_of(1), 3.0);
+        assert_eq!(p.slowdown_of(2), 1.0);
+    }
+
+    #[test]
+    fn killed_is_sticky_from_death_round() {
+        let p = SimParams::lan_cluster().with_dead_rank(2, 1);
+        assert!(!p.killed(2, 0));
+        assert!(p.killed(2, 1));
+        assert!(p.killed(2, 7));
+        assert!(!p.killed(1, 7));
+        assert!(!SimParams::lan_cluster().killed(2, 1));
     }
 
     #[test]

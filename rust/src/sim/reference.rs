@@ -88,12 +88,13 @@ pub fn simulate_reference(
     // rank holds initially have implicit ready time 0.
     let mut ready: Vec<HashMap<Chunk, f64>> = vec![HashMap::new(); p];
 
+    // Effective speed: the base machine speed (1.0 unless
+    // `respect_speed`) divided by the injected straggler factor. Division
+    // order is part of the bit-exactness contract with the lowered engine.
     let speed = |r: usize| {
-        if params.respect_speed {
-            cluster.machines[placement.machine_of(r)].speed
-        } else {
-            1.0
-        }
+        let m = placement.machine_of(r);
+        let base = if params.respect_speed { cluster.machines[m].speed } else { 1.0 };
+        base / params.slowdown_of(m)
     };
 
     let mut records: Vec<XferRecord> = Vec::new();
@@ -101,8 +102,9 @@ pub fn simulate_reference(
     let mut t_end = 0.0f64;
     let mut ext_msgs = 0usize;
     let mut ext_bytes = 0u64;
+    let mut skipped = 0usize;
 
-    for round in &schedule.rounds {
+    for (ri, round) in schedule.rounds.iter().enumerate() {
         out_cursor.copy_from_slice(&proc_busy_until);
         in_cursor.copy_from_slice(&proc_busy_until);
         let mut deliveries: Vec<(usize, Chunk, f64)> = Vec::new();
@@ -125,6 +127,13 @@ pub fn simulate_reference(
                         (placement.machine_of(x.src), placement.machine_of(dst));
                     if !cluster.connected(ms, md) {
                         anyhow::bail!("simulate: machines {ms},{md} not connected");
+                    }
+                    // Dead endpoint: the transfer never happens (checked
+                    // after the connectivity bail so rejection is
+                    // injection-independent).
+                    if params.killed(x.src, ri) || params.killed(dst, ri) {
+                        skipped += 1;
+                        continue;
                     }
                     let o_s = params.o_send / speed(x.src);
                     let o_r = params.o_recv / speed(dst);
@@ -173,6 +182,11 @@ pub fn simulate_reference(
                     }
                 }
                 XferKind::LocalWrite => {
+                    // Dead writer: the publication never happens.
+                    if params.killed(x.src, ri) {
+                        skipped += x.dsts.len();
+                        continue;
+                    }
                     // One constant-time shared-memory publication (R1):
                     // cost is independent of the destination count.
                     let o_w = params.o_write / speed(x.src);
@@ -181,6 +195,12 @@ pub fn simulate_reference(
                     out_cursor[x.src] = start + o_w;
                     t_end = t_end.max(done);
                     for &d in &x.dsts {
+                        // A live writer still publishes once, but a dead
+                        // reader never picks the data up.
+                        if params.killed(d, ri) {
+                            skipped += 1;
+                            continue;
+                        }
                         // One record per destination so traces match the
                         // delivered chunks (the publication itself still
                         // costs once).
@@ -202,6 +222,10 @@ pub fn simulate_reference(
                 XferKind::LocalRead => {
                     // Reader assembles the message: per-message cost (R1).
                     let dst = x.dsts[0];
+                    if params.killed(x.src, ri) || params.killed(dst, ri) {
+                        skipped += 1;
+                        continue;
+                    }
                     let o_r = params.o_recv / speed(dst);
                     let copy = size_bytes as f64 * params.byte_time_int;
                     let start = (data_ready + params.lat_int) // shm visibility
@@ -247,5 +271,6 @@ pub fn simulate_reference(
         ext_bytes,
         nic_utilization: nic_util,
         records,
+        skipped_xfers: skipped,
     })
 }

@@ -26,6 +26,9 @@ pub struct SimReport {
     pub nic_utilization: f64,
     /// Per-transfer records (empty unless requested).
     pub records: Vec<XferRecord>,
+    /// Would-be transfers suppressed by an injected rank death
+    /// (one per suppressed record; 0 on a healthy run).
+    pub skipped_xfers: usize,
 }
 
 impl SimReport {
@@ -51,6 +54,7 @@ mod tests {
             ext_bytes: 100,
             nic_utilization: 0.5,
             records: vec![],
+            skipped_xfers: 0,
         };
         assert_eq!(r.goodput(), 50.0);
         let z = SimReport { t_end: 0.0, ..r };

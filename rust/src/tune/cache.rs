@@ -76,6 +76,14 @@ impl DecisionCache {
         }
     }
 
+    /// Drop the cached decision for `fp` (online re-planning: a decision
+    /// tuned for a topology that no longer exists must not be served).
+    /// Returns whether an entry was actually removed. Hit/miss counters
+    /// are untouched — invalidation is not a lookup.
+    pub fn invalidate(&mut self, fp: &Fingerprint) -> bool {
+        self.map.remove(fp).is_some()
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats { hits: self.hits, misses: self.misses, entries: self.map.len() }
     }
@@ -143,6 +151,26 @@ mod tests {
         assert!(cache.lookup(&fp).is_some());
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 2, 1));
+    }
+
+    #[test]
+    fn invalidate_removes_one_entry() {
+        let cl = switched(3, 2, 1);
+        let pl = Placement::block(&cl);
+        let cfg = TuneCfg::default();
+        let mut cache = DecisionCache::new();
+        cache.get_or_tune(&cl, &pl, Collective::Allreduce, &cfg).unwrap();
+        cache.get_or_tune(&cl, &pl, Collective::Allgather, &cfg).unwrap();
+        let fp = Fingerprint::new(&cl, &pl, Collective::Allreduce, &cfg);
+        assert!(cache.invalidate(&fp));
+        assert!(!cache.invalidate(&fp), "second invalidation finds nothing");
+        let s = cache.stats();
+        assert_eq!(s.entries, 1, "only the invalidated entry is gone");
+        // The next get_or_tune re-tunes (a miss), the untouched entry hits.
+        cache.get_or_tune(&cl, &pl, Collective::Allreduce, &cfg).unwrap();
+        cache.get_or_tune(&cl, &pl, Collective::Allgather, &cfg).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 3, 2));
     }
 
     #[test]

@@ -58,6 +58,9 @@ pub struct Fingerprint {
     /// Digest of the machine profile the configuration was calibrated
     /// from (0 = defaults) — recalibrating invalidates cached decisions.
     profile: u64,
+    /// Robustness knob: (straggler draws, draw seed, factor bits). A
+    /// clean tune (draws = 0) and a robust tune must never alias.
+    robustness: (usize, u64, u64),
 }
 
 impl Fingerprint {
@@ -104,6 +107,11 @@ impl Fingerprint {
             sim_bits: sim_digest(&cfg.sim),
             shortlist: cfg.shortlist,
             profile: cfg.profile_digest,
+            robustness: (
+                cfg.robustness.draws,
+                cfg.robustness.seed,
+                cfg.robustness.factor.to_bits(),
+            ),
         }
     }
 
@@ -133,6 +141,9 @@ impl Fingerprint {
         h = fnv(h, self.sim_bits);
         h = fnv(h, self.shortlist as u64);
         h = fnv(h, self.profile);
+        h = fnv(h, self.robustness.0 as u64);
+        h = fnv(h, self.robustness.1);
+        h = fnv(h, self.robustness.2);
         h
     }
 }
@@ -241,6 +252,21 @@ fn sim_digest(p: &SimParams) -> u64 {
     ] {
         h = fnv(h, bits);
     }
+    // Injected faults are physics too: a straggler-loaded or death-loaded
+    // parameter set must not alias the healthy one.
+    h = fnv(h, p.slowdown.len() as u64);
+    for &(m, f) in &p.slowdown {
+        h = fnv(h, m as u64);
+        h = fnv(h, f.to_bits());
+    }
+    match p.dead_rank {
+        Some((r, rd)) => {
+            h = fnv(h, 1);
+            h = fnv(h, r as u64);
+            h = fnv(h, rd as u64);
+        }
+        None => h = fnv(h, 0),
+    }
     h
 }
 
@@ -323,6 +349,25 @@ mod tests {
         let mut sim = TuneCfg::default();
         sim.sim.lat_ext = 10e-6;
         assert_ne!(base, fp(&switched(3, 4, 2), &sim));
+
+        // Injected faults are physics too.
+        let mut strag = TuneCfg::default();
+        strag.sim = strag.sim.with_slowdown(1, 4.0);
+        assert_ne!(base, fp(&switched(3, 4, 2), &strag));
+        let mut death = TuneCfg::default();
+        death.sim = death.sim.with_dead_rank(2, 1);
+        assert_ne!(base, fp(&switched(3, 4, 2), &death));
+
+        // Robustness knob: clean and robust tunes never alias, and each
+        // ingredient of the knob discriminates.
+        let robust = TuneCfg::default().with_robustness(4, 7, 8.0);
+        let fp_robust = fp(&switched(3, 4, 2), &robust);
+        assert_ne!(base, fp_robust);
+        assert_ne!(base.digest(), fp_robust.digest());
+        for other in [(5, 7, 8.0), (4, 8, 8.0), (4, 7, 2.0)] {
+            let cfg2 = TuneCfg::default().with_robustness(other.0, other.1, other.2);
+            assert_ne!(fp_robust, fp(&switched(3, 4, 2), &cfg2), "{other:?}");
+        }
 
         // Stage-2 pool width (decides what gets simulated).
         let mut wide = TuneCfg::default();

@@ -40,7 +40,13 @@
 //!
 //! Contract: the selected schedule's simulated time never exceeds the
 //! flat baseline's, because the baseline always participates in stage 2
-//! ([`selector`] docs). Entry points:
+//! ([`selector`] docs). With [`TuneCfg::robustness`] enabled
+//! ([`Robustness::draws`] > 0), stage 2 additionally re-simulates the
+//! pool under sampled single-machine straggler scenarios and picks the
+//! best *mean degraded* makespan among the candidates that keep that
+//! clean-run contract — so a robust decision is never worse than the
+//! baseline on a healthy cluster and never degrades worse than the
+//! clean pick under the sampled stragglers. Entry points:
 //!
 //! * [`select`] — one-shot tuning, no cache.
 //! * [`select_many`] — batched tuning of several collectives on one
@@ -68,7 +74,7 @@ pub use fingerprint::Fingerprint;
 pub use registry::{
     candidates_for, flat_baseline, CandidateId, Collective, SegBase, SEGMENT_SWEEP,
 };
-pub use selector::{select, select_many, Decision, TuneCfg};
+pub use selector::{select, select_many, Decision, Robustness, TuneCfg};
 
 use std::sync::Mutex;
 
@@ -114,6 +120,12 @@ impl Tuned {
     ) -> crate::Result<Decision> {
         let mut cache = self.cache.lock().expect("tune cache poisoned");
         Ok(cache.get_or_tune(cluster, placement, collective, &self.cfg)?.clone())
+    }
+
+    /// Drop the cached decision for one fingerprint (online re-planning
+    /// invalidates decisions tuned for a topology that no longer exists).
+    pub fn invalidate(&self, fp: &Fingerprint) -> bool {
+        self.cache.lock().expect("tune cache poisoned").invalidate(fp)
     }
 
     pub fn stats(&self) -> CacheStats {

@@ -38,6 +38,7 @@ use crate::model::{legalize, Multicore};
 use crate::sched::{LoweredSchedule, Schedule, TopoCtx};
 use crate::sim::{simulate_lowered, SimArena, SimParams};
 use crate::topology::{Cluster, Placement};
+use crate::util::Rng;
 
 use super::registry::{candidates_for, flat_baseline, CandidateId, Collective};
 
@@ -45,6 +46,31 @@ use super::registry::{candidates_for, flat_baseline, CandidateId, Collective};
 const STAGE1_PAR_MIN_WORK: usize = 1 << 12;
 /// Minimum total pool transfers before stage 2 fans out to threads.
 const STAGE2_PAR_MIN_XFERS: usize = 1 << 13;
+
+/// Robustness knob for stage-2 scoring. With `draws > 0`, every pool
+/// candidate is additionally simulated under `draws` sampled straggler
+/// scenarios — each draw slows one uniformly drawn machine's CPU
+/// overheads by `factor` — and the winner is the candidate with the
+/// best *mean degraded* makespan among those that still meet the
+/// clean-run baseline contract. `draws == 0` (the default) leaves
+/// selection purely clean-makespan driven, bit-identical to a tuner
+/// without the knob. Folded into [`crate::tune::Fingerprint`], so clean
+/// and robust decisions never share a cache entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Robustness {
+    /// How many straggler scenarios to sample (0 = off).
+    pub draws: usize,
+    /// Seed for the deterministic machine draws.
+    pub seed: u64,
+    /// CPU-overhead slowdown applied to the drawn machine.
+    pub factor: f64,
+}
+
+impl Default for Robustness {
+    fn default() -> Self {
+        Self { draws: 0, seed: 0x57A6, factor: 8.0 }
+    }
+}
 
 /// Tuner configuration: the cost model used for stage-1 ranking (its
 /// duplex assumption, `alpha` and byte weights are part of the cache
@@ -71,6 +97,8 @@ pub struct TuneCfg {
     /// tuned against one machine's measured physics are never served
     /// after a recalibration changes them.
     pub profile_digest: u64,
+    /// Straggler-aware stage-2 scoring (off by default).
+    pub robustness: Robustness,
 }
 
 impl Default for TuneCfg {
@@ -81,6 +109,7 @@ impl Default for TuneCfg {
             shortlist: 4,
             msg_bytes: 16 << 10,
             profile_digest: 0,
+            robustness: Robustness::default(),
         }
     }
 }
@@ -98,12 +127,21 @@ impl TuneCfg {
             shortlist: 4,
             msg_bytes,
             profile_digest: p.digest(),
+            robustness: Robustness::default(),
         }
     }
 
     /// Builder-style payload size override.
     pub fn with_msg_bytes(mut self, msg_bytes: u64) -> Self {
         self.msg_bytes = msg_bytes;
+        self
+    }
+
+    /// Builder-style robustness override: score stage-2 candidates under
+    /// `draws` sampled straggler scenarios (deterministically seeded by
+    /// `seed`, each slowing one machine's CPU overheads by `factor`).
+    pub fn with_robustness(mut self, draws: usize, seed: u64, factor: f64) -> Self {
+        self.robustness = Robustness { draws, seed, factor };
         self
     }
 }
@@ -122,6 +160,10 @@ pub struct Decision {
     pub sim_time: f64,
     /// Simulated time of the flat baseline, when the topology admits one.
     pub baseline_sim: Option<f64>,
+    /// Mean degraded makespan of the winner over the sampled straggler
+    /// draws; `None` when robustness scoring is off
+    /// ([`Robustness::draws`] == 0).
+    pub robust_sim: Option<f64>,
     /// Candidates priced in stage 1 / simulated in stage 2.
     pub considered: usize,
     pub simulated: usize,
@@ -360,6 +402,39 @@ pub fn select_many(
         sims[job.0][job.1] = t_end;
     }
 
+    // Stage 2b (robustness scoring): re-simulate every pool candidate
+    // under `draws` sampled single-machine straggler scenarios and
+    // average the degraded makespans. The draws are shared across all
+    // candidates (and all collectives in the batch), so robust scores
+    // are directly comparable. draws == 0 skips this entirely — clean
+    // tuning stays bit-identical to a tuner without the knob.
+    let draws = cfg.robustness.draws;
+    let robust_means: Vec<Vec<f64>> = if draws > 0 {
+        let mut rng = Rng::seed_from_u64(cfg.robustness.seed);
+        let degraded: Vec<SimParams> = (0..draws)
+            .map(|_| {
+                let m = rng.gen_range(0..cluster.num_machines());
+                cfg.sim.clone().with_slowdown(m, cfg.robustness.factor)
+            })
+            .collect();
+        let n = sim_jobs.len() * draws;
+        let workers3 =
+            worker_count(n, pool_xfers.saturating_mul(draws), STAGE2_PAR_MIN_XFERS);
+        let results = run_jobs(n, workers3, SimArena::new, |arena, i| {
+            let (ci, pi) = sim_jobs[i / draws];
+            simulate_lowered(&pools[ci][pi].3, &degraded[i % draws], arena).t_end
+        });
+        let mut means: Vec<Vec<f64>> =
+            pools.iter().map(|pool| vec![0.0; pool.len()]).collect();
+        for (i, t_end) in results.into_iter().enumerate() {
+            let (ci, pi) = sim_jobs[i / draws];
+            means[ci][pi] += t_end / draws as f64;
+        }
+        means
+    } else {
+        Vec::new()
+    };
+
     // Pick each collective's winner (ties: model cost, then label —
     // deterministic).
     let mut decisions = Vec::with_capacity(collectives.len());
@@ -379,6 +454,27 @@ pub fn select_many(
                 best = i;
             }
         }
+        let mut robust_sim = None;
+        if draws > 0 {
+            // Robust selection: among candidates that still honor the
+            // clean-run baseline contract (the clean winner always
+            // qualifies, so the scan never empties), argmin the mean
+            // degraded makespan; ties fall back to the clean ordering.
+            let robust = &robust_means[ci];
+            for i in 0..pool.len() {
+                if let Some(b) = baseline_sim {
+                    if sims[i] > b + 1e-12 {
+                        continue;
+                    }
+                }
+                let a = (robust[i], sims[i], pool[i].2, pool[i].0.label());
+                let b = (robust[best], sims[best], pool[best].2, pool[best].0.label());
+                if a < b {
+                    best = i;
+                }
+            }
+            robust_sim = Some(robust[best]);
+        }
         let simulated = pool.len();
         let (choice, schedule, model_cost, _low) = pool.swap_remove(best);
         decisions.push(Decision {
@@ -387,6 +483,7 @@ pub fn select_many(
             model_cost,
             sim_time: sims[best],
             baseline_sim,
+            robust_sim,
             considered: considered[ci],
             simulated,
         });
@@ -500,6 +597,48 @@ mod tests {
         assert_eq!(a.choice, b.choice);
         assert_eq!(a.sim_time, b.sim_time);
         assert_eq!(a.schedule, b.schedule);
+    }
+
+    #[test]
+    fn robustness_off_by_default() {
+        let cl = switched(4, 4, 2);
+        let pl = Placement::block(&cl);
+        let d = select(&cl, &pl, Collective::Allreduce, &TuneCfg::default()).unwrap();
+        assert_eq!(d.robust_sim, None);
+    }
+
+    #[test]
+    fn robust_selection_keeps_clean_contract_and_degrades_no_worse() {
+        let cl = switched(6, 4, 1);
+        let pl = Placement::block(&cl);
+        let coll = Collective::Broadcast { root: 0 };
+        let clean = select(&cl, &pl, coll, &TuneCfg::default()).unwrap();
+        let cfg = TuneCfg::default().with_robustness(3, 11, 16.0);
+        let robust = select(&cl, &pl, coll, &cfg).unwrap();
+        symexec::verify(&robust.schedule).unwrap();
+
+        // Clean-run contract survives robust scoring.
+        let base = robust.baseline_sim.expect("switch has a flat baseline");
+        assert!(robust.sim_time <= base + 1e-12);
+        // A straggler can only stretch the makespan.
+        let rsim = robust.robust_sim.expect("robust scoring on");
+        assert!(rsim >= robust.sim_time);
+
+        // Replicate the tuner's draws: the robust pick's mean degraded
+        // makespan must be <= the clean pick's under the same scenarios.
+        let mut rng = Rng::seed_from_u64(11);
+        let draws: Vec<usize> =
+            (0..3).map(|_| rng.gen_range(0..cl.num_machines())).collect();
+        let mean = |s: &Schedule| {
+            let mut acc = 0.0;
+            for &m in &draws {
+                let p = TuneCfg::default().sim.with_slowdown(m, 16.0);
+                acc += crate::sim::simulate(&cl, &pl, s, &p).unwrap().t_end / 3.0;
+            }
+            acc
+        };
+        assert_eq!(rsim, mean(&robust.schedule), "reported robust makespan");
+        assert!(mean(&robust.schedule) <= mean(&clean.schedule) + 1e-12);
     }
 
     #[test]

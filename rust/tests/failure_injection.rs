@@ -27,7 +27,7 @@ fn mutate(s: &mut Schedule, rng: &mut Rng) -> Option<&'static str> {
         return None;
     }
     let xi = rng.gen_range(0..s.rounds[ri].xfers.len());
-    match rng.gen_range(0..4) {
+    match rng.gen_range(0..6) {
         0 => {
             // Drop a transfer entirely: some destination misses data.
             s.rounds[ri].xfers.remove(xi);
@@ -50,6 +50,24 @@ fn mutate(s: &mut Schedule, rng: &mut Rng) -> Option<&'static str> {
             s.rounds[ri].xfers[xi].payload.items.clear();
             Some("empty payload")
         }
+        4 => {
+            // Duplicate the transfer within its round: an external twin
+            // trips the one-message-per-rank cap; a local twin delivers
+            // the same data twice (idempotent — still correct).
+            let dup = s.rounds[ri].xfers[xi].clone();
+            s.rounds[ri].xfers.push(dup);
+            Some("duplicate transfer")
+        }
+        5 => {
+            // Swap two adjacent rounds: any cross-round data dependency
+            // breaks; genuinely independent rounds commute.
+            if s.rounds.len() < 2 {
+                return None;
+            }
+            let a = ri.min(s.rounds.len() - 2);
+            s.rounds.swap(a, a + 1);
+            Some("swap adjacent rounds")
+        }
         _ => unreachable!(),
     }
 }
@@ -70,6 +88,15 @@ fn pipeline_catches(cl: &Cluster, pl: &Placement, s: &Schedule) -> bool {
     Multicore::default().validate(cl, pl, s).is_err()
 }
 
+/// Mutation classes that can leave the schedule *correct*: dropping a
+/// redundant transfer, retargeting a source to another rank that also
+/// holds the data, duplicating a local transfer (idempotent delivery),
+/// and swapping two genuinely independent rounds. Everything else must
+/// be caught — self-loops and empty payloads unconditionally (the shape
+/// check rejects both outright).
+const BENIGN_CLASSES: [&str; 4] =
+    ["drop transfer", "retarget source", "duplicate transfer", "swap adjacent rounds"];
+
 #[test]
 fn mutations_are_caught() {
     let (cl, pl) = setup();
@@ -83,6 +110,9 @@ fn mutations_are_caught() {
     let mut rng = Rng::seed_from_u64(99);
     let mut caught = 0usize;
     let mut attempted = 0usize;
+    // Per-class (attempted, caught) — the oracle catch-rate table.
+    let mut by_kind: std::collections::HashMap<&'static str, (usize, usize)> =
+        std::collections::HashMap::new();
     for (oi, original) in originals.iter().enumerate() {
         symexec::verify(original).unwrap();
         for trial in 0..60 {
@@ -92,27 +122,46 @@ fn mutations_are_caught() {
                 continue;
             }
             attempted += 1;
+            let tally = by_kind.entry(kind).or_default();
+            tally.0 += 1;
             if pipeline_catches(&cl, &pl, &m) {
                 caught += 1;
+                tally.1 += 1;
             } else {
-                // Surviving the whole pipeline means the mutant is still a
-                // *correct* schedule. Only two mutation classes can be
-                // benign: dropping a redundant transfer, and retargeting a
-                // source to another rank that also holds the data (e.g. a
-                // co-located informed process). Any other survivor is a
-                // hole in the oracle.
+                // Surviving the whole pipeline means the mutant is still
+                // a *correct* schedule, which only the benign-capable
+                // classes can produce. Any other survivor is a hole in
+                // the oracle.
                 assert!(
-                    kind == "drop transfer" || kind == "retarget source",
+                    BENIGN_CLASSES.contains(&kind),
                     "schedule {oi} trial {trial}: undetected '{kind}' mutation"
                 );
             }
         }
     }
-    // The pipeline must catch the overwhelming majority.
+    // The catch-rate table must be exhaustive: every class exercised,
+    // the always-fatal classes caught without exception.
+    for kind in [
+        "drop transfer",
+        "self loop",
+        "retarget source",
+        "empty payload",
+        "duplicate transfer",
+        "swap adjacent rounds",
+    ] {
+        let &(a, c) = by_kind.get(kind).unwrap_or(&(0, 0));
+        println!("mutation class {kind:>20}: {c}/{a} caught");
+        assert!(a >= 15, "class '{kind}' under-exercised: {a} attempts");
+        if !BENIGN_CLASSES.contains(&kind) {
+            assert_eq!(c, a, "'{kind}' mutants must never survive");
+        }
+    }
+    // The pipeline must catch the overwhelming majority overall (local
+    // duplicates are the one class that is usually benign).
     assert!(attempted > 150, "not enough mutation attempts: {attempted}");
     let rate = caught as f64 / attempted as f64;
     assert!(
-        rate > 0.85,
+        rate > 0.75,
         "only {caught}/{attempted} mutations caught ({rate:.2})"
     );
 }

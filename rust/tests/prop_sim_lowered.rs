@@ -5,7 +5,8 @@
 //! identical `ext_messages`, `ext_bytes`, `nic_utilization` and
 //! per-transfer records — across randomized topologies (switched and
 //! graph), every collective's full candidate set, both duplex
-//! legalizations, and all simulator parameter presets.
+//! legalizations, and all simulator parameter presets — straggler
+//! slowdowns and mid-schedule rank deaths included.
 //!
 //! One shared `SimArena` is threaded through every lowered run, so the
 //! suite also proves arena reset/reuse leaks no state between schedules
@@ -27,6 +28,19 @@ fn param_grid() -> Vec<SimParams> {
         SimParams::datacenter().with_records(),
         SimParams::flat_logp(10e-6, 2e-6, 3e-6).with_records(),
         speedy,
+        // Injected faults ride the same differential: a straggler
+        // machine, a mid-schedule rank death, and both at once (machine
+        // 0 / rank 0 exist on every topology; a slowdown keyed to a
+        // machine the cluster doesn't have must be ignored by both
+        // engines). Report equality covers the record stream and the
+        // suppressed-transfer count.
+        SimParams::lan_cluster().with_records().with_slowdown(0, 9.0),
+        SimParams::lan_cluster().with_records().with_dead_rank(0, 1),
+        SimParams::lan_2008()
+            .with_records()
+            .with_slowdown(0, 3.5)
+            .with_slowdown(5, 2.0)
+            .with_dead_rank(0, 0),
     ]
 }
 

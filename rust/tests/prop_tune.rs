@@ -132,6 +132,71 @@ fn tuned_decision_changes_across_size_sweep() {
     );
 }
 
+/// Robustness property: under any sampled straggler distribution (the
+/// draws replicated here exactly as the tuner samples them), the
+/// robust pick's mean degraded makespan never exceeds the clean pick's,
+/// the reported `robust_sim` bit-matches an independent replay, and the
+/// robust pick still honors the clean baseline contract — while a
+/// clean-tuned decision carries no robust score at all.
+#[test]
+fn robust_pick_degrades_no_worse_than_clean_pick() {
+    for seed in 0..12u64 {
+        let cl = random_switched(seed);
+        let pl = Placement::block(&cl);
+        let mut rng = Rng::seed_from_u64(seed ^ 0x0B57);
+        let draws = 2 + rng.gen_range(0..3);
+        let rob_seed = rng.next_u64();
+        let factor = 4.0 + rng.gen_range(0..5) as f64 * 4.0;
+        // The tuner's sampler: `draws` uniform machine picks.
+        let mut dr = Rng::seed_from_u64(rob_seed);
+        let machines: Vec<usize> =
+            (0..draws).map(|_| dr.gen_range(0..cl.num_machines())).collect();
+
+        for coll in [Collective::Broadcast { root: 0 }, Collective::Allreduce] {
+            let ctx = format!("seed {seed}, {}", coll.name());
+            let cfg_clean = TuneCfg::default();
+            let cfg_rob = cfg_clean.clone().with_robustness(draws, rob_seed, factor);
+            let clean = tune::select(&cl, &pl, coll, &cfg_clean).unwrap();
+            let robust = tune::select(&cl, &pl, coll, &cfg_rob).unwrap();
+            assert_eq!(clean.robust_sim, None, "{ctx}: clean tuning scored robustly");
+
+            // Mean degraded makespan over the sampled draws, accumulated
+            // in draw order — the tuner's float order.
+            let mean = |s: &mcomm::sched::Schedule| -> f64 {
+                let mut acc = 0.0f64;
+                for &m in &machines {
+                    let p = cfg_rob.sim.clone().with_slowdown(m, factor);
+                    acc += simulate(&cl, &pl, s, &p).unwrap().t_end / draws as f64;
+                }
+                acc
+            };
+            let clean_degraded = mean(&clean.schedule);
+            let robust_degraded = mean(&robust.schedule);
+            assert!(
+                robust_degraded <= clean_degraded + 1e-12,
+                "{ctx}: robust pick {} degrades to {robust_degraded}, \
+                 clean pick {} only to {clean_degraded}",
+                robust.choice.label(),
+                clean.choice.label(),
+            );
+            let reported = robust
+                .robust_sim
+                .unwrap_or_else(|| panic!("{ctx}: robust scoring left no score"));
+            assert_eq!(
+                reported.to_bits(),
+                robust_degraded.to_bits(),
+                "{ctx}: robust_sim {reported} != replay {robust_degraded}"
+            );
+            // The clean contract survives robust scoring.
+            let base = robust.baseline_sim.expect("switched => baseline");
+            assert!(
+                robust.sim_time <= base + 1e-12,
+                "{ctx}: robust pick broke the baseline contract"
+            );
+        }
+    }
+}
+
 /// Cache contract: same fingerprint => hit, identical decision; the
 /// fingerprint computed standalone matches what the cache keys on.
 #[test]

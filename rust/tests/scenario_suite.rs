@@ -1,0 +1,279 @@
+//! Deterministic failure-scenario suite: every scenario that PR 6's
+//! robustness machinery claims to survive, replayed end to end in
+//! virtual time so the outcomes are bit-reproducible in CI.
+//!
+//! Scenarios:
+//!   1. a rank dies mid-collective (abort mode) → the communicator
+//!      re-plans onto the survivors and the next step completes, with
+//!      bit-identical virtual times across independent replays;
+//!   2. a single slow machine (straggler) stretches the virtual-time
+//!      makespan deterministically, in both the executor and the
+//!      simulator;
+//!   3. membership shrinks between trainer steps (planned shrink, no
+//!      death event) and the reduced group still sums exactly;
+//!   4. differential: the executor's suppression-mode delivery stream
+//!      equals the schedule-derived stream minus transfers touching the
+//!      corpse — and the lowered simulator's record stream agrees,
+//!      suppressed-transfer accounting included. The abort path on the
+//!      same injection fails cleanly.
+
+use std::sync::Arc;
+
+use mcomm::coordinator::{
+    collect_reduced_grads, seed_grad_store, AllreduceAlgo, Communicator,
+};
+use mcomm::exec::{self, BufferStore, ExecDelivery, ExecEngine, ExecParams, ExecPlan};
+use mcomm::sched::{Chunk, LoweredSchedule, Schedule, TopoCtx, XferKind};
+use mcomm::sim::{simulate, simulate_lowered, SimArena, SimParams};
+use mcomm::topology::{switched, Placement};
+use mcomm::tune::{candidates_for, Collective};
+
+/// One allreduce "trainer step" over real gradient bytes: seed every
+/// worker's store, execute, and check rank 0's reassembled sum.
+fn step_and_check(
+    comm: &Communicator,
+    schedule: &Schedule,
+    params: &ExecParams,
+    num_params: usize,
+) -> f64 {
+    let w = comm.num_ranks();
+    let grads: Vec<Vec<f32>> = (0..w)
+        .map(|r| (0..num_params).map(|i| (r * 100 + i) as f32 * 0.25).collect())
+        .collect();
+    let inputs: Vec<BufferStore> =
+        (0..w).map(|r| seed_grad_store(schedule, r, &grads[r])).collect();
+    let rep = comm.execute(schedule, inputs, params).unwrap();
+    let out = collect_reduced_grads(schedule, &rep.outputs[0], w, num_params).unwrap();
+    for i in 0..num_params {
+        let want: f32 = (0..w).map(|r| grads[r][i]).sum();
+        assert!((out[i] - want).abs() < 1e-3, "param {i}: {} vs {want}", out[i]);
+    }
+    rep.virtual_time.expect("virtual mode")
+}
+
+/// Scenario 1: tuned allreduce step, rank 3 dies at round 1 (abort
+/// mode), re-plan, and the next step completes on the 5 survivors.
+/// The whole flow replayed from scratch is bit-identical.
+fn death_replan_flow() -> (u64, u64) {
+    const P: usize = 10;
+    let vparams = ExecParams::lan_scaled().with_virtual_time();
+    let mut comm = Communicator::block(switched(3, 2, 1));
+    let mut s = comm.allreduce(AllreduceAlgo::Auto).unwrap();
+    s.set_payload(4 * P as u64, 4);
+    let vt_healthy = step_and_check(&comm, &s, &vparams, P);
+
+    // Step 2 dies mid-collective: clean abort, nothing delivered.
+    let dying = vparams.clone().with_dead_rank(3, 1).with_abort_on_death();
+    let inputs: Vec<BufferStore> = (0..comm.num_ranks())
+        .map(|r| seed_grad_store(&s, r, &vec![r as f32; P]))
+        .collect();
+    let err = comm.execute(&s, inputs, &dying).unwrap_err();
+    assert!(err.to_string().contains("rank 3 died"), "{err}");
+
+    // Re-plan onto the survivors and run the next step there.
+    let rep = comm.replan_without(&[3], &[Collective::Allreduce]).unwrap();
+    assert_eq!((rep.survivors, rep.machines), (5, 3));
+    assert_eq!(rep.invalidated_decisions, 1);
+    let mut s2 = comm.allreduce(AllreduceAlgo::Auto).unwrap();
+    assert_eq!(s2.num_ranks, 5);
+    s2.set_payload(4 * P as u64, 4);
+    let vt_survivors = step_and_check(&comm, &s2, &vparams, P);
+    assert!(vt_survivors > 0.0);
+    (vt_healthy.to_bits(), vt_survivors.to_bits())
+}
+
+#[test]
+fn rank_death_replans_and_completes_bit_reproducibly() {
+    let a = death_replan_flow();
+    let b = death_replan_flow();
+    assert_eq!(a, b, "replay diverged: {a:?} vs {b:?}");
+}
+
+#[test]
+fn straggler_machine_stretches_virtual_time_deterministically() {
+    const P: usize = 8;
+    let comm = Communicator::block(switched(2, 2, 1));
+    let mut s = comm.allreduce(AllreduceAlgo::Ring).unwrap();
+    s.set_payload(4 * P as u64, 4);
+    let healthy = ExecParams::lan_scaled().with_virtual_time();
+    // Both ranks of machine 1 run 8x slower (rank-keyed, virtual mode).
+    let straggling = healthy.clone().with_slowdown(2, 8.0).with_slowdown(3, 8.0);
+
+    let vt_healthy = step_and_check(&comm, &s, &healthy, P);
+    let mut vts = Vec::new();
+    for _ in 0..2 {
+        // Fresh communicator per replay: a new worker pool must not
+        // perturb the virtual clock.
+        let comm = Communicator::block(switched(2, 2, 1));
+        vts.push(step_and_check(&comm, &s, &straggling, P).to_bits());
+    }
+    assert_eq!(vts[0], vts[1], "straggler virtual time diverged");
+    let vt_slow = f64::from_bits(vts[0]);
+    assert!(
+        vt_slow > vt_healthy,
+        "slowdown must stretch the makespan: {vt_slow} <= {vt_healthy}"
+    );
+
+    // The simulator agrees qualitatively: slowing machine 1 stretches
+    // the simulated makespan of the same schedule.
+    let clean = simulate(&comm.cluster, &comm.placement, &s, &SimParams::lan_cluster())
+        .unwrap();
+    let degraded = simulate(
+        &comm.cluster,
+        &comm.placement,
+        &s,
+        &SimParams::lan_cluster().with_slowdown(1, 8.0),
+    )
+    .unwrap();
+    assert!(degraded.t_end > clean.t_end);
+}
+
+#[test]
+fn membership_shrink_between_steps_keeps_reducing_exactly() {
+    const P: usize = 7; // uneven split across both group sizes
+    let vparams = ExecParams::lan_scaled().with_virtual_time();
+    let mut comm = Communicator::block(switched(3, 2, 1));
+    let mut s = comm.allreduce(AllreduceAlgo::Auto).unwrap();
+    s.set_payload(4 * P as u64, 4);
+    step_and_check(&comm, &s, &vparams, P);
+
+    // Planned shrink between steps: machine 2 leaves (no death event).
+    let rep = comm.replan_without(&[4, 5], &[Collective::Allreduce]).unwrap();
+    assert_eq!((rep.survivors, rep.machines), (4, 2));
+    let mut s2 = comm.allreduce(AllreduceAlgo::Auto).unwrap();
+    assert_eq!(s2.num_ranks, 4);
+    s2.set_payload(4 * P as u64, 4);
+    step_and_check(&comm, &s2, &vparams, P);
+    // One pool before the shrink, one after.
+    assert_eq!(comm.exec_stats().engine_spawns, 2);
+}
+
+/// The schedule-derived delivery stream minus every chunk whose
+/// transfer touches a killed endpoint — the suppression-mode oracle.
+fn surviving_deliveries(s: &Schedule, params: &SimParams) -> Vec<ExecDelivery> {
+    let mut out = Vec::new();
+    for (ri, round) in s.rounds.iter().enumerate() {
+        for x in &round.xfers {
+            if params.killed(x.src, ri) {
+                continue;
+            }
+            for &d in &x.dsts {
+                if params.killed(d, ri) {
+                    continue;
+                }
+                for (ch, _) in &x.payload.items {
+                    out.push(ExecDelivery {
+                        round: ri as u32,
+                        src: x.src as u32,
+                        dst: d as u32,
+                        chunk: *ch,
+                        external: x.kind == XferKind::External,
+                    });
+                }
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// The same filter over the lowered simulator's record stream:
+/// (src, dst, external) per surviving record, plus how many the
+/// injection suppressed.
+fn surviving_records(s: &Schedule, params: &SimParams) -> (Vec<(usize, usize, bool)>, usize) {
+    let mut out = Vec::new();
+    let mut skipped = 0usize;
+    for (ri, round) in s.rounds.iter().enumerate() {
+        for x in &round.xfers {
+            let dsts: &[usize] = match x.kind {
+                XferKind::External | XferKind::LocalRead => &x.dsts[..1],
+                XferKind::LocalWrite => &x.dsts[..],
+            };
+            for &d in dsts {
+                if params.killed(x.src, ri) || params.killed(d, ri) {
+                    skipped += 1;
+                } else {
+                    out.push((x.src, d, x.kind == XferKind::External));
+                }
+            }
+        }
+    }
+    (out, skipped)
+}
+
+#[test]
+fn suppressed_death_is_differential_between_exec_and_sim() {
+    const DEAD: usize = 3;
+    const ROUND: usize = 1;
+    let pat = |r: usize, c: Chunk| vec![(r * 31 + c.0 as usize) as f32, r as f32];
+    let cl = switched(2, 2, 1);
+    let pl = Placement::block(&cl);
+    let ctx = TopoCtx::new(&cl, &pl);
+    let mut engine = ExecEngine::new(pl.num_ranks());
+    let mut arena = SimArena::new();
+    let exec_params = ExecParams::zero()
+        .with_deliveries()
+        .with_dead_rank(DEAD as u32, ROUND as u32);
+    let sim_params = SimParams::lan_cluster()
+        .with_records()
+        .with_dead_rank(DEAD, ROUND);
+    let mut suppressed_somewhere = false;
+
+    for coll in [
+        Collective::Broadcast { root: 0 },
+        Collective::Allgather,
+        Collective::Allreduce,
+        Collective::ReduceScatter,
+    ] {
+        for cand in candidates_for(coll, &cl, &pl) {
+            let s = cand
+                .build(&cl, &pl)
+                .unwrap_or_else(|e| panic!("{}: {e}", cand.label()))
+                .with_total_bytes(4 << 10);
+            let label = cand.label();
+
+            // Executor, suppression mode: deliveries == schedule stream
+            // minus the corpse's traffic; the death is reported when its
+            // round fell inside the plan.
+            let plan = Arc::new(ExecPlan::compile(&pl, &s).unwrap());
+            let rep = engine
+                .execute(&plan, exec::initial_inputs(&s, pat), &exec_params)
+                .unwrap_or_else(|e| panic!("{label}: exec: {e}"));
+            let want = surviving_deliveries(&s, &sim_params);
+            assert_eq!(rep.deliveries, want, "{label}: delivery stream");
+            let death_in_plan = s.rounds.len() > ROUND;
+            assert_eq!(
+                rep.dead_rank,
+                death_in_plan.then_some(DEAD as u32),
+                "{label}: dead_rank report"
+            );
+
+            // Lowered simulator, same injection: record stream and the
+            // suppressed-transfer count match the same oracle.
+            let low = LoweredSchedule::compile(&ctx, &s).unwrap();
+            let sim = simulate_lowered(&low, &sim_params, &mut arena);
+            let (want_recs, want_skipped) = surviving_records(&s, &sim_params);
+            assert_eq!(sim.records.len(), want_recs.len(), "{label}: record count");
+            for (rec, want) in sim.records.iter().zip(&want_recs) {
+                assert_eq!((rec.src, rec.dst, rec.external), *want, "{label}");
+            }
+            assert_eq!(sim.skipped_xfers, want_skipped, "{label}: skipped count");
+            suppressed_somewhere |= want_skipped > 0;
+
+            // Abort mode on the same injection fails cleanly — and only
+            // when the death round actually occurs.
+            let abort = exec_params.clone().with_abort_on_death();
+            let res = engine.execute(&plan, exec::initial_inputs(&s, pat), &abort);
+            if death_in_plan {
+                let err = res.unwrap_err();
+                assert!(
+                    err.to_string().contains(&format!("rank {DEAD} died")),
+                    "{label}: {err}"
+                );
+            } else {
+                res.unwrap_or_else(|e| panic!("{label}: death out of range: {e}"));
+            }
+        }
+    }
+    assert!(suppressed_somewhere, "injection never suppressed anything");
+}
