@@ -3,8 +3,9 @@
 //! the continuous simulator's throughput (steady-state lowered engine
 //! and cold compile+run), model costing over both representations,
 //! legalization, autotuner selection (clean and robustness-scored), the
-//! fault-injection branch, online re-planning, and the real executor's
-//! per-round overhead.
+//! fault-injection branch, online re-planning, schedule repair plus the
+//! supervised recovery ladder, and the real executor's per-round
+//! overhead.
 //!
 //! Emits `BENCH_hotpath.json` (see `bench_harness::write_json`) so CI
 //! can track the trajectory of every number here PR-over-PR. Run with
@@ -156,6 +157,47 @@ fn main() {
     stats.push(bench("robust: replan 6 -> 5 ranks", || {
         let mut comm = mcomm::coordinator::Communicator::block(switched(3, 2, 1));
         std::hint::black_box(comm.replan_without(&[5], &[]).unwrap());
+    }));
+
+    // Self-healing additions: patch synthesis for a mid-collective death
+    // (the sched::repair hot path — symexec replay + greedy re-route +
+    // splice validation), the supervised ladder's overhead on a healthy
+    // run, and a full abort → repair → re-execute recovery cycle.
+    use mcomm::coordinator::{seed_grad_store, AllreduceAlgo, Communicator, FailurePolicy};
+    let r_comm = Communicator::block(switched(3, 2, 1));
+    let mut r_sched = r_comm.allreduce(AllreduceAlgo::Ring).unwrap();
+    r_sched.set_payload(4 * 64, 4);
+    stats.push(bench("repair: synthesize patch (6 ranks, cut 1)", || {
+        std::hint::black_box(
+            mcomm::sched::repair_schedule(
+                &r_comm.cluster,
+                &r_comm.placement,
+                &r_sched,
+                &[4],
+                1,
+            )
+            .unwrap(),
+        );
+    }));
+    let grads: Vec<Vec<f32>> = (0..6).map(|r| vec![(r + 1) as f32; 64]).collect();
+    let seed = |sch: &mcomm::sched::Schedule, rank: usize, orig: usize| {
+        seed_grad_store(sch, rank, &grads[orig])
+    };
+    let policy = FailurePolicy::default();
+    let mut sup_comm = Communicator::block(switched(3, 2, 1));
+    let sup_sched = r_sched.clone();
+    stats.push(bench("supervised: clean-path overhead (6 ranks)", || {
+        std::hint::black_box(
+            sup_comm
+                .supervised_execute(&sup_sched, &seed, &ExecParams::zero(), &policy)
+                .unwrap(),
+        );
+    }));
+    let die = ExecParams::zero().with_dead_rank(4, 1).with_abort_on_death();
+    stats.push(bench("supervised: repair recovery (6 ranks)", || {
+        std::hint::black_box(
+            sup_comm.supervised_execute(&sup_sched, &seed, &die, &policy).unwrap(),
+        );
     }));
 
     // Real executor: per-round overhead with zero injected cost.

@@ -18,7 +18,7 @@
 //! per step, so this is its steady state).
 //!
 //! When a rank dies mid-run (the executor's abort error, or
-//! [`crate::exec::ExecReport::dead_rank`] in suppression mode) or
+//! [`crate::exec::ExecReport::dead_ranks`] in suppression mode) or
 //! membership shrinks between steps, [`Communicator::replan_without`]
 //! rebuilds the surviving topology in place: stale decisions are
 //! invalidated by fingerprint, stale plans and the worker pool are
@@ -309,7 +309,7 @@ impl Communicator {
 
     /// Rebuild this communicator for the topology that survives losing
     /// `dead_ranks` — the executor reported a death
-    /// ([`crate::exec::ExecReport::dead_rank`], or the abort-mode error),
+    /// ([`crate::exec::ExecReport::dead_ranks`], or the abort-mode error),
     /// or membership shrank between trainer steps.
     ///
     /// Surviving ranks are renumbered densely in their old order; each
@@ -479,6 +479,26 @@ impl Communicator {
             }
         }
         result
+    }
+
+    /// Consume the engine's structured record of the most recent
+    /// abort-mode death: `(sorted dead ranks, earliest death round)`.
+    /// `None` when the last run was healthy (or the record was already
+    /// taken). The supervised path classifies permanent deaths with
+    /// this instead of parsing error strings.
+    pub(crate) fn take_abort_deaths(&self) -> Option<(Vec<u32>, u32)> {
+        self.engine
+            .lock()
+            .expect("engine poisoned")
+            .as_mut()
+            .and_then(|e| e.take_abort_deaths())
+    }
+
+    /// Tear down the worker pool; the next `execute` respawns a fresh
+    /// one lazily. Used by the supervised retry path to clear a pool
+    /// whose workers may have stopped at a failed barrier.
+    pub(crate) fn reset_engine(&self) {
+        *self.engine.lock().expect("engine poisoned") = None;
     }
 
     /// Executor counters (plan cache hits/misses, pool spawns, runs).

@@ -5,6 +5,7 @@
 
 mod comm;
 mod data;
+pub mod supervise;
 mod trainer;
 
 pub use comm::{
@@ -12,6 +13,8 @@ pub use comm::{
     GatherAlgo, ReplanReport,
 };
 pub use data::Corpus;
+pub use supervise::{FailurePolicy, RecoveryOutcome, SupervisedReport};
 pub use trainer::{
-    collect_reduced_grads, seed_grad_store, TrainReport, Trainer, TrainerCfg,
+    collect_reduced_grads, collect_reduced_grads_of, seed_grad_store, TrainReport, Trainer,
+    TrainerCfg,
 };

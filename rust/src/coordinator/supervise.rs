@@ -1,0 +1,457 @@
+//! Supervised execution: classify failures, retry transients with
+//! bounded backoff, repair permanent deaths in place, re-plan when
+//! repair is infeasible, and degrade gracefully — never silently.
+//!
+//! [`Communicator::supervised_execute`] wraps a single collective in the
+//! failure policy ladder:
+//!
+//! ```text
+//! execute ──ok──▶ fast enough? ──▶ Clean
+//!    │               │ slow (wall > round_timeout × rounds)
+//!    │               ▼
+//!    │            bounded retry (exponential backoff, capped)
+//!    │               │ still slow after max_retries
+//!    │               ▼
+//!    │            Straggled (correct data, flagged)
+//!    │
+//!    ├─died──▶ repair (sched::repair: splice patch rounds, re-route
+//!    │           │     lost pieces through survivors)    ──▶ Repaired
+//!    │           │ infeasible
+//!    │           ▼
+//!    │        replan_without + re-tune + re-execute      ──▶ Replanned
+//!    │           │ infeasible
+//!    │           ▼
+//!    │        survivor-weighted partial reduction         ──▶ Degraded
+//!    │           │ not a reduction
+//!    │           ▼
+//!    │        error
+//!    │
+//!    └─other─▶ bounded retry on a fresh worker pool, then error
+//! ```
+//!
+//! Death classification is structural, not textual: the engine records
+//! `(sorted dead ranks, earliest round)` on every abort-mode death
+//! ([`crate::exec::ExecEngine::take_abort_deaths`]), and a
+//! suppression-mode run that completes with holes reports them in
+//! [`ExecReport::dead_ranks`]. Every recovery outcome is explicit in
+//! [`SupervisedReport::outcome`]; a degraded result can never be
+//! mistaken for a clean one.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::exec::{BufferStore, ExecParams, ExecReport};
+use crate::sched::repair::repair_schedule;
+use crate::sched::{Chunk, CollectiveOp, ContribSet, Schedule};
+use crate::tune::Collective;
+use crate::Rank;
+
+use super::Communicator;
+
+/// Seeds one rank's input store for a (possibly re-planned) schedule.
+/// Called as `(schedule, rank-in-schedule, original-rank)`: after a
+/// re-plan the survivors are renumbered densely, so the second argument
+/// is the rank id the schedule executes as and the third names whose
+/// *data* to seed (the trainer keys gradients by original worker).
+pub type SeedFn<'a> = &'a dyn Fn(&Schedule, Rank, Rank) -> BufferStore;
+
+/// Knobs of the supervised execution ladder. The retry path is bounded
+/// by construction: at most `max_retries` re-executions, each preceded
+/// by a backoff of `backoff_base × backoff_factor^attempt`, hard-capped
+/// at `backoff_cap` — see [`FailurePolicy::max_total_backoff`].
+#[derive(Debug, Clone)]
+pub struct FailurePolicy {
+    /// Re-executions allowed for transient failures (straggle or
+    /// non-death errors) before giving up.
+    pub max_retries: u32,
+    /// Backoff before the first retry.
+    pub backoff_base: Duration,
+    /// Growth factor per retry (values < 1 are treated as 1).
+    pub backoff_factor: f64,
+    /// Hard upper bound on any single backoff.
+    pub backoff_cap: Duration,
+    /// Straggle classifier: a run is "slow" when its wall time exceeds
+    /// `round_timeout × rounds`. `None` disables straggle retries.
+    pub round_timeout: Option<Duration>,
+    /// Attempt in-place schedule repair on a permanent death.
+    pub allow_repair: bool,
+    /// Fall back to [`Communicator::replan_without`] + re-execute.
+    pub allow_replan: bool,
+    /// Last resort for reductions: survivor-weighted partial result,
+    /// reported as [`RecoveryOutcome::Degraded`].
+    pub allow_degrade: bool,
+}
+
+impl Default for FailurePolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 3,
+            backoff_base: Duration::from_millis(10),
+            backoff_factor: 2.0,
+            backoff_cap: Duration::from_millis(250),
+            round_timeout: None,
+            allow_repair: true,
+            allow_replan: true,
+            allow_degrade: true,
+        }
+    }
+}
+
+impl FailurePolicy {
+    /// Backoff before retry number `attempt` (0-based), capped.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let f = self.backoff_factor.max(1.0).powi(attempt.min(64) as i32);
+        let cap = self.backoff_cap.as_secs_f64();
+        let d = (self.backoff_base.as_secs_f64() * f).min(cap);
+        Duration::from_secs_f64(if d.is_finite() { d.max(0.0) } else { cap })
+    }
+
+    /// Worst-case total sleep across every allowed retry — the bound the
+    /// recovery suite asserts stays under its wall budget.
+    pub fn max_total_backoff(&self) -> Duration {
+        (0..self.max_retries).map(|a| self.backoff(a)).sum()
+    }
+}
+
+/// How a supervised collective actually completed. Anything but
+/// [`RecoveryOutcome::Clean`] means the failure ladder engaged; only
+/// [`RecoveryOutcome::Degraded`] returns a partial (survivor-only)
+/// result, and it names the missing contributors explicitly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RecoveryOutcome {
+    /// Healthy run (possibly after transient retries — see
+    /// [`SupervisedReport::attempts`]).
+    Clean,
+    /// Completed correct but slow: every retry also exceeded the round
+    /// timeout, and the last (correct) result was accepted.
+    Straggled { retries: u32 },
+    /// A death was repaired in place: prefix rounds kept, patch rounds
+    /// spliced, outputs complete on the survivors.
+    Repaired { dead_ranks: Vec<Rank>, cut: usize, patch_rounds: usize, patch_cost: f64 },
+    /// Repair was infeasible; the communicator re-planned onto the
+    /// survivor topology (densely renumbered) and re-executed there.
+    Replanned { dead_ranks: Vec<Rank>, survivors: usize },
+    /// Graceful degradation: survivor-weighted partial reduction. The
+    /// result is *partial* — `contributors` lists exactly whose terms
+    /// are in it.
+    Degraded { dead_ranks: Vec<Rank>, contributors: Vec<Rank> },
+}
+
+impl RecoveryOutcome {
+    /// Short stable name for tables and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryOutcome::Clean => "clean",
+            RecoveryOutcome::Straggled { .. } => "straggled",
+            RecoveryOutcome::Repaired { .. } => "repaired",
+            RecoveryOutcome::Replanned { .. } => "replanned",
+            RecoveryOutcome::Degraded { .. } => "degraded",
+        }
+    }
+
+    /// Is the result partial (missing contributions)?
+    pub fn is_degraded(&self) -> bool {
+        matches!(self, RecoveryOutcome::Degraded { .. })
+    }
+}
+
+/// Result of a supervised execution: the report plus how it was won.
+#[derive(Debug)]
+pub struct SupervisedReport {
+    /// Outputs of the run that finally completed. For
+    /// [`RecoveryOutcome::Replanned`] the stores are indexed by the
+    /// *new* dense rank numbering; otherwise by the original one.
+    pub report: ExecReport,
+    pub outcome: RecoveryOutcome,
+    /// Total executions attempted (1 = first try succeeded).
+    pub attempts: u32,
+    /// Total time slept in backoff.
+    pub backoff_total: Duration,
+    /// The schedule actually executed when the topology changed
+    /// ([`RecoveryOutcome::Replanned`]) — callers need its payload
+    /// layout to interpret `report.outputs`.
+    pub replanned_schedule: Option<Schedule>,
+}
+
+impl Communicator {
+    /// Execute `s` under a failure policy: transient failures retry with
+    /// bounded backoff, permanent deaths walk repair → replan → degrade.
+    /// See the [module docs](crate::coordinator::supervise) for the full
+    /// ladder. `seed` is called
+    /// to (re)build every rank's input store for each attempt — it must
+    /// be deterministic for bit-reproducible recovery.
+    pub fn supervised_execute(
+        &mut self,
+        s: &Schedule,
+        seed: SeedFn<'_>,
+        params: &ExecParams,
+        policy: &FailurePolicy,
+    ) -> crate::Result<SupervisedReport> {
+        let mut attempts = 0u32;
+        let mut backoff_total = Duration::ZERO;
+        loop {
+            attempts += 1;
+            let inputs = (0..s.num_ranks).map(|r| seed(s, r, r)).collect();
+            match self.execute(s, inputs, params) {
+                Ok(rep) => {
+                    if !rep.dead_ranks.is_empty() {
+                        // Suppression-mode corpses: the run "completed"
+                        // with holes — recover instead of returning a
+                        // silently wrong answer.
+                        let dead: Vec<Rank> =
+                            rep.dead_ranks.iter().map(|&r| r as Rank).collect();
+                        let cut = params
+                            .dead_ranks
+                            .iter()
+                            .filter(|&&(dr, _)| dead.contains(&(dr as Rank)))
+                            .map(|&(_, rd)| rd)
+                            .min()
+                            .unwrap_or(0) as usize;
+                        return self
+                            .recover(s, seed, params, policy, dead, cut, attempts, backoff_total);
+                    }
+                    let slow = policy.round_timeout.is_some_and(|rt| {
+                        rep.wall > rt.mul_f64(s.num_rounds().max(1) as f64)
+                    });
+                    if slow {
+                        if attempts <= policy.max_retries {
+                            let b = policy.backoff(attempts - 1);
+                            std::thread::sleep(b);
+                            backoff_total += b;
+                            continue; // transient straggle: try again
+                        }
+                        // Correct data, persistently slow: accept, flagged.
+                        return Ok(SupervisedReport {
+                            report: rep,
+                            outcome: RecoveryOutcome::Straggled { retries: attempts - 1 },
+                            attempts,
+                            backoff_total,
+                            replanned_schedule: None,
+                        });
+                    }
+                    return Ok(SupervisedReport {
+                        report: rep,
+                        outcome: RecoveryOutcome::Clean,
+                        attempts,
+                        backoff_total,
+                        replanned_schedule: None,
+                    });
+                }
+                Err(e) => {
+                    if let Some((dead, cut)) = self.take_abort_deaths() {
+                        let dead: Vec<Rank> = dead.into_iter().map(|d| d as Rank).collect();
+                        return self.recover(
+                            s,
+                            seed,
+                            params,
+                            policy,
+                            dead,
+                            cut as usize,
+                            attempts,
+                            backoff_total,
+                        );
+                    }
+                    if attempts <= policy.max_retries {
+                        // Transient (poisoned pool, assembly failure from
+                        // corrupted inputs, …): fresh worker pool, backoff,
+                        // bounded retry.
+                        self.reset_engine();
+                        let b = policy.backoff(attempts - 1);
+                        std::thread::sleep(b);
+                        backoff_total += b;
+                        continue;
+                    }
+                    return Err(e.context(format!(
+                        "supervised execute: {attempts} attempts exhausted"
+                    )));
+                }
+            }
+        }
+    }
+
+    /// Permanent-death ladder: repair → replan → degrade.
+    #[allow(clippy::too_many_arguments)]
+    fn recover(
+        &mut self,
+        s: &Schedule,
+        seed: SeedFn<'_>,
+        params: &ExecParams,
+        policy: &FailurePolicy,
+        dead: Vec<Rank>,
+        cut: usize,
+        attempts: u32,
+        backoff_total: Duration,
+    ) -> crate::Result<SupervisedReport> {
+        if policy.allow_repair {
+            if let Ok(rp) = repair_schedule(&self.cluster, &self.placement, s, &dead, cut) {
+                // Replay prefix + patch in suppression mode: the corpse
+                // stays dead from the cut on, the prefix is healthy by
+                // construction, the patch references only survivors.
+                let mut p2 = params.clone();
+                p2.abort_on_death = false;
+                p2.dead_ranks =
+                    dead.iter().map(|&r| (r as u32, cut as u32)).collect();
+                let inputs = (0..s.num_ranks).map(|r| seed(s, r, r)).collect();
+                if let Ok(mut rep) = self.execute(&rp.spliced, inputs, &p2) {
+                    rep.dead_ranks = dead.iter().map(|&r| r as u32).collect();
+                    return Ok(SupervisedReport {
+                        report: rep,
+                        outcome: RecoveryOutcome::Repaired {
+                            dead_ranks: dead,
+                            cut,
+                            patch_rounds: rp.patch_rounds,
+                            patch_cost: rp.patch_cost,
+                        },
+                        attempts,
+                        backoff_total,
+                        replanned_schedule: None,
+                    });
+                }
+            }
+        }
+        if policy.allow_replan {
+            if let Ok((rep, s2)) = self.try_replan(s, seed, &dead, params) {
+                let survivors = s2.num_ranks;
+                return Ok(SupervisedReport {
+                    report: rep,
+                    outcome: RecoveryOutcome::Replanned { dead_ranks: dead, survivors },
+                    attempts,
+                    backoff_total,
+                    replanned_schedule: Some(s2),
+                });
+            }
+        }
+        if policy.allow_degrade && s.op.is_reduction() {
+            let (rep, contributors) = degrade_partial(s, seed, &dead)?;
+            return Ok(SupervisedReport {
+                report: rep,
+                outcome: RecoveryOutcome::Degraded { dead_ranks: dead, contributors },
+                attempts,
+                backoff_total,
+                replanned_schedule: None,
+            });
+        }
+        anyhow::bail!(
+            "unrecoverable: ranks {dead:?} died at round {cut} and every enabled \
+             recovery path (repair/replan/degrade) was infeasible"
+        )
+    }
+
+    /// Shrink to the survivor topology, re-tune the same collective
+    /// (root remapped; a dead root falls back to the first survivor),
+    /// re-seed by original rank id, re-execute with injections cleared
+    /// (the old rank numbering is meaningless on the new topology).
+    fn try_replan(
+        &mut self,
+        s: &Schedule,
+        seed: SeedFn<'_>,
+        dead: &[Rank],
+        params: &ExecParams,
+    ) -> crate::Result<(ExecReport, Schedule)> {
+        let n_old = self.placement.num_ranks();
+        let survivors: Vec<Rank> = (0..n_old).filter(|r| !dead.contains(r)).collect();
+        let remap = |old: Rank| survivors.iter().position(|&x| x == old).unwrap_or(0);
+        let coll = match s.op {
+            CollectiveOp::Broadcast { root } => Collective::Broadcast { root: remap(root) },
+            CollectiveOp::Gather { root } => Collective::Gather { root: remap(root) },
+            CollectiveOp::Scatter { root } => Collective::Scatter { root: remap(root) },
+            CollectiveOp::Reduce { root, .. } => Collective::Reduce { root: remap(root) },
+            CollectiveOp::Allgather => Collective::Allgather,
+            CollectiveOp::AllToAll => Collective::AllToAll,
+            CollectiveOp::Allreduce { .. } => Collective::Allreduce,
+            CollectiveOp::ReduceScatter => Collective::ReduceScatter,
+        };
+        self.replan_without(dead, &[])?;
+        let mut s2 = self.tuned(coll)?;
+        s2.set_payload(s.msg.total_bytes, s.msg.elem_bytes);
+        let mut p2 = params.clone();
+        p2.dead_ranks.clear();
+        let inputs = survivors
+            .iter()
+            .enumerate()
+            .map(|(new, &old)| seed(&s2, new, old))
+            .collect();
+        let rep = self.execute(&s2, inputs, &p2)?;
+        Ok((rep, s2))
+    }
+}
+
+/// Coordinator-side graceful degradation for reductions: sum the
+/// survivors' seed contributions per raw chunk (ascending rank order,
+/// deterministic) and hand every survivor the partial under the
+/// survivor contribution set — a consumer asking for the full set will
+/// fail loudly, and the report's `dead_ranks` plus the
+/// [`RecoveryOutcome::Degraded`] listing make the holes explicit.
+fn degrade_partial(
+    s: &Schedule,
+    seed: SeedFn<'_>,
+    dead: &[Rank],
+) -> crate::Result<(ExecReport, Vec<Rank>)> {
+    let t0 = Instant::now();
+    let n = s.num_ranks;
+    let survivors: Vec<Rank> = (0..n).filter(|r| !dead.contains(r)).collect();
+    anyhow::ensure!(!survivors.is_empty(), "degrade: no survivors");
+    let stores: Vec<BufferStore> = (0..n).map(|r| seed(s, r, r)).collect();
+    let contrib = ContribSet::from_iter(survivors.iter().copied());
+    let mut outputs: Vec<BufferStore> = vec![BufferStore::default(); n];
+    for raw in 0..s.msg.num_chunks() {
+        let c = Chunk(raw);
+        let mut acc: Option<Vec<f32>> = None;
+        for &r in &survivors {
+            let piece = stores[r].assemble(c, &ContribSet::singleton(r))?;
+            match &mut acc {
+                None => acc = Some((*piece).clone()),
+                Some(a) => {
+                    for (x, y) in a.iter_mut().zip(piece.iter()) {
+                        *x += y;
+                    }
+                }
+            }
+        }
+        let data = Arc::new(acc.unwrap_or_default());
+        for &r in &survivors {
+            outputs[r].deliver(c, contrib.clone(), Arc::clone(&data));
+        }
+    }
+    let report = ExecReport {
+        outputs,
+        wall: t0.elapsed(),
+        virtual_time: None,
+        deliveries: Vec::new(),
+        dead_ranks: dead.iter().map(|&r| r as u32).collect(),
+    };
+    Ok((report, survivors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_capped_and_bounded() {
+        let p = FailurePolicy::default();
+        assert_eq!(p.backoff(0), Duration::from_millis(10));
+        assert_eq!(p.backoff(1), Duration::from_millis(20));
+        assert_eq!(p.backoff(2), Duration::from_millis(40));
+        assert_eq!(p.backoff(100), Duration::from_millis(250), "hard cap");
+        assert!(p.max_total_backoff() <= Duration::from_millis(750));
+        // Degenerate factors cannot panic or overflow.
+        let wild = FailurePolicy {
+            backoff_factor: 1e300,
+            max_retries: 10,
+            ..FailurePolicy::default()
+        };
+        assert_eq!(wild.backoff(9), wild.backoff_cap);
+        let shrink = FailurePolicy { backoff_factor: 0.1, ..FailurePolicy::default() };
+        assert_eq!(shrink.backoff(3), shrink.backoff_base, "factor floors at 1");
+    }
+
+    #[test]
+    fn outcome_names_are_stable() {
+        assert_eq!(RecoveryOutcome::Clean.name(), "clean");
+        assert!(!RecoveryOutcome::Clean.is_degraded());
+        let d = RecoveryOutcome::Degraded { dead_ranks: vec![1], contributors: vec![0] };
+        assert_eq!(d.name(), "degraded");
+        assert!(d.is_degraded());
+    }
+}

@@ -27,6 +27,7 @@ use std::time::{Duration, Instant};
 
 use super::comm::{AllreduceAlgo, Communicator};
 use super::data::Corpus;
+use super::supervise::{FailurePolicy, RecoveryOutcome};
 use crate::exec::{BufferStore, ExecParams};
 use crate::runtime::{lit_f32, lit_f32_scalar, lit_i32_2d, Artifact, Runtime};
 use crate::sched::{Chunk, CollectiveOp, ContribSet, Schedule};
@@ -50,6 +51,13 @@ pub struct TrainerCfg {
     /// [`AllreduceAlgo::Auto`] picks the gradient schedule (`mcomm train
     /// --bytes`). `None` = the real gradient size, `4 × num_params`.
     pub tune_bytes: Option<u64>,
+    /// Supervised failure handling for the allreduce (`mcomm train
+    /// --inject`). `None` = unsupervised: a death error propagates out of
+    /// [`Trainer::run`] as before. `Some` routes every step through
+    /// [`Communicator::supervised_execute`], so the loop survives
+    /// injected deaths and stragglers and [`TrainReport::recovery_events`]
+    /// records how.
+    pub policy: Option<FailurePolicy>,
 }
 
 impl Default for TrainerCfg {
@@ -65,6 +73,7 @@ impl Default for TrainerCfg {
             seed: 0,
             log_every: 10,
             tune_bytes: None,
+            policy: None,
         }
     }
 }
@@ -79,7 +88,12 @@ pub struct TrainReport {
     pub comm_virtual: Option<f64>,
     pub total_time: Duration,
     pub algo: AllreduceAlgo,
+    /// Workers at the *end* of the run (a supervised re-plan shrinks it).
     pub workers: usize,
+    /// Every step whose allreduce did not complete cleanly, with the
+    /// [`RecoveryOutcome`] name that resolved it (`"straggled"`,
+    /// `"repaired"`, `"replanned"`, `"degraded"`). Empty = healthy run.
+    pub recovery_events: Vec<(usize, String)>,
 }
 
 impl TrainReport {
@@ -145,19 +159,31 @@ impl Trainer {
             .collect()
     }
 
-    /// Run the training loop.
-    pub fn run(&self, cfg: &TrainerCfg) -> crate::Result<TrainReport> {
-        let w = self.workers();
-        let meta = &self.runtime.meta;
+    /// Run the training loop. With [`TrainerCfg::policy`] set, every
+    /// allreduce runs supervised: deaths are repaired or re-planned
+    /// around (the loop continues on the survivors with a
+    /// survivor-weighted mean) and stragglers are retried with bounded
+    /// backoff; each engagement is logged in
+    /// [`TrainReport::recovery_events`].
+    pub fn run(&mut self, cfg: &TrainerCfg) -> crate::Result<TrainReport> {
         let mut params = self.init_params(cfg.seed);
         let mut rng = Rng::seed_from_u64(cfg.seed);
         let mut losses = Vec::with_capacity(cfg.steps);
         let mut compute_time = Duration::ZERO;
         let mut comm_time = Duration::ZERO;
         let mut comm_virtual: Option<f64> = None;
+        let mut recovery_events: Vec<(usize, String)> = Vec::new();
+        // Mutable copy: once an injected fault has fired and been
+        // recovered from, it is spent (one-shot fault model) — later
+        // steps run healthy.
+        let mut exec_params = cfg.exec_params.clone();
         let t_total = Instant::now();
 
         for step in 0..cfg.steps {
+            // Re-read each step: a supervised re-plan shrinks the pool.
+            let w = self.workers();
+            let meta = &self.runtime.meta;
+
             // ---- compute phase: per-worker loss/grad via PJRT.
             let tc = Instant::now();
             let params_lit = lit_f32(&params);
@@ -178,15 +204,55 @@ impl Trainer {
 
             // ---- communication phase: real allreduce over real bytes.
             let tm = Instant::now();
-            let (combined, vt) =
-                self.allreduce_grads_report(&worker_grads, &cfg.exec_params)?;
+            let (combined, vt, n_contrib) = match &cfg.policy {
+                None => {
+                    let (c, v) =
+                        self.allreduce_grads_report(&worker_grads, &exec_params)?;
+                    (c, v, w)
+                }
+                Some(policy) => {
+                    let (c, v, n, outcome) = self.supervised_allreduce_grads(
+                        &worker_grads,
+                        &exec_params,
+                        policy,
+                    )?;
+                    if outcome != RecoveryOutcome::Clean {
+                        if cfg.log_every > 0 {
+                            println!(
+                                "step {step:>4}  recovery: {} ({n} contributors)",
+                                outcome.name()
+                            );
+                        }
+                        recovery_events.push((step, outcome.name().to_string()));
+                    }
+                    match outcome {
+                        RecoveryOutcome::Repaired { .. }
+                        | RecoveryOutcome::Degraded { .. } => {
+                            // The injected deaths fired and were handled.
+                            exec_params.dead_ranks.clear();
+                            exec_params.abort_on_death = true;
+                        }
+                        RecoveryOutcome::Replanned { .. } => {
+                            // Survivors were renumbered: rank-keyed
+                            // injections no longer name anyone.
+                            exec_params.dead_ranks.clear();
+                            exec_params.abort_on_death = true;
+                            exec_params.slowdown.clear();
+                        }
+                        _ => {}
+                    }
+                    (c, v, n)
+                }
+            };
             comm_time += tm.elapsed();
             if let Some(vt) = vt {
                 *comm_virtual.get_or_insert(0.0) += vt;
             }
 
             // ---- update phase (identical on all workers; run once).
-            let scale = 1.0 / w as f32;
+            // Mean over the workers whose terms are actually in the sum —
+            // after a death that is the survivors (survivor-weighted).
+            let scale = 1.0 / n_contrib as f32;
             let mean_grad: Vec<f32> = combined.iter().map(|g| g * scale).collect();
             let out = self.apply.run(&[
                 lit_f32(&params),
@@ -213,7 +279,8 @@ impl Trainer {
             comm_virtual,
             total_time: t_total.elapsed(),
             algo: cfg.algo,
-            workers: w,
+            workers: self.workers(),
+            recovery_events,
         })
     }
 
@@ -274,6 +341,77 @@ impl Trainer {
         let out = collect_reduced_grads(&self.schedule, &report.outputs[0], w, p)?;
         Ok((out, report.virtual_time))
     }
+
+    /// Allreduce the workers' gradients under a failure policy
+    /// ([`Communicator::supervised_execute`]). Returns the summed
+    /// gradient, the virtual communication time, the number of workers
+    /// whose terms are in the sum (`< workers()` only after a death),
+    /// and how the step completed. A re-planned step adopts the
+    /// survivors' schedule, so the caller's next step runs on the
+    /// shrunken pool transparently.
+    pub fn supervised_allreduce_grads(
+        &mut self,
+        worker_grads: &[Vec<f32>],
+        exec_params: &ExecParams,
+        policy: &FailurePolicy,
+    ) -> crate::Result<(Vec<f32>, Option<f64>, usize, RecoveryOutcome)> {
+        let w = self.workers();
+        anyhow::ensure!(worker_grads.len() == w, "one gradient per worker");
+        let p = self.num_params();
+
+        // The seed closure is schedule-aware: after a re-plan the
+        // survivors are renumbered densely, so `rank` is the id inside
+        // `sch` and `orig` names whose gradient to seed.
+        let schedule = self.schedule.clone();
+        let seed = |sch: &Schedule, rank: usize, orig: usize| {
+            seed_grad_store(sch, rank, &worker_grads[orig])
+        };
+        let sup = self.comm.supervised_execute(&schedule, &seed, exec_params, policy)?;
+        if let Some(s2) = &sup.replanned_schedule {
+            self.schedule = s2.clone();
+        }
+        let vt = sup.report.virtual_time;
+        let (out, n_contrib) = match &sup.outcome {
+            RecoveryOutcome::Clean | RecoveryOutcome::Straggled { .. } => {
+                (collect_reduced_grads(&schedule, &sup.report.outputs[0], w, p)?, w)
+            }
+            RecoveryOutcome::Repaired { dead_ranks, .. } => {
+                // Original numbering; the corpse's store has holes, any
+                // survivor's is complete over the survivor set.
+                let live: Vec<usize> =
+                    (0..w).filter(|r| !dead_ranks.contains(r)).collect();
+                let out = collect_reduced_grads_of(
+                    &schedule,
+                    &sup.report.outputs[live[0]],
+                    &live,
+                    p,
+                )?;
+                let n = live.len();
+                (out, n)
+            }
+            RecoveryOutcome::Replanned { survivors, .. } => {
+                // New dense numbering; the re-executed run is a full
+                // reduction over the (renumbered) survivor set.
+                let out = collect_reduced_grads(
+                    &self.schedule,
+                    &sup.report.outputs[0],
+                    *survivors,
+                    p,
+                )?;
+                (out, *survivors)
+            }
+            RecoveryOutcome::Degraded { contributors, .. } => {
+                let out = collect_reduced_grads_of(
+                    &schedule,
+                    &sup.report.outputs[contributors[0]],
+                    contributors,
+                    p,
+                )?;
+                (out, contributors.len())
+            }
+        };
+        Ok((out, vt, n_contrib, sup.outcome))
+    }
 }
 
 /// Seed one worker's gradient vector into a [`BufferStore`] chunk by
@@ -298,13 +436,32 @@ pub fn seed_grad_store(schedule: &Schedule, rank: usize, grad: &[f32]) -> Buffer
 
 /// Reassemble the fully-reduced gradient (length `num_params`) from a
 /// rank's output store, chunk ranges from the schedule's
-/// [`crate::sched::MsgSpec`].
+/// [`crate::sched::MsgSpec`]. Full-set special case of
+/// [`collect_reduced_grads_of`].
 pub fn collect_reduced_grads(
     schedule: &Schedule,
     output: &BufferStore,
     num_workers: usize,
     num_params: usize,
 ) -> crate::Result<Vec<f32>> {
+    let all: Vec<usize> = (0..num_workers).collect();
+    collect_reduced_grads_of(schedule, output, &all, num_params)
+}
+
+/// Reassemble a reduced gradient whose sums carry exactly
+/// `contributors`' terms — after a repaired or degraded step the dead
+/// workers' contributions are (verifiably) absent, and a store holding
+/// only such partial sums will fail a full-set
+/// [`collect_reduced_grads`] loudly rather than return them as if
+/// complete.
+pub fn collect_reduced_grads_of(
+    schedule: &Schedule,
+    output: &BufferStore,
+    contributors: &[usize],
+    num_params: usize,
+) -> crate::Result<Vec<f32>> {
+    let want = ContribSet::from_iter(contributors.iter().copied());
+    anyhow::ensure!(!want.is_empty(), "no contributors");
     let spec = schedule.msg;
     let mut out = vec![0.0f32; num_params];
     for raw in 0..spec.num_chunks() {
@@ -313,8 +470,8 @@ pub fn collect_reduced_grads(
             continue; // empty tail chunk (more chunks than elements)
         }
         let sum = output
-            .reduced_value(Chunk(raw), num_workers)
-            .ok_or_else(|| anyhow::anyhow!("chunk {raw} not fully reduced"))?;
+            .assemble(Chunk(raw), &want)
+            .map_err(|e| anyhow::anyhow!("chunk {raw} not reduced over {want}: {e}"))?;
         anyhow::ensure!(
             sum.len() == (hi - lo) as usize,
             "chunk {raw}: reduced {} elements, expected {}",
@@ -454,7 +611,7 @@ mod tests {
             log_every: 0,
             ..Default::default()
         };
-        let t = Trainer::new(dir, &cfg).unwrap();
+        let mut t = Trainer::new(dir, &cfg).unwrap();
         let rep = t.run(&cfg).unwrap();
         assert_eq!(rep.losses.len(), 20);
         let first = rep.losses[0];

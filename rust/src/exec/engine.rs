@@ -34,8 +34,8 @@
 //!   synchronize — and the final makespan is reported as
 //!   [`ExecReport::virtual_time`].
 //! * **Injected faults and stragglers** — [`ExecParams::slowdown`]
-//!   multiplies a rank's virtual-clock costs; [`ExecParams::dead_rank`]
-//!   kills a rank at the start of a round. With
+//!   multiplies a rank's virtual-clock costs; [`ExecParams::dead_ranks`]
+//!   kills ranks at the start of their rounds. With
 //!   [`ExecParams::abort_on_death`] the death aborts the run through the
 //!   normal failure path (clean error, reusable pool — the production
 //!   behavior a trainer re-plans from); without it the dead rank's
@@ -175,6 +175,11 @@ struct Job {
     record: bool,
     /// Per-rank delivery records (populated only when `record`).
     deliveries: Vec<Mutex<Vec<ExecDelivery>>>,
+    /// Round window `[lo, hi)` of the plan to execute. A full run uses
+    /// `0..plan.num_rounds`; [`ExecEngine::execute_range`] replays any
+    /// subrange (the repair path resumes a plan from its cut round).
+    lo: usize,
+    hi: usize,
 }
 
 struct JobCell {
@@ -196,6 +201,10 @@ struct Shared {
     boards: RwLock<Vec<Mutex<Vec<(Chunk, ContribSet, Arc<Vec<f32>>)>>>>,
     abort: AtomicBool,
     failure: Mutex<Option<String>>,
+    /// Structured mirror of an abort-mode death failure: the sorted dead
+    /// rank ids and the earliest round that fired. A supervisor reads
+    /// this instead of parsing the error string; cleared per run.
+    dead_info: Mutex<Option<(Vec<u32>, u32)>>,
     /// Virtual clocks published at end-of-round (read at round start)…
     vt_round: Vec<AtomicU64>,
     /// …and at end-of-phase-1 (read after the mid barrier). Two arrays so
@@ -247,6 +256,7 @@ impl ExecEngine {
             boards: RwLock::new(Vec::new()),
             abort: AtomicBool::new(false),
             failure: Mutex::new(None),
+            dead_info: Mutex::new(None),
             vt_round: (0..num_ranks).map(|_| AtomicU64::new(0)).collect(),
             vt_mid: (0..num_ranks).map(|_| AtomicU64::new(0)).collect(),
             job: Mutex::new(JobCell { gen: 0, job: None, shutdown: false }),
@@ -284,8 +294,42 @@ impl ExecEngine {
         inputs: Vec<BufferStore>,
         params: &ExecParams,
     ) -> crate::Result<ExecReport> {
+        let hi = plan.num_rounds;
+        self.execute_range(plan, inputs, params, 0..hi)
+    }
+
+    /// Run only the rounds `[rounds.start, rounds.end)` of a compiled
+    /// plan. The inputs must already hold whatever state the skipped
+    /// prefix would have produced (the repair path seeds them from a
+    /// prior partial run, or replays the prefix first); a full-range call
+    /// is exactly [`ExecEngine::execute`]. Death rounds keep their
+    /// absolute plan-round meaning, so a rank killed inside the skipped
+    /// prefix stays dead for the whole resumed window.
+    pub fn execute_range(
+        &mut self,
+        plan: &Arc<ExecPlan>,
+        inputs: Vec<BufferStore>,
+        params: &ExecParams,
+        rounds: std::ops::Range<usize>,
+    ) -> crate::Result<ExecReport> {
+        anyhow::ensure!(
+            rounds.start <= rounds.end && rounds.end <= plan.num_rounds,
+            "round range {}..{} outside plan with {} rounds",
+            rounds.start,
+            rounds.end,
+            plan.num_rounds
+        );
         self.prepare(plan)?;
-        self.launch(plan, inputs, params)
+        self.launch(plan, inputs, params, rounds)
+    }
+
+    /// Take the structured death record of the most recent abort-mode
+    /// failure: `(sorted dead rank ids, earliest death round)`. Consuming
+    /// (`take`) so a stale record can never be attributed to a later,
+    /// unrelated failure. `None` when the last run succeeded or failed
+    /// for a reason other than injected death.
+    pub fn take_abort_deaths(&mut self) -> Option<(Vec<u32>, u32)> {
+        self.shared.dead_info.lock().expect("dead info").take()
     }
 
     /// Reset the reusable run state (queues, boards, flags, clocks) for
@@ -303,6 +347,7 @@ impl ExecEngine {
         );
         self.shared.abort.store(false, Ordering::SeqCst);
         *self.shared.failure.lock().expect("failure slot") = None;
+        *self.shared.dead_info.lock().expect("dead info") = None;
         for q in &self.shared.queues {
             q.clear();
         }
@@ -331,6 +376,7 @@ impl ExecEngine {
         plan: &Arc<ExecPlan>,
         inputs: Vec<BufferStore>,
         params: &ExecParams,
+        rounds: std::ops::Range<usize>,
     ) -> crate::Result<ExecReport> {
         let n = self.shared.num_ranks;
         anyhow::ensure!(inputs.len() == n, "need one input store per rank");
@@ -345,6 +391,8 @@ impl ExecEngine {
             } else {
                 Vec::new()
             },
+            lo: rounds.start,
+            hi: rounds.end,
         });
 
         let t0 = Instant::now();
@@ -394,13 +442,12 @@ impl ExecEngine {
             }
             deliveries.sort_unstable();
         }
-        // Reported only when the injected death actually bit a round of
-        // this plan (the abort path errors out above instead).
-        let dead_rank = params
-            .dead_rank
-            .filter(|&(_, rd)| (rd as usize) < plan.num_rounds)
-            .map(|(dr, _)| dr);
-        Ok(ExecReport { outputs, wall, virtual_time, deliveries, dead_rank })
+        // Reported only for deaths that actually bit an executed round
+        // (the abort path errors out above instead); sorted and
+        // deduplicated so the supervisor can repair all of them in one
+        // deterministic pass.
+        let dead_ranks = params.deaths_in_plan(job.hi);
+        Ok(ExecReport { outputs, wall, virtual_time, deliveries, dead_ranks })
     }
 }
 
@@ -492,19 +539,46 @@ fn run_rounds(
         }
     };
 
-    for ri in 0..plan.num_rounds {
+    for ri in job.lo..job.hi {
         sh.barrier.wait(); // round start: all stores stable
         if sh.abort.load(Ordering::SeqCst) {
             sh.barrier.wait(); // keep the barrier schedule in lockstep
             continue;
         }
-        if let Some((dr, dround)) = params.dead_rank {
-            // Abort mode: every rank reaches the death round together
-            // (the round-start barrier just passed) and posts the same
-            // message — first one wins, the rest keep the barrier
-            // schedule through the abort path. The pool stays reusable.
-            if params.abort_on_death && ri as u32 >= dround {
-                sh.fail(format!("rank {dr} died at round {dround}"));
+        if params.abort_on_death {
+            // Abort mode: every rank reaches the earliest death round
+            // together (the round-start barrier just passed) and posts
+            // the same message — first one wins, the rest keep the
+            // barrier schedule through the abort path. The pool stays
+            // reusable. All deaths that fired by this round are named,
+            // sorted, so the supervisor can repair them in one pass.
+            if params.first_death_round().is_some_and(|rd| ri as u32 >= rd) {
+                let mut dead: Vec<(u32, u32)> = params
+                    .dead_ranks
+                    .iter()
+                    .filter(|&&(_, rd)| rd <= ri as u32)
+                    .copied()
+                    .collect();
+                dead.sort_unstable();
+                dead.dedup_by_key(|&mut (dr, _)| dr);
+                let dround = dead.iter().map(|&(_, rd)| rd).min().expect("nonempty");
+                // Record the structured form first (first round wins —
+                // every rank computes the same set at the same barrier).
+                if let Ok(mut di) = sh.dead_info.lock() {
+                    if di.is_none() {
+                        *di = Some((
+                            dead.iter().map(|&(dr, _)| dr).collect(),
+                            dround,
+                        ));
+                    }
+                }
+                if let [(dr, _)] = dead[..] {
+                    sh.fail(format!("rank {dr} died at round {dround}"));
+                } else {
+                    let names: Vec<String> =
+                        dead.iter().map(|&(dr, _)| format!("rank {dr}")).collect();
+                    sh.fail(format!("{} died by round {dround}", names.join(", ")));
+                }
                 sh.barrier.wait();
                 continue;
             }
@@ -752,7 +826,7 @@ mod tests {
         });
         let t = Instant::now();
         let err = engine
-            .launch(&plan, initial_inputs(&s, pat), &ExecParams::zero())
+            .launch(&plan, initial_inputs(&s, pat), &ExecParams::zero(), 0..plan.num_rounds)
             .unwrap_err();
         assert!(err.to_string().contains("stale"), "{err}");
         assert!(t.elapsed() < Duration::from_secs(2), "must not stall");
@@ -883,7 +957,39 @@ mod tests {
                 assert_eq!(*rep.outputs[r].value(ch).unwrap(), pat(src, ch), "rank {r}");
             }
         }
-        assert!(rep.dead_rank.is_none());
+        assert!(rep.dead_ranks.is_empty());
+    }
+
+    #[test]
+    fn multiple_deaths_abort_with_all_ranks_named() {
+        // Two ranks dying at the same round must both appear in the
+        // abort error, sorted, so a supervisor can repair them in one
+        // pass instead of discovering them one failed retry at a time.
+        let cl = switched(2, 2, 1);
+        let pl = Placement::block(&cl);
+        let s = allgather::ring(&pl);
+        let plan = Arc::new(ExecPlan::compile(&pl, &s).unwrap());
+        let mut engine = ExecEngine::new(4);
+        let params = ExecParams::zero()
+            .with_dead_rank(3, 1)
+            .with_dead_rank(1, 1)
+            .with_abort_on_death();
+        let err = engine
+            .execute(&plan, initial_inputs(&s, pat), &params)
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("rank 1, rank 3 died by round 1"),
+            "{err}"
+        );
+        // A later-round death is not blamed for an abort it never saw.
+        let staggered = ExecParams::zero()
+            .with_dead_rank(2, 0)
+            .with_dead_rank(0, 99)
+            .with_abort_on_death();
+        let err = engine
+            .execute(&plan, initial_inputs(&s, pat), &staggered)
+            .unwrap_err();
+        assert!(err.to_string().contains("rank 2 died at round 0"), "{err}");
     }
 
     #[test]
@@ -898,7 +1004,7 @@ mod tests {
         let mut engine = ExecEngine::new(4);
         let params = ExecParams::zero().with_dead_rank(3, 0);
         let rep = engine.execute(&plan, initial_inputs(&s, pat), &params).unwrap();
-        assert_eq!(rep.dead_rank, Some(3));
+        assert_eq!(rep.dead_ranks, vec![3]);
         let want = pat(0, Chunk(0));
         for r in 0..3 {
             assert_eq!(*rep.outputs[r].value(Chunk(0)).unwrap(), want, "rank {r}");
@@ -907,8 +1013,15 @@ mod tests {
         // A death round past the plan has no effect and is not reported.
         let late = ExecParams::zero().with_dead_rank(1, 99);
         let rep = engine.execute(&plan, initial_inputs(&s, pat), &late).unwrap();
-        assert!(rep.dead_rank.is_none());
+        assert!(rep.dead_ranks.is_empty());
         assert_eq!(*rep.outputs[1].value(Chunk(0)).unwrap(), want);
+        // Two suppressed deaths: both corpses stay empty, both reported.
+        let multi = ExecParams::zero().with_dead_rank(3, 0).with_dead_rank(2, 0);
+        let rep = engine.execute(&plan, initial_inputs(&s, pat), &multi).unwrap();
+        assert_eq!(rep.dead_ranks, vec![2, 3]);
+        assert_eq!(*rep.outputs[1].value(Chunk(0)).unwrap(), want);
+        assert!(rep.outputs[2].value(Chunk(0)).is_none());
+        assert!(rep.outputs[3].value(Chunk(0)).is_none());
     }
 
     #[test]
@@ -951,6 +1064,75 @@ mod tests {
         let want =
             3.0 * o_send.as_secs_f64() + lat.as_secs_f64() + o_recv.as_secs_f64();
         assert!((vt - want).abs() < 1e-12, "{vt} vs {want}");
+    }
+
+    #[test]
+    fn prefix_then_resume_equals_full_run() {
+        // The repair path's resumption contract: running rounds [0, cut)
+        // and then feeding the partial outputs back in for [cut, end)
+        // must reproduce the single full run bit-for-bit.
+        let cl = switched(2, 2, 1);
+        let pl = Placement::block(&cl);
+        let s = allgather::ring(&pl);
+        let plan = Arc::new(ExecPlan::compile(&pl, &s).unwrap());
+        let mut engine = ExecEngine::new(4);
+        let full = engine
+            .execute(&plan, initial_inputs(&s, pat), &ExecParams::zero())
+            .unwrap();
+        for cut in 0..=plan.num_rounds {
+            let head = engine
+                .execute_range(&plan, initial_inputs(&s, pat), &ExecParams::zero(), 0..cut)
+                .unwrap();
+            let resumed = engine
+                .execute_range(
+                    &plan,
+                    head.outputs,
+                    &ExecParams::zero(),
+                    cut..plan.num_rounds,
+                )
+                .unwrap();
+            for r in 0..4 {
+                for src in 0..4usize {
+                    let ch = Chunk(src as u32);
+                    assert_eq!(
+                        resumed.outputs[r].value(ch).map(|v| v.clone()),
+                        full.outputs[r].value(ch).map(|v| v.clone()),
+                        "cut {cut} rank {r} chunk {src}"
+                    );
+                }
+            }
+        }
+        let bad = engine.execute_range(
+            &plan,
+            initial_inputs(&s, pat),
+            &ExecParams::zero(),
+            0..plan.num_rounds + 1,
+        );
+        assert!(bad.is_err(), "out-of-range window must be rejected");
+    }
+
+    #[test]
+    fn abort_death_leaves_structured_record() {
+        // The supervisor classifies failures from the structured record,
+        // not the error string; the record is consumed on read and never
+        // survives into an unrelated later run.
+        let cl = switched(2, 2, 1);
+        let pl = Placement::block(&cl);
+        let s = allgather::ring(&pl);
+        let plan = Arc::new(ExecPlan::compile(&pl, &s).unwrap());
+        let mut engine = ExecEngine::new(4);
+        let params = ExecParams::zero()
+            .with_dead_rank(3, 1)
+            .with_dead_rank(1, 1)
+            .with_abort_on_death();
+        assert!(engine.execute(&plan, initial_inputs(&s, pat), &params).is_err());
+        assert_eq!(engine.take_abort_deaths(), Some((vec![1, 3], 1)));
+        assert_eq!(engine.take_abort_deaths(), None, "record is consumed");
+        // A healthy run leaves no record.
+        engine
+            .execute(&plan, initial_inputs(&s, pat), &ExecParams::zero())
+            .unwrap();
+        assert_eq!(engine.take_abort_deaths(), None);
     }
 
     #[test]

@@ -78,11 +78,12 @@ pub struct ExecReport {
     /// Per-chunk delivery records, sorted by (round, src, dst, chunk);
     /// empty unless requested.
     pub deliveries: Vec<ExecDelivery>,
-    /// The injected [`ExecParams::dead_rank`], reported when its death
-    /// round fell inside this plan (suppression mode — the abort path
-    /// returns an error instead). The coordinator uses this to trigger
-    /// online re-planning.
-    pub dead_rank: Option<u32>,
+    /// Every injected [`ExecParams::dead_ranks`] entry whose death round
+    /// fell inside this plan (suppression mode — the abort path returns
+    /// an error instead), sorted and deduplicated. Empty = no observed
+    /// deaths. The coordinator uses this to trigger repair or online
+    /// re-planning in one pass over all corpses.
+    pub dead_ranks: Vec<u32>,
 }
 
 /// Run `schedule` over real data with a one-shot engine. `inputs[r]`

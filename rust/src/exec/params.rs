@@ -44,9 +44,11 @@ pub struct ExecParams {
     /// cost that rank's clock pays is multiplied by the composed factor;
     /// wall mode ignores stragglers (spin-waits are already real time).
     pub slowdown: Vec<(u32, f64)>,
-    /// Injected fault: `(rank, round)` — the rank dies at the start of
-    /// that round, mirroring [`crate::sim::SimParams::dead_rank`].
-    pub dead_rank: Option<(u32, u32)>,
+    /// Injected faults: `(rank, round)` pairs — each rank dies at the
+    /// start of its round, mirroring
+    /// [`crate::sim::SimParams::dead_ranks`]. Empty = healthy. Multiple
+    /// entries for one rank keep the earliest round (death is sticky).
+    pub dead_ranks: Vec<(u32, u32)>,
     /// What a dead rank does to the run: `true` aborts the whole
     /// execution with a clean error at the death round (the default
     /// production behavior — a trainer catches it and re-plans); `false`
@@ -68,7 +70,7 @@ impl ExecParams {
             virtual_time: false,
             record_deliveries: false,
             slowdown: Vec::new(),
-            dead_rank: None,
+            dead_ranks: Vec::new(),
             abort_on_death: true,
         }
     }
@@ -87,7 +89,7 @@ impl ExecParams {
             virtual_time: false,
             record_deliveries: false,
             slowdown: Vec::new(),
-            dead_rank: None,
+            dead_ranks: Vec::new(),
             abort_on_death: true,
         }
     }
@@ -113,9 +115,10 @@ impl ExecParams {
 
     /// Builder-style: kill `rank` at the start of `round`. Suppression
     /// mode (for exec-vs-sim differential runs) — the run completes on
-    /// the surviving traffic and reports the dead rank.
+    /// the surviving traffic and reports every dead rank. Chain calls to
+    /// inject multiple deaths.
     pub fn with_dead_rank(mut self, rank: u32, round: u32) -> Self {
-        self.dead_rank = Some((rank, round));
+        self.dead_ranks.push((rank, round));
         self.abort_on_death = false;
         self
     }
@@ -140,13 +143,33 @@ impl ExecParams {
         f
     }
 
-    /// Is `rank` dead during `round` under the injected fault?
+    /// Is `rank` dead during `round` under the injected faults?
     #[inline]
     pub(crate) fn killed(&self, rank: u32, round: u32) -> bool {
-        match self.dead_rank {
-            Some((r, rd)) => rank == r && round >= rd,
-            None => false,
-        }
+        self.dead_ranks
+            .iter()
+            .any(|&(r, rd)| rank == r && round >= rd)
+    }
+
+    /// Earliest round at which any injected death fires, if any.
+    #[inline]
+    pub(crate) fn first_death_round(&self) -> Option<u32> {
+        self.dead_ranks.iter().map(|&(_, rd)| rd).min()
+    }
+
+    /// All injected dead ranks whose death round falls inside a plan of
+    /// `num_rounds` rounds — i.e. the deaths the run actually observed —
+    /// deduplicated and sorted for deterministic reporting.
+    pub(crate) fn deaths_in_plan(&self, num_rounds: usize) -> Vec<u32> {
+        let mut dead: Vec<u32> = self
+            .dead_ranks
+            .iter()
+            .filter(|&&(_, rd)| (rd as usize) < num_rounds)
+            .map(|&(r, _)| r)
+            .collect();
+        dead.sort_unstable();
+        dead.dedup();
+        dead
     }
 
     // ---- wall mode: spin-waits -----------------------------------------
@@ -267,8 +290,10 @@ mod tests {
         assert!(p.virtual_time && p.record_deliveries);
         let p = p.with_slowdown(2, 4.0).with_dead_rank(1, 3);
         assert_eq!(p.slowdown, vec![(2, 4.0)]);
-        assert_eq!(p.dead_rank, Some((1, 3)));
+        assert_eq!(p.dead_ranks, vec![(1, 3)]);
         assert!(!p.abort_on_death, "with_dead_rank defaults to suppression");
+        let p = p.with_dead_rank(4, 0);
+        assert_eq!(p.dead_ranks, vec![(1, 3), (4, 0)]);
         assert!(p.with_abort_on_death().abort_on_death);
     }
 
@@ -281,5 +306,21 @@ mod tests {
         assert!(!p.killed(2, 0));
         assert!(p.killed(2, 1) && p.killed(2, 9));
         assert!(!p.killed(0, 9));
+    }
+
+    #[test]
+    fn multi_death_helpers() {
+        let p = ExecParams::zero()
+            .with_dead_rank(5, 2)
+            .with_dead_rank(1, 4)
+            .with_dead_rank(5, 7); // duplicate rank, later round
+        assert!(p.killed(5, 2) && p.killed(1, 4));
+        assert!(!p.killed(1, 3));
+        assert_eq!(p.first_death_round(), Some(2));
+        // Reporting is sorted, deduplicated, and plan-bounded.
+        assert_eq!(p.deaths_in_plan(8), vec![1, 5]);
+        assert_eq!(p.deaths_in_plan(3), vec![5]);
+        assert_eq!(p.deaths_in_plan(1), Vec::<u32>::new());
+        assert_eq!(ExecParams::zero().first_death_round(), None);
     }
 }

@@ -37,7 +37,7 @@ pub fn run(quick: bool, artifact_dir: &str) -> crate::Result<Summary> {
             log_every: if quick { 0 } else { 20 },
             ..Default::default()
         };
-        let trainer = Trainer::new(artifact_dir, &cfg)?;
+        let mut trainer = Trainer::new(artifact_dir, &cfg)?;
         let rep = trainer.run(&cfg)?;
         table.row(vec![
             algo.name().to_string(),

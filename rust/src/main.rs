@@ -1,10 +1,12 @@
 //! `mcomm` CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   experiment <e1..e8,e10..e12|ablations|all> [--quick]  reproduce a paper claim
+//!   experiment <e1..e8,e10..e13|ablations|all> [--quick]  reproduce a paper claim
 //!   train [--steps N] [--algo A] [--virtual] [...]  end-to-end data-parallel
 //!                                            run (--virtual: deterministic
-//!                                            virtual-time comm accounting)
+//!                                            virtual-time comm accounting;
+//!                                            --inject: fault injection under
+//!                                            the supervised failure policy)
 //!   simulate --op OP --algo A [...]          one collective, sim-timed
 //!   calibrate [--wall] [--out PATH] [...]    measure the machine, fit the
 //!                                            model, write MachineProfile.json
@@ -18,8 +20,8 @@ use std::collections::HashMap;
 
 use mcomm::collectives::TargetHeuristic;
 use mcomm::coordinator::{
-    AllreduceAlgo, AlltoallAlgo, BroadcastAlgo, Communicator, GatherAlgo, Trainer,
-    TrainerCfg,
+    AllreduceAlgo, AlltoallAlgo, BroadcastAlgo, Communicator, FailurePolicy, GatherAlgo,
+    Trainer, TrainerCfg,
 };
 use mcomm::exec::ExecParams;
 use mcomm::sim::SimParams;
@@ -88,16 +90,21 @@ fn dispatch(args: &[String]) -> mcomm::Result<()> {
                 "mcomm — communication modeling for multi-core clusters\n\
                  \n\
                  usage:\n\
-                 \x20 mcomm experiment <e1..e8,e10..e12|ablations|all> [--quick]\n\
+                 \x20 mcomm experiment <e1..e8,e10..e13|ablations|all> [--quick]\n\
                  \x20 mcomm train [--steps N] [--algo auto|ring|hier|recdoub|raben]\n\
                  \x20        [--machines M --cores C --nics K] [--lan] [--virtual]\n\
-                 \x20        [--lr F] [--bytes B]\n\
+                 \x20        [--lr F] [--bytes B] [--inject SPEC]\n\
                  \x20        --algo raben = rabenseifner allreduce (pow2 ranks);\n\
                  \x20        --virtual   = deterministic virtual-time comm\n\
                  \x20                      accounting (bit-reproducible times);\n\
                  \x20        --bytes     = payload size the autotuner assumes\n\
                  \x20                      for --algo auto (default: the real\n\
                  \x20                      gradient size, 4 x num_params)\n\
+                 \x20        --inject    = comma-separated faults, handled by\n\
+                 \x20                      the supervised failure policy:\n\
+                 \x20                      death:R@D = rank R dies at round D;\n\
+                 \x20                      slow:R*F  = rank R's virtual clock\n\
+                 \x20                      runs F times slower\n\
                  \x20 mcomm simulate --op bcast|gather|alltoall|allreduce\n\
                  \x20        [--algo NAME] [--machines M --cores C --nics K] [--bytes B]\n\
                  \x20        --bytes = total payload of the collective; sizes\n\
@@ -130,6 +137,40 @@ fn parse_allreduce(name: &str) -> mcomm::Result<AllreduceAlgo> {
     })
 }
 
+/// Parse `--inject` fault specs into executor injections: comma-separated
+/// `death:R@D` (rank R dies at the start of round D) and `slow:R*F`
+/// (rank R's virtual clock runs F times slower; needs `--virtual`).
+fn parse_inject(spec: &str, params: &mut ExecParams) -> mcomm::Result<()> {
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        if let Some(rest) = part.strip_prefix("death:") {
+            let (r, d) = rest
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("bad fault {part:?}, want death:R@D"))?;
+            let rank: u32 = r.trim().parse().map_err(|_| {
+                anyhow::anyhow!("bad rank in {part:?}, want death:R@D")
+            })?;
+            let round: u32 = d.trim().parse().map_err(|_| {
+                anyhow::anyhow!("bad round in {part:?}, want death:R@D")
+            })?;
+            *params = params.clone().with_dead_rank(rank, round);
+        } else if let Some(rest) = part.strip_prefix("slow:") {
+            let (r, f) = rest
+                .split_once('*')
+                .ok_or_else(|| anyhow::anyhow!("bad fault {part:?}, want slow:R*F"))?;
+            let rank: u32 = r.trim().parse().map_err(|_| {
+                anyhow::anyhow!("bad rank in {part:?}, want slow:R*F")
+            })?;
+            let factor: f64 = f.trim().parse().map_err(|_| {
+                anyhow::anyhow!("bad factor in {part:?}, want slow:R*F")
+            })?;
+            *params = params.clone().with_slowdown(rank, factor);
+        } else {
+            anyhow::bail!("unknown fault {part:?} (want death:R@D or slow:R*F)");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
     // --virtual: deterministic virtual-time communication accounting
     // (reproducible comm numbers regardless of host load).
@@ -140,6 +181,16 @@ fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
     };
     if flags.contains_key("virtual") {
         exec_params = exec_params.with_virtual_time();
+    }
+    // --inject death:R@D,slow:R*F — faults for the supervised policy to
+    // survive. Deaths run in abort mode (the production path: the error
+    // carries a structured record the supervisor recovers from).
+    let inject = flags.get("inject").copied();
+    if let Some(spec) = inject {
+        parse_inject(spec, &mut exec_params)?;
+        if !exec_params.dead_ranks.is_empty() {
+            exec_params = exec_params.with_abort_on_death();
+        }
     }
     let cfg = TrainerCfg {
         machines: flag_usize(flags, "machines", 2),
@@ -154,8 +205,9 @@ fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
         // --bytes: what payload the autotuner sizes `auto` decisions for
         // (default inside Trainer::new: the real 4 * num_params).
         tune_bytes: flags.get("bytes").and_then(|v| v.parse().ok()),
+        policy: inject.map(|_| FailurePolicy::default()),
     };
-    let trainer = Trainer::new(&artifact_dir(flags), &cfg)?;
+    let mut trainer = Trainer::new(&artifact_dir(flags), &cfg)?;
     println!(
         "training byte-LM ({} params) on {} workers, allreduce={}",
         trainer.num_params(),
@@ -173,6 +225,9 @@ fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
     );
     if let Some(vt) = rep.comm_virtual {
         println!("virtual comm time (deterministic): {}", ftime(vt));
+    }
+    for (step, how) in &rep.recovery_events {
+        println!("recovery at step {step}: {how} ({} workers remain)", rep.workers);
     }
     let es = trainer.exec_stats();
     println!(
@@ -365,7 +420,7 @@ fn cmd_validate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
     }
     // One end-to-end step.
     let cfg = TrainerCfg { steps: 2, log_every: 0, ..Default::default() };
-    let trainer = Trainer::new(&dir, &cfg)?;
+    let mut trainer = Trainer::new(&dir, &cfg)?;
     let rep = trainer.run(&cfg)?;
     println!(
         "2-step smoke: loss {:.4} -> {:.4} OK",

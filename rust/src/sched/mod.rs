@@ -20,10 +20,12 @@
 
 pub mod contrib;
 pub mod lowered;
+pub mod repair;
 pub mod symexec;
 
 pub use contrib::ContribSet;
 pub use lowered::{LoweredSchedule, TopoCtx};
+pub use repair::{repair_schedule, RepairPlan};
 
 
 use crate::topology::Placement;

@@ -1,0 +1,456 @@
+//! Schedule repair: turn a mid-collective rank death into a completed,
+//! correct collective on the survivors.
+//!
+//! Given the original schedule, the set of ranks that died and the round
+//! `cut` at which the earliest death fired, [`repair_schedule`] keeps the
+//! rounds `[0, cut)` verbatim (they completed healthy — the executor's
+//! abort fires at the *start* of the cut round), replays them through
+//! [`super::symexec`] to recover every survivor's exact symbolic
+//! holdings, and then synthesizes **patch rounds** that re-route the
+//! lost pieces through surviving ranks:
+//!
+//! * The repair target is the op's postcondition on the survivors: a
+//!   reduction's wanted set is **restricted to survivor contributions**
+//!   (a partial sum containing a dead rank's term can never be
+//!   disentangled), a data op keeps its original wanted bytes — data
+//!   that escaped the corpse before the cut is still the right data.
+//!   Requirements *at* a dead rank are dropped and counted in
+//!   [`RepairPlan::dropped_requirements`]; data a dead root never let
+//!   escape makes repair infeasible (the supervisor falls back to
+//!   re-planning).
+//! * Tainted reduction buffers are automatically unusable: the assembly
+//!   greedy only combines buffers that are subsets of the
+//!   survivor-restricted target, so partial sums containing a dead term
+//!   are excluded without any explicit bookkeeping.
+//! * Donor selection prefers a machine-mate of the needy rank (one
+//!   shared-memory [`super::Xfer::local_write`], fanned out to every
+//!   co-located rank missing the same piece) and falls back to the
+//!   lowest-ranked external donor — mirroring the Multicore model's
+//!   price asymmetry. Each rank sources or sinks at most one transfer
+//!   per patch round; the patch is then priced under
+//!   [`crate::model::Multicore`] (legalized first) and reported as
+//!   [`RepairPlan::patch_cost`].
+//!
+//! The spliced schedule (`prefix + patch`, algo tagged `"…+repair"`)
+//! re-validates through a full [`super::symexec::run`] plus an explicit
+//! per-target assembly check before it is returned, so a synthesis bug
+//! can only ever surface as an error — never as wrong data. Executed in
+//! suppression mode (deaths kept at round `cut`), its survivor outputs
+//! are bit-identical to a from-scratch run on the survivor topology:
+//! both compute the identical survivor-restricted contribution sets.
+
+use crate::model::{legalize, CostModel, Multicore};
+use crate::topology::{Cluster, Placement};
+use crate::Rank;
+
+use super::symexec::{self, Holdings};
+use super::{Chunk, CollectiveOp, ContribSet, Payload, Round, Schedule, Xfer};
+
+/// A validated, priced repair: the original prefix spliced with the
+/// synthesized patch rounds.
+#[derive(Debug, Clone)]
+pub struct RepairPlan {
+    /// `rounds[0, cut)` of the original schedule followed by the patch;
+    /// `algo` is tagged `"<orig>+repair"`. Same rank count as the
+    /// original — dead ranks are simply never referenced after the cut.
+    pub spliced: Schedule,
+    /// Round the earliest death fired at (prefix length).
+    pub cut: usize,
+    /// Synthesized rounds appended after the prefix.
+    pub patch_rounds: usize,
+    /// The dead ranks, sorted and deduplicated.
+    pub dead: Vec<Rank>,
+    /// Postcondition requirements abandoned because their destination
+    /// rank died (per raw chunk) — counted so the loss is explicit.
+    pub dropped_requirements: usize,
+    /// Multicore-model cost of the patch rounds alone (legalized).
+    pub patch_cost: f64,
+}
+
+/// Greedy assembly cover mirroring [`Holdings`]' internal rule exactly:
+/// scan buffers in order, take each that fits inside `want` and is
+/// disjoint from what is already accumulated. The returned set is always
+/// assemblable by the sender (the same scan re-picks the same buffers).
+fn greedy_cover(h: &Holdings, c: Chunk, want: &ContribSet) -> ContribSet {
+    let mut acc = ContribSet::new();
+    for b in h.buffers(c) {
+        if b.is_subset(want) && !acc.intersects(b) {
+            acc.union_with(b);
+        }
+    }
+    acc
+}
+
+/// Set difference `a \ b`.
+fn minus(a: &ContribSet, b: &ContribSet) -> ContribSet {
+    ContribSet::from_iter(a.iter().filter(|&r| !b.contains(r)))
+}
+
+/// The op's postcondition on the survivors: one `(rank, raw chunk,
+/// wanted contribution set)` triple per surviving requirement, plus the
+/// count of requirements dropped because their *destination* died (a
+/// corpse is owed nothing). Mirrors [`symexec::check_final`]'s per-op
+/// targets, with one asymmetry:
+///
+/// * **Reductions** restrict the wanted set to survivor contributions —
+///   a partial sum is indivisible, so a buffer containing a dead rank's
+///   term can never be disentangled, and the survivor-only sum is
+///   exactly what a from-scratch run on the survivor topology computes.
+/// * **Data ops** keep the original wanted set even when the origin
+///   died: bytes that escaped the corpse before the cut are still the
+///   right bytes (a broadcast root's death after round 0 is the
+///   canonical repairable case). If the data never escaped, synthesis
+///   finds no donor and fails loudly instead of dropping the target.
+fn survivor_targets(
+    schedule: &Schedule,
+    dead: &ContribSet,
+) -> (Vec<(Rank, Chunk, ContribSet)>, usize) {
+    let p = schedule.num_ranks;
+    let segs = schedule.msg.segments.max(1);
+    let reduction = schedule.op.is_reduction();
+    let full = ContribSet::full(p);
+    let mut out: Vec<(Rank, Chunk, ContribSet)> = Vec::new();
+    let mut dropped = 0usize;
+    let mut require = |r: Rank, base: u32, want: &ContribSet| {
+        if dead.contains(r) {
+            dropped += segs as usize; // a corpse is owed nothing
+            return;
+        }
+        let want_s = if reduction { minus(want, dead) } else { want.clone() };
+        if want_s.is_empty() {
+            dropped += segs as usize;
+            return;
+        }
+        for k in 0..segs {
+            out.push((r, Chunk(base * segs + k), want_s.clone()));
+        }
+    };
+    match schedule.op {
+        CollectiveOp::Broadcast { root } => {
+            let want = ContribSet::singleton(root);
+            for r in 0..p {
+                require(r, 0, &want);
+            }
+        }
+        CollectiveOp::Gather { root } => {
+            for s in 0..p {
+                require(root, s as u32, &ContribSet::singleton(s));
+            }
+        }
+        CollectiveOp::Scatter { root } => {
+            let want = ContribSet::singleton(root);
+            for r in 0..p {
+                require(r, r as u32, &want);
+            }
+        }
+        CollectiveOp::Allgather => {
+            for r in 0..p {
+                for s in 0..p {
+                    require(r, s as u32, &ContribSet::singleton(s));
+                }
+            }
+        }
+        CollectiveOp::AllToAll => {
+            for d in 0..p {
+                for s in 0..p {
+                    require(d, s as u32 * p as u32 + d as u32, &ContribSet::singleton(s));
+                }
+            }
+        }
+        CollectiveOp::Reduce { root, chunks } => {
+            for c in 0..chunks {
+                require(root, c, &full);
+            }
+        }
+        CollectiveOp::Allreduce { chunks } => {
+            for r in 0..p {
+                for c in 0..chunks {
+                    require(r, c, &full);
+                }
+            }
+        }
+        CollectiveOp::ReduceScatter => {
+            for r in 0..p {
+                require(r, r as u32, &full);
+            }
+        }
+    }
+    drop(require);
+    (out, dropped)
+}
+
+/// Synthesize, validate and price a repair for `schedule` after `dead`
+/// died at the start of round `cut`. Errors when no survivor requirement
+/// remains (e.g. a broadcast whose root died before sending anything) or
+/// when the lost pieces are genuinely unrecoverable (e.g. a reduction
+/// whose clean partial sums were all absorbed into tainted supersets) —
+/// the supervisor then falls back to `replan_without` or degradation.
+pub fn repair_schedule(
+    cluster: &Cluster,
+    placement: &Placement,
+    schedule: &Schedule,
+    dead: &[Rank],
+    cut: usize,
+) -> crate::Result<RepairPlan> {
+    let p = schedule.num_ranks;
+    anyhow::ensure!(!dead.is_empty(), "repair: no dead ranks given");
+    anyhow::ensure!(cut <= schedule.rounds.len(), "repair: cut {cut} past schedule end");
+    let mut dead_sorted: Vec<Rank> = dead.to_vec();
+    dead_sorted.sort_unstable();
+    dead_sorted.dedup();
+    anyhow::ensure!(
+        dead_sorted.iter().all(|&r| r < p),
+        "repair: dead rank out of range for {p} ranks"
+    );
+    anyhow::ensure!(dead_sorted.len() < p, "repair: no survivors remain");
+    let dead_set = ContribSet::from_iter(dead_sorted.iter().copied());
+
+    // Replay the healthy prefix symbolically: exact per-rank holdings at
+    // the moment of death (the executor's abort fires before the cut
+    // round moved anything).
+    let mut prefix = schedule.clone();
+    prefix.rounds.truncate(cut);
+    let mut st = symexec::run(&prefix)?.state;
+
+    let (targets, dropped) = survivor_targets(schedule, &dead_set);
+    anyhow::ensure!(
+        !targets.is_empty(),
+        "repair infeasible: no survivor requirement remains ({} {} with ranks {:?} dead)",
+        schedule.algo,
+        schedule.op.name(),
+        dead_sorted
+    );
+
+    // Round-by-round patch synthesis. Each iteration plans one round:
+    // every needy rank takes at most one delivery, every donor donates
+    // at most once, machine-mates are preferred and share one write.
+    let mut patch: Vec<Round> = Vec::new();
+    let max_rounds = 2 * (p + targets.len());
+    loop {
+        let pending: Vec<&(Rank, Chunk, ContribSet)> =
+            targets.iter().filter(|(r, c, want)| !st[*r].can_assemble(*c, want)).collect();
+        if pending.is_empty() {
+            break;
+        }
+        anyhow::ensure!(
+            patch.len() < max_rounds,
+            "repair stalled after {} patch rounds with {} requirements open",
+            patch.len(),
+            pending.len()
+        );
+        let mut busy = vec![false; p];
+        let mut xfers: Vec<Xfer> = Vec::new();
+        let mut deliveries: Vec<(Rank, Chunk, ContribSet)> = Vec::new();
+        for t in &pending {
+            let (r, c, want) = (t.0, t.1, &t.2);
+            if busy[r] {
+                continue;
+            }
+            let remainder = minus(want, &greedy_cover(&st[r], c, want));
+            debug_assert!(!remainder.is_empty());
+            let m_r = placement.machine_of(r);
+            // Donor preference: machine-mates first (cheap shared-memory
+            // write), then lowest external rank.
+            let mut donors: Vec<Rank> = (0..p)
+                .filter(|&d| d != r && !dead_set.contains(d) && !busy[d])
+                .collect();
+            donors.sort_by_key(|&d| (placement.machine_of(d) != m_r, d));
+            for d in donors {
+                let piece = greedy_cover(&st[d], c, &remainder);
+                if piece.is_empty() {
+                    continue;
+                }
+                let mut dsts = vec![r];
+                if placement.machine_of(d) == m_r {
+                    // Fan the one write out to every co-located rank that
+                    // can absorb the identical piece without overlap.
+                    for t2 in &pending {
+                        let (r2, c2, want2) = (t2.0, t2.1, &t2.2);
+                        if r2 == r || r2 == d || c2 != c || busy[r2] {
+                            continue;
+                        }
+                        if placement.machine_of(r2) != m_r || dsts.contains(&r2) {
+                            continue;
+                        }
+                        let rem2 = minus(want2, &greedy_cover(&st[r2], c, want2));
+                        if piece.is_subset(&rem2) {
+                            dsts.push(r2);
+                        }
+                    }
+                    xfers.push(Xfer::local_write(d, dsts.clone(), Payload::one(c, piece.clone())));
+                } else {
+                    xfers.push(Xfer::external(d, r, Payload::one(c, piece.clone())));
+                }
+                busy[d] = true;
+                for &x in &dsts {
+                    busy[x] = true;
+                    deliveries.push((x, c, piece.clone()));
+                }
+                break;
+            }
+        }
+        anyhow::ensure!(
+            !xfers.is_empty(),
+            "repair infeasible: no live donor holds an untainted piece of {} open \
+             requirement(s) (clean partials absorbed into tainted sums)",
+            pending.len()
+        );
+        for (r2, c2, piece) in deliveries {
+            st[r2].deliver(c2, piece);
+        }
+        patch.push(Round { xfers });
+    }
+
+    // Splice and re-validate end to end: the full symbolic run proves
+    // every patch send assemblable in sequence, the explicit target check
+    // proves the postcondition, the shape check proves placement legality.
+    let mut spliced = prefix;
+    spliced.algo = format!("{}+repair", schedule.algo);
+    let patch_rounds = patch.len();
+    let patch_sched = Schedule {
+        op: schedule.op,
+        num_ranks: p,
+        rounds: patch.clone(),
+        algo: format!("{}-patch", schedule.algo),
+        msg: schedule.msg,
+    };
+    for round in patch {
+        spliced.push_round(round);
+    }
+    spliced.check_shape(placement)?;
+    let final_st = symexec::run(&spliced)?;
+    for (r, c, want) in &targets {
+        anyhow::ensure!(
+            final_st.state[*r].can_assemble(*c, want),
+            "repair validation failed: rank {r} cannot assemble {want} of chunk {c:?}"
+        );
+    }
+
+    // Price the patch alone under the paper's model (legalized: the
+    // greedy packs one transfer per rank per round but not per NIC).
+    let patch_cost = if patch_rounds == 0 {
+        0.0
+    } else {
+        let model = Multicore::default();
+        let legal = legalize(&model, cluster, placement, &patch_sched);
+        model.cost(cluster, placement, &legal)?
+    };
+
+    Ok(RepairPlan {
+        spliced,
+        cut,
+        patch_rounds,
+        dead: dead_sorted,
+        dropped_requirements: dropped,
+        patch_cost,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{allreduce, broadcast};
+    use crate::topology::{switched, Placement};
+
+    fn setup() -> (Cluster, Placement) {
+        let cl = switched(3, 2, 1);
+        let pl = Placement::block(&cl);
+        (cl, pl)
+    }
+
+    #[test]
+    fn repairs_mid_collective_allreduce_death() {
+        let (cl, pl) = setup();
+        let s = allreduce::ring(&pl);
+        let cut = 2;
+        let rp = repair_schedule(&cl, &pl, &s, &[4], cut).unwrap();
+        assert_eq!(rp.cut, cut);
+        assert_eq!(rp.dead, vec![4]);
+        // The corpse's own outputs (6 chunks) are abandoned — explicitly.
+        assert_eq!(rp.dropped_requirements, 6);
+        assert!(rp.patch_rounds > 0);
+        assert!(rp.patch_cost > 0.0);
+        assert!(rp.spliced.algo.ends_with("+repair"));
+        // Prefix is verbatim.
+        assert_eq!(&rp.spliced.rounds[..cut], &s.rounds[..cut]);
+        // Every survivor can assemble the survivor-only sum of every chunk.
+        let st = symexec::run(&rp.spliced).unwrap();
+        let want = ContribSet::from_iter((0..6).filter(|&r| r != 4));
+        for r in (0..6).filter(|&r| r != 4) {
+            for c in 0..s.msg.num_chunks() {
+                assert!(
+                    st.state[r].can_assemble(Chunk(c), &want),
+                    "rank {r} chunk {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn death_at_round_zero_rebuilds_from_initial_state() {
+        let (cl, pl) = setup();
+        let s = allreduce::hierarchical_mc(&cl, &pl);
+        let rp = repair_schedule(&cl, &pl, &s, &[2], 0).unwrap();
+        assert_eq!(rp.cut, 0);
+        // Nothing escaped anyone: the patch is a survivor-only collective
+        // built entirely by the repair greedy.
+        assert_eq!(rp.spliced.rounds.len(), rp.patch_rounds);
+        symexec::run(&rp.spliced).unwrap();
+    }
+
+    #[test]
+    fn dead_broadcast_root_is_infeasible_not_silent() {
+        let (cl, pl) = setup();
+        let s = broadcast::binomial(&pl, 0);
+        // Root died before round 0: its data never escaped — no donor
+        // exists and repair must refuse, loudly.
+        let err = repair_schedule(&cl, &pl, &s, &[0], 0).unwrap_err();
+        assert!(err.to_string().contains("no live donor"), "{err}");
+    }
+
+    #[test]
+    fn dead_broadcast_root_after_escape_repairs_from_survivors() {
+        let (cl, pl) = setup();
+        let s = broadcast::binomial(&pl, 0);
+        // After round 1 some survivor holds the root's chunk: repair
+        // re-routes from them. Requirements *at* the corpse drop (it owes
+        // nothing); requirements *of* the root's contribution remain.
+        let rp = repair_schedule(&cl, &pl, &s, &[0], 1).unwrap();
+        let st = symexec::run(&rp.spliced).unwrap();
+        let want = ContribSet::singleton(0);
+        for r in 1..6 {
+            assert!(st.state[r].can_assemble(Chunk(0), &want), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn prefers_intra_machine_donors() {
+        let (cl, pl) = setup();
+        let s = allreduce::ring(&pl);
+        let rp = repair_schedule(&cl, &pl, &s, &[4], 1).unwrap();
+        let patch = &rp.spliced.rounds[rp.cut..];
+        let locals: usize = patch
+            .iter()
+            .flat_map(|r| r.xfers.iter())
+            .filter(|x| x.kind != crate::sched::XferKind::External)
+            .count();
+        assert!(locals > 0, "patch should exploit shared memory");
+        // No dead rank ever appears in the patch.
+        for round in patch {
+            for x in &round.xfers {
+                assert_ne!(x.src, 4);
+                assert!(!x.dsts.contains(&4));
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        let (cl, pl) = setup();
+        let s = allreduce::ring(&pl);
+        assert!(repair_schedule(&cl, &pl, &s, &[], 0).is_err());
+        assert!(repair_schedule(&cl, &pl, &s, &[9], 0).is_err());
+        assert!(repair_schedule(&cl, &pl, &s, &[0, 1, 2, 3, 4, 5], 0).is_err());
+        assert!(repair_schedule(&cl, &pl, &s, &[1], s.rounds.len() + 1).is_err());
+    }
+}

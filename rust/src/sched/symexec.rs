@@ -50,7 +50,7 @@ impl Holdings {
     /// Can this rank assemble exactly `want` for chunk `c` by combining
     /// pairwise-disjoint held buffers? (Greedy over subset buffers —
     /// sufficient for all schedules we build, conservative in general.)
-    fn can_assemble(&self, c: Chunk, want: &ContribSet) -> bool {
+    pub(crate) fn can_assemble(&self, c: Chunk, want: &ContribSet) -> bool {
         let mut acc = ContribSet::new();
         for b in self.buffers(c) {
             if b.is_subset(want) && !acc.intersects(b) {
@@ -62,7 +62,7 @@ impl Holdings {
 
     /// Best-effort combined coverage: union of a pairwise-disjoint buffer
     /// subset, built greedily largest-first (reduction-op final check).
-    fn max_disjoint_union(&self, c: Chunk) -> ContribSet {
+    pub(crate) fn max_disjoint_union(&self, c: Chunk) -> ContribSet {
         let mut bufs: Vec<&ContribSet> = self.buffers(c).iter().collect();
         bufs.sort_by_key(|b| std::cmp::Reverse(b.len()));
         let mut acc = ContribSet::new();
@@ -76,7 +76,7 @@ impl Holdings {
 
     /// Deliver a buffer: absorb every held buffer it subsumes; drop it if
     /// it is itself subsumed (stale duplicate).
-    fn deliver(&mut self, c: Chunk, s: ContribSet) {
+    pub(crate) fn deliver(&mut self, c: Chunk, s: ContribSet) {
         let bufs = self.map.entry(c).or_default();
         if bufs.iter().any(|b| s.is_subset(b)) {
             return; // stale duplicate

@@ -388,6 +388,7 @@ pub fn simulate_lowered(
         nic_utilization: nic_util,
         records,
         skipped_xfers: skipped,
+        dead_ranks: params.deaths_in_plan(low.num_rounds),
     }
 }
 

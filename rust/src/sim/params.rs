@@ -40,11 +40,12 @@ pub struct SimParams {
     /// `gap`) is multiplied by `factor`; entries for the same machine
     /// compose multiplicatively. Empty = healthy cluster.
     pub slowdown: Vec<(usize, f64)>,
-    /// Injected fault: `(rank, round)` — the rank dies at the start of
-    /// that round. Every transfer in round >= `round` that the dead rank
-    /// sends or should receive is suppressed (counted in
-    /// [`SimReport::skipped_xfers`](crate::sim::SimReport)). `None` = healthy.
-    pub dead_rank: Option<(usize, usize)>,
+    /// Injected faults: `(rank, round)` pairs — each rank dies at the
+    /// start of its round. Every transfer in round >= `round` that a dead
+    /// rank sends or should receive is suppressed (counted in
+    /// [`SimReport::skipped_xfers`](crate::sim::SimReport)). Empty =
+    /// healthy. Multiple entries for one rank keep the earliest round.
+    pub dead_ranks: Vec<(usize, usize)>,
 }
 
 impl SimParams {
@@ -65,7 +66,7 @@ impl SimParams {
             respect_speed: false,
             record_xfers: false,
             slowdown: Vec::new(),
-            dead_rank: None,
+            dead_ranks: Vec::new(),
         }
     }
 
@@ -87,7 +88,7 @@ impl SimParams {
             respect_speed: false,
             record_xfers: false,
             slowdown: Vec::new(),
-            dead_rank: None,
+            dead_ranks: Vec::new(),
         }
     }
 
@@ -107,7 +108,7 @@ impl SimParams {
             respect_speed: false,
             record_xfers: false,
             slowdown: Vec::new(),
-            dead_rank: None,
+            dead_ranks: Vec::new(),
         }
     }
 
@@ -128,7 +129,7 @@ impl SimParams {
             respect_speed: false,
             record_xfers: false,
             slowdown: Vec::new(),
-            dead_rank: None,
+            dead_ranks: Vec::new(),
         }
     }
 
@@ -159,7 +160,7 @@ impl SimParams {
             respect_speed: false,
             record_xfers: false,
             slowdown: Vec::new(),
-            dead_rank: None,
+            dead_ranks: Vec::new(),
         }
     }
 
@@ -176,9 +177,10 @@ impl SimParams {
         self
     }
 
-    /// Builder-style: kill `rank` at the start of `round`.
+    /// Builder-style: kill `rank` at the start of `round`. Chain calls
+    /// to inject multiple deaths.
     pub fn with_dead_rank(mut self, rank: usize, round: usize) -> Self {
-        self.dead_rank = Some((rank, round));
+        self.dead_ranks.push((rank, round));
         self
     }
 
@@ -195,12 +197,26 @@ impl SimParams {
         f
     }
 
-    /// Is `rank` dead during `round` under the injected fault?
+    /// Is `rank` dead during `round` under the injected faults?
     pub fn killed(&self, rank: usize, round: usize) -> bool {
-        match self.dead_rank {
-            Some((r, rd)) => rank == r && round >= rd,
-            None => false,
-        }
+        self.dead_ranks
+            .iter()
+            .any(|&(r, rd)| rank == r && round >= rd)
+    }
+
+    /// All injected dead ranks whose death round falls inside a plan of
+    /// `num_rounds` rounds, deduplicated and sorted — mirrors
+    /// [`crate::exec::ExecReport::dead_ranks`] reporting.
+    pub fn deaths_in_plan(&self, num_rounds: usize) -> Vec<usize> {
+        let mut dead: Vec<usize> = self
+            .dead_ranks
+            .iter()
+            .filter(|&&(_, rd)| rd < num_rounds)
+            .map(|&(r, _)| r)
+            .collect();
+        dead.sort_unstable();
+        dead.dedup();
+        dead
     }
 }
 
@@ -226,7 +242,11 @@ mod tests {
         assert!(p.record_xfers);
         let p = p.with_slowdown(1, 4.0).with_dead_rank(3, 2);
         assert_eq!(p.slowdown, vec![(1, 4.0)]);
-        assert_eq!(p.dead_rank, Some((3, 2)));
+        assert_eq!(p.dead_ranks, vec![(3, 2)]);
+        let p = p.with_dead_rank(0, 5);
+        assert_eq!(p.dead_ranks, vec![(3, 2), (0, 5)]);
+        assert_eq!(p.deaths_in_plan(9), vec![0, 3]);
+        assert_eq!(p.deaths_in_plan(4), vec![3]);
     }
 
     #[test]

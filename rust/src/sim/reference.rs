@@ -272,5 +272,6 @@ pub fn simulate_reference(
         nic_utilization: nic_util,
         records,
         skipped_xfers: skipped,
+        dead_ranks: params.deaths_in_plan(schedule.rounds.len()),
     })
 }

@@ -29,6 +29,11 @@ pub struct SimReport {
     /// Would-be transfers suppressed by an injected rank death
     /// (one per suppressed record; 0 on a healthy run).
     pub skipped_xfers: usize,
+    /// Every injected [`super::SimParams::dead_ranks`] entry whose death
+    /// round fell inside this schedule, sorted and deduplicated — the
+    /// simulator-side mirror of `ExecReport::dead_ranks`. Empty on a
+    /// healthy run.
+    pub dead_ranks: Vec<usize>,
 }
 
 impl SimReport {
@@ -55,6 +60,7 @@ mod tests {
             nic_utilization: 0.5,
             records: vec![],
             skipped_xfers: 0,
+            dead_ranks: vec![],
         };
         assert_eq!(r.goodput(), 50.0);
         let z = SimReport { t_end: 0.0, ..r };

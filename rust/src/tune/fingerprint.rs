@@ -259,13 +259,10 @@ fn sim_digest(p: &SimParams) -> u64 {
         h = fnv(h, m as u64);
         h = fnv(h, f.to_bits());
     }
-    match p.dead_rank {
-        Some((r, rd)) => {
-            h = fnv(h, 1);
-            h = fnv(h, r as u64);
-            h = fnv(h, rd as u64);
-        }
-        None => h = fnv(h, 0),
+    h = fnv(h, p.dead_ranks.len() as u64);
+    for &(r, rd) in &p.dead_ranks {
+        h = fnv(h, r as u64);
+        h = fnv(h, rd as u64);
     }
     h
 }
@@ -357,6 +354,11 @@ mod tests {
         let mut death = TuneCfg::default();
         death.sim = death.sim.with_dead_rank(2, 1);
         assert_ne!(base, fp(&switched(3, 4, 2), &death));
+        let mut deaths2 = TuneCfg::default();
+        deaths2.sim = deaths2.sim.with_dead_rank(2, 1).with_dead_rank(5, 0);
+        assert_ne!(base, fp(&switched(3, 4, 2), &deaths2));
+        let fp_d1 = fp(&switched(3, 4, 2), &death);
+        assert_ne!(fp_d1, fp(&switched(3, 4, 2), &deaths2));
 
         // Robustness knob: clean and robust tunes never alias, and each
         // ingredient of the knob discriminates.

@@ -81,7 +81,7 @@ fn ring_and_hierarchical_training_trajectories_agree() {
             log_every: 0,
             ..Default::default()
         };
-        let trainer = Trainer::new(&dir, &cfg).unwrap();
+        let mut trainer = Trainer::new(&dir, &cfg).unwrap();
         let rep = trainer.run(&cfg).unwrap();
         finals.push(rep.losses);
     }
@@ -109,7 +109,7 @@ fn recursive_doubling_trains() {
         log_every: 0,
         ..Default::default()
     };
-    let trainer = Trainer::new(&dir, &cfg).unwrap();
+    let mut trainer = Trainer::new(&dir, &cfg).unwrap();
     let rep = trainer.run(&cfg).unwrap();
     assert_eq!(rep.losses.len(), 4);
     assert!(rep.losses.iter().all(|l| l.is_finite()));

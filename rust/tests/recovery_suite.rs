@@ -1,0 +1,401 @@
+//! Recovery suite: the supervised failure policy end-to-end.
+//!
+//! Exercises the full classify → retry → repair → replan → degrade
+//! ladder on real executions with injected faults, and pins the
+//! acceptance properties:
+//!
+//! * a repaired collective's outputs are **bit-identical** to a
+//!   from-scratch run on the survivor topology (integer-valued f32
+//!   payloads make every summation order exact, so `to_bits` equality is
+//!   the honest check);
+//! * the transient-retry path is **bounded** — attempts and backoff are
+//!   capped by the policy and the whole episode stays far under a 2 s
+//!   wall budget;
+//! * degradation is **never silent** — a partial result carries the
+//!   survivor contribution set, names the dead, and fails a full-set
+//!   collection loudly.
+//!
+//! Edge cases from the issue: death at round 0, collective-root death,
+//! a death that empties a machine, and two simultaneous deaths on the
+//! same machine.
+
+use std::time::{Duration, Instant};
+
+use mcomm::coordinator::{
+    collect_reduced_grads, collect_reduced_grads_of, seed_grad_store, AllreduceAlgo,
+    BroadcastAlgo, Communicator, FailurePolicy, RecoveryOutcome,
+};
+use mcomm::exec::{BufferStore, ExecParams};
+use mcomm::sched::{Chunk, CollectiveOp, ContribSet, Schedule};
+use mcomm::topology::switched;
+
+const P: usize = 40; // gradient elements
+
+/// Integer-valued gradients: f32 sums are exact in any association, so
+/// recovered results can be compared bit-for-bit.
+fn grads(n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|r| (0..P).map(|i| ((r + 2) * (i % 17 + 1)) as f32).collect())
+        .collect()
+}
+
+fn survivor_sum(g: &[Vec<f32>], survivors: &[usize]) -> Vec<f32> {
+    (0..P)
+        .map(|i| survivors.iter().map(|&r| g[r][i]).sum::<f32>())
+        .collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+    }
+}
+
+fn ring_allreduce(comm: &Communicator) -> Schedule {
+    let mut s = comm.allreduce(AllreduceAlgo::Ring).unwrap();
+    s.set_payload(4 * P as u64, 4);
+    s
+}
+
+/// Tentpole acceptance: a mid-collective death is repaired in place and
+/// the patched outputs match a from-scratch run on the survivor
+/// topology bit-for-bit.
+#[test]
+fn repaired_allreduce_is_bit_identical_to_survivor_run() {
+    let mut comm = Communicator::block(switched(3, 2, 1));
+    let n = comm.num_ranks(); // 6
+    let g = grads(n);
+    let s = ring_allreduce(&comm);
+    let seed = |sch: &Schedule, rank: usize, orig: usize| {
+        seed_grad_store(sch, rank, &g[orig])
+    };
+    // Rank 4 dies at round 1 — mid reduce-scatter, every survivor
+    // contribution still reachable, so repair must succeed.
+    let params = ExecParams::zero().with_dead_rank(4, 1).with_abort_on_death();
+    let sup = comm
+        .supervised_execute(&s, &seed, &params, &FailurePolicy::default())
+        .unwrap();
+
+    match &sup.outcome {
+        RecoveryOutcome::Repaired { dead_ranks, cut, patch_rounds, patch_cost } => {
+            assert_eq!(dead_ranks, &vec![4]);
+            assert_eq!(*cut, 1);
+            assert!(*patch_rounds > 0, "patch must add rounds");
+            assert!(*patch_cost > 0.0, "patch must be priced");
+        }
+        o => panic!("expected Repaired, got {o:?}"),
+    }
+    assert_eq!(sup.attempts, 1);
+    assert_eq!(sup.report.dead_ranks, vec![4]);
+
+    let survivors = [0usize, 1, 2, 3, 5];
+    let repaired =
+        collect_reduced_grads_of(&s, &sup.report.outputs[0], &survivors, P).unwrap();
+    // Every survivor converged to the same bits.
+    let also =
+        collect_reduced_grads_of(&s, &sup.report.outputs[5], &survivors, P).unwrap();
+    assert_bits_eq(&repaired, &also, "survivor stores agree");
+
+    // From-scratch reference on the survivor topology (dense renumber).
+    let mut ref_comm = Communicator::block(switched(3, 2, 1));
+    ref_comm.replan_without(&[4], &[]).unwrap();
+    let s2 = ring_allreduce(&ref_comm);
+    let inputs: Vec<BufferStore> = survivors
+        .iter()
+        .enumerate()
+        .map(|(new, &old)| seed_grad_store(&s2, new, &g[old]))
+        .collect();
+    let rep = ref_comm.execute(&s2, inputs, &ExecParams::zero()).unwrap();
+    let reference =
+        collect_reduced_grads(&s2, &rep.outputs[0], survivors.len(), P).unwrap();
+    assert_bits_eq(&repaired, &reference, "repaired vs from-scratch survivor run");
+}
+
+/// Edge case: death at round 0 — nothing escaped the corpse yet; repair
+/// rebuilds the survivor reduction from initial state.
+#[test]
+fn death_at_round_zero_repairs_from_initial_state() {
+    let mut comm = Communicator::block(switched(3, 2, 1));
+    let g = grads(comm.num_ranks());
+    let s = ring_allreduce(&comm);
+    let seed = |sch: &Schedule, rank: usize, orig: usize| {
+        seed_grad_store(sch, rank, &g[orig])
+    };
+    let params = ExecParams::zero().with_dead_rank(1, 0).with_abort_on_death();
+    let sup = comm
+        .supervised_execute(&s, &seed, &params, &FailurePolicy::default())
+        .unwrap();
+    match &sup.outcome {
+        RecoveryOutcome::Repaired { dead_ranks, cut, .. } => {
+            assert_eq!(dead_ranks, &vec![1]);
+            assert_eq!(*cut, 0, "death at round 0 means an empty prefix");
+        }
+        o => panic!("expected Repaired, got {o:?}"),
+    }
+    let survivors = [0usize, 2, 3, 4, 5];
+    let got =
+        collect_reduced_grads_of(&s, &sup.report.outputs[0], &survivors, P).unwrap();
+    assert_bits_eq(&got, &survivor_sum(&g, &survivors), "round-0 repair");
+}
+
+/// Acceptance: the straggle path retries a bounded number of times with
+/// capped backoff, then accepts the (correct) slow result — all well
+/// under a 2 s wall budget.
+#[test]
+fn transient_straggle_retry_is_bounded() {
+    let mut comm = Communicator::block(switched(2, 2, 1));
+    let n = comm.num_ranks(); // 4
+    let g = grads(n);
+    let s = ring_allreduce(&comm);
+    let seed = |sch: &Schedule, rank: usize, orig: usize| {
+        seed_grad_store(sch, rank, &g[orig])
+    };
+    // A zero round-timeout classifies every run as slow: the supervisor
+    // must exhaust its bounded retries and then accept, flagged.
+    let policy = FailurePolicy {
+        round_timeout: Some(Duration::ZERO),
+        max_retries: 3,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(5),
+        ..FailurePolicy::default()
+    };
+    let t0 = Instant::now();
+    let sup = comm
+        .supervised_execute(&s, &seed, &ExecParams::zero(), &policy)
+        .unwrap();
+    let wall = t0.elapsed();
+    assert!(wall < Duration::from_secs(2), "bounded episode took {wall:?}");
+    assert_eq!(sup.outcome, RecoveryOutcome::Straggled { retries: 3 });
+    assert_eq!(sup.attempts, policy.max_retries + 1);
+    assert!(sup.backoff_total <= policy.max_total_backoff());
+    // Slow, not wrong: data is the full reduction.
+    let all: Vec<usize> = (0..n).collect();
+    let got = collect_reduced_grads(&s, &sup.report.outputs[0], n, P).unwrap();
+    assert_bits_eq(&got, &survivor_sum(&g, &all), "straggled result");
+}
+
+/// Edge case: the broadcast root dies before its data escapes. Repair is
+/// impossible (no live donor holds the payload), so the supervisor must
+/// re-plan: survivors renumbered, a surviving rank promoted to root.
+#[test]
+fn dead_broadcast_root_replans_to_survivor_root() {
+    let mut comm = Communicator::block(switched(3, 2, 1));
+    let data: Vec<f32> = (1..=12).map(|x| x as f32).collect();
+    let mut s = comm.broadcast(BroadcastAlgo::Binomial, 0);
+    s.set_payload(4 * data.len() as u64, 4);
+    // Schedule-aware seeding: whatever schedule executes, its root gets
+    // the payload (after the re-plan that is the promoted survivor).
+    let seed = |sch: &Schedule, rank: usize, _orig: usize| {
+        let mut store = BufferStore::default();
+        if let CollectiveOp::Broadcast { root } = sch.op {
+            if rank == root {
+                for raw in 0..sch.msg.num_chunks() {
+                    let (lo, hi) = sch.msg.chunk_elem_range_raw(raw);
+                    store.seed(
+                        Chunk(raw),
+                        ContribSet::singleton(root),
+                        data[lo as usize..hi as usize].to_vec(),
+                    );
+                }
+            }
+        }
+        store
+    };
+    let params = ExecParams::zero().with_dead_rank(0, 0).with_abort_on_death();
+    let sup = comm
+        .supervised_execute(&s, &seed, &params, &FailurePolicy::default())
+        .unwrap();
+    match &sup.outcome {
+        RecoveryOutcome::Replanned { dead_ranks, survivors } => {
+            assert_eq!(dead_ranks, &vec![0]);
+            assert_eq!(*survivors, 5);
+        }
+        o => panic!("expected Replanned, got {o:?}"),
+    }
+    let s2 = sup.replanned_schedule.as_ref().expect("replanned schedule");
+    let CollectiveOp::Broadcast { root } = s2.op else {
+        panic!("replanned op changed: {:?}", s2.op)
+    };
+    assert_eq!(root, 0, "old rank 1 is the promoted root, renumbered to 0");
+    assert_eq!(comm.num_ranks(), 5, "communicator shrank");
+    // Every survivor received the promoted root's payload.
+    for r in 0..5 {
+        let mut got = vec![0.0f32; data.len()];
+        for raw in 0..s2.msg.num_chunks() {
+            let (lo, hi) = s2.msg.chunk_elem_range_raw(raw);
+            if lo == hi {
+                continue;
+            }
+            let v = sup.report.outputs[r]
+                .assemble(Chunk(raw), &ContribSet::singleton(root))
+                .unwrap();
+            got[lo as usize..hi as usize].copy_from_slice(&v);
+        }
+        assert_bits_eq(&got, &data, &format!("survivor {r} payload"));
+    }
+}
+
+/// Edge case: both ranks of one machine die at round 0 — the repair path
+/// rebuilds the survivor reduction entirely across the remaining
+/// machines.
+#[test]
+fn machine_emptying_death_repairs_across_machines() {
+    let mut comm = Communicator::block(switched(3, 2, 1));
+    let g = grads(comm.num_ranks());
+    let s = ring_allreduce(&comm);
+    let seed = |sch: &Schedule, rank: usize, orig: usize| {
+        seed_grad_store(sch, rank, &g[orig])
+    };
+    // Ranks 2 and 3 are all of machine 1.
+    let params = ExecParams::zero()
+        .with_dead_rank(2, 0)
+        .with_dead_rank(3, 0)
+        .with_abort_on_death();
+    let sup = comm
+        .supervised_execute(&s, &seed, &params, &FailurePolicy::default())
+        .unwrap();
+    match &sup.outcome {
+        RecoveryOutcome::Repaired { dead_ranks, cut, .. } => {
+            assert_eq!(dead_ranks, &vec![2, 3]);
+            assert_eq!(*cut, 0);
+        }
+        o => panic!("expected Repaired, got {o:?}"),
+    }
+    let survivors = [0usize, 1, 4, 5];
+    let got =
+        collect_reduced_grads_of(&s, &sup.report.outputs[0], &survivors, P).unwrap();
+    assert_bits_eq(&got, &survivor_sum(&g, &survivors), "machine-emptying repair");
+}
+
+/// When repair is disabled the same machine-emptying death falls back to
+/// a re-plan: the emptied machine disappears from the topology and the
+/// re-executed collective completes on the dense survivor numbering.
+#[test]
+fn forced_replan_drops_emptied_machine() {
+    let mut comm = Communicator::block(switched(3, 2, 1));
+    let g = grads(comm.num_ranks());
+    let s = ring_allreduce(&comm);
+    let seed = |sch: &Schedule, rank: usize, orig: usize| {
+        seed_grad_store(sch, rank, &g[orig])
+    };
+    let policy = FailurePolicy { allow_repair: false, ..FailurePolicy::default() };
+    let params = ExecParams::zero()
+        .with_dead_rank(2, 1)
+        .with_dead_rank(3, 1)
+        .with_abort_on_death();
+    let sup = comm.supervised_execute(&s, &seed, &params, &policy).unwrap();
+    match &sup.outcome {
+        RecoveryOutcome::Replanned { dead_ranks, survivors } => {
+            assert_eq!(dead_ranks, &vec![2, 3]);
+            assert_eq!(*survivors, 4);
+        }
+        o => panic!("expected Replanned, got {o:?}"),
+    }
+    assert_eq!(comm.cluster.num_machines(), 2, "emptied machine dropped");
+    assert_eq!(comm.num_ranks(), 4);
+    let s2 = sup.replanned_schedule.as_ref().expect("replanned schedule");
+    let got = collect_reduced_grads(s2, &sup.report.outputs[0], 4, P).unwrap();
+    assert_bits_eq(
+        &got,
+        &survivor_sum(&g, &[0, 1, 4, 5]),
+        "replanned survivor reduction",
+    );
+}
+
+/// Edge case: two simultaneous deaths on the *same* machine (which keeps
+/// other live ranks) are repaired in one pass.
+#[test]
+fn two_deaths_same_machine_repaired_in_one_pass() {
+    let mut comm = Communicator::block(switched(2, 4, 1));
+    let n = comm.num_ranks(); // 8; machine 0 = ranks 0..4
+    let g = grads(n);
+    let s = ring_allreduce(&comm);
+    let seed = |sch: &Schedule, rank: usize, orig: usize| {
+        seed_grad_store(sch, rank, &g[orig])
+    };
+    let params = ExecParams::zero()
+        .with_dead_rank(2, 0)
+        .with_dead_rank(3, 0)
+        .with_abort_on_death();
+    let sup = comm
+        .supervised_execute(&s, &seed, &params, &FailurePolicy::default())
+        .unwrap();
+    match &sup.outcome {
+        RecoveryOutcome::Repaired { dead_ranks, .. } => {
+            assert_eq!(dead_ranks, &vec![2, 3], "both deaths handled together");
+        }
+        o => panic!("expected Repaired, got {o:?}"),
+    }
+    assert_eq!(sup.attempts, 1, "one pass, not one failed retry per corpse");
+    let survivors = [0usize, 1, 4, 5, 6, 7];
+    let got =
+        collect_reduced_grads_of(&s, &sup.report.outputs[7], &survivors, P).unwrap();
+    assert_bits_eq(&got, &survivor_sum(&g, &survivors), "same-machine double death");
+}
+
+/// Acceptance: degradation is explicit, never silent. The partial result
+/// is tagged with the survivor contribution set — a consumer asking for
+/// the full reduction fails loudly — and the outcome names the dead.
+#[test]
+fn degradation_is_explicit_never_silent() {
+    let mut comm = Communicator::block(switched(2, 2, 1));
+    let n = comm.num_ranks(); // 4
+    let g = grads(n);
+    let s = ring_allreduce(&comm);
+    let seed = |sch: &Schedule, rank: usize, orig: usize| {
+        seed_grad_store(sch, rank, &g[orig])
+    };
+    // Forbid repair and re-plan: only graceful degradation remains.
+    let policy = FailurePolicy {
+        allow_repair: false,
+        allow_replan: false,
+        ..FailurePolicy::default()
+    };
+    let params = ExecParams::zero().with_dead_rank(1, 2).with_abort_on_death();
+    let sup = comm.supervised_execute(&s, &seed, &params, &policy).unwrap();
+    match &sup.outcome {
+        RecoveryOutcome::Degraded { dead_ranks, contributors } => {
+            assert_eq!(dead_ranks, &vec![1], "the dead are named");
+            assert_eq!(contributors, &vec![0, 2, 3], "contributors are named");
+        }
+        o => panic!("expected Degraded, got {o:?}"),
+    }
+    assert!(sup.outcome.is_degraded());
+    assert_eq!(sup.report.dead_ranks, vec![1], "report carries the holes");
+    // Never silent: the partial cannot masquerade as a full reduction.
+    assert!(
+        collect_reduced_grads(&s, &sup.report.outputs[0], n, P).is_err(),
+        "full-set collection over a degraded result must fail loudly"
+    );
+    // But the survivor-weighted partial is exact over its contributors.
+    let survivors = [0usize, 2, 3];
+    let got =
+        collect_reduced_grads_of(&s, &sup.report.outputs[0], &survivors, P).unwrap();
+    assert_bits_eq(&got, &survivor_sum(&g, &survivors), "degraded partial");
+}
+
+/// With every recovery path disabled, a death surfaces as an explicit
+/// unrecoverable error — not a silent partial, not a hang.
+#[test]
+fn unrecoverable_when_every_path_is_disabled() {
+    let mut comm = Communicator::block(switched(2, 2, 1));
+    let g = grads(comm.num_ranks());
+    let s = ring_allreduce(&comm);
+    let seed = |sch: &Schedule, rank: usize, orig: usize| {
+        seed_grad_store(sch, rank, &g[orig])
+    };
+    let policy = FailurePolicy {
+        allow_repair: false,
+        allow_replan: false,
+        allow_degrade: false,
+        ..FailurePolicy::default()
+    };
+    let params = ExecParams::zero().with_dead_rank(1, 1).with_abort_on_death();
+    let t0 = Instant::now();
+    let err = comm
+        .supervised_execute(&s, &seed, &params, &policy)
+        .unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(2), "fail fast");
+    assert!(err.to_string().contains("unrecoverable"), "{err}");
+}

@@ -242,11 +242,9 @@ fn suppressed_death_is_differential_between_exec_and_sim() {
             let want = surviving_deliveries(&s, &sim_params);
             assert_eq!(rep.deliveries, want, "{label}: delivery stream");
             let death_in_plan = s.rounds.len() > ROUND;
-            assert_eq!(
-                rep.dead_rank,
-                death_in_plan.then_some(DEAD as u32),
-                "{label}: dead_rank report"
-            );
+            let want_dead: Vec<u32> =
+                if death_in_plan { vec![DEAD as u32] } else { Vec::new() };
+            assert_eq!(rep.dead_ranks, want_dead, "{label}: dead_ranks report");
 
             // Lowered simulator, same injection: record stream and the
             // suppressed-transfer count match the same oracle.
@@ -258,6 +256,9 @@ fn suppressed_death_is_differential_between_exec_and_sim() {
                 assert_eq!((rec.src, rec.dst, rec.external), *want, "{label}");
             }
             assert_eq!(sim.skipped_xfers, want_skipped, "{label}: skipped count");
+            let want_sim_dead: Vec<usize> =
+                if death_in_plan { vec![DEAD] } else { Vec::new() };
+            assert_eq!(sim.dead_ranks, want_sim_dead, "{label}: sim dead_ranks");
             suppressed_somewhere |= want_skipped > 0;
 
             // Abort mode on the same injection fails cleanly — and only
