@@ -140,6 +140,44 @@ fn main() {
         );
     }));
 
+    // Symmetry-quotient additions: closed-form pricing of one candidate
+    // on the quotient (no schedule built), and the headline — a full
+    // 100k-rank `select` that stays on the analytic path end-to-end
+    // (stage 1 closed forms, stage 2 on a representative grid). The
+    // acceptance budget for the latter is < 100 ms.
+    let grid = mcomm::model::UniformGrid::new(3125, 32, 2);
+    stats.push(bench("analytic: price allreduce ring (100k)", || {
+        std::hint::black_box(
+            tune::analytic_cost(
+                tune::CandidateId::AllreduceRing,
+                &model,
+                grid,
+                1 << 20,
+            )
+            .unwrap(),
+        );
+    }));
+    let big_cl = switched(3125, 32, 2);
+    let big_pl = Placement::block(&big_cl);
+    let big_cfg = TuneCfg::default().with_msg_bytes(1 << 20);
+    stats.push(bench("quotient: tune::select allreduce (100k ranks)", || {
+        std::hint::black_box(
+            tune::select(&big_cl, &big_pl, Collective::Allreduce, &big_cfg)
+                .unwrap(),
+        );
+    }));
+    stats.push(bench("quotient: tune::select broadcast (100k ranks)", || {
+        std::hint::black_box(
+            tune::select(
+                &big_cl,
+                &big_pl,
+                Collective::Broadcast { root: 0 },
+                &big_cfg,
+            )
+            .unwrap(),
+        );
+    }));
+
     // Robustness additions: the k-draw stage-2b scoring cost on top of
     // a clean select, the simulator's injection branch, and the online
     // re-plan path (fresh communicator per iteration — the rebuild is

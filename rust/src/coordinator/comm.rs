@@ -581,7 +581,7 @@ mod tests {
             Collective::ReduceScatter,
         ] {
             let d = comm.tuned_decision(coll).unwrap();
-            symexec::verify(&d.schedule).unwrap_or_else(|e| panic!("{}: {e}", coll.name()));
+            symexec::verify(d.schedule()).unwrap_or_else(|e| panic!("{}: {e}", coll.name()));
             let base = d.baseline_sim.expect("switch always has a flat baseline");
             assert!(
                 d.sim_time <= base,

@@ -290,6 +290,12 @@ impl Trainer {
         self.comm.exec_stats()
     }
 
+    /// Decision-cache counters of the embedded communicator's autotuner
+    /// (hits, misses, invalidations from re-planning, live entries).
+    pub fn tune_stats(&self) -> crate::tune::CacheStats {
+        self.comm.tune_stats()
+    }
+
     /// Online re-planning between steps: drop `dead_ranks` (a death the
     /// executor reported, or an external membership shrink), rebuild the
     /// communicator's topology for the survivors, and re-tune + re-size

@@ -122,7 +122,7 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
         let t_def = crate::sim::simulate(
             &cluster,
             &placement,
-            &d_def.schedule,
+            d_def.schedule(),
             &calibrated_cfg.sim,
         )?
         .t_end;

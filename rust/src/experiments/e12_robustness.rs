@@ -123,8 +123,8 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
                 let robust = tune::select(&cl, &pl, coll, &cfg_rob)?;
                 let base = robust.baseline_sim.expect("switched => flat baseline");
                 let diverged = clean.choice != robust.choice;
-                let cd = degraded_mean(&cl, &pl, &clean.schedule, &draws)?;
-                let rd = degraded_mean(&cl, &pl, &robust.schedule, &draws)?;
+                let cd = degraded_mean(&cl, &pl, clean.schedule(), &draws)?;
+                let rd = degraded_mean(&cl, &pl, robust.schedule(), &draws)?;
                 let reported = robust.robust_sim.expect("robust scoring on");
                 if diverged {
                     divergences += 1;

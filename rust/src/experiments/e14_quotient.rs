@@ -1,0 +1,187 @@
+//! E14 — symmetry-quotient tuning: tune one machine shape, price 100k
+//! ranks.
+//!
+//! The paper's model is deliberately *analytic*: on a switch of M
+//! identical C-core machines every rank is interchangeable up to
+//! machine relabeling, so the cost of a schedule is a closed form in
+//! (M, C, k) — there is nothing to learn from materializing the same
+//! schedule at every scale. This experiment measures what that buys the
+//! tuner: stage 1 prices every candidate through
+//! [`crate::model::analytic`] without building a single schedule, and
+//! above [`crate::tune::TuneCfg::quotient_sim_cap`] ranks stage 2
+//! confirms the shortlist on a small representative grid instead of
+//! simulating the full machine.
+//!
+//! The table sweeps total rank count P from 8 to 100 000 (3125 machines
+//! × 32 cores) and reports, per collective: the quotient-path `select`
+//! wall time, the full-materialization wall time where that is still
+//! tractable (P ≤ 256), and whether the two paths made bit-identical
+//! decisions. Runnable via `mcomm experiment e14`.
+
+use std::time::Instant;
+
+use crate::topology::{switched, Placement};
+use crate::tune::{self, Collective, TuneCfg};
+use crate::util::table::{ftime, Table};
+
+pub struct RowSummary {
+    pub collective: &'static str,
+    pub machines: usize,
+    pub cores: usize,
+    pub ranks: usize,
+    pub quotient_s: f64,
+    /// Full-materialization wall time; `None` above the cross-check cap.
+    pub full_s: Option<f64>,
+    pub agree: Option<bool>,
+    pub winner: String,
+    pub considered: usize,
+    pub simulated: usize,
+}
+
+pub struct Summary {
+    pub rows: Vec<RowSummary>,
+    /// Largest grid swept, in ranks.
+    pub max_ranks: usize,
+    /// Worst quotient-path `select` wall time at the largest grid.
+    pub quotient_at_max_s: f64,
+    /// Did every cross-checked grid agree (pick + bit-level scores)?
+    pub all_agree: bool,
+}
+
+/// Grids where the quotient and full paths are cross-checked for exact
+/// agreement (beyond this, full materialization is the thing E14 exists
+/// to avoid).
+const CROSS_CHECK_MAX_RANKS: usize = 256;
+
+pub fn run(quick: bool) -> crate::Result<Summary> {
+    let grids: Vec<(usize, usize, usize)> = if quick {
+        vec![(2, 4, 2), (16, 16, 2), (64, 16, 2), (3125, 32, 2)]
+    } else {
+        vec![
+            (2, 4, 2),
+            (8, 8, 2),
+            (16, 16, 2),
+            (64, 16, 2),
+            (256, 16, 2),
+            (1024, 32, 2),
+            (3125, 32, 2),
+        ]
+    };
+    let bytes = 1u64 << 20;
+    let colls: [(&'static str, Collective); 2] = [
+        ("broadcast", Collective::Broadcast { root: 0 }),
+        ("allreduce", Collective::Allreduce),
+    ];
+
+    let mut table = Table::new(vec![
+        "collective", "grid", "ranks", "winner", "quotient", "full", "agree",
+        "considered", "simulated",
+    ]);
+    let mut rows = Vec::new();
+    let mut all_agree = true;
+    let mut max_ranks = 0usize;
+    let mut quotient_at_max_s = 0.0f64;
+
+    for &(m, c, k) in &grids {
+        let cl = switched(m, c, k);
+        let pl = Placement::block(&cl);
+        let ranks = m * c;
+        for &(name, coll) in &colls {
+            let quotient_cfg = TuneCfg::default().with_msg_bytes(bytes);
+            let t0 = Instant::now();
+            let q = tune::select(&cl, &pl, coll, &quotient_cfg)?;
+            let quotient_s = t0.elapsed().as_secs_f64();
+
+            let (full_s, agree) = if ranks <= CROSS_CHECK_MAX_RANKS {
+                let full_cfg = TuneCfg::default()
+                    .with_msg_bytes(bytes)
+                    .with_quotient(false);
+                let t0 = Instant::now();
+                let f = tune::select(&cl, &pl, coll, &full_cfg)?;
+                let full_s = t0.elapsed().as_secs_f64();
+                let agree = q.choice == f.choice
+                    && q.model_cost.to_bits() == f.model_cost.to_bits()
+                    && q.sim_time.to_bits() == f.sim_time.to_bits();
+                (Some(full_s), Some(agree))
+            } else {
+                (None, None)
+            };
+            if agree == Some(false) {
+                all_agree = false;
+            }
+            if ranks > max_ranks {
+                max_ranks = ranks;
+                quotient_at_max_s = quotient_s;
+            } else if ranks == max_ranks {
+                quotient_at_max_s = quotient_at_max_s.max(quotient_s);
+            }
+
+            table.row(vec![
+                name.to_string(),
+                format!("{m}x{c} k={k}"),
+                ranks.to_string(),
+                q.choice.label(),
+                ftime(quotient_s),
+                full_s.map_or_else(|| "—".to_string(), ftime),
+                agree.map_or_else(
+                    || "—".to_string(),
+                    |a| if a { "yes" } else { "NO" }.to_string(),
+                ),
+                q.considered.to_string(),
+                q.simulated.to_string(),
+            ]);
+            rows.push(RowSummary {
+                collective: name,
+                machines: m,
+                cores: c,
+                ranks,
+                quotient_s,
+                full_s,
+                agree,
+                winner: q.choice.label(),
+                considered: q.considered,
+                simulated: q.simulated,
+            });
+        }
+    }
+
+    println!(
+        "E14: symmetry-quotient tuning at 1 MiB — select wall time vs rank count"
+    );
+    table.print();
+    println!(
+        "claim check: quotient pricing is closed-form in (M, C, k), so \
+         `select` cost is flat in P while full materialization grows with \
+         the schedule it must build; below {CROSS_CHECK_MAX_RANKS} ranks \
+         the two paths agree bit-for-bit.\n"
+    );
+    Ok(Summary { rows, max_ranks, quotient_at_max_s, all_agree })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quotient_scales_to_100k_ranks_and_agrees_below_cap() {
+        let s = run(true).unwrap();
+        assert!(s.all_agree, "quotient and full paths diverged");
+        assert_eq!(s.max_ranks, 100_000);
+        // The headline: a 100k-rank tuning decision in interactive time.
+        // The bench pins the tight budget; the test only guards against
+        // accidentally falling off the analytic path entirely.
+        assert!(
+            s.quotient_at_max_s < 5.0,
+            "100k-rank select took {:.3}s — not on the quotient path?",
+            s.quotient_at_max_s
+        );
+        // At 100k ranks nothing is simulated at full size.
+        for r in s.rows.iter().filter(|r| r.ranks > 4096) {
+            assert!(
+                r.full_s.is_none(),
+                "{}: cross-checked an above-cap grid",
+                r.collective
+            );
+        }
+    }
+}

@@ -1,9 +1,10 @@
-//! Experiment harnesses E1–E13: one function per quantitative claim in
+//! Experiment harnesses E1–E14: one function per quantitative claim in
 //! the paper (the paper has no numbered tables/figures; DESIGN.md maps
 //! each claim to an experiment id), plus E10 for the calibration
 //! subsystem, E11 for the payload-size crossover grown on top of it,
-//! E12 for robustness-aware tuning under injected stragglers, and E13
-//! for the self-healing recovery ladder under injected deaths.
+//! E12 for robustness-aware tuning under injected stragglers, E13 for
+//! the self-healing recovery ladder under injected deaths, and E14 for
+//! symmetry-quotient tuning at 100k-rank scale.
 //! Each harness prints the table the paper's evaluation would contain
 //! and returns machine-checkable summary numbers that the integration
 //! tests and benches assert on.
@@ -13,6 +14,7 @@ pub mod e10_calibration;
 pub mod e11_size_crossover;
 pub mod e12_robustness;
 pub mod e13_recovery;
+pub mod e14_quotient;
 pub mod e1_broadcast;
 pub mod e2_nics;
 pub mod e3_gather;
@@ -22,7 +24,7 @@ pub mod e6_validation;
 pub mod e7_allreduce;
 pub mod e8_train;
 
-/// Run an experiment by id ("e1".."e13" or "all"). `quick` trims sweeps
+/// Run an experiment by id ("e1".."e14" or "all"). `quick` trims sweeps
 /// for CI-speed runs.
 pub fn run(id: &str, quick: bool, artifact_dir: &str) -> crate::Result<()> {
     match id {
@@ -62,20 +64,23 @@ pub fn run(id: &str, quick: bool, artifact_dir: &str) -> crate::Result<()> {
         "e13" => {
             e13_recovery::run(quick)?;
         }
+        "e14" => {
+            e14_quotient::run(quick)?;
+        }
         "ablations" => {
             ablations::run(quick)?;
         }
         "all" => {
             for id in [
                 "e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e10", "e11",
-                "e12", "e13", "ablations",
+                "e12", "e13", "e14", "ablations",
             ] {
                 println!("\n================ {} ================", id.to_uppercase());
                 run(id, quick, artifact_dir)?;
             }
         }
         other => anyhow::bail!(
-            "unknown experiment {other:?} (e1..e8, e10..e13, ablations or all; \
+            "unknown experiment {other:?} (e1..e8, e10..e14, ablations or all; \
              e9 is the autotune bench, not an experiment)"
         ),
     }

@@ -1,7 +1,7 @@
 //! `mcomm` CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   experiment <e1..e8,e10..e13|ablations|all> [--quick]  reproduce a paper claim
+//!   experiment <e1..e8,e10..e14|ablations|all> [--quick]  reproduce a paper claim
 //!   train [--steps N] [--algo A] [--virtual] [...]  end-to-end data-parallel
 //!                                            run (--virtual: deterministic
 //!                                            virtual-time comm accounting;
@@ -90,7 +90,7 @@ fn dispatch(args: &[String]) -> mcomm::Result<()> {
                 "mcomm — communication modeling for multi-core clusters\n\
                  \n\
                  usage:\n\
-                 \x20 mcomm experiment <e1..e8,e10..e13|ablations|all> [--quick]\n\
+                 \x20 mcomm experiment <e1..e8,e10..e14|ablations|all> [--quick]\n\
                  \x20 mcomm train [--steps N] [--algo auto|ring|hier|recdoub|raben]\n\
                  \x20        [--machines M --cores C --nics K] [--lan] [--virtual]\n\
                  \x20        [--lr F] [--bytes B] [--inject SPEC]\n\
@@ -233,6 +233,15 @@ fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
     println!(
         "exec engine: {} pool spawn(s), {} runs, plan cache {}/{} hit/miss",
         es.engine_spawns, es.engine_runs, es.plan_hits, es.plan_misses
+    );
+    let ts = trainer.tune_stats();
+    println!(
+        "tuner cache: {}/{} hit/miss, {} invalidation(s), {} live entr{}",
+        ts.hits,
+        ts.misses,
+        ts.invalidations,
+        ts.entries,
+        if ts.entries == 1 { "y" } else { "ies" }
     );
     Ok(())
 }

@@ -1,0 +1,551 @@
+//! Closed-form [`Multicore`] costs for the regular collective families on
+//! uniform M×C switched grids — the symmetry-quotient fast path.
+//!
+//! On a [`crate::topology::SymmetryClass::Uniform`] cluster every machine
+//! is interchangeable, so a schedule's per-round cost depends only on
+//! (M, C, NIC slots, payload bytes, segments) — never on *which* machine a
+//! transfer touches. Each function here walks the builder's rounds
+//! *arithmetically* (O(M) or O(log P) work, never O(P·rounds) transfers)
+//! and reproduces, **bit-exactly**, the [`McCost`] that
+//! [`Multicore::cost_detail_lowered`] would report for the materialized
+//! schedule — after greedy legalization where the raw builder
+//! oversubscribes NICs (binomial, recursive doubling, Rabenseifner).
+//!
+//! Bit-exactness is not an accident; it is the contract the differential
+//! suite (`tests/analytic_differential.rs`) enforces, and what lets the
+//! autotuner's stage 1 rank candidates on a 100 000-rank grid without ever
+//! building a 100 000-rank [`crate::sched::Schedule`]. Three rules make the
+//! floats line up:
+//!
+//! 1. every per-round byte maximum is computed in `u64` (the same
+//!    [`MsgSpec`] chunk arithmetic the lowered path sums), converted to
+//!    `f64` once;
+//! 2. each round contributes exactly one `+=` to the same accumulator
+//!    (`ext_byte_units` or `int_weighted`) that `cost_detail_lowered`
+//!    bumps, in the same round order, with the identical expression shape
+//!    (`byte_ext * bytes as f64`, `actions as f64 + byte_int * bytes as
+//!    f64`);
+//! 3. greedy NIC-capped sub-round structure is *replayed* (run-length
+//!    compressed over machines), not approximated, so round counts match
+//!    [`crate::model::legalize`] exactly.
+//!
+//! The mapping from tuner candidates to these forms lives in
+//! [`crate::tune::analytic_cost`]; eligibility of a concrete
+//! (cluster, placement, collective) triple for the quotient path is the
+//! selector's job.
+
+use crate::model::multicore::{McCost, Multicore};
+use crate::sched::MsgSpec;
+
+/// A uniform switched grid in quotient form: `machines` identical machines
+/// of `cores` ranks each, `nics` NIC slots per machine, full-duplex
+/// switch. This is the entire topology information the closed forms need.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UniformGrid {
+    pub machines: usize,
+    pub cores: usize,
+    pub nics: usize,
+}
+
+impl UniformGrid {
+    pub fn new(machines: usize, cores: usize, nics: usize) -> Self {
+        Self { machines, cores, nics }
+    }
+
+    /// Total ranks `M * C`.
+    pub fn num_ranks(&self) -> usize {
+        self.machines * self.cores
+    }
+
+    /// NIC budget, clamped the way every builder clamps it.
+    fn k(&self) -> usize {
+        self.nics.max(1)
+    }
+}
+
+/// Per-round cost accumulator mirroring `Multicore::cost_detail_lowered`:
+/// one float add per round, into the same field, with the same expression.
+struct Acc {
+    cost: McCost,
+    be: f64,
+    bi: f64,
+}
+
+impl Acc {
+    fn new(model: &Multicore) -> Self {
+        Acc {
+            cost: McCost {
+                ext_rounds: 0,
+                int_units: 0,
+                ext_messages: 0,
+                ext_byte_units: 0.0,
+                int_weighted: 0.0,
+            },
+            be: model.byte_ext,
+            bi: model.byte_int,
+        }
+    }
+
+    /// One external round whose largest transfer carries `max_bytes`.
+    /// (`ext_messages` is bumped separately — messages are counted per
+    /// logical transfer, not per legalized sub-round.)
+    fn ext_round(&mut self, max_bytes: u64) {
+        self.cost.ext_rounds += 1;
+        self.cost.ext_byte_units += self.be * max_bytes as f64;
+    }
+
+    /// One internal round: the busiest proc performs `actions` local ops
+    /// and reads `read_bytes` through shared memory.
+    fn int_round(&mut self, actions: usize, read_bytes: u64) {
+        self.cost.int_units += actions;
+        self.cost.int_weighted += actions as f64 + self.bi * read_bytes as f64;
+    }
+}
+
+/// The tuner-path payload spec for a builder with `chunks` base chunks and
+/// `segments` pipeline waves: byte granularity, exactly what
+/// `Schedule::new(..).set_total_bytes(bytes)` yields.
+fn spec(bytes: u64, chunks: u32, segments: u32) -> MsgSpec {
+    MsgSpec { total_bytes: bytes, chunks: chunks.max(1), segments: segments.max(1), elem_bytes: 1 }
+}
+
+/// `ceil(log2(n))` for `n >= 1` (0 for `n <= 1`).
+fn ceil_log2(n: usize) -> u32 {
+    let mut bits = 0;
+    while (1usize << bits) < n {
+        bits += 1;
+    }
+    bits
+}
+
+// ---------------------------------------------------------------------------
+// Broadcast family
+// ---------------------------------------------------------------------------
+
+/// Flat tree from a machine-leader root: `C-1` shared-memory rounds to the
+/// root's co-located ranks, then `(M-1)*C` single-message external rounds.
+pub fn bcast_flat_tree(model: &Multicore, g: UniformGrid, bytes: u64) -> McCost {
+    let mut acc = Acc::new(model);
+    for _ in 0..g.cores.saturating_sub(1) {
+        acc.int_round(1, bytes);
+    }
+    for _ in 0..g.machines.saturating_sub(1) * g.cores {
+        acc.ext_round(bytes);
+    }
+    acc.cost.ext_messages = g.machines.saturating_sub(1) * g.cores;
+    acc.cost
+}
+
+/// Binomial broadcast over ranks. Rounds whose stride stays inside a
+/// machine are single shared-memory rounds; machine-crossing rounds
+/// oversubscribe NICs once `stride >= C > k`, so the greedy legalization
+/// pass structure is replayed over run-length-compressed machine pairs.
+pub fn bcast_binomial(model: &Multicore, g: UniformGrid, bytes: u64) -> McCost {
+    let (c, k, p) = (g.cores, g.k(), g.num_ranks());
+    let mut acc = Acc::new(model);
+    if p <= 1 {
+        return acc.cost;
+    }
+    let mut send = vec![0usize; g.machines];
+    let mut recv = vec![0usize; g.machines];
+    let mut stride = 1usize;
+    while stride < p {
+        let vmax = stride.min(p - stride);
+        // Runs of senders v with constant (src machine, dst machine); the
+        // builder emits transfers in ascending v, so runs are in scan order.
+        let mut runs: Vec<(usize, usize, usize)> = Vec::new();
+        let mut v = 0usize;
+        while v < vmax {
+            let a = v / c;
+            let b = (v + stride) / c;
+            let next = ((a + 1) * c).min((b + 1) * c - stride).min(vmax);
+            if a != b {
+                runs.push((a, b, next - v));
+            }
+            v = next;
+        }
+        if runs.is_empty() {
+            // Every pair of this round is co-located: one read of the whole
+            // message per receiver, at most one per proc.
+            acc.int_round(1, bytes);
+        } else {
+            acc.cost.ext_messages += runs.iter().map(|r| r.2).sum::<usize>();
+            // Greedy sub-rounds: each pass admits up to k sends/recvs per
+            // machine, in emission order, until every pair has gone.
+            while !runs.is_empty() {
+                for r in runs.iter_mut() {
+                    let t = r.2.min(k - send[r.0]).min(k - recv[r.1]);
+                    send[r.0] += t;
+                    recv[r.1] += t;
+                    r.2 -= t;
+                }
+                for r in runs.iter() {
+                    send[r.0] = 0;
+                    recv[r.1] = 0;
+                }
+                runs.retain(|r| r.2 > 0);
+                acc.ext_round(bytes);
+            }
+        }
+        stride <<= 1;
+    }
+    acc.cost
+}
+
+/// Hierarchical broadcast: binomial over machine representatives
+/// (`ceil(log2 M)` external rounds, one send per machine — always legal),
+/// then one multi-destination leader write per machine.
+pub fn bcast_hierarchical(model: &Multicore, g: UniformGrid, bytes: u64) -> McCost {
+    let m = g.machines;
+    let mut acc = Acc::new(model);
+    let mut stride = 1usize;
+    while stride < m {
+        acc.ext_round(bytes);
+        acc.cost.ext_messages += stride.min(m - stride);
+        stride <<= 1;
+    }
+    if g.cores > 1 {
+        acc.int_round(1, 0);
+    }
+    acc.cost
+}
+
+/// Chain broadcast over machine leaders: `M-1` external rounds; the final
+/// machine's leader write is the only round with no external to hide it.
+pub fn bcast_chain(model: &Multicore, g: UniformGrid, bytes: u64) -> McCost {
+    let mut acc = Acc::new(model);
+    for _ in 0..g.machines.saturating_sub(1) {
+        acc.ext_round(bytes);
+    }
+    acc.cost.ext_messages = g.machines.saturating_sub(1);
+    if g.cores > 1 {
+        acc.int_round(1, 0);
+    }
+    acc.cost
+}
+
+/// Pipelined chain (`segmented(chain, S)`): wave `w`'s hop `j` lands in
+/// absolute round `w + j`, so rounds `0..M+S-2` are external and the
+/// largest segment present in round `t` is wave `max(0, t-(M-2))`. The
+/// last wave's trailing leader write is the only exposed internal round.
+pub fn bcast_chain_segmented(model: &Multicore, g: UniformGrid, bytes: u64, segments: u32) -> McCost {
+    let (m, c) = (g.machines, g.cores);
+    let s = segments.max(1);
+    let mut acc = Acc::new(model);
+    if m <= 1 {
+        // Degenerate single-machine chain: every wave is one leader write,
+        // and writes all pile into round 0.
+        if c > 1 {
+            acc.int_round(s as usize, 0);
+        }
+        return acc.cost;
+    }
+    let sp = spec(bytes, 1, s);
+    for t in 0..m + s as usize - 2 {
+        let wave_lo = t.saturating_sub(m - 2) as u32;
+        acc.ext_round(sp.chunk_bytes(wave_lo));
+    }
+    acc.cost.ext_messages = s as usize * (m - 1);
+    if c > 1 {
+        acc.int_round(1, 0);
+    }
+    acc.cost
+}
+
+/// MC-aware broadcast. On a uniform grid every target heuristic degenerates
+/// to the same order, so one form covers all four: the informed-machine
+/// front grows by `min(k, C)` sends per settled machine plus one from each
+/// machine informed last round; publication writes ride inside the send
+/// rounds, leaving only the final flush exposed.
+pub fn bcast_mc_aware(model: &Multicore, g: UniformGrid, bytes: u64) -> McCost {
+    let (m, c, k) = (g.machines, g.cores, g.k());
+    let mut acc = Acc::new(model);
+    if m > 1 {
+        let budget = k.min(c);
+        let (mut settled, mut fresh, mut uninformed) = (0usize, 1usize, m - 1);
+        while uninformed > 0 {
+            let sends = (settled * budget + fresh).min(uninformed);
+            acc.ext_round(bytes);
+            acc.cost.ext_messages += sends;
+            settled += fresh;
+            fresh = sends;
+            uninformed -= sends;
+        }
+    }
+    if c > 1 {
+        acc.int_round(1, 0);
+    }
+    acc.cost
+}
+
+// ---------------------------------------------------------------------------
+// Allreduce family
+// ---------------------------------------------------------------------------
+
+/// Ring allreduce with `P` chunks (`2(P-1)` rounds). On `M >= 2` every
+/// round ships one full chunk-residue class `c ≡ r (mod C)` across machine
+/// boundaries, and the class's largest member is chunk `r` itself; on a
+/// single machine every round is one shared-memory read per rank.
+pub fn allreduce_ring(model: &Multicore, g: UniformGrid, bytes: u64) -> McCost {
+    let (m, c, p) = (g.machines, g.cores, g.num_ranks());
+    let mut acc = Acc::new(model);
+    if p <= 1 {
+        return acc.cost;
+    }
+    let sp = spec(bytes, p as u32, 1);
+    if m == 1 {
+        for _ in 0..2 * (p - 1) {
+            acc.int_round(1, sp.chunk_bytes(0));
+        }
+        return acc.cost;
+    }
+    let ci = c as i64;
+    for t in 0..p - 1 {
+        // Reduce-scatter step t: boundary senders ship class (C-1-t) mod C.
+        let r = (ci - 1 - t as i64).rem_euclid(ci) as u32;
+        acc.ext_round(sp.chunk_bytes(r));
+    }
+    for t in 0..p - 1 {
+        // Allgather step t: boundary senders ship class (-t) mod C.
+        let r = (-(t as i64)).rem_euclid(ci) as u32;
+        acc.ext_round(sp.chunk_bytes(r));
+    }
+    acc.cost.ext_messages = 2 * (p - 1) * m;
+    acc.cost
+}
+
+/// Largest byte count among segment `w` of the base chunks `≡ r (mod C)`.
+///
+/// Chunk sizes descend `q, .., q, rem, 0, ..` but `split(x, S, w)` is not
+/// monotone in `x`, so both the full-chunk and the remainder-chunk segment
+/// sizes are candidates when the class contains them.
+fn class_segment_max(sp: &MsgSpec, p: usize, c: usize, r: u32, w: u32) -> u64 {
+    let s = sp.segments;
+    let q = sp.total_bytes.div_ceil(p as u64);
+    if q == 0 {
+        return 0;
+    }
+    let full = (sp.total_bytes / q) as usize; // chunks 0..full carry q bytes
+    let mut best = 0u64;
+    if (r as usize) < full {
+        best = sp.chunk_bytes(r * s + w);
+    }
+    if full < p && full % c == r as usize && sp.total_bytes > (full as u64) * q {
+        best = best.max(sp.chunk_bytes(full as u32 * s + w));
+    }
+    best
+}
+
+/// Pipelined ring allreduce (`segmented(ring, S)`). Every rank is busy in
+/// every inner round, so waves serialize end-to-end on `M >= 2`:
+/// `S * 2(P-1)` external rounds, wave `w` round `t` shipping segment `w`
+/// of round `t`'s residue class. On one machine the waves' reads all fit
+/// in the same rounds: `2(P-1)` rounds of `S` reads per rank.
+pub fn allreduce_ring_segmented(
+    model: &Multicore,
+    g: UniformGrid,
+    bytes: u64,
+    segments: u32,
+) -> McCost {
+    let (m, c, p) = (g.machines, g.cores, g.num_ranks());
+    let s = segments.max(1);
+    let mut acc = Acc::new(model);
+    if p <= 1 {
+        return acc.cost;
+    }
+    let sp = spec(bytes, p as u32, s);
+    let rounds = 2 * (p - 1);
+    if m == 1 {
+        for _ in 0..rounds {
+            acc.int_round(s as usize, sp.chunk_elems(0));
+        }
+        return acc.cost;
+    }
+    let ci = c as i64;
+    for w in 0..s {
+        for t in 0..rounds {
+            let r = if t < p - 1 {
+                (ci - 1 - t as i64).rem_euclid(ci) as u32
+            } else {
+                (-((t - (p - 1)) as i64)).rem_euclid(ci) as u32
+            };
+            acc.ext_round(class_segment_max(&sp, p, c, r, w));
+        }
+    }
+    acc.cost.ext_messages = s as usize * rounds * m;
+    acc.cost
+}
+
+/// Recursive doubling (power-of-two `P` only, whole vector every round):
+/// `log2 C` shared-memory rounds, then `log2 M` machine-pair exchange
+/// rounds that legalize into `ceil(C/k)` sub-rounds each.
+pub fn allreduce_recursive_doubling(model: &Multicore, g: UniformGrid, bytes: u64) -> Option<McCost> {
+    let (c, k, p) = (g.cores, g.k(), g.num_ranks());
+    if p == 0 || !p.is_power_of_two() {
+        return None;
+    }
+    let mut acc = Acc::new(model);
+    let mut dist = 1usize;
+    while dist < p {
+        if dist < c {
+            acc.int_round(1, bytes);
+        } else {
+            for _ in 0..c.div_ceil(k) {
+                acc.ext_round(bytes);
+            }
+            acc.cost.ext_messages += p;
+        }
+        dist <<= 1;
+    }
+    Some(acc.cost)
+}
+
+/// Rabenseifner allreduce (power-of-two `P`, `P` chunks): vector-halving
+/// reduce-scatter then doubling allgather. The busiest transfer of a
+/// round with block width `d` is always the prefix block `[0, d)` —
+/// `min(d * ceil(B/P), B)` bytes — and machine-crossing rounds legalize
+/// into `ceil(C/k)` sub-rounds.
+pub fn allreduce_rabenseifner(model: &Multicore, g: UniformGrid, bytes: u64) -> Option<McCost> {
+    let (c, k, p) = (g.cores, g.k(), g.num_ranks());
+    if p == 0 || !p.is_power_of_two() {
+        return None;
+    }
+    let mut acc = Acc::new(model);
+    if p == 1 {
+        return Some(acc.cost);
+    }
+    let q = bytes.div_ceil(p as u64);
+    let prefix = |d: usize| ((d as u64) * q).min(bytes);
+    let kbits = p.trailing_zeros();
+    for kk in 0..kbits {
+        let dist = 1usize << (kbits - 1 - kk);
+        if dist >= c {
+            for _ in 0..c.div_ceil(k) {
+                acc.ext_round(prefix(dist));
+            }
+            acc.cost.ext_messages += p;
+        } else {
+            acc.int_round(1, prefix(dist));
+        }
+    }
+    for kk in 0..kbits {
+        let dist = 1usize << kk;
+        if dist >= c {
+            for _ in 0..c.div_ceil(k) {
+                acc.ext_round(prefix(dist));
+            }
+            acc.cost.ext_messages += p;
+        } else {
+            acc.int_round(1, prefix(dist));
+        }
+    }
+    Some(acc.cost)
+}
+
+/// Hierarchical multicore allreduce: `ceil(log2 C)` full-vector local
+/// merge rounds, one leader hand-off write (when `slots >= 2`),
+/// `slots = min(k, C)` parallel machine rings (`2(M-1)` rounds, all chunk
+/// residues in flight so chunk 0 bounds every round), one publication
+/// write round.
+pub fn allreduce_hierarchical_mc(model: &Multicore, g: UniformGrid, bytes: u64) -> McCost {
+    let (m, c, k) = (g.machines, g.cores, g.k());
+    let mut acc = Acc::new(model);
+    let merge_rounds = ceil_log2(c);
+    if m == 1 {
+        for _ in 0..merge_rounds {
+            acc.int_round(1, bytes);
+        }
+        if c > 1 {
+            acc.int_round(1, 0);
+        }
+        return acc.cost;
+    }
+    let slots = k.min(c).max(1);
+    let sp = spec(bytes, (slots * m) as u32, 1);
+    for _ in 0..merge_rounds {
+        acc.int_round(1, bytes);
+    }
+    if slots > 1 {
+        acc.int_round(1, 0);
+    }
+    for _ in 0..2 * (m - 1) {
+        acc.ext_round(sp.chunk_bytes(0));
+    }
+    acc.cost.ext_messages = 2 * (m - 1) * slots * m;
+    if c > 1 {
+        acc.int_round(1, 0);
+    }
+    acc.cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid(m: usize, c: usize, k: usize) -> UniformGrid {
+        UniformGrid::new(m, c, k)
+    }
+
+    #[test]
+    fn flat_tree_counts() {
+        let model = Multicore::default();
+        let cost = bcast_flat_tree(&model, grid(4, 4, 2), 1 << 10);
+        assert_eq!(cost.ext_rounds, 12);
+        assert_eq!(cost.ext_messages, 12);
+        assert_eq!(cost.int_units, 3);
+    }
+
+    #[test]
+    fn binomial_single_machine_is_all_local() {
+        let model = Multicore::default();
+        let cost = bcast_binomial(&model, grid(1, 8, 2), 1 << 10);
+        assert_eq!(cost.ext_rounds, 0);
+        assert_eq!(cost.ext_messages, 0);
+        assert_eq!(cost.int_units, 3); // log2(8) shared-memory rounds
+    }
+
+    #[test]
+    fn binomial_replays_nic_legalization() {
+        // 2 machines x 8 cores, 2 NICs: the stride-8 round ships 8
+        // cross-machine messages through 2 NICs -> 4 sub-rounds.
+        let model = Multicore::default();
+        let cost = bcast_binomial(&model, grid(2, 8, 2), 1 << 10);
+        assert_eq!(cost.ext_rounds, 4);
+        assert_eq!(cost.ext_messages, 8);
+        assert_eq!(cost.int_units, 3);
+    }
+
+    #[test]
+    fn ring_round_structure() {
+        let model = Multicore::default();
+        let p = 4 * 4;
+        let cost = allreduce_ring(&model, grid(4, 4, 2), 1 << 12);
+        assert_eq!(cost.ext_rounds, 2 * (p - 1));
+        assert_eq!(cost.ext_messages, 2 * (p - 1) * 4);
+        assert_eq!(cost.int_units, 0);
+    }
+
+    #[test]
+    fn recursive_doubling_requires_power_of_two() {
+        let model = Multicore::default();
+        assert!(allreduce_recursive_doubling(&model, grid(3, 4, 2), 64).is_none());
+        let cost = allreduce_recursive_doubling(&model, grid(4, 4, 2), 64).unwrap();
+        // log2(C)=2 local rounds, log2(M)=2 external rounds of ceil(4/2)=2
+        // sub-rounds each.
+        assert_eq!(cost.int_units, 2);
+        assert_eq!(cost.ext_rounds, 4);
+        assert_eq!(cost.ext_messages, 2 * 16);
+    }
+
+    #[test]
+    fn segments_partition_bytes_exactly() {
+        // A wave sweep over the pipelined chain must account every byte of
+        // every wave: sum of per-round maxima == bytes only when M == 2
+        // (one wave in flight per round).
+        let model = Multicore::rounds_only();
+        let b = 1000u64;
+        let cost = bcast_chain_segmented(&model, grid(2, 1, 1), b, 4);
+        assert_eq!(cost.ext_rounds, 4);
+        assert_eq!(cost.ext_messages, 4);
+    }
+}

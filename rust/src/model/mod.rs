@@ -22,11 +22,13 @@
 //! serialized exactly as a real NIC-constrained cluster would serialize
 //! them.
 
+pub mod analytic;
 pub mod legalize;
 pub mod logp;
 pub mod multicore;
 pub mod telephone;
 
+pub use analytic::UniformGrid;
 pub use legalize::legalize;
 pub use logp::LogP;
 pub use multicore::{Duplex, McCost, Multicore};

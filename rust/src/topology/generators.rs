@@ -252,4 +252,104 @@ mod tests {
             assert!(m.speed >= 0.5 && m.speed < 1.5);
         }
     }
+
+    #[test]
+    fn switched_detects_uniform_symmetry() {
+        use crate::topology::SymmetryClass;
+        for (m, c, n) in [(1usize, 4usize, 1usize), (4, 8, 2), (16, 2, 4)] {
+            let cl = switched(m, c, n);
+            assert_eq!(
+                cl.symmetry,
+                SymmetryClass::Uniform { machines: m, cores: c, nics: n }
+            );
+            // A uniform switch has a single machine orbit.
+            assert!(cl.machine_orbits().iter().all(|&o| o == 0));
+        }
+    }
+
+    #[test]
+    fn any_heterogeneity_breaks_uniformity() {
+        use crate::topology::SymmetryClass;
+        // One machine with a different core count...
+        let mut specs = vec![MachineSpec::new(4, 2); 4];
+        specs[2] = MachineSpec::new(8, 2);
+        assert_eq!(hetero_switched(specs).symmetry, SymmetryClass::Irregular);
+        // ...or NIC count...
+        let mut specs = vec![MachineSpec::new(4, 2); 4];
+        specs[1] = MachineSpec::new(4, 1);
+        assert_eq!(hetero_switched(specs).symmetry, SymmetryClass::Irregular);
+        // ...or speed.
+        let mut specs = vec![MachineSpec::new(4, 2); 4];
+        specs[3] = MachineSpec::with_speed(4, 2, 0.5);
+        assert_eq!(hetero_switched(specs).symmetry, SymmetryClass::Irregular);
+        // Identical machines joined by an explicit graph — even one with
+        // a single missing edge off the complete clique — are Irregular:
+        // only the non-blocking switch is quotiented.
+        let m = 4;
+        let mut adj = vec![Vec::new(); m];
+        for a in 0..m {
+            for b in 0..m {
+                if a != b && !(a == 0 && b == 1) && !(a == 1 && b == 0) {
+                    adj[a].push(b);
+                }
+            }
+        }
+        let nearly = Cluster::new(
+            vec![MachineSpec::new(4, 2); m],
+            Interconnect::Graph { adj },
+        )
+        .unwrap();
+        assert_eq!(nearly.symmetry, SymmetryClass::Irregular);
+    }
+
+    #[test]
+    fn structure_splits_orbits_even_with_identical_specs() {
+        // Star with hub and leaves on identical specs: WL refinement
+        // separates the hub by degree alone.
+        let s = star(6, 2, 2, 2);
+        let orbits = s.machine_orbits();
+        assert_ne!(orbits[0], orbits[1]);
+        assert!(orbits[1..].iter().all(|&o| o == orbits[1]));
+        // Path of 5: orbits mirror distance from the ends.
+        assert_eq!(line(5, 2, 1).machine_orbits(), vec![0, 1, 2, 1, 0]);
+        // 3x4 torus is vertex-transitive: one orbit.
+        assert!(torus2d(3, 4, 1, 4).machine_orbits().iter().all(|&o| o == 0));
+    }
+
+    #[test]
+    fn orbits_respect_spec_classes_and_degrees_on_random_graphs() {
+        for seed in 0..5u64 {
+            let c = gnp(10, 0.4, 2, 1, seed);
+            let orbits = c.machine_orbits();
+            assert_eq!(orbits.len(), c.num_machines());
+            // Ids are dense in first-appearance order.
+            let k = orbits.iter().max().unwrap() + 1;
+            for id in 0..k {
+                assert!(orbits.contains(&id), "seed {seed}: orbit id {id} skipped");
+            }
+            // Same orbit => same degree (WL colors are degree-aware).
+            for a in 0..orbits.len() {
+                for b in 0..orbits.len() {
+                    if orbits[a] == orbits[b] {
+                        assert_eq!(c.degree(a), c.degree(b), "seed {seed}: {a} vs {b}");
+                    }
+                }
+            }
+            // Heterogeneous specs: same orbit => same spec class.
+            let h = gnp_hetero(8, 0.5, &[2, 4], &[1, 2], seed);
+            let orbits = h.machine_orbits();
+            for a in 0..orbits.len() {
+                for b in 0..orbits.len() {
+                    if orbits[a] == orbits[b] {
+                        assert_eq!(h.machines[a].cores, h.machines[b].cores);
+                        assert_eq!(h.machines[a].nics, h.machines[b].nics);
+                        assert_eq!(
+                            h.machines[a].speed.to_bits(),
+                            h.machines[b].speed.to_bits()
+                        );
+                    }
+                }
+            }
+        }
+    }
 }

@@ -51,11 +51,34 @@ pub enum Interconnect {
     Graph { adj: Vec<Vec<MachineId>> },
 }
 
+/// Machine-interchangeability structure of a cluster, detected at
+/// construction.
+///
+/// The Multicore model only sees a machine through (cores, NICs, speed)
+/// and the interconnect through reachability — so on a full switch where
+/// every machine carries the same spec, all machines are interchangeable
+/// and the whole topology is determined by the pair (M, C). That quotient
+/// is what lets the tuner price a 100k-rank grid without materializing a
+/// 100k-rank schedule (see `model::analytic` and `tune`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SymmetryClass {
+    /// Uniform M×C switched grid: full-switch interconnect and every
+    /// machine identical in (cores, nics, speed). One machine orbit.
+    Uniform { machines: usize, cores: usize, nics: usize },
+    /// Anything else: heterogeneous specs or an explicit machine graph.
+    /// Machines fall into the orbits reported by [`Cluster::machine_orbits`].
+    Irregular,
+}
+
 /// A cluster: machines plus their interconnect.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Cluster {
     pub machines: Vec<MachineSpec>,
     pub interconnect: Interconnect,
+    /// Symmetry detected by [`Cluster::new`]. Derived from the other two
+    /// fields; stored so every downstream layer can branch on it without
+    /// re-scanning the machine list.
+    pub symmetry: SymmetryClass,
 }
 
 impl Cluster {
@@ -108,7 +131,92 @@ impl Cluster {
                 Interconnect::Graph { adj }
             }
         };
-        Ok(Self { machines, interconnect })
+        let symmetry = Self::classify(&machines, &interconnect);
+        Ok(Self { machines, interconnect, symmetry })
+    }
+
+    /// Detect the symmetry class of a (machines, interconnect) pair.
+    /// Speeds are compared bitwise so classification is deterministic.
+    fn classify(machines: &[MachineSpec], interconnect: &Interconnect) -> SymmetryClass {
+        if !matches!(interconnect, Interconnect::FullSwitch) {
+            return SymmetryClass::Irregular;
+        }
+        let first = machines[0];
+        let uniform = machines.iter().all(|s| {
+            s.cores == first.cores
+                && s.nics == first.nics
+                && s.speed.to_bits() == first.speed.to_bits()
+        });
+        if uniform {
+            SymmetryClass::Uniform {
+                machines: machines.len(),
+                cores: first.cores,
+                nics: first.nics,
+            }
+        } else {
+            SymmetryClass::Irregular
+        }
+    }
+
+    /// Partition machines into interchangeability orbits. Returns one
+    /// orbit id per machine; ids are dense and numbered by first
+    /// appearance, so two clusters with the same orbit structure yield
+    /// the same vector regardless of incidental label choices.
+    ///
+    /// On a switch the orbit of a machine is exactly its spec class
+    /// (cores, nics, speed): the switch connects every pair, so any two
+    /// same-spec machines can be swapped by an automorphism. On a graph
+    /// we refine spec classes by Weisfeiler–Leman color refinement —
+    /// machines in different orbits are guaranteed different colors
+    /// (the converse is not guaranteed, which is fine: the tuner only
+    /// uses orbits to *merge* work, never to prove two machines differ).
+    pub fn machine_orbits(&self) -> Vec<usize> {
+        let spec_key = |s: &MachineSpec| (s.cores, s.nics, s.speed.to_bits());
+        // Initial coloring: spec classes, numbered by first appearance.
+        let mut color_of_key = Vec::new();
+        let mut colors: Vec<usize> = self
+            .machines
+            .iter()
+            .map(|s| {
+                let k = spec_key(s);
+                match color_of_key.iter().position(|&e| e == k) {
+                    Some(i) => i,
+                    None => {
+                        color_of_key.push(k);
+                        color_of_key.len() - 1
+                    }
+                }
+            })
+            .collect();
+        let adj = match &self.interconnect {
+            Interconnect::FullSwitch => return colors,
+            Interconnect::Graph { adj } => adj,
+        };
+        // WL refinement: new color = (old color, sorted neighbor colors),
+        // renumbered by first appearance each round, until stable.
+        loop {
+            let mut sigs: Vec<(usize, Vec<usize>)> = Vec::with_capacity(colors.len());
+            for (m, row) in adj.iter().enumerate() {
+                let mut nb: Vec<usize> = row.iter().map(|&n| colors[n]).collect();
+                nb.sort_unstable();
+                sigs.push((colors[m], nb));
+            }
+            let mut seen: Vec<&(usize, Vec<usize>)> = Vec::new();
+            let next: Vec<usize> = sigs
+                .iter()
+                .map(|sig| match seen.iter().position(|e| *e == sig) {
+                    Some(i) => i,
+                    None => {
+                        seen.push(sig);
+                        seen.len() - 1
+                    }
+                })
+                .collect();
+            if next == colors {
+                return colors;
+            }
+            colors = next;
+        }
     }
 
     pub fn num_machines(&self) -> usize {

@@ -17,11 +17,15 @@ use super::fingerprint::Fingerprint;
 use super::registry::Collective;
 use super::selector::{select, Decision, TuneCfg};
 
-/// Hit/miss counters for observability (E9 benches, tests).
+/// Hit/miss/invalidation counters for observability (E9 benches, the
+/// trainer's end-of-run report, tests).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct CacheStats {
     pub hits: usize,
     pub misses: usize,
+    /// Entries actually removed by [`DecisionCache::invalidate`] (calls
+    /// that found nothing to remove are not counted).
+    pub invalidations: usize,
     pub entries: usize,
 }
 
@@ -32,6 +36,7 @@ pub struct DecisionCache {
     map: HashMap<Fingerprint, Decision>,
     hits: usize,
     misses: usize,
+    invalidations: usize,
 }
 
 impl DecisionCache {
@@ -81,17 +86,27 @@ impl DecisionCache {
     /// Returns whether an entry was actually removed. Hit/miss counters
     /// are untouched — invalidation is not a lookup.
     pub fn invalidate(&mut self, fp: &Fingerprint) -> bool {
-        self.map.remove(fp).is_some()
+        let removed = self.map.remove(fp).is_some();
+        if removed {
+            self.invalidations += 1;
+        }
+        removed
     }
 
     pub fn stats(&self) -> CacheStats {
-        CacheStats { hits: self.hits, misses: self.misses, entries: self.map.len() }
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            invalidations: self.invalidations,
+            entries: self.map.len(),
+        }
     }
 
     pub fn clear(&mut self) {
         self.map.clear();
         self.hits = 0;
         self.misses = 0;
+        self.invalidations = 0;
     }
 }
 
@@ -112,14 +127,20 @@ mod tests {
             .unwrap()
             .schedule
             .clone();
-        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 1, entries: 1 });
+        assert_eq!(
+            cache.stats(),
+            CacheStats { hits: 0, misses: 1, invalidations: 0, entries: 1 }
+        );
 
         let second = cache
             .get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg)
             .unwrap()
             .schedule
             .clone();
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, entries: 1 });
+        assert_eq!(
+            cache.stats(),
+            CacheStats { hits: 1, misses: 1, invalidations: 0, entries: 1 }
+        );
         assert_eq!(first, second);
     }
 
@@ -136,7 +157,10 @@ mod tests {
         let cl2 = switched(4, 4, 1);
         let pl2 = Placement::block(&cl2);
         cache.get_or_tune(&cl2, &pl2, Collective::Broadcast { root: 0 }, &cfg).unwrap();
-        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 3, entries: 3 });
+        assert_eq!(
+            cache.stats(),
+            CacheStats { hits: 0, misses: 3, invalidations: 0, entries: 3 }
+        );
     }
 
     #[test]
@@ -166,11 +190,12 @@ mod tests {
         assert!(!cache.invalidate(&fp), "second invalidation finds nothing");
         let s = cache.stats();
         assert_eq!(s.entries, 1, "only the invalidated entry is gone");
+        assert_eq!(s.invalidations, 1, "no-op invalidation is not counted");
         // The next get_or_tune re-tunes (a miss), the untouched entry hits.
         cache.get_or_tune(&cl, &pl, Collective::Allreduce, &cfg).unwrap();
         cache.get_or_tune(&cl, &pl, Collective::Allgather, &cfg).unwrap();
         let s = cache.stats();
-        assert_eq!((s.hits, s.misses, s.entries), (1, 3, 2));
+        assert_eq!((s.hits, s.misses, s.invalidations, s.entries), (1, 3, 1, 2));
     }
 
     #[test]

@@ -11,17 +11,29 @@
 //! [`crate::tune::Decision`] — rank numbers and all — can be reused
 //! verbatim.
 //!
-//! **Canonical** here means *normalized representation*, not graph
-//! isomorphism: floats are compared bit-exactly, graph adjacency is
-//! folded to a sorted undirected edge list (so the same graph described
-//! in any order, with duplicate or one-sided edges, fingerprints
-//! identically — [`crate::topology::Cluster::new`] performs the
-//! normalization), and a switch is a flag rather than a clique.
-//! Relabeled-but-isomorphic clusters fingerprint differently and tune
-//! independently; that is deliberately conservative (full canonical
-//! labeling is graph-isomorphism-hard) and always sound, because a cached
-//! schedule's rank numbering only fits the exact topology it was tuned
-//! for.
+//! **Canonical** here means *normalized representation* plus the one
+//! isomorphism we can quotient for free: floats are compared
+//! bit-exactly, graph adjacency is folded to a sorted undirected edge
+//! list (so the same graph described in any order, with duplicate or
+//! one-sided edges, fingerprints identically —
+//! [`crate::topology::Cluster::new`] performs the normalization), a
+//! switch is a flag rather than a clique, and on a
+//! [`crate::topology::SymmetryClass::Uniform`] cluster the placement
+//! map is relabeled into machine first-appearance order. Every machine
+//! of a uniform switched grid is interchangeable, so machine-permuted
+//! but otherwise identical placements share one cache entry — the
+//! cached schedule is rank-indexed, its co-location structure is the
+//! same under both placements, and with uniform machines it is valid
+//! and identically priced on either. Locality still discriminates
+//! (block and round-robin maps stay distinct under first-appearance
+//! relabeling), and the quotient is skipped whenever machine identity
+//! carries physics — injected per-machine slowdowns or robustness
+//! draws ([`crate::tune::Robustness`]) pin real machine indices, so
+//! those configurations fingerprint verbatim. `Irregular` clusters
+//! always fingerprint verbatim too: full canonical labeling is
+//! graph-isomorphism-hard, and being conservative is always sound
+//! because a cached schedule's rank numbering only fits the exact
+//! topology it was tuned for.
 
 use crate::sim::SimParams;
 use crate::topology::{Cluster, Interconnect, Placement};
@@ -36,7 +48,9 @@ pub struct Fingerprint {
     edges: Vec<(usize, usize)>,
     /// Non-blocking switch (edge list irrelevant) vs. explicit graph.
     switch: bool,
-    /// Placement map: rank -> machine.
+    /// Placement map: rank -> machine, relabeled into first-appearance
+    /// order on uniform clusters with machine-symmetric physics (see the
+    /// module docs).
     machine_of: Vec<usize>,
     /// The requested operation, root included.
     collective: Collective,
@@ -61,6 +75,10 @@ pub struct Fingerprint {
     /// Robustness knob: (straggler draws, draw seed, factor bits). A
     /// clean tune (draws = 0) and a robust tune must never alias.
     robustness: (usize, u64, u64),
+    /// Quotient knobs: fast path on/off and the materialization cap.
+    /// Above the cap the cached decision carries no schedule, so
+    /// configurations with different caps must never alias.
+    quotient: (bool, usize),
 }
 
 impl Fingerprint {
@@ -90,9 +108,32 @@ impl Fingerprint {
                 (false, edges)
             }
         };
-        let machine_of = (0..placement.num_ranks())
+        let mut machine_of: Vec<usize> = (0..placement.num_ranks())
             .map(|r| placement.machine_of(r))
             .collect();
+        // Machine-relabeling quotient: on a uniform cluster every machine
+        // is interchangeable, so fold the placement into first-appearance
+        // order — unless machine identity carries physics (injected
+        // per-machine slowdowns, robustness draws), in which case the
+        // verbatim map is the sound key.
+        let symmetric_physics =
+            cfg.sim.slowdown.is_empty() && cfg.robustness.draws == 0;
+        if symmetric_physics
+            && matches!(
+                cluster.symmetry,
+                crate::topology::SymmetryClass::Uniform { .. }
+            )
+        {
+            let mut relabel = vec![usize::MAX; cluster.num_machines()];
+            let mut next = 0usize;
+            for m in machine_of.iter_mut() {
+                if relabel[*m] == usize::MAX {
+                    relabel[*m] = next;
+                    next += 1;
+                }
+                *m = relabel[*m];
+            }
+        }
         Self {
             machines,
             edges,
@@ -112,6 +153,7 @@ impl Fingerprint {
                 cfg.robustness.seed,
                 cfg.robustness.factor.to_bits(),
             ),
+            quotient: (cfg.quotient, cfg.quotient_sim_cap),
         }
     }
 
@@ -144,6 +186,8 @@ impl Fingerprint {
         h = fnv(h, self.robustness.0 as u64);
         h = fnv(h, self.robustness.1);
         h = fnv(h, self.robustness.2);
+        h = fnv(h, self.quotient.0 as u64);
+        h = fnv(h, self.quotient.1 as u64);
         h
     }
 }
@@ -376,6 +420,15 @@ mod tests {
         wide.shortlist = usize::MAX;
         assert_ne!(base, fp(&switched(3, 4, 2), &wide));
 
+        // Quotient knobs: a fast-path and a full-materialization tune
+        // may carry different decisions (schedule presence), as may two
+        // different materialization caps.
+        let off = TuneCfg::default().with_quotient(false);
+        assert_ne!(base, fp(&switched(3, 4, 2), &off));
+        let mut capped = TuneCfg::default();
+        capped.quotient_sim_cap = 64;
+        assert_ne!(base, fp(&switched(3, 4, 2), &capped));
+
         // Machine-profile provenance: identical model/sim knobs but a
         // different calibration digest must not alias (recalibration
         // invalidates cached decisions).
@@ -384,6 +437,51 @@ mod tests {
         let fp_recal = fp(&switched(3, 4, 2), &recal);
         assert_ne!(base, fp_recal);
         assert_ne!(base.digest(), fp_recal.digest());
+    }
+
+    #[test]
+    fn uniform_machine_relabeling_aliases() {
+        // Machine-permuted but otherwise identical placements on a
+        // uniform grid are one fingerprint — and one cache entry.
+        let cl = switched(3, 2, 1);
+        let cfg = TuneCfg::default();
+        let coll = Collective::Allreduce;
+        let block = Placement::block(&cl); // machines [0,0,1,1,2,2]
+        let perm = Placement::explicit(&cl, vec![2, 2, 0, 0, 1, 1]).unwrap();
+        let a = Fingerprint::new(&cl, &block, coll, &cfg);
+        let b = Fingerprint::new(&cl, &perm, coll, &cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+
+        let mut cache = crate::tune::DecisionCache::new();
+        cache.get_or_tune(&cl, &block, coll, &cfg).unwrap();
+        cache.get_or_tune(&cl, &perm, coll, &cfg).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+
+        // Machine-asymmetric physics pin real machine indices: no
+        // relabeling under an injected straggler or robustness draws.
+        let mut strag = TuneCfg::default();
+        strag.sim = strag.sim.with_slowdown(0, 4.0);
+        assert_ne!(
+            Fingerprint::new(&cl, &block, coll, &strag),
+            Fingerprint::new(&cl, &perm, coll, &strag)
+        );
+        let robust = TuneCfg::default().with_robustness(2, 9, 8.0);
+        assert_ne!(
+            Fingerprint::new(&cl, &block, coll, &robust),
+            Fingerprint::new(&cl, &perm, coll, &robust)
+        );
+
+        // Irregular clusters never relabel: the same permutation on a
+        // line topology keeps its verbatim (distinct) key.
+        let line = crate::topology::line(3, 2, 1);
+        let lb = Placement::block(&line);
+        let lp = Placement::explicit(&line, vec![2, 2, 0, 0, 1, 1]).unwrap();
+        assert_ne!(
+            Fingerprint::new(&line, &lb, coll, &cfg),
+            Fingerprint::new(&line, &lp, coll, &cfg)
+        );
     }
 
     #[test]

@@ -26,15 +26,24 @@
 //!  registry::candidates_for        every applicable builder variant,
 //!        │                         heuristic / slot / segment sweeps
 //!        ▼
-//!  stage 1: Multicore model cost   build + size + legalize + price in
-//!        │                         byte-weighted rounds, keep the
-//!        │                         `shortlist` best
+//!  stage 1: Multicore model cost   uniform M×C grid + block placement?
+//!        │                         price through model::analytic closed
+//!        │                         forms on the symmetry quotient (no
+//!        │                         schedule built); otherwise build +
+//!        │                         size + legalize + price in
+//!        │                         byte-weighted rounds. Keep the
+//!        │                         `shortlist` best either way.
 //!        ▼
 //!  stage 2: sim::simulate          continuous-time confirmation over the
-//!        │                         shortlist ∪ {flat baseline}
+//!        │                         shortlist ∪ {flat baseline}; above
+//!        │                         TuneCfg::quotient_sim_cap ranks the
+//!        │                         pool is confirmed on a representative
+//!        │                         grid and the Decision carries no
+//!        │                         schedule (materialize on demand)
 //!        ▼
 //!  Decision ──▶ DecisionCache      keyed by canonical Fingerprint
-//!                                  (size class included); repeat
+//!                                  (size class included, relabeling-
+//!                                  invariant on uniform grids); repeat
 //!                                  lookups are one hash probe
 //! ```
 //!
@@ -72,7 +81,8 @@ pub mod selector;
 pub use cache::{CacheStats, DecisionCache};
 pub use fingerprint::Fingerprint;
 pub use registry::{
-    candidates_for, flat_baseline, CandidateId, Collective, SegBase, SEGMENT_SWEEP,
+    analytic_cost, candidates_for, flat_baseline, has_analytic, CandidateId,
+    Collective, SegBase, SEGMENT_SWEEP,
 };
 pub use selector::{select, select_many, Decision, Robustness, TuneCfg};
 
@@ -102,13 +112,18 @@ impl Tuned {
     }
 
     /// The tuned schedule for `collective` on this topology (cached).
+    /// Above [`TuneCfg::quotient_sim_cap`] ranks the cached decision
+    /// carries no schedule, so this materializes the winner on demand —
+    /// callers that only need the *choice* at scale should use
+    /// [`Tuned::decision`] instead.
     pub fn schedule(
         &self,
         cluster: &Cluster,
         placement: &Placement,
         collective: Collective,
     ) -> crate::Result<Schedule> {
-        Ok(self.decision(cluster, placement, collective)?.schedule)
+        self.decision(cluster, placement, collective)?
+            .materialize(cluster, placement, &self.cfg)
     }
 
     /// The full tuning decision (cached), cloned out of the cache.

@@ -19,6 +19,7 @@ use crate::collectives::{
     allgather, allreduce, alltoall, broadcast, gather, reduce, reduce_scatter, scatter,
     segmented::segmented, TargetHeuristic,
 };
+use crate::model::{analytic, McCost, Multicore, UniformGrid};
 use crate::sched::Schedule;
 use crate::topology::{Cluster, Interconnect, Placement};
 use crate::Rank;
@@ -356,6 +357,70 @@ pub fn candidates_for(
         }
     }
     out
+}
+
+/// Does this candidate have a closed-form [`McCost`] on uniform M×C grids
+/// (see [`crate::model::analytic`])? The quotient fast path in the
+/// selector engages only when *every* candidate of a collective answers
+/// yes — a single `false` falls the whole collective back to
+/// materialization, so adding a builder without a closed form degrades
+/// gracefully instead of silently mispricing.
+pub fn has_analytic(id: CandidateId) -> bool {
+    matches!(
+        id,
+        CandidateId::BcastFlatTree { .. }
+            | CandidateId::BcastBinomial { .. }
+            | CandidateId::BcastHierarchical { .. }
+            | CandidateId::BcastMcAware { .. }
+            | CandidateId::BcastChainMc { .. }
+            | CandidateId::AllreduceRing
+            | CandidateId::AllreduceRecursiveDoubling
+            | CandidateId::AllreduceRabenseifner
+            | CandidateId::AllreduceHierarchicalMc
+            | CandidateId::Segmented {
+                base: SegBase::BcastChainMc { .. } | SegBase::AllreduceRing,
+                ..
+            }
+    )
+}
+
+/// Closed-form [`Multicore`] cost of `id` on a uniform grid with a
+/// block placement and a machine-leader root — bit-exact against
+/// `cost_detail_lowered` on the materialized (legalized) schedule.
+/// `None` when the candidate has no analytic form, or when its builder
+/// premise fails (power-of-two ranks for the butterfly allreduces).
+pub fn analytic_cost(
+    id: CandidateId,
+    model: &Multicore,
+    grid: UniformGrid,
+    msg_bytes: u64,
+) -> Option<McCost> {
+    Some(match id {
+        CandidateId::BcastFlatTree { .. } => analytic::bcast_flat_tree(model, grid, msg_bytes),
+        CandidateId::BcastBinomial { .. } => analytic::bcast_binomial(model, grid, msg_bytes),
+        CandidateId::BcastHierarchical { .. } => {
+            analytic::bcast_hierarchical(model, grid, msg_bytes)
+        }
+        CandidateId::BcastMcAware { .. } => analytic::bcast_mc_aware(model, grid, msg_bytes),
+        CandidateId::BcastChainMc { .. } => analytic::bcast_chain(model, grid, msg_bytes),
+        CandidateId::Segmented { base: SegBase::BcastChainMc { .. }, segments } => {
+            analytic::bcast_chain_segmented(model, grid, msg_bytes, segments)
+        }
+        CandidateId::Segmented { base: SegBase::AllreduceRing, segments } => {
+            analytic::allreduce_ring_segmented(model, grid, msg_bytes, segments)
+        }
+        CandidateId::AllreduceRing => analytic::allreduce_ring(model, grid, msg_bytes),
+        CandidateId::AllreduceRecursiveDoubling => {
+            analytic::allreduce_recursive_doubling(model, grid, msg_bytes)?
+        }
+        CandidateId::AllreduceRabenseifner => {
+            analytic::allreduce_rabenseifner(model, grid, msg_bytes)?
+        }
+        CandidateId::AllreduceHierarchicalMc => {
+            analytic::allreduce_hierarchical_mc(model, grid, msg_bytes)
+        }
+        _ => return None,
+    })
 }
 
 /// The multi-core-oblivious baseline the paper (and our guarantee in

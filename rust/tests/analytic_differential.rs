@@ -1,0 +1,295 @@
+//! Differential gate for the symmetry quotient: every closed form in
+//! [`mcomm::model::analytic`] must be **bit-exact** against the cost of
+//! the schedule it prices — built by the real builder, legalized when
+//! the raw schedule oversubscribes NICs, lowered, and tallied by
+//! `Multicore::cost_detail_lowered`. Field-by-field `McCost` equality,
+//! with the `f64` fields compared by bit pattern: the quotient fast
+//! path substitutes analytic numbers for materialized ones inside the
+//! selector's ranking, so "close" is not good enough — a single ULP of
+//! drift could flip a shortlist cut.
+//!
+//! Three legs:
+//!  1. analytic == materialized `cost_detail_lowered`, swept over
+//!     grids (including M=1, C=1, non-powers of two), NIC counts,
+//!     payload sizes (zero, odd, uneven-split), byte-weight models,
+//!     and segment counts;
+//!  2. quotient-enabled `tune::select` == full-materialization
+//!     `tune::select` (same pick, same bit-level scores, same
+//!     schedule) on uniform grids up to 256 ranks, with the winner's
+//!     `sim_time` replayed against an independent simulation;
+//!  3. above-cap decisions materialize on demand into schedules that
+//!     pass symbolic execution and model validation.
+
+use mcomm::model::{legalize, Duplex, McCost, Multicore, UniformGrid};
+use mcomm::model::CostModel;
+use mcomm::sched::{symexec, LoweredSchedule, TopoCtx};
+use mcomm::sim::simulate;
+use mcomm::topology::{switched, Cluster, Placement};
+use mcomm::tune::{
+    self, analytic_cost, candidates_for, has_analytic, CandidateId, Collective,
+    SegBase, TuneCfg,
+};
+
+/// The selector's `build_and_price` materialization, replicated exactly:
+/// build, size, try the raw schedule, legalize on rejection.
+fn materialized_detail(
+    model: &Multicore,
+    cl: &Cluster,
+    pl: &Placement,
+    id: CandidateId,
+    bytes: u64,
+) -> McCost {
+    let ctx = TopoCtx::new(cl, pl);
+    let mut built = id.build(cl, pl).expect("builder");
+    built.set_total_bytes(bytes);
+    if let Ok(low) = LoweredSchedule::compile(&ctx, &built) {
+        if let Ok(d) = model.cost_detail_lowered(&low) {
+            return d;
+        }
+    }
+    let legal = legalize(model, cl, pl, &built);
+    let low = LoweredSchedule::compile(&ctx, &legal).expect("legalized compiles");
+    model.cost_detail_lowered(&low).expect("legalized is legal")
+}
+
+fn assert_cost_eq(analytic: &McCost, materialized: &McCost, ctx: &str) {
+    assert_eq!(
+        analytic.ext_rounds, materialized.ext_rounds,
+        "{ctx}: ext_rounds"
+    );
+    assert_eq!(analytic.int_units, materialized.int_units, "{ctx}: int_units");
+    assert_eq!(
+        analytic.ext_messages, materialized.ext_messages,
+        "{ctx}: ext_messages"
+    );
+    assert_eq!(
+        analytic.ext_byte_units.to_bits(),
+        materialized.ext_byte_units.to_bits(),
+        "{ctx}: ext_byte_units {} vs {}",
+        analytic.ext_byte_units,
+        materialized.ext_byte_units,
+    );
+    assert_eq!(
+        analytic.int_weighted.to_bits(),
+        materialized.int_weighted.to_bits(),
+        "{ctx}: int_weighted {} vs {}",
+        analytic.int_weighted,
+        materialized.int_weighted,
+    );
+}
+
+/// Grid sweep: degenerate (1×1), single-machine many-core, single-core
+/// many-machine, powers of two (the butterfly premise), and ragged
+/// shapes whose uneven chunk splits stress `MsgSpec` arithmetic.
+const GRIDS: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 4, 2),
+    (1, 8, 1),
+    (2, 1, 1),
+    (2, 3, 1),
+    (2, 8, 2),
+    (3, 4, 2),
+    (4, 4, 1),
+    (4, 4, 4),
+    (5, 3, 2),
+    (8, 2, 2),
+    (4, 8, 3),
+];
+
+/// Zero bytes (pure round counting), odd bytes (uneven `div_ceil`
+/// splits), a block size, and a large odd payload.
+const BYTES: &[u64] = &[0, 1337, 16 << 10, (1 << 20) + 7];
+
+fn models() -> Vec<(&'static str, Multicore)> {
+    vec![
+        ("default", Multicore::default()),
+        ("rounds_only", Multicore::rounds_only()),
+        (
+            "custom",
+            Multicore {
+                duplex: Duplex::Full,
+                alpha: 0.25,
+                byte_ext: 3.0e-9,
+                byte_int: 5.0e-10,
+            },
+        ),
+    ]
+}
+
+/// Leg 1: every registered candidate with a closed form, across the
+/// full grid × payload × model sweep. Also pins the coverage invariant
+/// the fast path relies on: on uniform grids, *every* broadcast and
+/// allreduce candidate has an analytic form (one gap would silently
+/// disable the quotient for the whole collective).
+#[test]
+fn analytic_forms_match_materialized_costs() {
+    for &(m, c, n) in GRIDS {
+        let cl = switched(m, c, n);
+        let pl = Placement::block(&cl);
+        let grid = UniformGrid::new(m, c, n);
+        for coll in [Collective::Broadcast { root: 0 }, Collective::Allreduce] {
+            let ids = candidates_for(coll, &cl, &pl);
+            assert!(
+                ids.iter().all(|&id| has_analytic(id)),
+                "({m}x{c},k={n}) {}: a candidate lacks an analytic form",
+                coll.name()
+            );
+            for id in ids {
+                for (mname, model) in models() {
+                    for &bytes in BYTES {
+                        let analytic = analytic_cost(id, &model, grid, bytes)
+                            .unwrap_or_else(|| {
+                                panic!("({m}x{c},k={n}) {}: no analytic cost", id.label())
+                            });
+                        let detail = materialized_detail(&model, &cl, &pl, id, bytes);
+                        let ctx = format!(
+                            "({m}x{c},k={n}) {} {mname} {bytes}B",
+                            id.label()
+                        );
+                        assert_cost_eq(&analytic, &detail, &ctx);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Leg 1, segment-count extension: the registry only sweeps segment
+/// counts 2 for the allreduce ring, but the closed form claims all
+/// counts — check 2, 4, 8 for both segmented families directly.
+#[test]
+fn segmented_forms_match_across_segment_counts() {
+    let model = Multicore::default();
+    for &(m, c, n) in &[(2usize, 3usize, 1usize), (3, 4, 2), (4, 4, 4), (1, 6, 2)] {
+        let cl = switched(m, c, n);
+        let pl = Placement::block(&cl);
+        let grid = UniformGrid::new(m, c, n);
+        for segments in [2u32, 4, 8] {
+            for base in [
+                SegBase::BcastChainMc { root: 0 },
+                SegBase::AllreduceRing,
+            ] {
+                let id = CandidateId::Segmented { base, segments };
+                for &bytes in &[1337u64, (1 << 20) + 7] {
+                    let analytic = analytic_cost(id, &model, grid, bytes)
+                        .expect("segmented closed form");
+                    let detail = materialized_detail(&model, &cl, &pl, id, bytes);
+                    let ctx =
+                        format!("({m}x{c},k={n}) {} {bytes}B", id.label());
+                    assert_cost_eq(&analytic, &detail, &ctx);
+                }
+            }
+        }
+    }
+}
+
+/// Leg 1, root symmetry: the quotient accepts any machine-leader root;
+/// the closed forms must hold at a non-zero leader too.
+#[test]
+fn analytic_forms_hold_at_nonzero_leader_root() {
+    let (m, c, n) = (3usize, 4usize, 2usize);
+    let cl = switched(m, c, n);
+    let pl = Placement::block(&cl);
+    let grid = UniformGrid::new(m, c, n);
+    let model = Multicore::default();
+    let root = c; // leader of machine 1
+    for id in candidates_for(Collective::Broadcast { root }, &cl, &pl) {
+        let analytic =
+            analytic_cost(id, &model, grid, 16 << 10).expect("closed form");
+        let detail = materialized_detail(&model, &cl, &pl, id, 16 << 10);
+        assert_cost_eq(&analytic, &detail, &format!("root {root} {}", id.label()));
+    }
+}
+
+/// Leg 2: quotient-enabled selection is indistinguishable from full
+/// materialization on every uniform grid up to 256 ranks — same pick,
+/// bit-identical scores, identical schedule — and the winner's reported
+/// `sim_time` bit-matches an independent simulation replay.
+#[test]
+fn quotient_select_agrees_with_full_materialization_up_to_256_ranks() {
+    let quotient = TuneCfg::default();
+    let full = TuneCfg::default().with_quotient(false);
+    let grids: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 16, 2),
+        (2, 2, 1),
+        (2, 4, 2),
+        (3, 3, 1),
+        (4, 4, 2),
+        (4, 8, 1),
+        (5, 5, 2),
+        (8, 8, 2),
+        (16, 4, 1),
+        (16, 16, 2),
+        (32, 8, 4),
+    ];
+    for &(m, c, n) in grids {
+        let cl = switched(m, c, n);
+        let pl = Placement::block(&cl);
+        assert!(pl.num_ranks() <= 256, "sweep outgrew its own premise");
+        for coll in [Collective::Broadcast { root: 0 }, Collective::Allreduce] {
+            let ctx = format!("({m}x{c},k={n}) {}", coll.name());
+            let q = tune::select(&cl, &pl, coll, &quotient).unwrap();
+            let f = tune::select(&cl, &pl, coll, &full).unwrap();
+            assert_eq!(q.choice, f.choice, "{ctx}: pick diverged");
+            assert_eq!(
+                q.model_cost.to_bits(),
+                f.model_cost.to_bits(),
+                "{ctx}: model_cost {} vs {}",
+                q.model_cost,
+                f.model_cost
+            );
+            assert_eq!(
+                q.sim_time.to_bits(),
+                f.sim_time.to_bits(),
+                "{ctx}: sim_time {} vs {}",
+                q.sim_time,
+                f.sim_time
+            );
+            assert_eq!(
+                q.baseline_sim.map(f64::to_bits),
+                f.baseline_sim.map(f64::to_bits),
+                "{ctx}: baseline_sim"
+            );
+            assert_eq!(q.considered, f.considered, "{ctx}: considered");
+            assert_eq!(q.simulated, f.simulated, "{ctx}: simulated");
+            assert_eq!(
+                q.schedule(),
+                f.schedule(),
+                "{ctx}: materialized schedules diverged"
+            );
+            // The third leg of the differential: the decision's score IS
+            // the simulated makespan of the schedule it carries.
+            let replay =
+                simulate(&cl, &pl, q.schedule(), &quotient.sim).unwrap().t_end;
+            assert_eq!(
+                q.sim_time.to_bits(),
+                replay.to_bits(),
+                "{ctx}: sim_time {} != replayed makespan {replay}",
+                q.sim_time
+            );
+        }
+    }
+}
+
+/// Leg 3: above the simulation cap the decision ships without a
+/// schedule; `materialize` must still produce a semantically correct,
+/// model-legal schedule for the analytically chosen algorithm.
+#[test]
+fn above_cap_decision_materializes_verified_schedule() {
+    let cl = switched(64, 8, 2); // 512 ranks
+    let pl = Placement::block(&cl);
+    let mut cfg = TuneCfg::default();
+    cfg.quotient_sim_cap = 64; // 512 > 64, representative 4x8=32 <= 64
+    for coll in [Collective::Broadcast { root: 0 }, Collective::Allreduce] {
+        let d = tune::select(&cl, &pl, coll, &cfg).unwrap();
+        assert!(
+            has_analytic(d.choice),
+            "{}: representative pick lacks analytic form",
+            coll.name()
+        );
+        let s = d.materialize(&cl, &pl, &cfg).unwrap();
+        symexec::verify(&s).unwrap();
+        cfg.model.validate(&cl, &pl, &s).unwrap();
+    }
+}

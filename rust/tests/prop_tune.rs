@@ -54,10 +54,10 @@ fn tuned_choice_never_loses_to_flat_baseline() {
                 .unwrap_or_else(|e| panic!("{ctx}: select: {e}"));
 
             // (a) semantic correctness, (b) model legality.
-            symexec::verify(&d.schedule)
+            symexec::verify(d.schedule())
                 .unwrap_or_else(|e| panic!("{ctx}: symexec: {e}"));
             cfg.model
-                .validate(&cl, &pl, &d.schedule)
+                .validate(&cl, &pl, d.schedule())
                 .unwrap_or_else(|e| panic!("{ctx}: validate: {e}"));
 
             // (c) the contract, against an independently computed
@@ -110,7 +110,7 @@ fn tuned_decision_changes_across_size_sweep() {
         let coll = Collective::Broadcast { root: 0 };
         let small = tune::select(&cl, &pl, coll, &small_cfg).unwrap();
         let large = tune::select(&cl, &pl, coll, &large_cfg).unwrap();
-        symexec::verify(&large.schedule).unwrap();
+        symexec::verify(large.schedule()).unwrap();
         if small.choice != large.choice {
             decision_changed += 1;
         }
@@ -170,8 +170,8 @@ fn robust_pick_degrades_no_worse_than_clean_pick() {
                 }
                 acc
             };
-            let clean_degraded = mean(&clean.schedule);
-            let robust_degraded = mean(&robust.schedule);
+            let clean_degraded = mean(clean.schedule());
+            let robust_degraded = mean(robust.schedule());
             assert!(
                 robust_degraded <= clean_degraded + 1e-12,
                 "{ctx}: robust pick {} degrades to {robust_degraded}, \
