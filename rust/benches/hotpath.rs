@@ -265,6 +265,35 @@ fn main() {
         std::hint::black_box(engine.execute(&plan, inputs, &vt_params).unwrap());
     }));
 
+    // Real-process backend: the same 8-rank broadcast with every rank an
+    // OS process over /dev/shm segments + loopback TCP (spawn-per-call —
+    // the delta against the one-shot "exec:" line IS the fork/segment/
+    // socket setup plus real IPC), and the virtual-time variant to trend
+    // against the thread engine's vt line. Skipped (loudly — the baseline
+    // contract will flag the missing keys) without a writable /dev/shm.
+    if mcomm::exec::proc::available() {
+        let exe = std::path::PathBuf::from(env!("CARGO_BIN_EXE_mcomm"));
+        let proc_params = ExecParams::zero().with_proc_backend(Some(exe.clone()));
+        stats.push(bench("proc: 8-rank broadcast over shm+tcp", || {
+            let inputs = exec::initial_inputs(&bcast, |_r, _c| vec![0.0f32; 256]);
+            std::hint::black_box(
+                exec::run(&small, &small_pl, &bcast, inputs, &proc_params).unwrap(),
+            );
+        }));
+        let proc_vt =
+            ExecParams::lan_scaled().with_virtual_time().with_proc_backend(Some(exe));
+        stats.push(bench("proc: broadcast virtual-time (8 procs)", || {
+            let inputs = exec::initial_inputs(&bcast, |_r, _c| vec![0.0f32; 256]);
+            std::hint::black_box(
+                exec::run(&small, &small_pl, &bcast, inputs, &proc_vt).unwrap(),
+            );
+        }));
+    } else {
+        eprintln!(
+            "proc backend unavailable (no writable /dev/shm): skipping proc: keys"
+        );
+    }
+
     // Calibration: the full probe → fit → profile pipeline in virtual
     // time (the CI smoke path). Tracks how much machine time a
     // recalibration costs as the probe suite grows.

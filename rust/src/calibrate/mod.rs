@@ -103,16 +103,33 @@ impl CalibrateCfg {
         Self { exec: ExecParams::zero(), repeats: 9, ..Self::default() }
     }
 
+    /// Wall-clock calibration over the real-process backend
+    /// ([`crate::exec::Backend::Proc`]): every rank is an OS process, so
+    /// the fitted parameters include real `/dev/shm` publication and
+    /// loopback-socket costs instead of same-address-space shortcuts.
+    /// `worker_exe` overrides the spawned binary (tests pass their own
+    /// `mcomm`; `None` = `current_exe`, right for the CLI).
+    pub fn proc(worker_exe: Option<std::path::PathBuf>) -> Self {
+        Self {
+            exec: ExecParams::zero().with_proc_backend(worker_exe),
+            repeats: 9,
+            ..Self::default()
+        }
+    }
+
     /// Calibrate against explicit injected physics in deterministic
     /// virtual time (recovery experiments, CI).
     pub fn virtual_with(exec: ExecParams) -> Self {
         Self { exec: exec.with_virtual_time(), ..Self::default() }
     }
 
-    /// `"virtual"` or `"wall"`, as recorded in the profile.
+    /// `"virtual"`, `"wall"` or `"proc-wall"`, as recorded in the
+    /// profile (the proc backend is always a wall-clock measurement).
     pub fn mode(&self) -> &'static str {
         if self.exec.virtual_time {
             "virtual"
+        } else if self.exec.backend == crate::exec::Backend::Proc {
+            "proc-wall"
         } else {
             "wall"
         }

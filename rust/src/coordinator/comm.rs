@@ -31,7 +31,7 @@ use std::sync::{Arc, Mutex};
 use crate::calibrate::MachineProfile;
 use crate::collectives::{allgather, allreduce, alltoall, broadcast, gather, reduce, scatter};
 use crate::collectives::TargetHeuristic;
-use crate::exec::{BufferStore, ExecEngine, ExecParams, ExecPlan, ExecReport};
+use crate::exec::{Backend, BufferStore, ExecEngine, ExecParams, ExecPlan, ExecReport};
 use crate::model::CostModel;
 use crate::sched::Schedule;
 use crate::sim::{simulate, SimParams, SimReport};
@@ -156,6 +156,10 @@ pub struct Communicator {
     /// The persistent worker pool; locked for the duration of each run
     /// (one collective at a time — the engine's barriers are per-pool).
     engine: Mutex<Option<ExecEngine>>,
+    /// Structured record of the last proc-backend abort-mode death —
+    /// the orchestrator is ephemeral per run, so the communicator holds
+    /// it where the thread engine would hold its own.
+    proc_dead: Mutex<Option<(Vec<u32>, u32)>>,
 }
 
 impl Communicator {
@@ -166,6 +170,7 @@ impl Communicator {
             tuner: Tuned::default(),
             exec: Mutex::new(ExecState::default()),
             engine: Mutex::new(None),
+            proc_dead: Mutex::new(None),
         }
     }
 
@@ -183,6 +188,7 @@ impl Communicator {
             tuner: Tuned::new(cfg),
             exec: Mutex::new(ExecState::default()),
             engine: Mutex::new(None),
+            proc_dead: Mutex::new(None),
         }
     }
 
@@ -462,6 +468,23 @@ impl Communicator {
                 }
             }
         };
+        // Proc backend: ranks are OS processes, no thread pool at all.
+        // Plans come out of the same cache; runs count as runs, but the
+        // thread pool is neither spawned nor touched.
+        if params.backend == Backend::Proc {
+            let machine_of: Vec<u32> = (0..self.placement.num_ranks())
+                .map(|r| self.placement.machine_of(r) as u32)
+                .collect();
+            let rounds = 0..plan.num_rounds;
+            let result = crate::exec::proc::execute(&plan, &machine_of, inputs, params, rounds);
+            *self.proc_dead.lock().expect("proc_dead poisoned") = result
+                .as_ref()
+                .err()
+                .and_then(|e| e.downcast_ref::<crate::exec::proc::ProcDeath>())
+                .map(|d| (d.dead.clone(), d.round));
+            self.exec.lock().expect("exec state poisoned").runs += 1;
+            return result;
+        }
         // The run itself holds only the engine lock, so concurrent cache
         // probes and `exec_stats` stay responsive.
         let (result, spawned) = {
@@ -487,6 +510,9 @@ impl Communicator {
     /// taken). The supervised path classifies permanent deaths with
     /// this instead of parsing error strings.
     pub(crate) fn take_abort_deaths(&self) -> Option<(Vec<u32>, u32)> {
+        if let Some(d) = self.proc_dead.lock().expect("proc_dead poisoned").take() {
+            return Some(d);
+        }
         self.engine
             .lock()
             .expect("engine poisoned")

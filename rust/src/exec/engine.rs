@@ -447,6 +447,15 @@ impl ExecEngine {
         // deduplicated so the supervisor can repair all of them in one
         // deterministic pass.
         let dead_ranks = params.deaths_in_plan(job.hi);
+        // A death-observing run's timings are not a makespan of anything
+        // meaningful (the corpse idled through its rounds), and the two
+        // backends would disagree on them — zero/None them so reports
+        // compare structurally across backends.
+        let (wall, virtual_time) = if dead_ranks.is_empty() {
+            (wall, virtual_time)
+        } else {
+            (Duration::ZERO, None)
+        };
         Ok(ExecReport { outputs, wall, virtual_time, deliveries, dead_ranks })
     }
 }

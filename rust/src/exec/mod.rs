@@ -40,10 +40,11 @@ mod buffers;
 mod engine;
 mod params;
 mod plan;
+pub mod proc;
 
 pub use buffers::{BufferStore, ChunkData};
 pub use engine::ExecEngine;
-pub use params::ExecParams;
+pub use params::{Backend, ExecParams};
 pub use plan::ExecPlan;
 
 use std::sync::Arc;
@@ -108,6 +109,12 @@ pub fn run(
         );
     }
     let plan = Arc::new(ExecPlan::compile(placement, schedule)?);
+    if params.backend == Backend::Proc {
+        let machine_of: Vec<u32> =
+            (0..placement.num_ranks()).map(|r| placement.machine_of(r) as u32).collect();
+        let rounds = 0..plan.num_rounds;
+        return proc::execute(&plan, &machine_of, inputs, params, rounds);
+    }
     let mut engine = ExecEngine::new(schedule.num_ranks);
     engine.execute(&plan, inputs, params)
 }

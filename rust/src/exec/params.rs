@@ -17,7 +17,30 @@
 //!   load — this is what makes exec-vs-sim validation (E6) and the
 //!   latency tests CI-stable.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+/// Which executor realizes the run.
+///
+/// Both backends execute the identical compiled [`crate::exec::ExecPlan`]
+/// with the same two-barriers-per-round semantics; they differ in what a
+/// "rank" physically is:
+///
+/// * [`Backend::Thread`] — one OS thread per rank inside this process
+///   (the default; `LocalWrite` is an `Arc` hand-off, external sends are
+///   in-process queues).
+/// * [`Backend::Proc`] — one OS *process* per rank: `LocalWrite` boards
+///   live in a real `/dev/shm` segment per machine (one writer, many
+///   zero-copy readers — rule R1 made literal) and external transfers
+///   move over loopback TCP sockets, one listener per machine, so
+///   NIC-slot sharing is real socket contention. See
+///   [`crate::exec::proc`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    #[default]
+    Thread,
+    Proc,
+}
 
 /// Cost injection for the executor ([`crate::exec::ExecEngine`] and the
 /// one-shot [`crate::exec::run`]).
@@ -55,6 +78,14 @@ pub struct ExecParams {
     /// suppresses the dead rank's traffic exactly like the simulator, so
     /// exec-vs-sim stays differential under injected faults.
     pub abort_on_death: bool,
+    /// Which executor realizes the run (threads in-process, or one OS
+    /// process per rank over `/dev/shm` + loopback TCP).
+    pub backend: Backend,
+    /// Binary to spawn as the per-rank worker under [`Backend::Proc`]
+    /// (invoked as `<exe> --proc-worker`). `None` = `current_exe()`,
+    /// which is correct when the running binary is `mcomm` itself;
+    /// tests and benches must point this at `env!("CARGO_BIN_EXE_mcomm")`.
+    pub worker_exe: Option<PathBuf>,
 }
 
 impl ExecParams {
@@ -72,6 +103,8 @@ impl ExecParams {
             slowdown: Vec::new(),
             dead_ranks: Vec::new(),
             abort_on_death: true,
+            backend: Backend::Thread,
+            worker_exe: None,
         }
     }
 
@@ -91,7 +124,17 @@ impl ExecParams {
             slowdown: Vec::new(),
             dead_ranks: Vec::new(),
             abort_on_death: true,
+            backend: Backend::Thread,
+            worker_exe: None,
         }
+    }
+
+    /// Builder-style: run on the real-process backend. `worker_exe` is
+    /// the binary to spawn per rank (`None` = the current executable).
+    pub fn with_proc_backend(mut self, worker_exe: Option<PathBuf>) -> Self {
+        self.backend = Backend::Proc;
+        self.worker_exe = worker_exe;
+        self
     }
 
     /// Builder-style: switch to deterministic virtual-time accounting.

@@ -175,11 +175,25 @@ impl ExecPlan {
         r: usize,
         ri: usize,
     ) -> impl Iterator<Item = (Action, &[(Chunk, ContribSet)])> + '_ {
+        self.phase1_global(r, ri).map(|(_, a, p)| (a, p))
+    }
+
+    /// Like [`Self::phase1`] but also yields each action's global index
+    /// in the flat action array. The proc backend keys per-action
+    /// shared-memory read slots by this index, so the reading rank and
+    /// the rank whose store is being read agree on an address without
+    /// any extra coordination.
+    #[inline]
+    pub(crate) fn phase1_global(
+        &self,
+        r: usize,
+        ri: usize,
+    ) -> impl Iterator<Item = (usize, Action, &[(Chunk, ContribSet)])> + '_ {
         let c = self.cell(r, ri);
         let (lo, hi) = (self.act_off[c] as usize, self.act_off[c + 1] as usize);
         (lo..hi).map(move |a| {
             let (p0, p1) = (self.item_off[a] as usize, self.item_off[a + 1] as usize);
-            (self.acts[a], &self.items[p0..p1])
+            (a, self.acts[a], &self.items[p0..p1])
         })
     }
 
@@ -208,6 +222,130 @@ impl ExecPlan {
     /// Total phase-1 actions (all ranks, all rounds).
     pub fn num_actions(&self) -> usize {
         self.acts.len()
+    }
+
+    // ---- proc-backend wire form ---------------------------------------
+    //
+    // Worker processes must execute the *identical* plan the parent
+    // compiled — re-compiling in the child would re-run validation and,
+    // worse, could disagree on slot-id assignment. So the CSR arrays
+    // serialize verbatim: decode rebuilds the exact same plan without
+    // touching `Schedule` at all.
+
+    /// Serialize every CSR array to the proc-backend wire format.
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        use super::proc::wire::{put_contrib, put_u32};
+        let mut b = Vec::new();
+        put_u32(&mut b, self.num_ranks as u32);
+        put_u32(&mut b, self.num_rounds as u32);
+        put_u32(&mut b, self.num_write_slots as u32);
+        put_u32(&mut b, self.act_off.len() as u32);
+        for &v in &self.act_off {
+            put_u32(&mut b, v);
+        }
+        put_u32(&mut b, self.acts.len() as u32);
+        for a in &self.acts {
+            let kind = match a.kind {
+                ActKind::Send => 0u32,
+                ActKind::Write => 1,
+                ActKind::Read => 2,
+            };
+            put_u32(&mut b, kind);
+            put_u32(&mut b, a.peer);
+        }
+        put_u32(&mut b, self.item_off.len() as u32);
+        for &v in &self.item_off {
+            put_u32(&mut b, v);
+        }
+        put_u32(&mut b, self.items.len() as u32);
+        for (c, set) in &self.items {
+            put_u32(&mut b, c.0);
+            put_contrib(&mut b, set);
+        }
+        put_u32(&mut b, self.recv_off.len() as u32);
+        for &v in &self.recv_off {
+            put_u32(&mut b, v);
+        }
+        put_u32(&mut b, self.recv_srcs.len() as u32);
+        for &v in &self.recv_srcs {
+            put_u32(&mut b, v);
+        }
+        put_u32(&mut b, self.wrecv_off.len() as u32);
+        for &v in &self.wrecv_off {
+            put_u32(&mut b, v);
+        }
+        put_u32(&mut b, self.wrecv.len() as u32);
+        for &(s, w) in &self.wrecv {
+            put_u32(&mut b, s);
+            put_u32(&mut b, w);
+        }
+        b
+    }
+
+    /// Rebuild a plan from its wire form (worker side; no re-validation —
+    /// the parent already compiled it).
+    pub(crate) fn decode(r: &mut super::proc::wire::Reader) -> crate::Result<Self> {
+        let num_ranks = r.u32()? as usize;
+        let num_rounds = r.u32()? as usize;
+        let num_write_slots = r.u32()? as usize;
+        let read_u32s = |r: &mut super::proc::wire::Reader| -> crate::Result<Vec<u32>> {
+            let n = r.u32()? as usize;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(r.u32()?);
+            }
+            Ok(v)
+        };
+        let act_off = read_u32s(r)?;
+        let nacts = r.u32()? as usize;
+        let mut acts = Vec::with_capacity(nacts);
+        for _ in 0..nacts {
+            let kind = match r.u32()? {
+                0 => ActKind::Send,
+                1 => ActKind::Write,
+                2 => ActKind::Read,
+                k => anyhow::bail!("bad action kind on wire: {k}"),
+            };
+            acts.push(Action { kind, peer: r.u32()? });
+        }
+        let item_off = read_u32s(r)?;
+        let nitems = r.u32()? as usize;
+        let mut items = Vec::with_capacity(nitems);
+        for _ in 0..nitems {
+            let c = Chunk(r.u32()?);
+            items.push((c, r.contrib()?));
+        }
+        let recv_off = read_u32s(r)?;
+        let recv_srcs = read_u32s(r)?;
+        let wrecv_off = read_u32s(r)?;
+        let nw = r.u32()? as usize;
+        let mut wrecv = Vec::with_capacity(nw);
+        for _ in 0..nw {
+            let s = r.u32()?;
+            wrecv.push((s, r.u32()?));
+        }
+        let plan = Self {
+            num_ranks,
+            num_rounds,
+            num_write_slots,
+            act_off,
+            acts,
+            item_off,
+            items,
+            recv_off,
+            recv_srcs,
+            wrecv_off,
+            wrecv,
+        };
+        let cells = num_ranks * num_rounds;
+        anyhow::ensure!(
+            plan.act_off.len() == cells + 1
+                && plan.recv_off.len() == cells + 1
+                && plan.wrecv_off.len() == cells + 1
+                && plan.item_off.len() == plan.acts.len() + 1,
+            "decoded plan has inconsistent CSR shapes"
+        );
+        Ok(plan)
     }
 }
 
@@ -285,6 +423,23 @@ mod tests {
             xfers: vec![Xfer::external(2, 1, Payload::single(0, 0))],
         });
         assert!(ExecPlan::compile(&p, &s).is_err());
+    }
+
+    #[test]
+    fn wire_round_trip_is_exact() {
+        let (p, s) = hand_schedule();
+        let plan = ExecPlan::compile(&p, &s).unwrap();
+        let wire = plan.encode();
+        let mut r = crate::exec::proc::wire::Reader::new(&wire);
+        let back = ExecPlan::decode(&mut r).unwrap();
+        assert!(r.done());
+        // Re-encoding the decoded plan must reproduce the bytes: every
+        // CSR array survived verbatim.
+        assert_eq!(back.encode(), wire);
+        assert_eq!(back.num_ranks, plan.num_ranks);
+        assert_eq!(back.num_write_slots, plan.num_write_slots);
+        assert_eq!(back.recv_srcs(2, 0), plan.recv_srcs(2, 0));
+        assert_eq!(back.write_recvs(1, 0), plan.write_recvs(1, 0));
     }
 
     #[test]

@@ -1,0 +1,424 @@
+//! Real-process executor backend: every rank is an OS process.
+//!
+//! The thread engine ([`crate::exec::ExecEngine`]) realizes the paper's
+//! model faithfully but entirely inside one address space, so the
+//! intra/inter-machine distinction — the model's whole point — is an
+//! accounting convention there, never a physical one. This backend makes
+//! it physical:
+//!
+//! * **Ranks are processes.** The parent (orchestrator) spawns one child
+//!   per rank — the same binary, re-entered through the hidden
+//!   `mcomm --proc-worker` entrypoint — and wires each to itself over a
+//!   loopback control socket.
+//! * **Machines are `/dev/shm` segments.** Every machine gets one
+//!   file-backed shared-memory segment laid out from the compiled
+//!   [`ExecPlan`]'s board-slot ids ([`shm`]). A `LocalWrite` is one
+//!   `pwrite` of the payload plus a generation-word flip; any number of
+//!   co-located readers `pread` it directly out of the shared page cache
+//!   — rule R1's one-writer/many-reader board made literal.
+//! * **External transfers are TCP.** Each machine's leader rank owns one
+//!   loopback listener; remote senders hold eager connections and ship
+//!   round-tagged, byte-exact payload frames ([`sock`]). All of a
+//!   machine's inbound traffic contends on that one socket, so NIC-slot
+//!   sharing is real socket contention.
+//! * **Barriers ride shared memory.** Workers publish an epoch counter
+//!   (and their virtual clock) in their segment; the machine leader
+//!   aggregates and the parent releases all machines together, giving
+//!   the same two-barriers-per-round lockstep — and bit-identical
+//!   virtual-time joins — as the thread engine.
+//! * **Death is real.** A child that dies (injected abort-mode death is
+//!   a literal `std::process::exit`; an external kill works the same
+//!   way) surfaces through control-socket EOF. The orchestrator turns it
+//!   into the exact error shape and [`super::ExecReport::dead_ranks`]
+//!   contents the thread engine produces, so
+//!   [`crate::coordinator::supervised_execute`] walks its repair →
+//!   replan → degrade ladder unchanged.
+//!
+//! Semantics are bit-compatible with the thread engine by construction:
+//! the identical compiled plan travels to every worker verbatim
+//! ([`ExecPlan::encode`]), the round loop mirrors `run_rounds` action for
+//! action, and virtual-time accounting applies the same costs in the
+//! same order with the same barrier joins — `tests/proc_differential.rs`
+//! holds the three-way gate (proc == thread == lowered-sim) over
+//! randomized topologies and registry candidates.
+
+pub(crate) mod orchestrator;
+pub(crate) mod shm;
+pub(crate) mod sock;
+pub(crate) mod wire;
+pub(crate) mod worker;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::exec::buffers::BufferStore;
+use crate::exec::plan::{ActKind, ExecPlan};
+use crate::exec::{ExecParams, ExecReport};
+
+use shm::ChunkLens;
+use wire::Reader;
+
+pub use worker::worker_main;
+
+/// Default directory for machine segments: tmpfs, so file pages are
+/// physically shared memory.
+pub(crate) const SHM_DIR: &str = "/dev/shm";
+
+/// Is the proc backend runnable here? Needs a writable tmpfs mount;
+/// callers (benches, e10, CI smoke) skip gracefully when it is absent.
+pub fn available() -> bool {
+    let p = Path::new(SHM_DIR);
+    p.is_dir()
+        && std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(p.join(format!("mcomm-avail-{}", std::process::id())))
+            .map(|_| {
+                let _ = std::fs::remove_file(p.join(format!(
+                    "mcomm-avail-{}",
+                    std::process::id()
+                )));
+            })
+            .is_ok()
+}
+
+/// Structured record of an abort-mode death on the proc backend: the
+/// typed twin of the thread engine's `dead_info` slot, carried inside
+/// the returned error so [`crate::coordinator::Communicator`] can expose
+/// it through `take_abort_deaths` without parsing strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProcDeath {
+    /// Sorted, deduplicated dead rank ids.
+    pub dead: Vec<u32>,
+    /// Earliest death round that fired.
+    pub round: u32,
+}
+
+impl std::fmt::Display for ProcDeath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if let [dr] = self.dead[..] {
+            write!(f, "rank {dr} died at round {}", self.round)
+        } else {
+            let names: Vec<String> =
+                self.dead.iter().map(|dr| format!("rank {dr}")).collect();
+            write!(f, "{} died by round {}", names.join(", "), self.round)
+        }
+    }
+}
+
+impl std::error::Error for ProcDeath {}
+
+/// Execute a compiled plan's round window on the proc backend. The
+/// drop-in sibling of `ExecEngine::execute_range`: same inputs, same
+/// report shape, same error strings on the abort path.
+pub(crate) fn execute(
+    plan: &Arc<ExecPlan>,
+    machine_of: &[u32],
+    inputs: Vec<BufferStore>,
+    params: &ExecParams,
+    rounds: std::ops::Range<usize>,
+) -> crate::Result<ExecReport> {
+    orchestrator::run(plan, machine_of, inputs, params, rounds)
+}
+
+/// Everything one worker needs, shipped in the Config control frame.
+pub(crate) struct RunConfig {
+    pub rank: u32,
+    pub machine_of: Vec<u32>,
+    pub seg_path: PathBuf,
+    pub plan: ExecPlan,
+    pub chunk_lens: ChunkLens,
+    pub params: ExecParams,
+    pub lo: u32,
+    pub hi: u32,
+    pub store: BufferStore,
+}
+
+pub(crate) fn encode_config(
+    rank: u32,
+    machine_of: &[u32],
+    seg_path: &Path,
+    plan: &ExecPlan,
+    chunk_lens: &ChunkLens,
+    params: &ExecParams,
+    lo: u32,
+    hi: u32,
+    store: &BufferStore,
+) -> Vec<u8> {
+    use wire::*;
+    let mut b = Vec::new();
+    put_u32(&mut b, rank);
+    put_u32(&mut b, machine_of.len() as u32);
+    for &m in machine_of {
+        put_u32(&mut b, m);
+    }
+    put_bytes(&mut b, seg_path.to_string_lossy().as_bytes());
+    put_bytes(&mut b, &plan.encode());
+    let mut lens: Vec<(u32, u32)> = chunk_lens.iter().map(|(&c, &l)| (c, l)).collect();
+    lens.sort_unstable();
+    put_u32(&mut b, lens.len() as u32);
+    for (c, l) in lens {
+        put_u32(&mut b, c);
+        put_u32(&mut b, l);
+    }
+    put_duration(&mut b, params.ext_latency);
+    put_duration(&mut b, params.o_send);
+    put_duration(&mut b, params.ext_byte_time);
+    put_duration(&mut b, params.o_recv);
+    put_duration(&mut b, params.o_write);
+    put_duration(&mut b, params.int_byte_time);
+    b.push(params.virtual_time as u8);
+    b.push(params.record_deliveries as u8);
+    b.push(params.abort_on_death as u8);
+    put_u32(&mut b, params.slowdown.len() as u32);
+    for &(r, f) in &params.slowdown {
+        put_u32(&mut b, r);
+        put_f64(&mut b, f);
+    }
+    put_u32(&mut b, params.dead_ranks.len() as u32);
+    for &(r, rd) in &params.dead_ranks {
+        put_u32(&mut b, r);
+        put_u32(&mut b, rd);
+    }
+    put_u32(&mut b, lo);
+    put_u32(&mut b, hi);
+    put_store(&mut b, store);
+    b
+}
+
+pub(crate) fn decode_config(buf: &[u8]) -> crate::Result<RunConfig> {
+    let mut r = Reader::new(buf);
+    let rank = r.u32()?;
+    let nm = r.u32()? as usize;
+    let mut machine_of = Vec::with_capacity(nm);
+    for _ in 0..nm {
+        machine_of.push(r.u32()?);
+    }
+    let seg_path = PathBuf::from(String::from_utf8_lossy(r.bytes()?).into_owned());
+    let plan_bytes = r.bytes()?;
+    let plan = {
+        let mut pr = Reader::new(plan_bytes);
+        ExecPlan::decode(&mut pr)?
+    };
+    let nlens = r.u32()? as usize;
+    let mut chunk_lens = ChunkLens::new();
+    for _ in 0..nlens {
+        let c = r.u32()?;
+        chunk_lens.insert(c, r.u32()?);
+    }
+    let mut params = ExecParams::zero();
+    params.ext_latency = r.duration()?;
+    params.o_send = r.duration()?;
+    params.ext_byte_time = r.duration()?;
+    params.o_recv = r.duration()?;
+    params.o_write = r.duration()?;
+    params.int_byte_time = r.duration()?;
+    let flags = [r.u8()?, r.u8()?, r.u8()?];
+    params.virtual_time = flags[0] != 0;
+    params.record_deliveries = flags[1] != 0;
+    params.abort_on_death = flags[2] != 0;
+    let ns = r.u32()? as usize;
+    for _ in 0..ns {
+        let rk = r.u32()?;
+        params.slowdown.push((rk, r.f64()?));
+    }
+    let nd = r.u32()? as usize;
+    for _ in 0..nd {
+        let rk = r.u32()?;
+        params.dead_ranks.push((rk, r.u32()?));
+    }
+    let lo = r.u32()?;
+    let hi = r.u32()?;
+    let store = wire::read_store(&mut r)?;
+    anyhow::ensure!(r.done(), "trailing bytes after Config");
+    Ok(RunConfig {
+        rank,
+        machine_of,
+        seg_path,
+        plan,
+        chunk_lens,
+        params,
+        lo,
+        hi,
+        store,
+    })
+}
+
+// ---- window geometry ---------------------------------------------------
+//
+// Connection topology is a pure function of (plan, machine map, round
+// window), computed independently by the parent, every sender, and every
+// leader — they must agree or an accept() blocks forever.
+
+/// Machines that have at least one rank.
+pub(crate) fn machines_in(machine_of: &[u32]) -> Vec<u32> {
+    let s: BTreeSet<u32> = machine_of.iter().copied().collect();
+    s.into_iter().collect()
+}
+
+/// Lowest rank on machine `m` — its leader (listener + barrier relay).
+pub(crate) fn leader_of(machine_of: &[u32], m: u32) -> Option<u32> {
+    machine_of.iter().position(|&x| x == m).map(|r| r as u32)
+}
+
+/// Machines rank `r` ever sends to inside `[lo, hi)`.
+pub(crate) fn send_targets(
+    plan: &ExecPlan,
+    machine_of: &[u32],
+    lo: usize,
+    hi: usize,
+    r: usize,
+) -> BTreeSet<u32> {
+    let mut out = BTreeSet::new();
+    for ri in lo..hi {
+        for (_, act, _) in plan.phase1_global(r, ri) {
+            if act.kind == ActKind::Send {
+                out.insert(machine_of[act.peer as usize]);
+            }
+        }
+    }
+    out
+}
+
+/// Remote ranks with at least one send into machine `m` inside `[lo, hi)`
+/// — exactly the connections `m`'s leader must accept.
+pub(crate) fn inbound_senders(
+    plan: &ExecPlan,
+    machine_of: &[u32],
+    lo: usize,
+    hi: usize,
+    m: u32,
+) -> BTreeSet<u32> {
+    let mut out = BTreeSet::new();
+    for r in 0..plan.num_ranks {
+        if machine_of[r] == m {
+            continue;
+        }
+        for ri in lo..hi {
+            for (_, act, _) in plan.phase1_global(r, ri) {
+                if act.kind == ActKind::Send && machine_of[act.peer as usize] == m {
+                    out.insert(r as u32);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The round at which an abort-mode run stops: the first round of the
+/// window at or past the earliest injected death — mirroring the thread
+/// engine's per-round `first_death_round` check exactly. `None` when the
+/// run completes (no abort mode, no deaths, or deaths past the window).
+pub(crate) fn trigger_round(params: &ExecParams, lo: usize, hi: usize) -> Option<u32> {
+    if !params.abort_on_death {
+        return None;
+    }
+    let fdr = params.first_death_round()?;
+    let t = (fdr as usize).max(lo);
+    (t < hi).then_some(t as u32)
+}
+
+/// Barrier sequence numbers a run serves: two per executed round, and in
+/// abort mode only through the trigger round's start barrier.
+pub(crate) fn num_seqs(params: &ExecParams, lo: usize, hi: usize) -> u64 {
+    match trigger_round(params, lo, hi) {
+        Some(t) => 2 * (t as u64 - lo as u64) + 1,
+        None => 2 * (hi as u64 - lo as u64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::broadcast;
+    use crate::topology::{switched, Placement};
+
+    #[test]
+    fn config_round_trips() {
+        let c = switched(2, 2, 1);
+        let pl = Placement::block(&c);
+        let s = broadcast::binomial(&pl, 0);
+        let plan = ExecPlan::compile(&pl, &s).unwrap();
+        let mut store = BufferStore::default();
+        store.seed(
+            crate::sched::Chunk(0),
+            crate::sched::ContribSet::singleton(0),
+            vec![1.0, 2.0],
+        );
+        let params = ExecParams::lan_scaled()
+            .with_virtual_time()
+            .with_deliveries()
+            .with_slowdown(1, 2.5)
+            .with_dead_rank(3, 1);
+        let machine_of = vec![0u32, 0, 1, 1];
+        let lens: ChunkLens = [(0u32, 2u32)].into_iter().collect();
+        let blob = encode_config(
+            2,
+            &machine_of,
+            Path::new("/dev/shm/mcomm-test"),
+            &plan,
+            &lens,
+            &params,
+            0,
+            2,
+            &store,
+        );
+        let cfg = decode_config(&blob).unwrap();
+        assert_eq!(cfg.rank, 2);
+        assert_eq!(cfg.machine_of, machine_of);
+        assert_eq!(cfg.seg_path, PathBuf::from("/dev/shm/mcomm-test"));
+        assert_eq!(cfg.plan.encode(), plan.encode());
+        assert_eq!(cfg.chunk_lens, lens);
+        assert_eq!(cfg.params.ext_latency, params.ext_latency);
+        assert_eq!(cfg.params.slowdown, params.slowdown);
+        assert_eq!(cfg.params.dead_ranks, params.dead_ranks);
+        assert!(cfg.params.virtual_time && cfg.params.record_deliveries);
+        assert!(!cfg.params.abort_on_death);
+        assert_eq!((cfg.lo, cfg.hi), (0, 2));
+        assert_eq!(cfg.store.buffers(crate::sched::Chunk(0)).len(), 1);
+    }
+
+    #[test]
+    fn window_geometry_is_consistent() {
+        // Binomial broadcast on 2 machines x 2 ranks: rank 0 sends to
+        // machine 1 in round 0; nobody else crosses machines.
+        let c = switched(2, 2, 1);
+        let pl = Placement::block(&c);
+        let s = broadcast::binomial(&pl, 0);
+        let plan = ExecPlan::compile(&pl, &s).unwrap();
+        let machine_of = vec![0u32, 0, 1, 1];
+        let hi = plan.num_rounds;
+        assert_eq!(machines_in(&machine_of), vec![0, 1]);
+        assert_eq!(leader_of(&machine_of, 1), Some(2));
+        let t0 = send_targets(&plan, &machine_of, 0, hi, 0);
+        assert!(t0.contains(&1));
+        let inb = inbound_senders(&plan, &machine_of, 0, hi, 1);
+        assert_eq!(inb.into_iter().collect::<Vec<_>>(), vec![0]);
+        // Every sender a leader expects really targets it, both ways.
+        for &m in &machines_in(&machine_of) {
+            for s in inbound_senders(&plan, &machine_of, 0, hi, m) {
+                assert!(send_targets(&plan, &machine_of, 0, hi, s as usize).contains(&m));
+            }
+        }
+    }
+
+    #[test]
+    fn trigger_and_seq_math_mirror_the_engine() {
+        let base = ExecParams::zero();
+        assert_eq!(trigger_round(&base, 0, 4), None);
+        assert_eq!(num_seqs(&base, 0, 4), 8);
+        assert_eq!(num_seqs(&base, 1, 4), 6);
+        let abort = ExecParams::zero().with_dead_rank(2, 1).with_abort_on_death();
+        assert_eq!(trigger_round(&abort, 0, 4), Some(1));
+        assert_eq!(num_seqs(&abort, 0, 4), 3);
+        // Death inside the skipped prefix fires at the window's start.
+        assert_eq!(trigger_round(&abort, 3, 4), Some(3));
+        // Death past the window never fires.
+        assert_eq!(trigger_round(&abort, 0, 1), None);
+        // Suppression mode has no trigger.
+        let sup = ExecParams::zero().with_dead_rank(2, 1);
+        assert_eq!(trigger_round(&sup, 0, 4), None);
+        assert_eq!(num_seqs(&sup, 0, 4), 8);
+    }
+}

@@ -1,0 +1,467 @@
+//! Parent side of the proc backend: spawn ranks, lay out segments,
+//! relay barriers, assemble the report.
+//!
+//! The orchestrator never touches payload bytes. It creates one
+//! `/dev/shm` segment per machine, forks one worker per rank (the same
+//! binary, re-entered through `mcomm --proc-worker`), brokers the
+//! leader-port exchange, then spends the run answering Barrier frames
+//! with global Release frames — the only cross-machine synchronization
+//! in the system. At the end it collects each worker's Done frame (final
+//! store, delivery log, clocks) and folds them into the same
+//! [`ExecReport`] shape the thread engine produces, including the exact
+//! error strings on the abort path so `supervised_execute` cannot tell
+//! the backends apart.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::exec::buffers::BufferStore;
+use crate::exec::plan::ExecPlan;
+use crate::exec::{ExecDelivery, ExecParams, ExecReport};
+
+use super::shm::{ChunkLens, MachineLayout, Segment, ABORT_OFF};
+use super::wire::{self, Reader};
+use super::worker::{ENV_CTRL, ENV_RANK};
+use super::{
+    encode_config, leader_of, machines_in, num_seqs, trigger_round, ProcDeath, SHM_DIR,
+};
+
+/// Distinguishes concurrent runs (tests run in-process in parallel, and
+/// a calibration loop reuses the same pid) in segment names.
+static RUN_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One spawned worker and its control plumbing.
+struct WorkerHandle {
+    child: Child,
+    /// Write half of the control socket (reads are drained by a thread).
+    ctrl: std::net::TcpStream,
+    done: Option<DoneFrame>,
+}
+
+struct DoneFrame {
+    store: BufferStore,
+    deliveries: Vec<ExecDelivery>,
+    vt: f64,
+    wall: Duration,
+}
+
+/// An event from some worker's control-socket reader thread.
+enum Event {
+    Frame(u32, u8, Vec<u8>),
+    /// Clean EOF — the child exited (expected after Done or abort break).
+    Eof(u32),
+    /// Read error — treated like EOF.
+    Err(u32, anyhow::Error),
+}
+
+pub(crate) fn run(
+    plan: &Arc<ExecPlan>,
+    machine_of: &[u32],
+    inputs: Vec<BufferStore>,
+    params: &ExecParams,
+    rounds: std::ops::Range<usize>,
+) -> crate::Result<ExecReport> {
+    let n = plan.num_ranks;
+    anyhow::ensure!(
+        inputs.len() == n,
+        "inputs for {} ranks, plan has {n}",
+        inputs.len()
+    );
+    anyhow::ensure!(
+        machine_of.len() == n,
+        "machine map for {} ranks, plan has {n}",
+        machine_of.len()
+    );
+    let (lo, hi) = (rounds.start, rounds.end);
+
+    // Every payload size in the run is a pure function of the plan plus
+    // the per-chunk element counts, which only the seed stores know.
+    let chunk_lens = derive_chunk_lens(&inputs)?;
+
+    // ---- shared-memory segments, one per machine --------------------
+    let run_id = RUN_SEQ.fetch_add(1, Ordering::Relaxed);
+    let machines = machines_in(machine_of);
+    let mut segments: HashMap<u32, Segment> = HashMap::new();
+    let mut seg_paths: HashMap<u32, PathBuf> = HashMap::new();
+    for &m in &machines {
+        let layout = MachineLayout::compute(m, plan, machine_of, &chunk_lens)?;
+        let path =
+            super::shm::segment_path(Path::new(SHM_DIR), std::process::id(), run_id, m);
+        segments.insert(m, Segment::create(path.clone(), layout.total_len)?);
+        seg_paths.insert(m, path);
+    }
+
+    // ---- spawn workers ----------------------------------------------
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let ctrl_addr = listener.local_addr()?.to_string();
+    let exe = match &params.worker_exe {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()?,
+    };
+    let mut children: Vec<Child> = Vec::with_capacity(n);
+    for r in 0..n {
+        let child = Command::new(&exe)
+            .arg("--proc-worker")
+            .env(ENV_CTRL, &ctrl_addr)
+            .env(ENV_RANK, r.to_string())
+            .stdin(Stdio::null())
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("spawning worker {r} ({}): {e}", exe.display()))?;
+        children.push(child);
+    }
+    // From here on, never return without reaping: the guard kills any
+    // still-running child and unlinks segments on every exit path.
+    let mut guard = Guard {
+        workers: Vec::new(),
+        children,
+        segments,
+    };
+
+    // ---- handshake: Hello -> Config -> ports -> Ready -> Start ------
+    let mut ctrls: Vec<Option<std::net::TcpStream>> = (0..n).map(|_| None).collect();
+    for _ in 0..n {
+        let (mut s, _) = listener.accept()?;
+        s.set_nodelay(true).ok();
+        match wire::recv_frame(&mut s)? {
+            Some((wire::TAG_HELLO, payload)) => {
+                let mut rd = Reader::new(&payload);
+                let r = rd.u32()? as usize;
+                anyhow::ensure!(r < n, "Hello from unknown rank {r}");
+                anyhow::ensure!(ctrls[r].is_none(), "duplicate Hello from rank {r}");
+                ctrls[r] = Some(s);
+            }
+            other => anyhow::bail!("expected Hello, got {other:?}"),
+        }
+    }
+    let mut inputs = inputs;
+    for (r, slot) in ctrls.iter_mut().enumerate() {
+        let mut s = slot.take().expect("all ranks said Hello");
+        let m = machine_of[r];
+        let store = std::mem::take(&mut inputs[r]);
+        let cfg = encode_config(
+            r as u32,
+            machine_of,
+            &guard.seg_path(m),
+            plan,
+            &chunk_lens,
+            params,
+            lo as u32,
+            hi as u32,
+            &store,
+        );
+        wire::send_frame(&mut s, wire::TAG_CONFIG, &cfg)?;
+        guard.workers.push(WorkerHandle {
+            child: guard.children.remove(0),
+            ctrl: s,
+            done: None,
+        });
+    }
+
+    // Dedicated reader thread per worker: the parent cannot block on one
+    // child's socket while another one is dying.
+    let (tx, rx) = mpsc::channel::<Event>();
+    for (r, w) in guard.workers.iter().enumerate() {
+        let mut rd = w.ctrl.try_clone()?;
+        let tx = tx.clone();
+        std::thread::spawn(move || loop {
+            match wire::recv_frame(&mut rd) {
+                Ok(Some((tag, payload))) => {
+                    if tx.send(Event::Frame(r as u32, tag, payload)).is_err() {
+                        return;
+                    }
+                }
+                Ok(None) => {
+                    let _ = tx.send(Event::Eof(r as u32));
+                    return;
+                }
+                Err(e) => {
+                    let _ = tx.send(Event::Err(r as u32, e));
+                    return;
+                }
+            }
+        });
+    }
+    drop(tx);
+
+    let mut svc = Service {
+        guard: &mut guard,
+        rx,
+        machine_of,
+        params,
+        lo,
+        hi,
+    };
+    svc.handshake_and_serve(plan)?;
+
+    // ---- fold Done frames into the report ---------------------------
+    let mut outputs = Vec::with_capacity(n);
+    let mut deliveries = Vec::new();
+    let mut wall = Duration::ZERO;
+    let mut vt_max = 0.0f64;
+    for w in guard.workers.iter_mut() {
+        let d = w.done.take().expect("serve() verified all Done frames");
+        outputs.push(d.store);
+        deliveries.extend(d.deliveries);
+        wall = wall.max(d.wall);
+        vt_max = vt_max.max(d.vt);
+    }
+    deliveries.sort_unstable();
+    let dead_ranks = params.deaths_in_plan(hi);
+    // Same convention as the thread engine (see `ExecEngine::launch`):
+    // a death-observing run reports no timings.
+    let (wall, virtual_time) = if dead_ranks.is_empty() {
+        (wall, params.virtual_time.then_some(vt_max))
+    } else {
+        (Duration::ZERO, None)
+    };
+    Ok(ExecReport {
+        outputs,
+        wall,
+        virtual_time,
+        deliveries,
+        dead_ranks,
+    })
+}
+
+fn derive_chunk_lens(inputs: &[BufferStore]) -> crate::Result<ChunkLens> {
+    let mut lens = ChunkLens::new();
+    for store in inputs {
+        for c in store.chunks() {
+            for b in store.buffers(c) {
+                let l = b.data.len() as u32;
+                match lens.get(&c.0) {
+                    None => {
+                        lens.insert(c.0, l);
+                    }
+                    Some(&have) => anyhow::ensure!(
+                        have == l,
+                        "chunk {} seeded with {} and {} elements; \
+                         proc backend needs a consistent chunk size",
+                        c.0,
+                        have,
+                        l
+                    ),
+                }
+            }
+        }
+    }
+    Ok(lens)
+}
+
+/// Owns children and segments; whatever happens, children are reaped and
+/// `/dev/shm` files unlinked when this leaves scope.
+struct Guard {
+    workers: Vec<WorkerHandle>,
+    /// Children not yet moved into `workers` (pre-handshake).
+    children: Vec<Child>,
+    segments: HashMap<u32, Segment>,
+}
+
+impl Guard {
+    fn seg_path(&self, m: u32) -> PathBuf {
+        self.segments[&m].path().to_path_buf()
+    }
+
+    /// Raise every machine's abort flag so spinning workers fail fast.
+    fn raise_abort_flags(&self) {
+        for seg in self.segments.values() {
+            let _ = seg.write_u64(ABORT_OFF, 1);
+        }
+    }
+
+    /// Kill and reap everything still alive.
+    fn kill_all(&mut self) {
+        for w in &mut self.workers {
+            let _ = w.child.kill();
+        }
+        for c in &mut self.children {
+            let _ = c.kill();
+        }
+        for w in &mut self.workers {
+            let _ = w.child.wait();
+        }
+        for c in &mut self.children {
+            let _ = c.wait();
+        }
+    }
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        self.kill_all();
+        // Segments unlink themselves on drop (they are the owners).
+    }
+}
+
+struct Service<'a> {
+    guard: &'a mut Guard,
+    rx: mpsc::Receiver<Event>,
+    machine_of: &'a [u32],
+    params: &'a ExecParams,
+    lo: usize,
+    hi: usize,
+}
+
+impl Service<'_> {
+    /// Run the post-Config protocol to completion: leader ports, Ready,
+    /// Start, the barrier service, and final Done collection.
+    fn handshake_and_serve(&mut self, plan: &Arc<ExecPlan>) -> crate::Result<()> {
+        let n = plan.num_ranks;
+        let machines = machines_in(self.machine_of);
+        let leaders: Vec<u32> =
+            machines.iter().map(|&m| leader_of(self.machine_of, m).unwrap()).collect();
+
+        // LeaderPort from every leader (order arbitrary).
+        let mut ports: HashMap<u32, u16> = HashMap::new();
+        while ports.len() < machines.len() {
+            let (r, tag, payload) = self.next_frame()?;
+            anyhow::ensure!(tag == wire::TAG_LEADER_PORT, "expected LeaderPort, got {tag}");
+            let mut rd = Reader::new(&payload);
+            let m = self.machine_of[r as usize];
+            anyhow::ensure!(leaders.contains(&r), "LeaderPort from non-leader rank {r}");
+            ports.insert(m, rd.u32()? as u16);
+        }
+        let mut pbuf = Vec::new();
+        wire::put_u32(&mut pbuf, ports.len() as u32);
+        for (&m, &p) in &ports {
+            wire::put_u32(&mut pbuf, m);
+            wire::put_u32(&mut pbuf, p as u32);
+        }
+        for w in self.guard.workers.iter_mut() {
+            wire::send_frame(&mut w.ctrl, wire::TAG_PORTS, &pbuf)?;
+        }
+
+        // Ready x n, then Start x n.
+        let mut ready = 0;
+        while ready < n {
+            let (_, tag, _) = self.next_frame()?;
+            anyhow::ensure!(tag == wire::TAG_READY, "expected Ready, got {tag}");
+            ready += 1;
+        }
+        for w in self.guard.workers.iter_mut() {
+            wire::send_frame(&mut w.ctrl, wire::TAG_START, &[])?;
+        }
+
+        // Barrier service. In abort mode the last served seq is the
+        // trigger round's start barrier; dead ranks exit right after it
+        // and live ranks break, so nothing ever arrives at seq+1.
+        let nseqs = num_seqs(self.params, self.lo, self.hi);
+        let nleaders = machines.len();
+        for seq in 0..nseqs {
+            let mut got = 0usize;
+            let mut gmax = 0.0f64;
+            while got < nleaders {
+                let (_, tag, payload) = self.next_frame()?;
+                anyhow::ensure!(tag == wire::TAG_BARRIER, "expected Barrier, got {tag}");
+                let mut rd = Reader::new(&payload);
+                let s = rd.u64()?;
+                anyhow::ensure!(s == seq, "barrier {s} while serving {seq}");
+                gmax = gmax.max(rd.f64()?);
+                got += 1;
+            }
+            let mut rbuf = Vec::new();
+            wire::put_u64(&mut rbuf, seq);
+            wire::put_f64(&mut rbuf, gmax);
+            for &lr in &leaders {
+                let w = &mut self.guard.workers[lr as usize];
+                wire::send_frame(&mut w.ctrl, wire::TAG_RELEASE, &rbuf)?;
+            }
+        }
+
+        // Abort mode: all ranks crossed the trigger barrier; dead ranks
+        // are exiting, live ranks are unwinding. Reconstruct the exact
+        // structured record and error string the thread engine produces.
+        if let Some(t) = trigger_round(self.params, self.lo, self.hi) {
+            self.guard.raise_abort_flags();
+            self.guard.kill_all(); // reap; live ranks exit 0 on their own
+            let mut dead: Vec<u32> = self
+                .params
+                .dead_ranks
+                .iter()
+                .filter(|&&(_, rd)| rd <= t)
+                .map(|&(r, _)| r)
+                .collect();
+            dead.sort_unstable();
+            dead.dedup();
+            let dround =
+                self.params.dead_ranks.iter().map(|&(_, rd)| rd).min().unwrap_or(t);
+            let death = ProcDeath { dead, round: dround };
+            let msg = format!("execution failed: {death}");
+            return Err(anyhow::Error::new(death).context(msg));
+        }
+
+        // Healthy run: Done from every rank.
+        let mut have = 0usize;
+        while have < n {
+            let (r, tag, payload) = self.next_frame()?;
+            anyhow::ensure!(tag == wire::TAG_DONE, "expected Done, got {tag}");
+            let mut rd = Reader::new(&payload);
+            let store = wire::read_store(&mut rd)?;
+            let nd = rd.u32()? as usize;
+            let mut deliveries = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                deliveries.push(ExecDelivery {
+                    round: rd.u32()?,
+                    src: rd.u32()?,
+                    dst: rd.u32()?,
+                    chunk: crate::sched::Chunk(rd.u32()?),
+                    external: rd.u8()? != 0,
+                });
+            }
+            let vt = rd.f64()?;
+            let wall = Duration::from_nanos(rd.u64()?);
+            anyhow::ensure!(rd.done(), "trailing bytes after Done");
+            let w = &mut self.guard.workers[r as usize];
+            anyhow::ensure!(w.done.is_none(), "duplicate Done from rank {r}");
+            w.done = Some(DoneFrame { store, deliveries, vt, wall });
+            have += 1;
+        }
+        // Let children exit cleanly (they already sent Done).
+        for w in self.guard.workers.iter_mut() {
+            let _ = w.child.wait();
+        }
+        Ok(())
+    }
+
+    /// Next frame from any worker. An Aborted frame, an unexpected EOF,
+    /// or a socket error here is fatal to the whole run: raise the abort
+    /// flags, kill everyone, and surface the first failure.
+    fn next_frame(&mut self) -> crate::Result<(u32, u8, Vec<u8>)> {
+        loop {
+            match self.rx.recv() {
+                Ok(Event::Frame(_, wire::TAG_ABORTED, payload)) => {
+                    let msg = Reader::new(&payload)
+                        .bytes()
+                        .map(|b| String::from_utf8_lossy(b).into_owned())
+                        .unwrap_or_else(|_| "worker aborted".into());
+                    self.guard.raise_abort_flags();
+                    self.guard.kill_all();
+                    anyhow::bail!("execution failed: {msg}");
+                }
+                Ok(Event::Frame(r, tag, payload)) => return Ok((r, tag, payload)),
+                Ok(Event::Eof(r)) | Ok(Event::Err(r, _)) => {
+                    // EOF is only legal after this rank's Done, or after
+                    // the abort trigger (handled before we ever wait on
+                    // seq past the trigger). Anything else is a crash —
+                    // possibly a real external kill.
+                    if self.guard.workers[r as usize].done.is_some() {
+                        continue;
+                    }
+                    self.guard.raise_abort_flags();
+                    self.guard.kill_all();
+                    anyhow::bail!("execution failed: rank {r} terminated unexpectedly");
+                }
+                Err(_) => {
+                    self.guard.raise_abort_flags();
+                    self.guard.kill_all();
+                    anyhow::bail!("execution failed: all worker channels closed");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! Shared-memory segments for the proc backend: layout and access.
+//!
+//! Each machine gets one file-backed segment in `/dev/shm` (tmpfs — its
+//! pages are physically shared between every process that has the file
+//! open, and `pread`/`pwrite` go straight to the coherent page cache, so
+//! a plain file gives real shared memory without any foreign bindings).
+//! The parent creates and sizes the file; workers open it read-write.
+//!
+//! Both sides compute the layout independently from the same inputs
+//! (plan + chunk lengths + machine map) with the same deterministic walk,
+//! so no offsets ever travel on the wire. Regions, in order:
+//!
+//! ```text
+//! [abort u64]                                   parent → all: give up now
+//! per local rank:   [epoch u64][vt u64]         barrier arrival slots
+//! [seq+1 u64][vt u64]                           barrier release slot
+//! per local Write:  [gen u64][payload…]         R1 boards (one writer)
+//! per local Read:   [gen u64][payload…]         pre-round snapshots
+//! per local rank:   [write_pos u64][log…]       external-message inbox
+//! ```
+//!
+//! Every data region is seqlock-style in the degenerate one-writer /
+//! write-once-per-run case: the writer publishes payload bytes first,
+//! then flips the generation word; readers poll the generation and then
+//! read the payload zero-copy (no second copy inside the segment). Inbox
+//! logs are append-only — sized exactly from the plan, so wraparound
+//! never happens — with the `write_pos` word advanced only after the
+//! message bytes are durable.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::exec::plan::{ActKind, ExecPlan};
+
+/// Chunk id → element count. The parent derives it from the seeded input
+/// stores and ships it in the Config frame; layout and payload sizing on
+/// both sides read from here.
+pub(crate) type ChunkLens = HashMap<u32, u32>;
+
+/// Wire size of one item `[chunk][contrib][f32s]` (see `wire::put_item`).
+#[inline]
+pub(crate) fn item_wire_len(ncontrib: usize, nelems: usize) -> u64 {
+    4 + (4 + 4 * ncontrib as u64) + (4 + 4 * nelems as u64)
+}
+
+/// Wire size of a whole action payload: the items back to back. The
+/// layout sizes slots with this, and workers read exactly this many
+/// bytes back — both from the same chunk-length table.
+pub(crate) fn payload_wire_len(
+    items: &[(crate::sched::Chunk, crate::sched::ContribSet)],
+    chunk_lens: &ChunkLens,
+) -> crate::Result<u64> {
+    let mut sz = 0u64;
+    for (c, set) in items {
+        let nelems = *chunk_lens
+            .get(&c.0)
+            .ok_or_else(|| anyhow::anyhow!("chunk {} has no known length", c.0))?;
+        sz += item_wire_len(set.len(), nelems as usize);
+    }
+    Ok(sz)
+}
+
+/// Deterministic per-machine segment layout.
+#[derive(Debug)]
+pub(crate) struct MachineLayout {
+    /// Ranks on this machine, ascending (index = local slot order).
+    pub local_ranks: Vec<u32>,
+    /// Barrier arrival slot per local rank: `[epoch u64][vt u64]`.
+    pub barrier_off: HashMap<u32, u64>,
+    /// Barrier release slot: `[seq+1 u64][vt u64]`.
+    pub release_off: u64,
+    /// Board slot id → `[gen u64][payload]` offset (writer is local).
+    pub write_slot_off: HashMap<u32, u64>,
+    /// Global action index of a local `Read` → `[gen u64][payload]`.
+    pub read_slot_off: HashMap<usize, u64>,
+    /// Local rank → inbox `[write_pos u64][log]` offset.
+    pub inbox_off: HashMap<u32, u64>,
+    /// Local rank → inbox log capacity in bytes (exact upper bound).
+    pub inbox_cap: HashMap<u32, u64>,
+    /// Total segment length in bytes.
+    pub total_len: u64,
+}
+
+/// Offset of the abort flag (common to every machine's segment).
+pub(crate) const ABORT_OFF: u64 = 0;
+
+#[inline]
+fn align8(v: u64) -> u64 {
+    (v + 7) & !7
+}
+
+impl MachineLayout {
+    /// Compute machine `m`'s layout. Pure function of its inputs — the
+    /// parent and every worker on the machine run this independently and
+    /// must agree byte-for-byte.
+    pub(crate) fn compute(
+        m: u32,
+        plan: &ExecPlan,
+        machine_of: &[u32],
+        chunk_lens: &ChunkLens,
+    ) -> crate::Result<Self> {
+        let payload_len = |items: &[(crate::sched::Chunk, crate::sched::ContribSet)]| {
+            payload_wire_len(items, chunk_lens)
+        };
+
+        let local_ranks: Vec<u32> = (0..plan.num_ranks as u32)
+            .filter(|&r| machine_of[r as usize] == m)
+            .collect();
+
+        let mut off = 8u64; // abort flag
+        let mut barrier_off = HashMap::new();
+        for &r in &local_ranks {
+            barrier_off.insert(r, off);
+            off += 16;
+        }
+        let release_off = off;
+        off += 16;
+
+        // Board and read slots, in the global deterministic walk order:
+        // rank-major, then round, then schedule order inside the cell.
+        let mut write_slot_off = HashMap::new();
+        let mut read_slot_off = HashMap::new();
+        for r in 0..plan.num_ranks {
+            for ri in 0..plan.num_rounds {
+                for (gi, act, items) in plan.phase1_global(r, ri) {
+                    match act.kind {
+                        ActKind::Write if machine_of[r] == m => {
+                            write_slot_off.insert(act.peer, off);
+                            off = align8(off + 8 + payload_len(items)?);
+                        }
+                        ActKind::Read if machine_of[r] == m => {
+                            read_slot_off.insert(gi, off);
+                            off = align8(off + 8 + payload_len(items)?);
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+
+        // Inbox logs: capacity = every external message the plan can ever
+        // route to this rank, each framed as [len u32][inbox msg].
+        let mut inbox_off = HashMap::new();
+        let mut inbox_cap = HashMap::new();
+        let mut need: HashMap<u32, u64> = local_ranks.iter().map(|&r| (r, 0)).collect();
+        for r in 0..plan.num_ranks {
+            for ri in 0..plan.num_rounds {
+                for (_, act, items) in plan.phase1_global(r, ri) {
+                    if act.kind == ActKind::Send {
+                        if let Some(cap) = need.get_mut(&act.peer) {
+                            // 4 (frame len) + msg header 4+4+8+4 + items.
+                            *cap += 4 + 20 + payload_len(items)?;
+                        }
+                    }
+                }
+            }
+        }
+        for &r in &local_ranks {
+            inbox_off.insert(r, off);
+            let cap = align8(need[&r]);
+            inbox_cap.insert(r, cap);
+            off += 8 + cap;
+        }
+
+        Ok(Self {
+            local_ranks,
+            barrier_off,
+            release_off,
+            write_slot_off,
+            read_slot_off,
+            inbox_off,
+            inbox_cap,
+            total_len: off,
+        })
+    }
+}
+
+/// Segment file path for machine `m` of run `run_id` under parent `pid`.
+pub(crate) fn segment_path(dir: &Path, pid: u32, run_id: u64, m: u32) -> PathBuf {
+    dir.join(format!("mcomm-{pid}-{run_id}-m{m}"))
+}
+
+/// One machine's shared segment, opened by the parent (owner — creates,
+/// sizes, and unlinks on drop) or a worker (plain open).
+#[derive(Debug)]
+pub(crate) struct Segment {
+    file: File,
+    path: PathBuf,
+    owner: bool,
+}
+
+impl Segment {
+    pub(crate) fn create(path: PathBuf, len: u64) -> crate::Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .map_err(|e| anyhow::anyhow!("create segment {}: {e}", path.display()))?;
+        file.set_len(len)?;
+        Ok(Self { file, path, owner: true })
+    }
+
+    pub(crate) fn open(path: PathBuf) -> crate::Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .map_err(|e| anyhow::anyhow!("open segment {}: {e}", path.display()))?;
+        Ok(Self { file, path, owner: false })
+    }
+
+    pub(crate) fn read_at(&self, off: u64, buf: &mut [u8]) -> crate::Result<()> {
+        self.file.read_exact_at(buf, off)?;
+        Ok(())
+    }
+
+    pub(crate) fn write_at(&self, off: u64, buf: &[u8]) -> crate::Result<()> {
+        self.file.write_all_at(buf, off)?;
+        Ok(())
+    }
+
+    pub(crate) fn read_u64(&self, off: u64) -> crate::Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_at(off, &mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub(crate) fn write_u64(&self, off: u64, v: u64) -> crate::Result<()> {
+        self.write_at(off, &v.to_le_bytes())
+    }
+
+    /// Publish `payload` into a seqlock slot at `off`: bytes first, then
+    /// the generation word — a reader that observes `gen` is guaranteed
+    /// to observe the payload (pwrite syscalls do not reorder).
+    pub(crate) fn publish(&self, off: u64, gen: u64, payload: &[u8]) -> crate::Result<()> {
+        self.write_at(off + 8, payload)?;
+        self.write_u64(off, gen)
+    }
+
+    /// Spin/yield/sleep until the u64 at `off` satisfies `want`, honoring
+    /// the segment's abort flag and a hard deadline.
+    pub(crate) fn poll_u64(
+        &self,
+        off: u64,
+        what: &str,
+        want: impl Fn(u64) -> bool,
+    ) -> crate::Result<u64> {
+        let deadline = Instant::now() + POLL_DEADLINE;
+        let mut spins = 0u32;
+        loop {
+            let v = self.read_u64(off)?;
+            if want(v) {
+                return Ok(v);
+            }
+            if self.read_u64(ABORT_OFF)? != 0 {
+                anyhow::bail!("run aborted while waiting for {what}");
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "timed out waiting for {what}"
+            );
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else if spins < 256 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+    }
+
+    pub(crate) fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Hard backstop on any single shared-memory wait. Generous: CI runs
+/// whole differential suites in seconds; a wait this long means a peer
+/// died without tripping the abort flag.
+const POLL_DEADLINE: Duration = Duration::from_secs(30);
+
+impl Drop for Segment {
+    fn drop(&mut self) {
+        if self.owner {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{CollectiveOp, Payload, Round, Schedule, Xfer};
+    use crate::topology::{switched, Placement};
+
+    fn plan_and_machines() -> (ExecPlan, Vec<u32>) {
+        let c = switched(2, 2, 1);
+        let p = Placement::block(&c);
+        let mut s = Schedule::new(CollectiveOp::Broadcast { root: 0 }, 4, "hand");
+        s.push_round(Round {
+            xfers: vec![
+                Xfer::external(0, 2, Payload::single(0, 0)),
+                Xfer::local_write(0, vec![1], Payload::single(0, 0)),
+            ],
+        });
+        s.push_round(Round {
+            xfers: vec![Xfer::local_write(2, vec![3], Payload::single(0, 0))],
+        });
+        let plan = ExecPlan::compile(&p, &s).unwrap();
+        (plan, vec![0, 0, 1, 1])
+    }
+
+    #[test]
+    fn layout_is_deterministic_and_partitioned() {
+        let (plan, machine_of) = plan_and_machines();
+        let lens: ChunkLens = [(0u32, 8u32)].into_iter().collect();
+        let l0 = MachineLayout::compute(0, &plan, &machine_of, &lens).unwrap();
+        let l1 = MachineLayout::compute(1, &plan, &machine_of, &lens).unwrap();
+        assert_eq!(l0.local_ranks, vec![0, 1]);
+        assert_eq!(l1.local_ranks, vec![2, 3]);
+        // Machine 0 hosts slot 0 (writer rank 0); machine 1 hosts slot 1.
+        assert!(l0.write_slot_off.contains_key(&0) && !l0.write_slot_off.contains_key(&1));
+        assert!(l1.write_slot_off.contains_key(&1));
+        // Rank 2's inbox must fit the one external message: frame len +
+        // header + item (1 contrib, 8 elems), rounded up to 8.
+        let want = 4 + 20 + item_wire_len(1, 8);
+        assert_eq!(l1.inbox_cap[&2], align8(want));
+        assert_eq!(l1.inbox_cap[&3], 0);
+        // Recomputation is bit-identical (what the workers rely on).
+        let l0b = MachineLayout::compute(0, &plan, &machine_of, &lens).unwrap();
+        assert_eq!(l0.total_len, l0b.total_len);
+        assert_eq!(l0.release_off, l0b.release_off);
+    }
+
+    #[test]
+    fn segment_publish_then_poll() {
+        let dir = std::env::temp_dir();
+        let path = segment_path(&dir, std::process::id(), 0xfeed, 9);
+        let _ = std::fs::remove_file(&path);
+        let seg = Segment::create(path.clone(), 64).unwrap();
+        let reader = Segment::open(path.clone()).unwrap();
+        seg.publish(8, 1, &[7u8; 16]).unwrap();
+        assert_eq!(reader.poll_u64(8, "gen", |v| v == 1).unwrap(), 1);
+        let mut buf = [0u8; 16];
+        reader.read_at(16, &mut buf).unwrap();
+        assert_eq!(buf, [7u8; 16]);
+        // Abort flag turns a pending wait into an error.
+        seg.write_u64(ABORT_OFF, 1).unwrap();
+        assert!(reader.poll_u64(40, "never", |v| v == 5).is_err());
+        drop(seg); // owner unlinks
+        assert!(!path.exists());
+    }
+}

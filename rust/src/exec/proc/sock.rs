@@ -1,0 +1,172 @@
+//! Loopback-TCP data plane for the proc backend.
+//!
+//! External transfers are real socket traffic: every machine's leader
+//! rank owns one listener (the machine's "NIC"), remote senders hold one
+//! eager connection per destination machine, and all of a machine's
+//! inbound external bandwidth funnels through that single accept loop —
+//! NIC-slot sharing in the model is literal socket contention here.
+//!
+//! A data frame is `[rest_len u32][dst_rank u32][inbox message]`. The
+//! forwarder thread that owns a connection appends the inbox message to
+//! the destination rank's shared-memory inbox log verbatim (framed as
+//! `[msg_len u32][msg]`) and only then advances the log's `write_pos`
+//! word, so a consumer that observes the new position observes the whole
+//! message. Logs are append-only and sized exactly from the plan — no
+//! wraparound, no flow control needed.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::shm::Segment;
+
+/// Send one data frame to a machine's listener.
+pub(crate) fn send_data(stream: &mut TcpStream, dst_rank: u32, msg: &[u8]) -> crate::Result<()> {
+    let rest = 4 + msg.len();
+    stream.write_all(&(rest as u32).to_le_bytes())?;
+    stream.write_all(&dst_rank.to_le_bytes())?;
+    stream.write_all(msg)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one data frame; `Ok(None)` on clean EOF (sender closed after its
+/// last round).
+fn read_data(stream: &mut TcpStream) -> crate::Result<Option<(u32, Vec<u8>)>> {
+    let mut head = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let n = stream.read(&mut head[got..])?;
+        if n == 0 {
+            anyhow::ensure!(got == 0, "data frame truncated mid-header");
+            return Ok(None);
+        }
+        got += n;
+    }
+    let rest = u32::from_le_bytes(head) as usize;
+    anyhow::ensure!(rest >= 4, "data frame shorter than its dst field");
+    let mut body = vec![0u8; rest];
+    stream.read_exact(&mut body)?;
+    let dst = u32::from_le_bytes(body[..4].try_into().unwrap());
+    Ok(Some((dst, body[4..].to_vec())))
+}
+
+struct InboxPos {
+    /// Offset of the `write_pos` word; log bytes start 8 past it.
+    off: u64,
+    cap: u64,
+    /// Bytes appended so far (mirror of the shm word — the leader
+    /// process is the only writer to every local inbox).
+    pos: u64,
+}
+
+/// All of one machine's inbox logs, shared by its forwarder threads.
+pub(crate) struct InboxWriter {
+    seg: Arc<Segment>,
+    slots: HashMap<u32, Mutex<InboxPos>>,
+}
+
+impl InboxWriter {
+    pub(crate) fn new(seg: Arc<Segment>, inboxes: &HashMap<u32, (u64, u64)>) -> Self {
+        let slots = inboxes
+            .iter()
+            .map(|(&r, &(off, cap))| (r, Mutex::new(InboxPos { off, cap, pos: 0 })))
+            .collect();
+        Self { seg, slots }
+    }
+
+    /// Append `msg` to `dst`'s log: payload first, then the position word.
+    pub(crate) fn append(&self, dst: u32, msg: &[u8]) -> crate::Result<()> {
+        let slot = self
+            .slots
+            .get(&dst)
+            .ok_or_else(|| anyhow::anyhow!("data frame for non-local rank {dst}"))?;
+        let mut p = slot.lock().unwrap();
+        let need = 4 + msg.len() as u64;
+        anyhow::ensure!(
+            p.pos + need <= p.cap,
+            "inbox overflow for rank {dst}: plan-sized log too small"
+        );
+        let base = p.off + 8 + p.pos;
+        self.seg.write_at(base, &(msg.len() as u32).to_le_bytes())?;
+        self.seg.write_at(base + 4, msg)?;
+        p.pos += need;
+        self.seg.write_u64(p.off, p.pos)?;
+        Ok(())
+    }
+}
+
+/// The machine leader's accept loop: takes exactly `expect` connections
+/// (one per remote sender rank that ever targets this machine) and spawns
+/// a forwarder thread per connection. Returns the forwarder handles; the
+/// leader joins them after its own round loop so the process never exits
+/// while a sibling rank still awaits a message.
+pub(crate) fn accept_forwarders(
+    listener: TcpListener,
+    expect: usize,
+    inbox: Arc<InboxWriter>,
+) -> crate::Result<Vec<JoinHandle<crate::Result<()>>>> {
+    let mut handles = Vec::with_capacity(expect);
+    for _ in 0..expect {
+        let (mut stream, _) = listener.accept()?;
+        stream.set_nodelay(true).ok();
+        let inbox = inbox.clone();
+        handles.push(std::thread::spawn(move || -> crate::Result<()> {
+            while let Some((dst, msg)) = read_data(&mut stream)? {
+                inbox.append(dst, &msg)?;
+            }
+            Ok(())
+        }));
+    }
+    Ok(handles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::proc::shm::segment_path;
+
+    #[test]
+    fn frames_route_through_inbox_logs() {
+        let path = segment_path(&std::env::temp_dir(), std::process::id(), 0xbeef, 0);
+        let _ = std::fs::remove_file(&path);
+        // Rank 3's inbox at offset 16, capacity 64.
+        let seg = Arc::new(Segment::create(path, 16 + 8 + 64).unwrap());
+        let inboxes: HashMap<u32, (u64, u64)> = [(3u32, (16u64, 64u64))].into();
+        let writer = Arc::new(InboxWriter::new(seg.clone(), &inboxes));
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut out = TcpStream::connect(addr).unwrap();
+        send_data(&mut out, 3, &[9, 8, 7]).unwrap();
+        send_data(&mut out, 3, &[1]).unwrap();
+        drop(out);
+
+        let handles = accept_forwarders(listener, 1, writer).unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        // Log: [3 u32][9 8 7][1 u32][1]; write_pos = 12.
+        assert_eq!(seg.read_u64(16).unwrap(), 12);
+        let mut buf = [0u8; 12];
+        seg.read_at(24, &mut buf).unwrap();
+        assert_eq!(&buf[..4], &3u32.to_le_bytes());
+        assert_eq!(&buf[4..7], &[9, 8, 7]);
+        assert_eq!(&buf[7..11], &1u32.to_le_bytes());
+        assert_eq!(buf[11], 1);
+    }
+
+    #[test]
+    fn overflow_and_misroute_are_errors() {
+        let path = segment_path(&std::env::temp_dir(), std::process::id(), 0xbee5, 0);
+        let _ = std::fs::remove_file(&path);
+        let seg = Arc::new(Segment::create(path, 32).unwrap());
+        let inboxes: HashMap<u32, (u64, u64)> = [(0u32, (8u64, 8u64))].into();
+        let writer = InboxWriter::new(seg, &inboxes);
+        assert!(writer.append(1, &[0]).is_err());
+        assert!(writer.append(0, &[0; 16]).is_err());
+        writer.append(0, &[0; 4]).unwrap();
+    }
+}

@@ -1,0 +1,362 @@
+//! Wire format shared by the proc-backend orchestrator and workers.
+//!
+//! Everything on the control socket, the data sockets, and inside the
+//! shared-memory segments is little-endian and length-prefixed; floats
+//! travel as raw IEEE-754 bits so payloads round-trip byte-exactly (the
+//! differential gate compares `f32::to_bits`, not approximate values).
+//!
+//! Control frames are `[payload_len u32][tag u8][payload]`. Data frames
+//! (sender → machine listener) are `[payload_len u32][dst_rank u32]
+//! [inbox message]`, where the inbox message is the exact byte string the
+//! forwarder appends to the destination rank's shared-memory inbox log —
+//! the listener never parses payloads, it only routes them.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::exec::buffers::BufferStore;
+use crate::sched::{Chunk, ContribSet};
+
+// ---- control-frame tags ------------------------------------------------
+
+/// Child → parent: first frame, identifies the rank.
+pub(crate) const TAG_HELLO: u8 = 1;
+/// Parent → child: full run configuration blob.
+pub(crate) const TAG_CONFIG: u8 = 2;
+/// Child (machine leader) → parent: data-listener port.
+pub(crate) const TAG_LEADER_PORT: u8 = 3;
+/// Parent → child: all machines' data-listener ports.
+pub(crate) const TAG_PORTS: u8 = 4;
+/// Child → parent: sockets connected, ready to run.
+pub(crate) const TAG_READY: u8 = 5;
+/// Parent → child: begin the round loop.
+pub(crate) const TAG_START: u8 = 6;
+/// Child (leader) → parent: all local ranks reached barrier `seq`.
+pub(crate) const TAG_BARRIER: u8 = 7;
+/// Parent → child (leader): release barrier `seq` with the global max vt.
+pub(crate) const TAG_RELEASE: u8 = 8;
+/// Child → parent: run finished; final store + deliveries + timings.
+pub(crate) const TAG_DONE: u8 = 9;
+/// Child → parent: run failed with an error message.
+pub(crate) const TAG_ABORTED: u8 = 10;
+
+// ---- primitive writers -------------------------------------------------
+
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+pub(crate) fn put_duration(buf: &mut Vec<u8>, d: Duration) {
+    put_u64(buf, d.as_nanos() as u64);
+}
+
+pub(crate) fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    put_u32(buf, b.len() as u32);
+    buf.extend_from_slice(b);
+}
+
+pub(crate) fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        buf.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+pub(crate) fn put_contrib(buf: &mut Vec<u8>, c: &ContribSet) {
+    put_u32(buf, c.len() as u32);
+    for r in c.iter() {
+        put_u32(buf, r as u32);
+    }
+}
+
+// ---- cursor reader -----------------------------------------------------
+
+/// Bounds-checked little-endian cursor over a received byte buffer.
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.buf.len(),
+            "wire truncated: want {n} bytes at {} of {}",
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> crate::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub(crate) fn duration(&mut self) -> crate::Result<Duration> {
+        Ok(Duration::from_nanos(self.u64()?))
+    }
+
+    pub(crate) fn bytes(&mut self) -> crate::Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    pub(crate) fn f32s(&mut self) -> crate::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    pub(crate) fn contrib(&mut self) -> crate::Result<ContribSet> {
+        let n = self.u32()? as usize;
+        let mut ranks = Vec::with_capacity(n);
+        for _ in 0..n {
+            ranks.push(self.u32()? as usize);
+        }
+        Ok(ContribSet::from_iter(ranks))
+    }
+
+    pub(crate) fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+// ---- control framing ---------------------------------------------------
+
+/// Write one control frame: `[payload_len u32][tag u8][payload]`.
+pub(crate) fn send_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> crate::Result<()> {
+    let mut head = [0u8; 5];
+    head[..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    head[4] = tag;
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one control frame. `Ok(None)` on clean EOF before the header —
+/// how the parent observes an exited child.
+pub(crate) fn recv_frame(r: &mut impl Read) -> crate::Result<Option<(u8, Vec<u8>)>> {
+    let mut head = [0u8; 5];
+    let mut got = 0;
+    while got < head.len() {
+        let n = r.read(&mut head[got..])?;
+        if n == 0 {
+            anyhow::ensure!(got == 0, "control frame truncated mid-header");
+            return Ok(None);
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(head[..4].try_into().unwrap()) as usize;
+    anyhow::ensure!(len <= MAX_FRAME, "control frame too large: {len} bytes");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some((head[4], payload)))
+}
+
+/// Upper bound on a single control frame: a run's whole buffer store can
+/// ride in one Done frame, so this is generous but still finite.
+const MAX_FRAME: usize = 1 << 30;
+
+// ---- composite encodings ----------------------------------------------
+
+/// One assembled item as it travels (inbox messages, slot payloads,
+/// store snapshots): `[chunk u32][contrib][f32s]`.
+pub(crate) fn put_item(buf: &mut Vec<u8>, chunk: Chunk, contrib: &ContribSet, data: &[f32]) {
+    put_u32(buf, chunk.0);
+    put_contrib(buf, contrib);
+    put_f32s(buf, data);
+}
+
+pub(crate) fn read_item(r: &mut Reader) -> crate::Result<(Chunk, ContribSet, Vec<f32>)> {
+    let chunk = Chunk(r.u32()?);
+    let contrib = r.contrib()?;
+    let data = r.f32s()?;
+    Ok((chunk, contrib, data))
+}
+
+/// Serialize a whole buffer store. Chunks are sorted by id for a
+/// deterministic encoding; the buffer list inside each chunk keeps its
+/// order (assembly is order-sensitive: greedy subset combine).
+pub(crate) fn put_store(buf: &mut Vec<u8>, store: &BufferStore) {
+    let mut chunks: Vec<Chunk> = store.chunks().collect();
+    chunks.sort_unstable_by_key(|c| c.0);
+    put_u32(buf, chunks.len() as u32);
+    for c in chunks {
+        let bufs = store.buffers(c);
+        put_u32(buf, c.0);
+        put_u32(buf, bufs.len() as u32);
+        for b in bufs {
+            put_contrib(buf, &b.contrib);
+            put_f32s(buf, &b.data);
+        }
+    }
+}
+
+pub(crate) fn read_store(r: &mut Reader) -> crate::Result<BufferStore> {
+    let mut store = BufferStore::default();
+    let nchunks = r.u32()?;
+    for _ in 0..nchunks {
+        let chunk = Chunk(r.u32()?);
+        let nbufs = r.u32()?;
+        for _ in 0..nbufs {
+            let contrib = r.contrib()?;
+            let data = r.f32s()?;
+            store.seed(chunk, contrib, data);
+        }
+    }
+    Ok(store)
+}
+
+/// Inbox-message body (also the payload of a data frame, after the dst
+/// rank): `[round u32][src u32][arrive_vt f64][nitems u32][items...]`.
+pub(crate) fn put_inbox_msg(
+    buf: &mut Vec<u8>,
+    round: u32,
+    src: u32,
+    arrive_vt: f64,
+    items: &[(Chunk, ContribSet, Arc<Vec<f32>>)],
+) {
+    put_u32(buf, round);
+    put_u32(buf, src);
+    put_f64(buf, arrive_vt);
+    put_u32(buf, items.len() as u32);
+    for (c, set, data) in items {
+        put_item(buf, *c, set, data);
+    }
+}
+
+/// Parsed inbox message.
+pub(crate) struct InboxMsg {
+    pub round: u32,
+    pub src: u32,
+    pub arrive_vt: f64,
+    pub items: Vec<(Chunk, ContribSet, Vec<f32>)>,
+}
+
+pub(crate) fn read_inbox_msg(r: &mut Reader) -> crate::Result<InboxMsg> {
+    let round = r.u32()?;
+    let src = r.u32()?;
+    let arrive_vt = r.f64()?;
+    let n = r.u32()? as usize;
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        items.push(read_item(r)?);
+    }
+    Ok(InboxMsg { round, src, arrive_vt, items })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut b = Vec::new();
+        put_u32(&mut b, 7);
+        put_u64(&mut b, u64::MAX - 3);
+        put_f64(&mut b, -0.125);
+        put_duration(&mut b, Duration::from_nanos(42));
+        put_bytes(&mut b, b"hey");
+        put_f32s(&mut b, &[1.5, -2.25]);
+        put_contrib(&mut b, &ContribSet::from_iter([0, 3, 65]));
+        let mut r = Reader::new(&b);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f64().unwrap(), -0.125);
+        assert_eq!(r.duration().unwrap(), Duration::from_nanos(42));
+        assert_eq!(r.bytes().unwrap(), b"hey");
+        assert_eq!(r.f32s().unwrap(), vec![1.5, -2.25]);
+        assert_eq!(r.contrib().unwrap(), ContribSet::from_iter([0, 3, 65]));
+        assert!(r.done());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut b = Vec::new();
+        put_u32(&mut b, 100); // claims 100 payload bytes that are absent
+        let mut r = Reader::new(&b);
+        assert!(r.bytes().is_err());
+    }
+
+    #[test]
+    fn store_round_trips_preserving_buffer_order() {
+        let mut s = BufferStore::default();
+        s.seed(Chunk(1), ContribSet::singleton(0), vec![1.0, 2.0]);
+        s.seed(Chunk(1), ContribSet::singleton(1), vec![3.0]);
+        s.seed(Chunk(0), ContribSet::from_iter([0, 1]), vec![-1.0]);
+        let mut b = Vec::new();
+        put_store(&mut b, &s);
+        let mut r = Reader::new(&b);
+        let back = read_store(&mut r).unwrap();
+        assert!(r.done());
+        for c in [Chunk(0), Chunk(1)] {
+            let (a, z) = (s.buffers(c), back.buffers(c));
+            assert_eq!(a.len(), z.len());
+            for (x, y) in a.iter().zip(z) {
+                assert_eq!(x.contrib, y.contrib);
+                assert_eq!(*x.data, *y.data);
+            }
+        }
+    }
+
+    #[test]
+    fn frames_round_trip_and_eof_is_none() {
+        let mut b: Vec<u8> = Vec::new();
+        send_frame(&mut b, TAG_HELLO, &[1, 2, 3]).unwrap();
+        send_frame(&mut b, TAG_READY, &[]).unwrap();
+        let mut cur = std::io::Cursor::new(b);
+        assert_eq!(recv_frame(&mut cur).unwrap(), Some((TAG_HELLO, vec![1, 2, 3])));
+        assert_eq!(recv_frame(&mut cur).unwrap(), Some((TAG_READY, vec![])));
+        assert_eq!(recv_frame(&mut cur).unwrap(), None);
+    }
+
+    #[test]
+    fn inbox_msg_round_trips() {
+        let items = vec![(
+            Chunk(4),
+            ContribSet::singleton(2),
+            Arc::new(vec![0.5f32, -0.25]),
+        )];
+        let mut b = Vec::new();
+        put_inbox_msg(&mut b, 3, 2, 1.5e-6, &items);
+        let mut r = Reader::new(&b);
+        let m = read_inbox_msg(&mut r).unwrap();
+        assert!(r.done());
+        assert_eq!((m.round, m.src), (3, 2));
+        assert_eq!(m.arrive_vt.to_bits(), 1.5e-6f64.to_bits());
+        assert_eq!(m.items.len(), 1);
+        assert_eq!(m.items[0].0, Chunk(4));
+        assert_eq!(m.items[0].2, vec![0.5, -0.25]);
+    }
+}

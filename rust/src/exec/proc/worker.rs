@@ -1,0 +1,573 @@
+//! Per-rank worker process for the proc backend.
+//!
+//! Entered through the hidden `mcomm --proc-worker` CLI path. The round
+//! loop mirrors the thread engine's `run_rounds` action for action —
+//! same two barriers per round, same phase-1 action walk in plan order,
+//! same phase-2 drain with round-tag validation, and the identical
+//! virtual-time accounting (costs applied in the same order, clocks
+//! joined to the global max at both barriers) so `virtual_time` is
+//! bit-equal across backends. The physical differences are exactly the
+//! ones the model distinguishes:
+//!
+//! * `LocalWrite`/`LocalRead` move through the machine's `/dev/shm`
+//!   segment (payload `pwrite`, generation-word flip, reader `pread`s
+//!   the shared page straight into its buffers);
+//! * external sends are TCP frames to the destination machine's leader;
+//! * a `LocalRead`'s pre-round snapshot is published *by the source
+//!   rank* at the top of the round (the reader cannot reach into another
+//!   process's heap), keyed by the action's global plan index so both
+//!   sides agree on the address without coordination.
+//!
+//! One wall-mode divergence, by design: the thread engine delays an
+//! external delivery until `send_instant + ext_latency`; real sockets
+//! have real latency, so the proc backend does not re-inject it (virtual
+//! mode injects it identically in both backends).
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::exec::buffers::BufferStore;
+use crate::exec::plan::{ActKind, ExecPlan};
+use crate::exec::{ExecDelivery, ExecParams};
+use crate::sched::{Chunk, ContribSet};
+
+use super::shm::{payload_wire_len, ChunkLens, MachineLayout, Segment, ABORT_OFF};
+use super::sock::{accept_forwarders, send_data, InboxWriter};
+use super::wire::{self, Reader};
+use super::{
+    decode_config, inbound_senders, leader_of, num_seqs, send_targets, trigger_round,
+    RunConfig,
+};
+
+/// Environment variables the orchestrator sets on spawned workers.
+pub(crate) const ENV_CTRL: &str = "MCOMM_PROC_CTRL";
+pub(crate) const ENV_RANK: &str = "MCOMM_PROC_RANK";
+
+/// Exit code of a rank that died by injected abort-mode death (a real
+/// `process::exit` mid-collective — the parent reconstructs the abort
+/// record from the injected params, not from this code).
+const EXIT_DEAD: i32 = 2;
+
+/// Process entrypoint for `mcomm --proc-worker`. Connects back to the
+/// orchestrator, runs the configured rank, and exits. Returns `Err` only
+/// for setup/protocol failures; run-level failures are reported to the
+/// parent in an Aborted frame first.
+pub fn worker_main() -> crate::Result<()> {
+    let ctrl_addr = std::env::var(ENV_CTRL)
+        .map_err(|_| anyhow::anyhow!("{ENV_CTRL} not set (worker must be spawned by mcomm)"))?;
+    let rank: u32 = std::env::var(ENV_RANK)
+        .map_err(|_| anyhow::anyhow!("{ENV_RANK} not set"))?
+        .parse()?;
+
+    let mut ctrl = TcpStream::connect(&ctrl_addr)?;
+    ctrl.set_nodelay(true).ok();
+    let mut hello = Vec::new();
+    wire::put_u32(&mut hello, rank);
+    wire::send_frame(&mut ctrl, wire::TAG_HELLO, &hello)?;
+
+    let cfg = match wire::recv_frame(&mut ctrl)? {
+        Some((wire::TAG_CONFIG, payload)) => decode_config(&payload)?,
+        other => anyhow::bail!("expected Config, got {other:?}"),
+    };
+    anyhow::ensure!(cfg.rank == rank, "Config addressed to rank {}", cfg.rank);
+
+    let ctrl_w = Arc::new(Mutex::new(ctrl.try_clone()?));
+    match run_worker(cfg, ctrl, ctrl_w.clone()) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            // First failure wins at the parent; best-effort report.
+            let mut buf = Vec::new();
+            wire::put_bytes(&mut buf, e.to_string().as_bytes());
+            if let Ok(mut w) = ctrl_w.lock() {
+                let _ = wire::send_frame(&mut *w, wire::TAG_ABORTED, &buf);
+            }
+            Err(e)
+        }
+    }
+}
+
+/// Everything after Config: socket setup, the round loop, Done.
+fn run_worker(
+    cfg: RunConfig,
+    mut ctrl: TcpStream,
+    ctrl_w: Arc<Mutex<TcpStream>>,
+) -> crate::Result<()> {
+    let r = cfg.rank as usize;
+    let m = cfg.machine_of[r];
+    let (lo, hi) = (cfg.lo as usize, cfg.hi as usize);
+    let layout = MachineLayout::compute(m, &cfg.plan, &cfg.machine_of, &cfg.chunk_lens)?;
+    let seg = Arc::new(Segment::open(cfg.seg_path.clone())?);
+    let is_leader = leader_of(&cfg.machine_of, m) == Some(cfg.rank);
+
+    // Leader binds the machine's listener before reporting its port.
+    let listener = if is_leader {
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        let mut buf = Vec::new();
+        wire::put_u32(&mut buf, l.local_addr()?.port() as u32);
+        wire::send_frame(&mut ctrl, wire::TAG_LEADER_PORT, &buf)?;
+        Some(l)
+    } else {
+        None
+    };
+
+    let ports: HashMap<u32, u16> = match wire::recv_frame(&mut ctrl)? {
+        Some((wire::TAG_PORTS, payload)) => {
+            let mut rd = Reader::new(&payload);
+            let n = rd.u32()? as usize;
+            let mut map = HashMap::with_capacity(n);
+            for _ in 0..n {
+                let machine = rd.u32()?;
+                map.insert(machine, rd.u32()? as u16);
+            }
+            map
+        }
+        other => anyhow::bail!("expected Ports, got {other:?}"),
+    };
+
+    // Eager data connections: one per destination machine this rank ever
+    // sends to inside the window.
+    let mut conns: HashMap<u32, TcpStream> = HashMap::new();
+    for tm in send_targets(&cfg.plan, &cfg.machine_of, lo, hi, r) {
+        let port = *ports
+            .get(&tm)
+            .ok_or_else(|| anyhow::anyhow!("no listener port for machine {tm}"))?;
+        let s = TcpStream::connect(("127.0.0.1", port))?;
+        s.set_nodelay(true).ok();
+        conns.insert(tm, s);
+    }
+
+    // Leader: forward inbound frames into local inbox logs.
+    let acceptor = listener.map(|l| {
+        let expect = inbound_senders(&cfg.plan, &cfg.machine_of, lo, hi, m).len();
+        let inboxes: HashMap<u32, (u64, u64)> = layout
+            .local_ranks
+            .iter()
+            .map(|&lr| (lr, (layout.inbox_off[&lr], layout.inbox_cap[&lr])))
+            .collect();
+        let writer = Arc::new(InboxWriter::new(seg.clone(), &inboxes));
+        let seg = seg.clone();
+        std::thread::spawn(move || -> crate::Result<()> {
+            let handles = accept_forwarders(l, expect, writer)?;
+            for h in handles {
+                if let Err(e) = h.join().map_err(|_| anyhow::anyhow!("forwarder panicked"))? {
+                    seg.write_u64(ABORT_OFF, 1).ok();
+                    return Err(e);
+                }
+            }
+            Ok(())
+        })
+    });
+
+    wire::send_frame(&mut ctrl, wire::TAG_READY, &[])?;
+    match wire::recv_frame(&mut ctrl)? {
+        Some((wire::TAG_START, _)) => {}
+        other => anyhow::bail!("expected Start, got {other:?}"),
+    }
+
+    // Leader: relay barriers between shared memory and the parent. Owns
+    // the control socket's read half from here on (main never reads
+    // again); Barrier frames go through the shared write mutex.
+    let collector = is_leader.then(|| {
+        let seg = seg.clone();
+        let slots: Vec<u64> = layout.local_ranks.iter().map(|&lr| layout.barrier_off[&lr]).collect();
+        let release = layout.release_off;
+        let nseqs = num_seqs(&cfg.params, lo, hi);
+        let ctrl_w = ctrl_w.clone();
+        std::thread::spawn(move || -> crate::Result<()> {
+            let out = collect_barriers(&seg, &slots, release, nseqs, &mut ctrl, &ctrl_w);
+            if out.is_err() {
+                seg.write_u64(ABORT_OFF, 1).ok();
+            }
+            out
+        })
+    });
+
+    let ctx = Ctx {
+        r,
+        plan: &cfg.plan,
+        params: &cfg.params,
+        machine_of: &cfg.machine_of,
+        chunk_lens: &cfg.chunk_lens,
+        seg: &seg,
+        layout: &layout,
+        lo,
+    };
+    let outcome = run_rounds(&ctx, cfg.store, conns, lo, hi)?;
+
+    // Outbound sockets were dropped inside run_rounds at loop end, so
+    // remote forwarders see EOF without waiting for this process to die.
+    if let Some(out) = outcome {
+        let mut buf = Vec::new();
+        wire::put_store(&mut buf, &out.store);
+        wire::put_u32(&mut buf, out.deliveries.len() as u32);
+        for d in &out.deliveries {
+            wire::put_u32(&mut buf, d.round);
+            wire::put_u32(&mut buf, d.src);
+            wire::put_u32(&mut buf, d.dst);
+            wire::put_u32(&mut buf, d.chunk.0);
+            buf.push(d.external as u8);
+        }
+        wire::put_f64(&mut buf, out.vt);
+        wire::put_u64(&mut buf, out.wall.as_nanos() as u64);
+        let mut w = ctrl_w.lock().unwrap();
+        wire::send_frame(&mut *w, wire::TAG_DONE, &buf)?;
+        drop(w);
+    }
+
+    if let Some(h) = collector {
+        h.join().map_err(|_| anyhow::anyhow!("collector panicked"))??;
+    }
+    if let Some(h) = acceptor {
+        h.join().map_err(|_| anyhow::anyhow!("acceptor panicked"))??;
+    }
+    Ok(())
+}
+
+/// Leader barrier relay: wait for every local rank to post `seq`, report
+/// the local clock max, apply the parent's global release.
+fn collect_barriers(
+    seg: &Segment,
+    slots: &[u64],
+    release_off: u64,
+    nseqs: u64,
+    ctrl: &mut TcpStream,
+    ctrl_w: &Mutex<TcpStream>,
+) -> crate::Result<()> {
+    for seq in 0..nseqs {
+        let mut local_max = 0.0f64;
+        for &off in slots {
+            seg.poll_u64(off, "local barrier arrival", |v| v >= seq + 1)?;
+            // Safe to read now and stable until the release below: no
+            // local rank can overwrite its slot before consuming this
+            // seq's release.
+            local_max = local_max.max(f64::from_bits(seg.read_u64(off + 8)?));
+        }
+        {
+            let mut buf = Vec::new();
+            wire::put_u64(&mut buf, seq);
+            wire::put_f64(&mut buf, local_max);
+            let mut w = ctrl_w.lock().unwrap();
+            wire::send_frame(&mut *w, wire::TAG_BARRIER, &buf)?;
+        }
+        match wire::recv_frame(ctrl)? {
+            Some((wire::TAG_RELEASE, payload)) => {
+                let mut rd = Reader::new(&payload);
+                let rseq = rd.u64()?;
+                anyhow::ensure!(rseq == seq, "release {rseq} for barrier {seq}");
+                let gmax = rd.f64()?;
+                seg.write_u64(release_off + 8, gmax.to_bits())?;
+                seg.write_u64(release_off, seq + 1)?;
+            }
+            None => anyhow::bail!("orchestrator closed the control socket mid-run"),
+            other => anyhow::bail!("expected Release, got {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+struct Ctx<'a> {
+    r: usize,
+    plan: &'a ExecPlan,
+    params: &'a ExecParams,
+    machine_of: &'a [u32],
+    chunk_lens: &'a ChunkLens,
+    seg: &'a Segment,
+    layout: &'a MachineLayout,
+    lo: usize,
+}
+
+struct Outcome {
+    store: BufferStore,
+    deliveries: Vec<ExecDelivery>,
+    vt: f64,
+    wall: Duration,
+}
+
+impl Ctx<'_> {
+    /// Arrive at barrier `seq` with the current clock; return the global
+    /// clock max the parent released with.
+    fn barrier(&self, seq: u64, vt: f64) -> crate::Result<f64> {
+        let my = self.layout.barrier_off[&(self.r as u32)];
+        self.seg.write_u64(my + 8, vt.to_bits())?;
+        self.seg.write_u64(my, seq + 1)?;
+        self.seg
+            .poll_u64(self.layout.release_off, "barrier release", |v| v >= seq + 1)?;
+        Ok(f64::from_bits(self.seg.read_u64(self.layout.release_off + 8)?))
+    }
+
+    /// Read one seqlock slot's payload back as items.
+    fn read_slot_items(
+        &self,
+        off: u64,
+        items: &[(Chunk, ContribSet)],
+        what: &str,
+    ) -> crate::Result<Vec<(Chunk, ContribSet, Vec<f32>)>> {
+        self.seg.poll_u64(off, what, |v| v == 1)?;
+        let nbytes = payload_wire_len(items, self.chunk_lens)?;
+        let mut buf = vec![0u8; nbytes as usize];
+        self.seg.read_at(off + 8, &mut buf)?;
+        let mut rd = Reader::new(&buf);
+        let mut out = Vec::with_capacity(items.len());
+        for _ in 0..items.len() {
+            out.push(wire::read_item(&mut rd)?);
+        }
+        Ok(out)
+    }
+
+    /// Next message from this rank's inbox log (blocks until a forwarder
+    /// appended one).
+    fn next_inbox_msg(&self, read_pos: &mut u64) -> crate::Result<wire::InboxMsg> {
+        let off = self.layout.inbox_off[&(self.r as u32)];
+        self.seg
+            .poll_u64(off, "external message", |v| v > *read_pos)?;
+        let base = off + 8 + *read_pos;
+        let mut head = [0u8; 4];
+        self.seg.read_at(base, &mut head)?;
+        let len = u32::from_le_bytes(head) as u64;
+        let mut buf = vec![0u8; len as usize];
+        self.seg.read_at(base + 4, &mut buf)?;
+        *read_pos += 4 + len;
+        let mut rd = Reader::new(&buf);
+        wire::read_inbox_msg(&mut rd)
+    }
+}
+
+/// The round loop: the thread engine's `run_rounds`, process edition.
+/// `Ok(None)` = abort-mode break (live rank; no Done follows). A rank
+/// whose injected death fires exits the process right here.
+fn run_rounds(
+    ctx: &Ctx,
+    mut store: BufferStore,
+    mut conns: HashMap<u32, TcpStream>,
+    lo: usize,
+    hi: usize,
+) -> crate::Result<Option<Outcome>> {
+    let r = ctx.r;
+    let plan = ctx.plan;
+    let params = ctx.params;
+    let vmode = params.virtual_time;
+    let sf = params.slow_of(r as u32);
+    let trigger = trigger_round(params, lo, hi);
+    let mut vt = 0.0f64;
+    let mut deliveries: Vec<ExecDelivery> = Vec::new();
+    let mut staged: Vec<(Chunk, ContribSet, Arc<Vec<f32>>)> = Vec::new();
+    let mut inbox_read_pos = 0u64;
+    let t0 = Instant::now();
+
+    let record = |dl: &mut Vec<ExecDelivery>, ri: usize, src: u32, chunk: Chunk, external: bool| {
+        if params.record_deliveries {
+            dl.push(ExecDelivery {
+                round: ri as u32,
+                src,
+                dst: r as u32,
+                chunk,
+                external,
+            });
+        }
+    };
+
+    for ri in lo..hi {
+        let gmax = ctx.barrier(2 * (ri - lo) as u64, vt)?; // round start
+        if trigger == Some(ri as u32) {
+            if params.killed(r as u32, ri as u32) {
+                // A real death: the process is gone mid-collective. The
+                // parent reconstructs the abort record; peers observe a
+                // closed socket, exactly like an unplanned crash.
+                std::process::exit(EXIT_DEAD);
+            }
+            return Ok(None);
+        }
+        let me_dead = !params.abort_on_death && params.killed(r as u32, ri as u32);
+        if vmode {
+            vt = vt.max(gmax);
+        }
+        staged.clear();
+
+        // ---- Pass 0: publish pre-round snapshots for local readers.
+        // The thread engine's reader reaches into the peer's store
+        // directly; here the store's owner serves it through the board.
+        if !me_dead {
+            for x in 0..plan.num_ranks {
+                if ctx.machine_of[x] != ctx.machine_of[r] {
+                    continue;
+                }
+                for (gi, act, payload) in plan.phase1_global(x, ri) {
+                    if act.kind != ActKind::Read || act.peer != r as u32 {
+                        continue;
+                    }
+                    let mut buf = Vec::new();
+                    for (c, set) in payload {
+                        let data = store.assemble(*c, set).map_err(|e| {
+                            anyhow::anyhow!("rank {x} round {ri} read from {r}: {e}")
+                        })?;
+                        wire::put_item(&mut buf, *c, set, &data);
+                    }
+                    ctx.seg.publish(ctx.layout.read_slot_off[&gi], 1, &buf)?;
+                }
+            }
+        }
+
+        // ---- Phase 1: read pre-round state, post everything.
+        if !me_dead {
+            for (gi, act, payload) in plan.phase1_global(r, ri) {
+                match act.kind {
+                    ActKind::Send => {
+                        if params.killed(act.peer, ri as u32) {
+                            continue; // no traffic to a dead rank
+                        }
+                        let mut items = Vec::with_capacity(payload.len());
+                        let mut bytes = 0usize;
+                        for (c, contrib) in payload {
+                            let data = store.assemble(*c, contrib).map_err(|e| {
+                                anyhow::anyhow!("rank {r} round {ri} send: {e}")
+                            })?;
+                            bytes += data.len() * 4;
+                            items.push((*c, contrib.clone(), data));
+                        }
+                        let arrive_vt = if vmode {
+                            vt += params.send_secs(bytes) * sf;
+                            vt + params.latency_secs()
+                        } else {
+                            params.spin_send(bytes);
+                            0.0
+                        };
+                        let mut msg = Vec::new();
+                        wire::put_inbox_msg(&mut msg, ri as u32, r as u32, arrive_vt, &items);
+                        let tm = ctx.machine_of[act.peer as usize];
+                        let conn = conns
+                            .get_mut(&tm)
+                            .ok_or_else(|| anyhow::anyhow!("no connection to machine {tm}"))?;
+                        send_data(conn, act.peer, &msg)?;
+                    }
+                    ActKind::Write => {
+                        let mut buf = Vec::new();
+                        for (c, contrib) in payload {
+                            let data = store.assemble(*c, contrib).map_err(|e| {
+                                anyhow::anyhow!("rank {r} round {ri} write: {e}")
+                            })?;
+                            wire::put_item(&mut buf, *c, contrib, &data);
+                        }
+                        ctx.seg
+                            .publish(ctx.layout.write_slot_off[&act.peer], 1, &buf)?;
+                        if vmode {
+                            vt += params.write_secs() * sf;
+                        } else {
+                            params.spin_write();
+                        }
+                    }
+                    ActKind::Read => {
+                        if params.killed(act.peer, ri as u32) {
+                            continue; // no reads from a dead rank
+                        }
+                        let off = ctx.layout.read_slot_off[&gi];
+                        let got = ctx.read_slot_items(off, payload, "read snapshot")?;
+                        for (c, contrib, data) in got {
+                            let nbytes = data.len() * 4;
+                            if vmode {
+                                vt += params.read_secs(nbytes) * sf;
+                            } else {
+                                params.spin_read(nbytes);
+                            }
+                            record(&mut deliveries, ri, act.peer, c, false);
+                            staged.push((c, contrib, Arc::new(data)));
+                        }
+                    }
+                }
+            }
+        }
+
+        let gmax = ctx.barrier((2 * (ri - lo) + 1) as u64, vt)?; // mid round
+        if vmode {
+            vt = vt.max(gmax);
+        }
+
+        // ---- Phase 2: drain arrivals, apply deliveries.
+        for &(slot, writer) in plan.write_recvs(r, ri) {
+            if me_dead || params.killed(writer, ri as u32) {
+                continue; // dead reader consumes nothing; dead writer published nothing
+            }
+            let items = slot_payload(plan, writer as usize, ri, slot)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "rank {r} round {ri}: publication from {writer} missing"
+                ))?;
+            let off = ctx.layout.write_slot_off[&slot];
+            let got = ctx.read_slot_items(off, items, "board publication")?;
+            for (c, contrib, data) in got {
+                record(&mut deliveries, ri, writer, c, false);
+                staged.push((c, contrib, Arc::new(data)));
+            }
+        }
+        let expected = if me_dead {
+            0
+        } else {
+            plan.recv_srcs(r, ri)
+                .iter()
+                .filter(|&&s| !params.killed(s, ri as u32))
+                .count()
+        };
+        let mut arrivals = Vec::with_capacity(expected);
+        for _ in 0..expected {
+            let msg = ctx.next_inbox_msg(&mut inbox_read_pos)?;
+            anyhow::ensure!(
+                msg.round as usize == ri,
+                "rank {r} round {ri}: stale message from rank {} (round {}) \
+                 rejected at drain",
+                msg.src,
+                msg.round
+            );
+            arrivals.push(msg);
+        }
+        if vmode {
+            // Same deterministic order as the thread engine: arrival
+            // clock, then sender.
+            arrivals.sort_by(|a, b| {
+                a.arrive_vt.total_cmp(&b.arrive_vt).then(a.src.cmp(&b.src))
+            });
+        }
+        for msg in arrivals {
+            if vmode {
+                vt = vt.max(msg.arrive_vt) + params.recv_secs() * sf;
+            } else {
+                params.spin_recv();
+            }
+            for (c, contrib, data) in msg.items {
+                record(&mut deliveries, ri, msg.src, c, true);
+                staged.push((c, contrib, Arc::new(data)));
+            }
+        }
+        for (c, contrib, data) in staged.drain(..) {
+            store.deliver(c, contrib, data);
+        }
+    }
+
+    // Close outbound connections now (not at process exit): remote
+    // forwarders EOF immediately, so leaders' cleanup joins can never
+    // deadlock on each other's process lifetimes.
+    for (_, mut c) in conns.drain() {
+        let _ = c.flush();
+    }
+
+    Ok(Some(Outcome {
+        store,
+        deliveries,
+        vt,
+        wall: t0.elapsed(),
+    }))
+}
+
+/// The payload items of the `Write` action that owns board `slot` —
+/// looked up from the writer's plan cell so the consumer knows how many
+/// items to parse back out of the slot.
+fn slot_payload<'p>(
+    plan: &'p ExecPlan,
+    writer: usize,
+    ri: usize,
+    slot: u32,
+) -> Option<&'p [(Chunk, ContribSet)]> {
+    plan.phase1(writer, ri)
+        .find(|(act, _)| act.kind == ActKind::Write && act.peer == slot)
+        .map(|(_, items)| items)
+}

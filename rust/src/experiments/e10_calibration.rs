@@ -14,6 +14,14 @@
 //!    `tune::select` picks differently than the default-constants
 //!    configuration for at least one collective; both picks are also
 //!    priced under the calibrated simulator to show the gap.
+//!
+//! A third, informational part reruns the identical probe suite on the
+//! real-process backend ([`crate::exec::Backend::Proc`]) and prints the
+//! fitted virtual-vs-proc parameters side by side — the measured cost of
+//! real `/dev/shm` publications and loopback sockets next to the
+//! emulated LAN constants. It is skipped gracefully when the proc
+//! backend cannot run (no writable `/dev/shm`, or this process is not
+//! the `mcomm` binary).
 
 use crate::calibrate::{run_calibration, CalibrateCfg, PARAM_NAMES};
 use crate::coordinator::Communicator;
@@ -142,11 +150,66 @@ pub fn run(quick: bool) -> crate::Result<Summary> {
         colls.len()
     );
 
+    // ---- Part 3 (informational): the identical probe suite with every
+    // rank a real OS process over /dev/shm + loopback TCP. No injected
+    // physics — the fitted numbers are the host's real IPC costs — so
+    // this is a measured virtual-vs-proc comparison, not a recovery
+    // check (wall clocks are noisy; nothing is asserted).
+    match proc_worker_exe() {
+        Some(exe) => {
+            let cal = CalibrateCfg { repeats: 3, ..CalibrateCfg::proc(Some(exe)) };
+            let pcomm = Communicator::block(cluster.clone());
+            match run_calibration(&pcomm, &cal) {
+                Ok(pprofile) => {
+                    let mut t =
+                        Table::new(vec!["parameter", "virtual (LAN)", "proc (measured)"]);
+                    for ((name, v), p) in
+                        PARAM_NAMES.iter().zip(profile.theta()).zip(pprofile.theta())
+                    {
+                        t.row(vec![
+                            name.to_string(),
+                            format!("{v:.3e}"),
+                            format!("{p:.3e}"),
+                        ]);
+                    }
+                    println!(
+                        "virtual vs real-process calibration (proc backend, wall clock):"
+                    );
+                    t.print();
+                    println!(
+                        "proc fit residual {:.2e}, NIC contention {:.3}x\n",
+                        pprofile.residual, pprofile.nic_contention
+                    );
+                }
+                Err(e) => println!("proc-backend calibration skipped: {e:#}\n"),
+            }
+        }
+        None => println!(
+            "proc-backend calibration skipped (needs a writable /dev/shm and \
+             the mcomm binary; run via `mcomm experiment e10`)\n"
+        ),
+    }
+
     Ok(Summary {
         max_recovery_err: max_err,
         decisions_changed: changed,
         decisions_total: colls.len(),
     })
+}
+
+/// The binary to spawn as `--proc-worker`. Only the real `mcomm` CLI
+/// has that entry point — a test binary re-entering itself would run
+/// the harness — so Part 3 runs only when this process *is* mcomm, or
+/// `MCOMM_PROC_EXE` points at one.
+fn proc_worker_exe() -> Option<std::path::PathBuf> {
+    if !crate::exec::proc::available() {
+        return None;
+    }
+    if let Ok(p) = std::env::var("MCOMM_PROC_EXE") {
+        return Some(std::path::PathBuf::from(p));
+    }
+    let exe = std::env::current_exe().ok()?;
+    (exe.file_name()? == "mcomm").then_some(exe)
 }
 
 #[cfg(test)]

@@ -31,6 +31,17 @@ use mcomm::util::table::{ftime, Table};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    // Hidden re-entry point: the proc backend spawns this same binary
+    // once per rank. Checked before any parsing — a worker's argv is
+    // exactly ["--proc-worker"] and its config arrives over the control
+    // socket named by MCOMM_PROC_CTRL.
+    if args.first().map(String::as_str) == Some("--proc-worker") {
+        if let Err(e) = mcomm::exec::proc::worker_main() {
+            eprintln!("proc worker: {e:#}");
+            std::process::exit(1);
+        }
+        return;
+    }
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -93,7 +104,9 @@ fn dispatch(args: &[String]) -> mcomm::Result<()> {
                  \x20 mcomm experiment <e1..e8,e10..e14|ablations|all> [--quick]\n\
                  \x20 mcomm train [--steps N] [--algo auto|ring|hier|recdoub|raben]\n\
                  \x20        [--machines M --cores C --nics K] [--lan] [--virtual]\n\
-                 \x20        [--lr F] [--bytes B] [--inject SPEC]\n\
+                 \x20        [--lr F] [--bytes B] [--inject SPEC] [--backend thread|proc]\n\
+                 \x20        --backend proc = every rank is a real OS process over\n\
+                 \x20                      shared-memory segments + loopback TCP\n\
                  \x20        --algo raben = rabenseifner allreduce (pow2 ranks);\n\
                  \x20        --virtual   = deterministic virtual-time comm\n\
                  \x20                      accounting (bit-reproducible times);\n\
@@ -107,12 +120,16 @@ fn dispatch(args: &[String]) -> mcomm::Result<()> {
                  \x20                      runs F times slower\n\
                  \x20 mcomm simulate --op bcast|gather|alltoall|allreduce\n\
                  \x20        [--algo NAME] [--machines M --cores C --nics K] [--bytes B]\n\
+                 \x20        [--backend thread|proc] = add a measured wall column\n\
+                 \x20                  (the same schedule executed over real bytes)\n\
                  \x20        --bytes = total payload of the collective; sizes\n\
                  \x20                  flow through schedule, model, simulator\n\
                  \x20                  and tuner (the auto row re-tunes per size)\n\
                  \x20 mcomm calibrate [--machines M --cores C --nics K]\n\
-                 \x20        [--virtual | --wall] [--repeats N] [--rounds N]\n\
-                 \x20        [--bytes B] [--out PATH] [--artifacts DIR]\n\
+                 \x20        [--virtual | --wall | --backend proc] [--repeats N]\n\
+                 \x20        [--rounds N] [--bytes B] [--out PATH] [--artifacts DIR]\n\
+                 \x20        --backend proc = measure real processes over shm+TCP;\n\
+                 \x20                  writes MachineProfile.proc.json by default\n\
                  \x20        run micro-probes, fit the machine model, write the\n\
                  \x20        MachineProfile JSON (default: deterministic virtual\n\
                  \x20        mode against the emulated LAN; --wall measures the\n\
@@ -123,6 +140,23 @@ fn dispatch(args: &[String]) -> mcomm::Result<()> {
             );
             Ok(())
         }
+    }
+}
+
+/// Parse `--backend thread|proc`. `proc` runs every rank as a real OS
+/// process over shared memory + loopback TCP (needs a writable
+/// `/dev/shm`); `thread` (default) is the in-process engine.
+fn parse_backend(flags: &HashMap<&str, &str>) -> mcomm::Result<mcomm::exec::Backend> {
+    match flags.get("backend").copied().unwrap_or("thread") {
+        "thread" => Ok(mcomm::exec::Backend::Thread),
+        "proc" => {
+            anyhow::ensure!(
+                mcomm::exec::proc::available(),
+                "--backend proc needs a writable /dev/shm"
+            );
+            Ok(mcomm::exec::Backend::Proc)
+        }
+        o => anyhow::bail!("unknown backend {o:?} (want thread or proc)"),
     }
 }
 
@@ -181,6 +215,11 @@ fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
     };
     if flags.contains_key("virtual") {
         exec_params = exec_params.with_virtual_time();
+    }
+    // --backend proc: every worker is a real OS process (shared-memory
+    // segments + loopback TCP); timing/fault semantics are unchanged.
+    if parse_backend(flags)? == mcomm::exec::Backend::Proc {
+        exec_params = exec_params.with_proc_backend(None);
     }
     // --inject death:R@D,slow:R*F — faults for the supervised policy to
     // survive. Deaths run in abort mode (the production path: the error
@@ -293,7 +332,14 @@ fn cmd_simulate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
         ],
         o => anyhow::bail!("unknown op {o:?}"),
     };
-    let mut table = Table::new(vec!["algorithm", "rounds", "ext msgs", "sim time"]);
+    // --backend thread|proc adds a measured wall-time column: the same
+    // legalized schedule executed over real bytes on the chosen backend.
+    let exec_backend = flags.contains_key("backend").then(|| parse_backend(flags)).transpose()?;
+    let mut cols = vec!["algorithm", "rounds", "ext msgs", "sim time"];
+    if exec_backend.is_some() {
+        cols.push("exec wall");
+    }
+    let mut table = Table::new(cols);
     for (name, s) in schedules {
         if !algo.is_empty() && !name.contains(algo) {
             continue;
@@ -307,12 +353,26 @@ fn cmd_simulate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
             &s.with_total_bytes(bytes),
         );
         let rep = comm.simulate(&legal, &SimParams::lan_cluster())?;
-        table.row(vec![
+        let mut row = vec![
             name.to_string(),
             legal.num_rounds().to_string(),
             rep.ext_messages.to_string(),
             ftime(rep.t_end),
-        ]);
+        ];
+        if let Some(backend) = exec_backend {
+            let mut params = ExecParams::zero();
+            if backend == mcomm::exec::Backend::Proc {
+                params = params.with_proc_backend(None);
+            }
+            let spec = legal.msg;
+            let inputs = mcomm::exec::initial_inputs(&legal, |_r, c| {
+                let (lo, hi) = spec.chunk_elem_range_raw(c.0);
+                vec![0.5f32; (hi - lo).max(1) as usize]
+            });
+            let erep = comm.execute(&legal, inputs, &params)?;
+            row.push(ftime(erep.wall.as_secs_f64()));
+        }
+        table.row(row);
     }
     table.print();
     Ok(())
@@ -332,7 +392,18 @@ fn cmd_calibrate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
         !(wall && flags.contains_key("virtual")),
         "--wall and --virtual are mutually exclusive"
     );
-    let mut cal = if wall {
+    let proc_backend = parse_backend(flags)? == mcomm::exec::Backend::Proc;
+    anyhow::ensure!(
+        !(proc_backend && flags.contains_key("virtual")),
+        "--backend proc measures real processes; it is a wall-clock mode"
+    );
+    let mut cal = if proc_backend {
+        // Real-process calibration: ranks are OS processes, so the
+        // fitted parameters include real shared-memory and loopback
+        // socket costs (written to MachineProfile.proc.json by default,
+        // alongside the virtual profile).
+        CalibrateCfg::proc(None)
+    } else if wall {
         CalibrateCfg::wall()
     } else {
         // Default: deterministic virtual-time calibration against the
@@ -376,10 +447,15 @@ fn cmd_calibrate(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
         profile.digest()
     );
 
+    let default_name = if proc_backend {
+        "MachineProfile.proc.json"
+    } else {
+        "MachineProfile.json"
+    };
     let out = flags
         .get("out")
         .map(|s| s.to_string())
-        .unwrap_or_else(|| format!("{}/MachineProfile.json", artifact_dir(flags)));
+        .unwrap_or_else(|| format!("{}/{default_name}", artifact_dir(flags)));
     profile.save(&out)?;
     println!("profile written to {out}");
     Ok(())

@@ -1,0 +1,356 @@
+//! Three-way differential gate for the real-process backend: on
+//! randomized switched topologies × registry candidates, the proc
+//! backend's per-round delivered-chunk stream must equal the thread
+//! backend's, and both must equal the lowered simulator's `XferRecord`
+//! stream (via the schedule-derived stream both are checked against) —
+//! with byte-exact payloads.
+//!
+//! The proc backend runs every rank as a real OS process: spawned from
+//! the `mcomm` binary (`CARGO_BIN_EXE_mcomm`) with the hidden
+//! `--proc-worker` entry point, sharing data through `/dev/shm` segments
+//! and loopback TCP. Beyond the delivery gate, this suite pins:
+//!
+//! * virtual time is **bit-identical** across backends (the proc worker
+//!   mirrors the engine's accounting action for action);
+//! * suppression-mode deaths report identically (`dead_ranks`, zeroed
+//!   timing, same deliveries, same survivor outputs);
+//! * an abort-mode death — a child process that really calls
+//!   `exit(2)` mid-collective — surfaces with the same error string and
+//!   walks the same `supervised_execute` repair ladder to bit-identical
+//!   survivor outputs.
+//!
+//! Every test skips (loudly) when the proc backend cannot run, i.e. no
+//! writable `/dev/shm` on this host.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use mcomm::coordinator::{
+    collect_reduced_grads_of, seed_grad_store, AllreduceAlgo, Communicator,
+    FailurePolicy, RecoveryOutcome,
+};
+use mcomm::exec::{self, BufferStore, ExecDelivery, ExecParams};
+use mcomm::sched::{Chunk, LoweredSchedule, Schedule, TopoCtx, XferKind};
+use mcomm::sim::{simulate_lowered, SimArena, SimParams};
+use mcomm::topology::{switched, Placement};
+use mcomm::tune::{candidates_for, Collective};
+use mcomm::util::Rng;
+
+/// The mcomm binary (has the `--proc-worker` entry point); the test
+/// harness binary itself does not, so it must never be the worker exe.
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_mcomm"))
+}
+
+fn proc_ready() -> bool {
+    let ok = mcomm::exec::proc::available();
+    if !ok {
+        eprintln!("skipping: proc backend unavailable (no writable /dev/shm)");
+    }
+    ok
+}
+
+fn pat(r: usize, c: Chunk) -> Vec<f32> {
+    // Integer-valued f32s: every summation order is exact, so cross-
+    // backend output comparison can demand bit equality.
+    vec![(r * 131 + c.0 as usize * 17) as f32, r as f32]
+}
+
+/// The schedule-derived delivery stream (same oracle as the thread
+/// backend's differential suite): every transfer's payload chunks, one
+/// entry per destination, tagged with round and kind.
+fn expected_deliveries(s: &Schedule) -> Vec<ExecDelivery> {
+    let mut out = Vec::new();
+    for (ri, round) in s.rounds.iter().enumerate() {
+        for x in &round.xfers {
+            for &d in &x.dsts {
+                for (ch, _) in &x.payload.items {
+                    out.push(ExecDelivery {
+                        round: ri as u32,
+                        src: x.src as u32,
+                        dst: d as u32,
+                        chunk: *ch,
+                        external: x.kind == XferKind::External,
+                    });
+                }
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// The schedule-derived record stream in the lowered simulator's
+/// emission order.
+fn expected_records(s: &Schedule) -> Vec<(usize, usize, bool, u64)> {
+    let mut out = Vec::new();
+    for round in &s.rounds {
+        for x in &round.xfers {
+            let bytes: u64 =
+                x.payload.items.iter().map(|(c, _)| s.msg.chunk_bytes(c.0)).sum();
+            match x.kind {
+                XferKind::External | XferKind::LocalRead => {
+                    out.push((x.src, x.dsts[0], x.kind == XferKind::External, bytes));
+                }
+                XferKind::LocalWrite => {
+                    for &d in &x.dsts {
+                        out.push((x.src, d, false, bytes));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Byte-exact store equality: same chunk sets, same buffer counts, and
+/// every thread-side buffer's contribution assembles on the proc side to
+/// the same bits (payloads are integer-valued, so sums are exact).
+fn assert_stores_match(a: &[BufferStore], b: &[BufferStore], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: rank count");
+    for (r, (sa, sb)) in a.iter().zip(b).enumerate() {
+        let mut ca: Vec<Chunk> = sa.chunks().collect();
+        let mut cb: Vec<Chunk> = sb.chunks().collect();
+        ca.sort_unstable();
+        cb.sort_unstable();
+        assert_eq!(ca, cb, "{what}: rank {r}: chunk sets");
+        for c in ca {
+            assert_eq!(
+                sa.buffers(c).len(),
+                sb.buffers(c).len(),
+                "{what}: rank {r} {c:?}: buffer count"
+            );
+            for buf in sa.buffers(c) {
+                let got = sb.assemble(c, &buf.contrib).unwrap_or_else(|e| {
+                    panic!("{what}: rank {r} {c:?}: proc side lacks {}: {e}", buf.contrib)
+                });
+                assert_eq!(buf.data.len(), got.len(), "{what}: rank {r} {c:?}: len");
+                for (i, (x, y)) in buf.data.iter().zip(got.iter()).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{what}: rank {r} {c:?} elem {i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The gate itself: proc deliveries == thread deliveries == lowered-sim
+/// record stream, byte-exact outputs, on randomized topologies across
+/// registry candidates.
+#[test]
+fn three_way_differential_proc_thread_simulator() {
+    if !proc_ready() {
+        return;
+    }
+    let thread_params = ExecParams::zero().with_deliveries();
+    let proc_params =
+        ExecParams::zero().with_deliveries().with_proc_backend(Some(worker_exe()));
+    let sim_params = SimParams::lan_cluster().with_records();
+    let mut arena = SimArena::new();
+
+    for seed in 0..2u64 {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x9B0C);
+        // Small enough that a few dozen candidate runs (each spawning one
+        // OS process per rank) stay inside a CI smoke budget.
+        let cl = switched(
+            2 + rng.gen_range(0..2),
+            1 + rng.gen_range(0..2),
+            1 + rng.gen_range(0..2),
+        );
+        let pl = Placement::block(&cl);
+        let n = pl.num_ranks();
+        if n < 2 {
+            continue;
+        }
+        let root = rng.gen_range(0..n);
+        let ctx = TopoCtx::new(&cl, &pl);
+        let mut cases = 0usize;
+
+        for coll in [
+            Collective::Broadcast { root },
+            Collective::Gather { root },
+            Collective::Allreduce,
+            Collective::ReduceScatter,
+            Collective::AllToAll,
+        ] {
+            for cand in candidates_for(coll, &cl, &pl) {
+                let s = cand
+                    .build(&cl, &pl)
+                    .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", cand.label()))
+                    .with_total_bytes(1 + rng.gen_range(0..(1 << 16)) as u64);
+                let ctx_s = format!("seed {seed} {}", cand.label());
+
+                // Leg 1: lowered-simulator record stream == schedule stream.
+                let low = LoweredSchedule::compile(&ctx, &s)
+                    .unwrap_or_else(|e| panic!("{ctx_s}: lower: {e}"));
+                let sim = simulate_lowered(&low, &sim_params, &mut arena);
+                let want_records = expected_records(&s);
+                assert_eq!(sim.records.len(), want_records.len(), "{ctx_s}: records");
+                for (rec, want) in sim.records.iter().zip(&want_records) {
+                    assert_eq!(
+                        (rec.src, rec.dst, rec.external, rec.bytes),
+                        (want.0, want.1, want.2, want.3),
+                        "{ctx_s}"
+                    );
+                }
+
+                // Legs 2+3: both backends == the same stream, and each
+                // other, with byte-exact outputs.
+                let want = expected_deliveries(&s);
+                let rep_t = exec::run(&cl, &pl, &s, exec::initial_inputs(&s, pat), &thread_params)
+                    .unwrap_or_else(|e| panic!("{ctx_s}: thread exec: {e}"));
+                let rep_p = exec::run(&cl, &pl, &s, exec::initial_inputs(&s, pat), &proc_params)
+                    .unwrap_or_else(|e| panic!("{ctx_s}: proc exec: {e}"));
+                assert_eq!(rep_t.deliveries, want, "{ctx_s}: thread vs schedule");
+                assert_eq!(rep_p.deliveries, want, "{ctx_s}: proc vs schedule");
+                assert_stores_match(&rep_t.outputs, &rep_p.outputs, &ctx_s);
+                cases += 1;
+            }
+        }
+        assert!(cases >= 5, "seed {seed}: only {cases} candidates exercised");
+    }
+}
+
+/// Virtual time must not depend on which backend ran the plan: the proc
+/// worker replays the engine's vt accounting action for action, so the
+/// makespans agree to the last bit (and across repeat proc runs).
+#[test]
+fn virtual_time_is_bit_identical_across_backends() {
+    if !proc_ready() {
+        return;
+    }
+    let cl = switched(3, 2, 2);
+    let pl = Placement::block(&cl);
+    let s = mcomm::collectives::allreduce::hierarchical_mc(&cl, &pl);
+    let thread_params = ExecParams::lan_scaled().with_virtual_time();
+    let proc_params =
+        ExecParams::lan_scaled().with_virtual_time().with_proc_backend(Some(worker_exe()));
+
+    let vt_thread = exec::run(&cl, &pl, &s, exec::initial_inputs(&s, pat), &thread_params)
+        .unwrap()
+        .virtual_time
+        .expect("virtual mode");
+    assert!(vt_thread > 0.0, "injected costs must show up");
+    for trial in 0..2 {
+        let vt_proc = exec::run(&cl, &pl, &s, exec::initial_inputs(&s, pat), &proc_params)
+            .unwrap()
+            .virtual_time
+            .expect("virtual mode");
+        assert_eq!(
+            vt_thread.to_bits(),
+            vt_proc.to_bits(),
+            "trial {trial}: thread {vt_thread} vs proc {vt_proc}"
+        );
+    }
+}
+
+/// Suppression-mode parity: a rank marked dead (no abort) leaves the
+/// same holes under both backends — same `dead_ranks`, zeroed timing
+/// (the satellite-1 contract), same deliveries, same survivor outputs.
+#[test]
+fn suppressed_death_reports_identically_across_backends() {
+    if !proc_ready() {
+        return;
+    }
+    let cl = switched(3, 2, 1);
+    let pl = Placement::block(&cl);
+    let s = mcomm::collectives::allreduce::hierarchical_mc(&cl, &pl);
+    let thread_params = ExecParams::zero().with_deliveries().with_dead_rank(4, 1);
+    let proc_params = thread_params.clone().with_proc_backend(Some(worker_exe()));
+
+    let rep_t =
+        exec::run(&cl, &pl, &s, exec::initial_inputs(&s, pat), &thread_params).unwrap();
+    let rep_p =
+        exec::run(&cl, &pl, &s, exec::initial_inputs(&s, pat), &proc_params).unwrap();
+
+    for (rep, which) in [(&rep_t, "thread"), (&rep_p, "proc")] {
+        assert_eq!(rep.dead_ranks, vec![4], "{which}: dead ranks");
+        assert_eq!(rep.wall, Duration::ZERO, "{which}: wall zeroed on death");
+        assert_eq!(rep.virtual_time, None, "{which}: vt zeroed on death");
+    }
+    assert_eq!(rep_t.deliveries, rep_p.deliveries, "suppressed delivery streams");
+    assert_stores_match(&rep_t.outputs, &rep_p.outputs, "suppressed outputs");
+}
+
+const P: usize = 16; // gradient elements for the recovery parity test
+
+/// Integer-valued gradients: exact f32 sums, bit-comparable results.
+fn grads(n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|r| (0..P).map(|i| ((r + 2) * (i % 17 + 1)) as f32).collect())
+        .collect()
+}
+
+/// Abort-mode parity end to end: the killed child *process* (a real
+/// `exit(2)` mid-collective) must surface with the thread backend's
+/// exact error string, classify structurally, and walk the same
+/// repair ladder under `supervised_execute` to bit-identical survivor
+/// outputs.
+#[test]
+fn killed_child_walks_recovery_ladder_like_thread_backend() {
+    if !proc_ready() {
+        return;
+    }
+    let n = 6;
+    let g = grads(n);
+    let mk_comm = || Communicator::block(switched(3, 2, 1));
+    let s = {
+        let comm = mk_comm();
+        let mut s = comm.allreduce(AllreduceAlgo::Ring).unwrap();
+        s.set_payload(4 * P as u64, 4);
+        s
+    };
+    let seed = |sch: &Schedule, rank: usize, orig: usize| seed_grad_store(sch, rank, &g[orig]);
+    // Rank 4 dies at round 1 — mid reduce-scatter; repair must succeed.
+    let thread_params = ExecParams::zero().with_dead_rank(4, 1).with_abort_on_death();
+    let proc_params = thread_params.clone().with_proc_backend(Some(worker_exe()));
+
+    // Error-string parity on a bare execute.
+    let mk_inputs = |s: &Schedule| (0..n).map(|r| seed(s, r, r)).collect::<Vec<_>>();
+    let err_t = mk_comm().execute(&s, mk_inputs(&s), &thread_params).unwrap_err();
+    let err_p = mk_comm().execute(&s, mk_inputs(&s), &proc_params).unwrap_err();
+    assert_eq!(err_t.to_string(), err_p.to_string(), "abort error strings");
+    assert!(err_t.to_string().contains("rank 4 died at round 1"), "{err_t}");
+
+    // Supervised ladder parity: same structural classification, same
+    // Repaired outcome, bit-identical survivor outputs.
+    let mut tc = mk_comm();
+    let sup_t = tc
+        .supervised_execute(&s, &seed, &thread_params, &FailurePolicy::default())
+        .unwrap();
+    let mut pc = mk_comm();
+    let sup_p = pc
+        .supervised_execute(&s, &seed, &proc_params, &FailurePolicy::default())
+        .unwrap();
+
+    match &sup_p.outcome {
+        RecoveryOutcome::Repaired { dead_ranks, cut, patch_rounds, .. } => {
+            assert_eq!(dead_ranks, &vec![4]);
+            assert_eq!(*cut, 1);
+            assert!(*patch_rounds > 0, "patch must add rounds");
+        }
+        o => panic!("expected Repaired, got {o:?}"),
+    }
+    assert_eq!(sup_t.outcome, sup_p.outcome, "recovery outcomes");
+    assert_eq!(sup_p.attempts, 1, "one pass, not a retry per corpse");
+    assert_eq!(sup_p.report.dead_ranks, vec![4]);
+
+    let survivors = [0usize, 1, 2, 3, 5];
+    for &r in &survivors {
+        let a = collect_reduced_grads_of(&s, &sup_t.report.outputs[r], &survivors, P)
+            .unwrap();
+        let b = collect_reduced_grads_of(&s, &sup_p.report.outputs[r], &survivors, P)
+            .unwrap();
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "survivor {r} elem {i}: thread {x} vs proc {y}"
+            );
+        }
+    }
+}
