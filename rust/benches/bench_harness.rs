@@ -123,6 +123,48 @@ pub fn write_json(bench_name: &str, stats: &[BenchStat]) -> std::io::Result<Stri
     Ok(path)
 }
 
+/// Like [`write_json`], but *merge* into the bench file instead of
+/// overwriting it: rows already present under `bench_name` that are not
+/// re-measured here survive, re-measured rows are replaced, and new rows
+/// are appended. This lets a second bench binary (e.g. `traffic`) add
+/// its keys to `BENCH_hotpath.json` after the `hotpath` binary has
+/// written its own, so the CI bench-key contract sees one file.
+#[allow(dead_code)]
+pub fn merge_json(bench_name: &str, stats: &[BenchStat]) -> std::io::Result<String> {
+    let path = std::env::var("MCOMM_BENCH_JSON")
+        .unwrap_or_else(|_| format!("BENCH_{bench_name}.json"));
+    let mut merged: Vec<BenchStat> = Vec::new();
+    if let Ok(existing) = std::fs::read_to_string(&path) {
+        if let Ok(json) = mcomm::util::json::Json::parse(&existing) {
+            if let Some(mcomm::util::json::Json::Arr(rows)) = json.get("results") {
+                for row in rows {
+                    let Some(name) = row.get("name").and_then(|n| n.as_str()) else {
+                        continue;
+                    };
+                    if stats.iter().any(|s| s.name == name) {
+                        continue; // replaced by the fresh measurement
+                    }
+                    merged.push(BenchStat {
+                        name: name.to_string(),
+                        mean: row.get("mean_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        median: row
+                            .get("median_s")
+                            .and_then(|v| v.as_f64())
+                            .unwrap_or(0.0),
+                        p95: row.get("p95_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        samples: row
+                            .get("samples")
+                            .and_then(|v| v.as_usize())
+                            .unwrap_or(0),
+                    });
+                }
+            }
+        }
+    }
+    merged.extend(stats.iter().cloned());
+    write_json(bench_name, &merged)
+}
+
 #[allow(dead_code)]
 fn esc(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")

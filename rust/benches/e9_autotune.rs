@@ -38,8 +38,8 @@ fn main() {
         tune::select_many(&cl, &pl, &all, &cfg).unwrap();
     });
 
-    // Warm lookups: fingerprint + probe only.
-    let mut cache = DecisionCache::new();
+    // Warm lookups: streaming digest + one read-locked shard probe.
+    let cache = DecisionCache::new();
     cache.get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg).unwrap();
     bench("e9: cached lookup (hit)", || {
         cache.get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg).unwrap();

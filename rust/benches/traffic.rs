@@ -1,0 +1,351 @@
+//! Traffic-replay harness for tuning-as-a-service (§E16 in
+//! EXPERIMENTS.md): drive one shared [`Tuned`] facade with a
+//! deterministic Zipf-distributed query stream over a universe of
+//! (topology, collective, payload size) triples, from one thread cold
+//! and from 8 threads hot, and report what the serving path costs.
+//!
+//! Four questions, four phases:
+//!
+//! 1. **Cold replay** (1 thread): what does a miss cost (a full
+//!    two-stage tune), and what fraction of misses warm-start off a
+//!    cached neighbor size class in the same fingerprint family?
+//! 2. **Bounded replay**: replay the same stream through a cache half
+//!    the universe's size — what fraction of misses trigger a CLOCK
+//!    eviction?
+//! 3. **Hot replay** (8 threads, sharded): pre-warm the whole universe,
+//!    then hammer the hit path concurrently. Reports p50/p99 per-query
+//!    hit latency and aggregate per-query wall time (1/qps).
+//! 4. **Mutex baseline** (8 threads): the pre-PR serving path — one
+//!    `Mutex` around the whole map, a freshly constructed
+//!    [`Fingerprint`] per probe. The ratio against phase 3 is the
+//!    headline: the sharded read-locked path must win by ≥4x at 8
+//!    threads (asserted in full mode; smoke mode on shared CI runners
+//!    only reports it).
+//!
+//! Results *merge* into `BENCH_hotpath.json` (see
+//! `bench_harness::merge_json`) as the `traffic:` / `cache:` keys the
+//! CI bench-key contract tracks. Run with `MCOMM_BENCH_SMOKE=1` for the
+//! fast CI variant.
+
+#[path = "bench_harness.rs"]
+mod bench_harness;
+use bench_harness::{bench, merge_json, smoke_mode, BenchStat};
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use mcomm::topology::{switched, Cluster, Placement};
+use mcomm::tune::{Collective, Fingerprint, TuneCfg, Tuned};
+use mcomm::tune::{CacheConfig, Decision};
+use mcomm::util::Rng;
+
+const THREADS: usize = 8;
+
+/// One cacheable query: a topology, a collective, a payload size.
+struct Query {
+    cluster: Cluster,
+    placement: Placement,
+    collective: Collective,
+    msg_bytes: u64,
+}
+
+/// The query universe, Zipf-permuted so popularity is not correlated
+/// with construction order (small topologies are not automatically the
+/// hot ones).
+fn universe(smoke: bool) -> Vec<Query> {
+    let (machines, cores): (&[usize], &[usize]) = if smoke {
+        (&[2, 3, 4], &[2, 3])
+    } else {
+        (&[2, 3, 4, 5, 6, 8], &[2, 3, 4])
+    };
+    let sizes: Vec<u64> = if smoke {
+        (0..4).map(|i| 4u64 << (10 + 2 * i)).collect() // 4K..256K, ×4
+    } else {
+        (0..10).map(|i| 1u64 << (10 + i)).collect() // 1K..512K, ×2
+    };
+    let collectives: &[Collective] = if smoke {
+        &[Collective::Broadcast { root: 0 }, Collective::Allreduce]
+    } else {
+        &[
+            Collective::Broadcast { root: 0 },
+            Collective::Allreduce,
+            Collective::AllToAll,
+        ]
+    };
+    let mut out = Vec::new();
+    for &m in machines {
+        for &c in cores {
+            for k in [1usize, 2] {
+                let cluster = switched(m, c, k);
+                let placement = Placement::block(&cluster);
+                for &coll in collectives {
+                    for &msg_bytes in &sizes {
+                        out.push(Query {
+                            cluster: cluster.clone(),
+                            placement: placement.clone(),
+                            collective: coll,
+                            msg_bytes,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    let mut rng = Rng::seed_from_u64(0xC0FFEE);
+    rng.shuffle(&mut out);
+    out
+}
+
+/// Inverse-CDF Zipf sampler over `n` items, exponent ~1.05: item `i`
+/// (post-shuffle) has weight 1/(i+1)^s. Deterministic given the rng.
+struct Zipf {
+    cum: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: usize) -> Self {
+        let mut cum = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(1.05);
+            cum.push(acc);
+        }
+        Zipf { cum }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.gen_f64() * self.cum[self.cum.len() - 1];
+        self.cum.partition_point(|&c| c < u).min(self.cum.len() - 1)
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+}
+
+fn scalar(name: &str, value: f64, samples: usize) -> BenchStat {
+    BenchStat {
+        name: name.to_string(),
+        mean: value,
+        median: value,
+        p95: value,
+        samples,
+    }
+}
+
+/// Replay `queries_per_thread` Zipf samples per thread against `serve`,
+/// timing every query. Returns (sorted latencies, per-query wall).
+fn replay<F: Fn(&Query) + Sync>(
+    uni: &[Query],
+    zipf: &Zipf,
+    queries_per_thread: usize,
+    serve: F,
+) -> (Vec<f64>, f64) {
+    let wall = Instant::now();
+    let mut lat: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let serve = &serve;
+                s.spawn(move || {
+                    let mut rng = Rng::seed_from_u64(0x7EA + t as u64);
+                    let mut times = Vec::with_capacity(queries_per_thread);
+                    for _ in 0..queries_per_thread {
+                        let q = &uni[zipf.sample(&mut rng)];
+                        let t0 = Instant::now();
+                        serve(q);
+                        times.push(t0.elapsed().as_secs_f64());
+                    }
+                    times
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let total = wall.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = (THREADS * queries_per_thread) as f64;
+    (lat, total / n)
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let cfg = TuneCfg::default();
+    let uni = universe(smoke);
+    let zipf = Zipf::new(uni.len());
+    let (cold_queries, hot_per_thread) =
+        if smoke { (2_000, 2_500) } else { (40_000, 50_000) };
+    println!(
+        "traffic universe: {} (topology, collective, size) triples; \
+         {} cold queries, {}x{} hot queries",
+        uni.len(),
+        cold_queries,
+        THREADS,
+        hot_per_thread
+    );
+
+    let mut stats = Vec::new();
+
+    // Phase 1: cold single-threaded replay. Misses are full tunes;
+    // classify hit/miss by first-sighting of the universe index (exact:
+    // default capacity far exceeds the universe, so nothing evicts).
+    let tuner = Tuned::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(0x5EED);
+    let mut seen = HashSet::new();
+    let mut miss_times = Vec::new();
+    for _ in 0..cold_queries {
+        let i = zipf.sample(&mut rng);
+        let q = &uni[i];
+        let t0 = Instant::now();
+        tuner
+            .decision_sized(&q.cluster, &q.placement, q.collective, q.msg_bytes)
+            .unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        if seen.insert(i) {
+            miss_times.push(dt);
+        }
+    }
+    miss_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cold = tuner.stats();
+    assert_eq!(cold.misses as usize, miss_times.len(), "hit/miss bookkeeping");
+    let warm_rate = cold.warm_hits as f64 / cold.misses.max(1) as f64;
+    println!(
+        "cold replay: {} misses / {} hits, warm-start rate {:.1}%, miss p50 {:.3} ms",
+        cold.misses,
+        cold.hits,
+        warm_rate * 100.0,
+        percentile(&miss_times, 0.50) * 1e3
+    );
+    stats.push(scalar(
+        "traffic: miss (tune) p50 (cold replay)",
+        percentile(&miss_times, 0.50),
+        miss_times.len(),
+    ));
+    stats.push(scalar(
+        "cache: warm-start hit rate (fraction)",
+        warm_rate,
+        cold.misses,
+    ));
+
+    // Phase 2: the same stream through a cache bounded to half the
+    // universe — CLOCK eviction pressure.
+    let bounded = Tuned::with_cache(
+        cfg.clone(),
+        CacheConfig { shards: 4, capacity: (uni.len() / 2).max(1) },
+    );
+    let mut rng = Rng::seed_from_u64(0x5EED);
+    for _ in 0..cold_queries {
+        let q = &uni[zipf.sample(&mut rng)];
+        bounded
+            .decision_sized(&q.cluster, &q.placement, q.collective, q.msg_bytes)
+            .unwrap();
+    }
+    let bs = bounded.stats();
+    let evict_rate = bs.evictions as f64 / bs.misses.max(1) as f64;
+    println!(
+        "bounded replay (capacity {}): {} misses, {} evictions ({:.1}% of misses)",
+        uni.len() / 2,
+        bs.misses,
+        bs.evictions,
+        evict_rate * 100.0
+    );
+    stats.push(scalar(
+        "cache: bounded replay evictions (fraction)",
+        evict_rate,
+        bs.misses,
+    ));
+
+    // Phase 3: pre-warm the remainder of the universe the Zipf tail
+    // never hit, then the single-thread steady-state hit probe
+    // (harness-timed) and the 8-thread hot replay.
+    for q in &uni {
+        tuner
+            .decision_sized(&q.cluster, &q.placement, q.collective, q.msg_bytes)
+            .unwrap();
+    }
+    let mut probe_rng = Rng::seed_from_u64(0xBEEF);
+    stats.push(bench("cache: hit probe (1 thread)", || {
+        let q = &uni[zipf.sample(&mut probe_rng)];
+        std::hint::black_box(
+            tuner
+                .decision_sized(&q.cluster, &q.placement, q.collective, q.msg_bytes)
+                .unwrap(),
+        );
+    }));
+    let before = tuner.stats();
+    let (lat, per_query) = replay(&uni, &zipf, hot_per_thread, |q| {
+        std::hint::black_box(
+            tuner
+                .decision_sized(&q.cluster, &q.placement, q.collective, q.msg_bytes)
+                .unwrap(),
+        );
+    });
+    let after = tuner.stats();
+    assert_eq!(
+        after.misses, before.misses,
+        "hot replay must be 100% hits (universe fully pre-warmed)"
+    );
+    let (p50, p99) = (percentile(&lat, 0.50), percentile(&lat, 0.99));
+    println!(
+        "sharded hot replay: p50 {:.0} ns, p99 {:.0} ns, {:.2} Mq/s aggregate",
+        p50 * 1e9,
+        p99 * 1e9,
+        1e-6 / per_query
+    );
+    stats.push(scalar("traffic: hit p50 (8 threads, sharded)", p50, lat.len()));
+    stats.push(scalar("traffic: hit p99 (8 threads, sharded)", p99, lat.len()));
+    stats.push(scalar(
+        "traffic: per-query wall (8 threads, sharded)",
+        per_query,
+        lat.len(),
+    ));
+
+    // Phase 4: the pre-PR serving path — one exclusive lock around the
+    // whole map, a heap-allocated Fingerprint constructed per probe.
+    let baseline: Mutex<HashMap<u64, std::sync::Arc<Decision>>> =
+        Mutex::new(HashMap::new());
+    {
+        let mut map = baseline.lock().unwrap();
+        for q in &uni {
+            let qcfg = cfg.clone().with_msg_bytes(q.msg_bytes);
+            let fp =
+                Fingerprint::new(&q.cluster, &q.placement, q.collective, &qcfg);
+            let d = tuner
+                .decision_sized(&q.cluster, &q.placement, q.collective, q.msg_bytes)
+                .unwrap();
+            map.insert(fp.digest(), d);
+        }
+    }
+    let (_, mutex_per_query) = replay(&uni, &zipf, hot_per_thread, |q| {
+        let qcfg = cfg.clone().with_msg_bytes(q.msg_bytes);
+        let fp = Fingerprint::new(&q.cluster, &q.placement, q.collective, &qcfg);
+        let map = baseline.lock().unwrap();
+        std::hint::black_box(std::sync::Arc::clone(&map[&fp.digest()]));
+    });
+    let speedup = mutex_per_query / per_query;
+    println!(
+        "mutex baseline: {:.0} ns/query vs sharded {:.0} ns/query — {:.1}x speedup",
+        mutex_per_query * 1e9,
+        per_query * 1e9,
+        speedup
+    );
+    stats.push(scalar(
+        "traffic: per-query wall (8 threads, mutex baseline)",
+        mutex_per_query,
+        THREADS * hot_per_thread,
+    ));
+    if !smoke {
+        // The acceptance bar. Smoke mode on shared CI runners is too
+        // noisy to gate on; full mode on real hardware is not.
+        assert!(
+            speedup >= 4.0,
+            "sharded hit path must beat the single-Mutex baseline by ≥4x \
+             at {THREADS} threads (got {speedup:.1}x)"
+        );
+    }
+
+    match merge_json("hotpath", &stats) {
+        Ok(path) => println!("merged traffic/cache keys into {path}"),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
+}

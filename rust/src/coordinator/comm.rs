@@ -301,8 +301,9 @@ impl Communicator {
         self.tuner.schedule(&self.cluster, &self.placement, coll)
     }
 
-    /// The full tuning decision for `coll` (choice, costs, win margin).
-    pub fn tuned_decision(&self, coll: Collective) -> crate::Result<Decision> {
+    /// The full tuning decision for `coll` (choice, costs, win margin),
+    /// shared straight out of the tuner's decision cache.
+    pub fn tuned_decision(&self, coll: Collective) -> crate::Result<std::sync::Arc<Decision>> {
         self.tuner.decision(&self.cluster, &self.placement, coll)
     }
 

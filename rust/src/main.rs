@@ -275,13 +275,27 @@ fn cmd_train(flags: &HashMap<&str, &str>) -> mcomm::Result<()> {
     );
     let ts = trainer.tune_stats();
     println!(
-        "tuner cache: {}/{} hit/miss, {} invalidation(s), {} live entr{}",
+        "tuner cache: {}/{} hit/miss, {} invalidation(s), {} live entr{} \
+         across {} shard(s), {} eviction(s), {} warm-started tune(s)",
         ts.hits,
         ts.misses,
         ts.invalidations,
         ts.entries,
-        if ts.entries == 1 { "y" } else { "ies" }
+        if ts.entries == 1 { "y" } else { "ies" },
+        ts.shards,
+        ts.evictions,
+        ts.warm_hits
     );
+    let occupied: Vec<String> = ts
+        .per_shard
+        .iter()
+        .enumerate()
+        .filter(|(_, &n)| n > 0)
+        .map(|(i, n)| format!("{i}:{n}"))
+        .collect();
+    if !occupied.is_empty() {
+        println!("tuner cache shards (occupied): {}", occupied.join(" "));
+    }
     Ok(())
 }
 

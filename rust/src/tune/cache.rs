@@ -1,147 +1,527 @@
-//! Decision cache: fingerprint → [`Decision`], so repeated lookups skip
-//! candidate construction and simulation entirely.
+//! Concurrent decision cache: fingerprint → [`Decision`], sharded for
+//! tuning-as-a-service traffic.
 //!
-//! A hit returns the cached decision — including the schedule, whose rank
-//! numbering is valid because equal fingerprints imply the exact same
-//! cluster + placement (see [`super::fingerprint`]). The per-lookup work
-//! on a hit is computing the fingerprint (linear in the topology
-//! description, microseconds) plus one hash-map probe; no schedules are
-//! built and nothing is simulated.
+//! The cache is the serving layer of the tuner: one instance fields
+//! queries from many threads at once, so the hot path is engineered to
+//! hold **no exclusive lock and allocate nothing**:
+//!
+//! ```text
+//!   get_or_tune(cluster, placement, collective, cfg)
+//!        │
+//!        ▼
+//!   live_digest ─────────── streaming FNV-1a over the live inputs
+//!        │                  (bit-identical to Fingerprint::new().digest(),
+//!        │                  relabeling included, zero allocation)
+//!        ▼
+//!   shard = mix(digest)     N RwLock shards, independent locks
+//!        │
+//!        ├── read lock ───▶ one hash probe, confirm with the interned
+//!        │   HIT            Arc<Fingerprint> via Fingerprint::matches
+//!        │                  (streaming equality, zero allocation), bump
+//!        │                  a relaxed per-shard atomic, mark the CLOCK
+//!        │                  bit, clone the Arc<Decision> — done. No
+//!        │                  writer lock, no Fingerprint built.
+//!        ▼
+//!   MISS: warm probe ─────▶ family index: same topology/collective/knobs,
+//!        │                  nearest msg_bytes size class → that entry's
+//!        │                  winning candidate seeds select_seeded
+//!        │                  (ordering-only: the pick is bit-identical to
+//!        │                  a cold select — see selector docs)
+//!        ▼
+//!   write lock (one shard): double-probe (another thread may have won
+//!                           the race — serve its entry), CLOCK-evict if
+//!                           at capacity, insert interned fingerprint +
+//!                           Arc<Decision>
+//! ```
+//!
+//! A hit returns the cached decision — including the schedule, whose
+//! rank numbering is valid because equal fingerprints imply the exact
+//! same cluster + placement (see [`super::fingerprint`]). Decisions are
+//! handed out as [`Arc<Decision>`], so readers never hold any lock while
+//! materializing or executing a schedule.
+//!
+//! **Capacity.** The cache is bounded ([`CacheConfig::capacity`], split
+//! evenly across shards) with CLOCK (second-chance) eviction: every
+//! probe sets the entry's referenced bit through a relaxed atomic (still
+//! under the read lock), and the eviction hand clears bits until it
+//! finds an unreferenced victim. Eviction runs *before* insertion, so a
+//! just-inserted entry is structurally never its own victim.
+//!
+//! **Determinism.** Selection is deterministic, so when two threads race
+//! to tune the same fingerprint both compute bit-identical decisions and
+//! the loser adopts the winner's entry — callers can never observe torn
+//! or divergent decisions (`tests/cache_concurrency.rs` hammers this).
 
-use std::collections::hash_map::Entry;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering::Relaxed};
+use std::sync::{Arc, RwLock};
 
 use crate::topology::{Cluster, Placement};
 
-use super::fingerprint::Fingerprint;
-use super::registry::Collective;
-use super::selector::{select, Decision, TuneCfg};
+use super::fingerprint::{live_digest, live_family_digest, Fingerprint};
+use super::registry::{CandidateId, Collective};
+use super::selector::{select_seeded, Decision, TuneCfg};
 
-/// Hit/miss/invalidation counters for observability (E9 benches, the
-/// trainer's end-of-run report, tests).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+/// Warm-start search window, in msg_bytes size classes (powers of two)
+/// on either side of the query. Decisions cluster by size class (the
+/// segment sweep flips at bandwidth crossovers), so a neighbor further
+/// than 4 octaves away is no better a guess than the registry order.
+const WARM_CLASS_WINDOW: u32 = 4;
+
+/// Shard count and total entry capacity for a [`DecisionCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Number of independently locked shards (rounded up to a power of
+    /// two). More shards = less writer interference; the default
+    /// comfortably outstrips any realistic thread count.
+    pub shards: usize,
+    /// Total cached decisions across all shards (split evenly); at
+    /// capacity, CLOCK eviction reclaims the coldest entry per insert.
+    pub capacity: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self { shards: 16, capacity: 1 << 16 }
+    }
+}
+
+/// Counters for observability (E9/E16 benches, the trainer's end-of-run
+/// report, tests). Hit/miss/invalidation/eviction counts are summed over
+/// the per-shard relaxed atomics; a concurrent snapshot is therefore
+/// approximate while traffic is in flight and exact once it quiesces.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct CacheStats {
     pub hits: usize,
     pub misses: usize,
     /// Entries actually removed by [`DecisionCache::invalidate`] (calls
     /// that found nothing to remove are not counted).
     pub invalidations: usize,
+    /// Live entries across all shards.
     pub entries: usize,
+    /// Entries reclaimed by CLOCK eviction at capacity.
+    pub evictions: usize,
+    /// Misses whose tune was warm-started from a neighboring size class
+    /// (the pick is bit-identical either way; this counts seeding only).
+    pub warm_hits: usize,
+    /// Shard count (fixed at construction).
+    pub shards: usize,
+    /// Live entries per shard, in shard order.
+    pub per_shard: Vec<usize>,
 }
 
-/// An in-memory decision cache. Single-threaded by itself; wrap in the
-/// thread-safe [`crate::tune::Tuned`] facade for shared use.
+/// One interned cache entry. `digest` is denormalized from `fp` so
+/// eviction/invalidation can unlink from the shard index without
+/// re-walking the fingerprint.
+#[derive(Debug)]
+struct Entry {
+    digest: u64,
+    fp: Arc<Fingerprint>,
+    decision: Arc<Decision>,
+    /// CLOCK referenced bit: set by every probe (relaxed store under the
+    /// read lock), cleared by the eviction hand's first pass.
+    referenced: AtomicBool,
+}
+
+/// One shard's entry storage: a slab with a free list (stable slot
+/// numbers for the CLOCK hand) plus a digest → slots index. Buckets are
+/// tiny vectors because digest collisions are ~nonexistent; equality is
+/// always confirmed against the full fingerprint.
 #[derive(Debug, Default)]
+struct Slots {
+    index: HashMap<u64, Vec<u32>>,
+    slab: Vec<Option<Entry>>,
+    free: Vec<u32>,
+    hand: usize,
+}
+
+impl Slots {
+    fn len(&self) -> usize {
+        self.slab.len() - self.free.len()
+    }
+
+    /// Unlink one slot: take the entry, recycle the slot, drop it from
+    /// the digest index. Returns the (family digest, digest) pair the
+    /// caller needs to unlink the warm index (outside the shard lock).
+    fn remove_slot(&mut self, slot: u32) -> (u64, u64) {
+        let e = self.slab[slot as usize].take().expect("indexed slot is live");
+        self.free.push(slot);
+        if let Some(bucket) = self.index.get_mut(&e.digest) {
+            if let Some(p) = bucket.iter().position(|&s| s == slot) {
+                bucket.swap_remove(p);
+            }
+            if bucket.is_empty() {
+                self.index.remove(&e.digest);
+            }
+        }
+        (e.fp.family_digest(), e.digest)
+    }
+
+    /// CLOCK second chance: advance the hand, clearing referenced bits,
+    /// until an unreferenced entry turns up; evict it. The first full
+    /// sweep clears every bit, so the walk always terminates within two
+    /// laps. Runs before insertion — the incoming entry has no slot yet
+    /// and can never be its own victim.
+    fn evict_one(&mut self) -> Option<(u64, u64)> {
+        let n = self.slab.len();
+        if self.len() == 0 {
+            return None;
+        }
+        for _ in 0..2 * n + 1 {
+            let i = self.hand;
+            self.hand = (self.hand + 1) % n;
+            let Some(e) = self.slab[i].as_ref() else { continue };
+            if e.referenced.swap(false, Relaxed) {
+                continue;
+            }
+            return Some(self.remove_slot(i as u32));
+        }
+        unreachable!("a full CLOCK sweep clears every referenced bit");
+    }
+
+    /// Store `entry` in a recycled or fresh slot and index it.
+    fn insert(&mut self, entry: Entry) {
+        let digest = entry.digest;
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slab[s as usize] = Some(entry);
+                s
+            }
+            None => {
+                self.slab.push(Some(entry));
+                (self.slab.len() - 1) as u32
+            }
+        };
+        self.index.entry(digest).or_default().push(slot);
+    }
+}
+
+/// One independently locked shard plus its relaxed counters: the hit
+/// path touches only this struct — a read lock and two relaxed stores.
+#[derive(Debug, Default)]
+struct Shard {
+    slots: RwLock<Slots>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    invalidations: AtomicUsize,
+    evictions: AtomicUsize,
+}
+
+/// Warm-index record: enough to seed a neighbor's tune without touching
+/// the owning shard ([`CandidateId`] is `Copy`).
+#[derive(Debug, Clone, Copy)]
+struct WarmEntry {
+    digest: u64,
+    msg_bytes: u64,
+    choice: CandidateId,
+}
+
+/// Sharded, internally synchronized decision cache. Shareable by
+/// reference across threads (`&self` everywhere); [`crate::tune::Tuned`]
+/// is the cfg-carrying facade over it.
+#[derive(Debug)]
 pub struct DecisionCache {
-    map: HashMap<Fingerprint, Decision>,
-    hits: usize,
-    misses: usize,
-    invalidations: usize,
+    shards: Vec<Shard>,
+    shard_cap: usize,
+    /// Warm-start index: family digest (fingerprint minus size class) →
+    /// cached sizes in that family. Touched only on miss / insert /
+    /// evict / invalidate — never on the hit path.
+    warm: RwLock<HashMap<u64, Vec<WarmEntry>>>,
+    warm_hits: AtomicUsize,
+}
+
+impl Default for DecisionCache {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl DecisionCache {
     pub fn new() -> Self {
-        Self::default()
+        Self::with_config(CacheConfig::default())
+    }
+
+    /// Cache with explicit shard count and capacity (tests and benches;
+    /// serving deployments are fine with [`CacheConfig::default`]).
+    pub fn with_config(cfg: CacheConfig) -> Self {
+        let shards = cfg.shards.max(1).next_power_of_two();
+        Self {
+            shards: (0..shards).map(|_| Shard::default()).collect(),
+            shard_cap: cfg.capacity.max(shards).div_ceil(shards),
+            warm: RwLock::new(HashMap::new()),
+            warm_hits: AtomicUsize::new(0),
+        }
+    }
+
+    /// Fibonacci-mix the digest into a shard index: FNV's low bits are
+    /// well scrambled but the multiply spreads any residual structure
+    /// across the (power-of-two) shard count.
+    fn shard_of(&self, digest: u64) -> &Shard {
+        let mixed = (digest.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize;
+        &self.shards[mixed & (self.shards.len() - 1)]
     }
 
     /// Look up the decision for this (topology, collective, cfg), tuning
-    /// and inserting on a miss.
+    /// and inserting on a miss. The hit path takes one shard's read lock,
+    /// performs one hash probe plus a streaming fingerprint confirmation,
+    /// and allocates nothing beyond the returned `Arc` clone.
     pub fn get_or_tune(
-        &mut self,
+        &self,
         cluster: &Cluster,
         placement: &Placement,
         collective: Collective,
         cfg: &TuneCfg,
-    ) -> crate::Result<&Decision> {
-        let fp = Fingerprint::new(cluster, placement, collective, cfg);
-        match self.map.entry(fp) {
-            Entry::Occupied(hit) => {
-                self.hits += 1;
-                Ok(hit.into_mut())
-            }
-            Entry::Vacant(slot) => {
-                self.misses += 1;
-                let decision = select(cluster, placement, collective, cfg)?;
-                Ok(slot.insert(decision))
-            }
+    ) -> crate::Result<Arc<Decision>> {
+        let digest = live_digest(cluster, placement, collective, cfg);
+        let shard = self.shard_of(digest);
+        if let Some(d) = probe_live(shard, digest, cluster, placement, collective, cfg) {
+            shard.hits.fetch_add(1, Relaxed);
+            return Ok(d);
         }
+        shard.misses.fetch_add(1, Relaxed);
+
+        // Miss: tune, warm-started from the nearest cached size class in
+        // the same family when one exists. Seeding is ordering-only, so
+        // the decision is bit-identical to a cold tune either way.
+        let family = live_family_digest(cluster, placement, collective, cfg);
+        let warm = self.warm_neighbor(family, cfg.msg_bytes);
+        let decision = Arc::new(select_seeded(cluster, placement, collective, cfg, warm)?);
+        if warm.is_some() {
+            self.warm_hits.fetch_add(1, Relaxed);
+        }
+        let fp = Arc::new(Fingerprint::new(cluster, placement, collective, cfg));
+        debug_assert_eq!(fp.digest(), digest, "live digest mirrors the constructed key");
+        Ok(self.insert(shard, digest, family, fp, decision))
     }
 
-    /// Direct probe without tuning on miss.
-    pub fn lookup(&mut self, fp: &Fingerprint) -> Option<&Decision> {
-        match self.map.get(fp) {
-            Some(decision) => {
-                self.hits += 1;
-                Some(decision)
-            }
-            None => {
-                self.misses += 1;
-                None
+    /// Direct probe without tuning on miss. Read lock only (shared
+    /// probes run concurrently); counters move through relaxed atomics.
+    pub fn lookup(&self, fp: &Fingerprint) -> Option<Arc<Decision>> {
+        let digest = fp.digest();
+        let shard = self.shard_of(digest);
+        {
+            let slots = shard.slots.read().expect("cache shard poisoned");
+            if let Some(bucket) = slots.index.get(&digest) {
+                for &slot in bucket {
+                    let e = slots.slab[slot as usize].as_ref().expect("indexed slot is live");
+                    if *e.fp == *fp {
+                        e.referenced.store(true, Relaxed);
+                        shard.hits.fetch_add(1, Relaxed);
+                        return Some(Arc::clone(&e.decision));
+                    }
+                }
             }
         }
+        shard.misses.fetch_add(1, Relaxed);
+        None
     }
 
     /// Drop the cached decision for `fp` (online re-planning: a decision
     /// tuned for a topology that no longer exists must not be served).
     /// Returns whether an entry was actually removed. Hit/miss counters
     /// are untouched — invalidation is not a lookup.
-    pub fn invalidate(&mut self, fp: &Fingerprint) -> bool {
-        let removed = self.map.remove(fp).is_some();
-        if removed {
-            self.invalidations += 1;
+    pub fn invalidate(&self, fp: &Fingerprint) -> bool {
+        let digest = fp.digest();
+        let shard = self.shard_of(digest);
+        let removed = {
+            let mut slots = shard.slots.write().expect("cache shard poisoned");
+            let mut found = None;
+            if let Some(bucket) = slots.index.get(&digest) {
+                for &slot in bucket {
+                    let e = slots.slab[slot as usize].as_ref().expect("indexed slot is live");
+                    if *e.fp == *fp {
+                        found = Some(slot);
+                        break;
+                    }
+                }
+            }
+            found.map(|slot| slots.remove_slot(slot))
+        };
+        match removed {
+            Some((family, digest)) => {
+                shard.invalidations.fetch_add(1, Relaxed);
+                self.warm_unlink(family, digest);
+                true
+            }
+            None => false,
         }
-        removed
     }
 
+    /// Aggregate counters plus per-shard occupancy.
     pub fn stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.hits,
-            misses: self.misses,
-            invalidations: self.invalidations,
-            entries: self.map.len(),
+        let mut s = CacheStats {
+            shards: self.shards.len(),
+            warm_hits: self.warm_hits.load(Relaxed),
+            per_shard: Vec::with_capacity(self.shards.len()),
+            ..CacheStats::default()
+        };
+        for shard in &self.shards {
+            s.hits += shard.hits.load(Relaxed);
+            s.misses += shard.misses.load(Relaxed);
+            s.invalidations += shard.invalidations.load(Relaxed);
+            s.evictions += shard.evictions.load(Relaxed);
+            let live = shard.slots.read().expect("cache shard poisoned").len();
+            s.per_shard.push(live);
+            s.entries += live;
+        }
+        s
+    }
+
+    /// Drop every entry and reset every counter (shard by shard, then
+    /// the warm index).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            let mut slots = shard.slots.write().expect("cache shard poisoned");
+            *slots = Slots::default();
+            shard.hits.store(0, Relaxed);
+            shard.misses.store(0, Relaxed);
+            shard.invalidations.store(0, Relaxed);
+            shard.evictions.store(0, Relaxed);
+        }
+        self.warm.write().expect("warm index poisoned").clear();
+        self.warm_hits.store(0, Relaxed);
+    }
+
+    /// Insert under the shard's write lock, double-probing first: if a
+    /// racing thread already tuned this fingerprint, adopt its entry
+    /// (decisions are deterministic, so both copies are bit-identical).
+    fn insert(
+        &self,
+        shard: &Shard,
+        digest: u64,
+        family: u64,
+        fp: Arc<Fingerprint>,
+        decision: Arc<Decision>,
+    ) -> Arc<Decision> {
+        let evicted;
+        {
+            let mut slots = shard.slots.write().expect("cache shard poisoned");
+            if let Some(bucket) = slots.index.get(&digest) {
+                for &slot in bucket {
+                    let e = slots.slab[slot as usize].as_ref().expect("indexed slot is live");
+                    if *e.fp == *fp {
+                        e.referenced.store(true, Relaxed);
+                        return Arc::clone(&e.decision);
+                    }
+                }
+            }
+            evicted = if slots.len() >= self.shard_cap { slots.evict_one() } else { None };
+            slots.insert(Entry {
+                digest,
+                fp: Arc::clone(&fp),
+                decision: Arc::clone(&decision),
+                referenced: AtomicBool::new(false),
+            });
+        }
+        if let Some((old_family, old_digest)) = evicted {
+            shard.evictions.fetch_add(1, Relaxed);
+            self.warm_unlink(old_family, old_digest);
+        }
+        self.warm_link(
+            family,
+            WarmEntry { digest, msg_bytes: fp.msg_bytes(), choice: decision.choice },
+        );
+        decision
+    }
+
+    /// The winning candidate of the nearest cached size class in this
+    /// family (closest octave first, then closest byte count — fully
+    /// deterministic), if one sits within [`WARM_CLASS_WINDOW`].
+    fn warm_neighbor(&self, family: u64, msg_bytes: u64) -> Option<CandidateId> {
+        let map = self.warm.read().expect("warm index poisoned");
+        let class = size_class(msg_bytes);
+        map.get(&family)?
+            .iter()
+            .filter(|e| e.msg_bytes != msg_bytes)
+            .filter(|e| size_class(e.msg_bytes).abs_diff(class) <= WARM_CLASS_WINDOW)
+            .min_by_key(|e| {
+                (
+                    size_class(e.msg_bytes).abs_diff(class),
+                    e.msg_bytes.abs_diff(msg_bytes),
+                    e.msg_bytes,
+                )
+            })
+            .map(|e| e.choice)
+    }
+
+    fn warm_link(&self, family: u64, entry: WarmEntry) {
+        let mut map = self.warm.write().expect("warm index poisoned");
+        let bucket = map.entry(family).or_default();
+        if !bucket.iter().any(|e| e.digest == entry.digest) {
+            bucket.push(entry);
         }
     }
 
-    pub fn clear(&mut self) {
-        self.map.clear();
-        self.hits = 0;
-        self.misses = 0;
-        self.invalidations = 0;
+    fn warm_unlink(&self, family: u64, digest: u64) {
+        let mut map = self.warm.write().expect("warm index poisoned");
+        if let Some(bucket) = map.get_mut(&family) {
+            if let Some(p) = bucket.iter().position(|e| e.digest == digest) {
+                bucket.swap_remove(p);
+            }
+            if bucket.is_empty() {
+                map.remove(&family);
+            }
+        }
     }
+}
+
+/// The hit path's shard probe: read lock, one hash probe, streaming
+/// fingerprint confirmation against the live inputs — no `Fingerprint`
+/// is ever built on a hit. Free function (not a method) so the borrow of
+/// one shard is visibly independent of `&self`.
+fn probe_live(
+    shard: &Shard,
+    digest: u64,
+    cluster: &Cluster,
+    placement: &Placement,
+    collective: Collective,
+    cfg: &TuneCfg,
+) -> Option<Arc<Decision>> {
+    let slots = shard.slots.read().expect("cache shard poisoned");
+    for &slot in slots.index.get(&digest)? {
+        let e = slots.slab[slot as usize].as_ref().expect("indexed slot is live");
+        if e.fp.matches(cluster, placement, collective, cfg) {
+            e.referenced.store(true, Relaxed);
+            return Some(Arc::clone(&e.decision));
+        }
+    }
+    None
+}
+
+/// Octave (power-of-two size class) of a byte count: 0 for 0 bytes,
+/// else `floor(log2) + 1`.
+fn size_class(bytes: u64) -> u32 {
+    64 - bytes.leading_zeros()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::topology::{switched, Placement};
+    use crate::tune::select;
 
     #[test]
     fn second_lookup_hits_and_returns_identical_schedule() {
         let cl = switched(4, 4, 2);
         let pl = Placement::block(&cl);
         let cfg = TuneCfg::default();
-        let mut cache = DecisionCache::new();
+        let cache = DecisionCache::new();
 
         let first = cache
             .get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg)
-            .unwrap()
-            .schedule
-            .clone();
-        assert_eq!(
-            cache.stats(),
-            CacheStats { hits: 0, misses: 1, invalidations: 0, entries: 1 }
-        );
+            .unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.invalidations, s.entries), (0, 1, 0, 1));
 
         let second = cache
             .get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg)
-            .unwrap()
-            .schedule
-            .clone();
-        assert_eq!(
-            cache.stats(),
-            CacheStats { hits: 1, misses: 1, invalidations: 0, entries: 1 }
-        );
-        assert_eq!(first, second);
+            .unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.invalidations, s.entries), (1, 1, 0, 1));
+        assert_eq!(first.schedule, second.schedule);
+        // Interning: a hit clones the cached Arc, it does not copy the
+        // decision.
+        assert!(Arc::ptr_eq(&first, &second));
     }
 
     #[test]
@@ -149,7 +529,7 @@ mod tests {
         let cl = switched(4, 4, 2);
         let pl = Placement::block(&cl);
         let cfg = TuneCfg::default();
-        let mut cache = DecisionCache::new();
+        let cache = DecisionCache::new();
         cache.get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg).unwrap();
         // Different root: a different decision key.
         cache.get_or_tune(&cl, &pl, Collective::Broadcast { root: 3 }, &cfg).unwrap();
@@ -157,18 +537,18 @@ mod tests {
         let cl2 = switched(4, 4, 1);
         let pl2 = Placement::block(&cl2);
         cache.get_or_tune(&cl2, &pl2, Collective::Broadcast { root: 0 }, &cfg).unwrap();
-        assert_eq!(
-            cache.stats(),
-            CacheStats { hits: 0, misses: 3, invalidations: 0, entries: 3 }
-        );
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.invalidations, s.entries), (0, 3, 0, 3));
+        assert_eq!(s.per_shard.len(), s.shards);
+        assert_eq!(s.per_shard.iter().sum::<usize>(), s.entries);
     }
 
     #[test]
-    fn lookup_counts_misses_without_tuning() {
+    fn lookup_is_shared_access_and_counts_misses() {
         let cl = switched(2, 2, 1);
         let pl = Placement::block(&cl);
         let cfg = TuneCfg::default();
-        let mut cache = DecisionCache::new();
+        let cache = DecisionCache::new();
         let fp = Fingerprint::new(&cl, &pl, Collective::Allgather, &cfg);
         assert!(cache.lookup(&fp).is_none());
         cache.get_or_tune(&cl, &pl, Collective::Allgather, &cfg).unwrap();
@@ -182,7 +562,7 @@ mod tests {
         let cl = switched(3, 2, 1);
         let pl = Placement::block(&cl);
         let cfg = TuneCfg::default();
-        let mut cache = DecisionCache::new();
+        let cache = DecisionCache::new();
         cache.get_or_tune(&cl, &pl, Collective::Allreduce, &cfg).unwrap();
         cache.get_or_tune(&cl, &pl, Collective::Allgather, &cfg).unwrap();
         let fp = Fingerprint::new(&cl, &pl, Collective::Allreduce, &cfg);
@@ -203,9 +583,115 @@ mod tests {
         let cl = switched(2, 2, 1);
         let pl = Placement::block(&cl);
         let cfg = TuneCfg::default();
-        let mut cache = DecisionCache::new();
+        let cache = DecisionCache::new();
         cache.get_or_tune(&cl, &pl, Collective::Allreduce, &cfg).unwrap();
+        cache
+            .get_or_tune(&cl, &pl, Collective::Allreduce, &cfg.clone().with_msg_bytes(1 << 20))
+            .unwrap();
         cache.clear();
-        assert_eq!(cache.stats(), CacheStats::default());
+        let s = cache.stats();
+        assert_eq!(
+            (s.hits, s.misses, s.invalidations, s.entries, s.evictions, s.warm_hits),
+            (0, 0, 0, 0, 0, 0)
+        );
+        assert!(s.per_shard.iter().all(|&n| n == 0));
+        // Cleared means cold: the same query misses (and re-tunes) again.
+        cache.get_or_tune(&cl, &pl, Collective::Allreduce, &cfg).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 1, 1));
+    }
+
+    #[test]
+    fn capacity_bound_evicts_clock_second_chance() {
+        // One shard, two slots: CLOCK must give a probed entry a second
+        // chance and reclaim the cold one.
+        let cl = switched(3, 2, 1);
+        let pl = Placement::block(&cl);
+        let cfg = TuneCfg::default();
+        let cache = DecisionCache::with_config(CacheConfig { shards: 1, capacity: 2 });
+        let key = |root: usize| Fingerprint::new(&cl, &pl, Collective::Broadcast { root }, &cfg);
+
+        let a = cache.get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg).unwrap();
+        cache.get_or_tune(&cl, &pl, Collective::Broadcast { root: 1 }, &cfg).unwrap();
+        // Touch A: its referenced bit marks it hot.
+        let a2 = cache.get_or_tune(&cl, &pl, Collective::Broadcast { root: 0 }, &cfg).unwrap();
+        assert!(Arc::ptr_eq(&a, &a2));
+        // Third insert: the hand clears A's bit (second chance) and
+        // evicts cold B.
+        cache.get_or_tune(&cl, &pl, Collective::Broadcast { root: 2 }, &cfg).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.entries, s.evictions), (2, 1));
+        assert!(cache.lookup(&key(0)).is_some(), "hot entry survives");
+        assert!(cache.lookup(&key(2)).is_some(), "just-inserted entry survives");
+        assert!(cache.lookup(&key(1)).is_none(), "cold entry was the victim");
+    }
+
+    #[test]
+    fn eviction_never_evicts_the_entry_just_returned() {
+        // Capacity one: every miss evicts — but never its own entry.
+        let cl = switched(3, 2, 1);
+        let pl = Placement::block(&cl);
+        let cfg = TuneCfg::default();
+        let cache = DecisionCache::with_config(CacheConfig { shards: 1, capacity: 1 });
+        for root in 0..4 {
+            let d = cache.get_or_tune(&cl, &pl, Collective::Broadcast { root }, &cfg).unwrap();
+            let fp = Fingerprint::new(&cl, &pl, Collective::Broadcast { root }, &cfg);
+            let cached = cache.lookup(&fp).expect("just-returned entry is resident");
+            assert!(Arc::ptr_eq(&d, &cached));
+        }
+        let s = cache.stats();
+        assert_eq!((s.entries, s.evictions, s.misses), (1, 3, 4));
+    }
+
+    #[test]
+    fn warm_start_seeds_from_neighbor_size_class_bit_identically() {
+        let cl = switched(4, 4, 2);
+        let pl = Placement::block(&cl);
+        let coll = Collective::Broadcast { root: 0 };
+        let small = TuneCfg::default().with_msg_bytes(4 << 10);
+        let large = TuneCfg::default().with_msg_bytes(16 << 10);
+
+        let cache = DecisionCache::new();
+        cache.get_or_tune(&cl, &pl, coll, &small).unwrap();
+        assert_eq!(cache.stats().warm_hits, 0, "first tune in a family is cold");
+        let warm = cache.get_or_tune(&cl, &pl, coll, &large).unwrap();
+        assert_eq!(cache.stats().warm_hits, 1, "neighbor size class seeds the tune");
+
+        // The differential guarantee, end to end: the warm-started pick
+        // is bit-identical to a cold tune of the same query.
+        let cold = select(&cl, &pl, coll, &large).unwrap();
+        assert_eq!(warm.choice, cold.choice);
+        assert_eq!(warm.schedule, cold.schedule);
+        assert_eq!(warm.model_cost.to_bits(), cold.model_cost.to_bits());
+        assert_eq!(warm.sim_time.to_bits(), cold.sim_time.to_bits());
+        assert_eq!(warm.baseline_sim, cold.baseline_sim);
+        assert_eq!((warm.considered, warm.simulated), (cold.considered, cold.simulated));
+
+        // Invalidation unlinks the warm index too: with the only family
+        // neighbor gone, the next miss tunes cold.
+        let small_fp = Fingerprint::new(&cl, &pl, coll, &small);
+        let large_fp = Fingerprint::new(&cl, &pl, coll, &large);
+        assert!(cache.invalidate(&small_fp));
+        assert!(cache.invalidate(&large_fp));
+        cache.get_or_tune(&cl, &pl, coll, &small).unwrap();
+        assert_eq!(cache.stats().warm_hits, 1, "no neighbors left: cold tune");
+    }
+
+    #[test]
+    fn warm_neighbor_prefers_nearest_octave() {
+        let cache = DecisionCache::new();
+        let mk = |digest, msg_bytes, choice| WarmEntry { digest, msg_bytes, choice };
+        let flat = CandidateId::BcastBinomial { root: 0 };
+        let near = CandidateId::BcastFlatTree { root: 0 };
+        cache.warm_link(7, mk(1, 1 << 10, flat));
+        cache.warm_link(7, mk(2, 1 << 13, near));
+        // Query at 16 KiB: 8 KiB (1 octave) beats 1 KiB (4 octaves).
+        assert_eq!(cache.warm_neighbor(7, 1 << 14), Some(near));
+        // Outside the octave window, or the wrong family: no seed.
+        assert_eq!(cache.warm_neighbor(7, 1 << 30), None);
+        assert_eq!(cache.warm_neighbor(8, 1 << 14), None);
+        // Exact size is not a "neighbor" (that would have been a hit).
+        cache.warm_unlink(7, 1);
+        assert_eq!(cache.warm_neighbor(7, 1 << 13), None);
     }
 }

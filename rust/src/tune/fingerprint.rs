@@ -35,9 +35,19 @@
 //! because a cached schedule's rank numbering only fits the exact
 //! topology it was tuned for.
 
+use std::cell::RefCell;
+
 use crate::sim::SimParams;
 use crate::topology::{Cluster, Interconnect, Placement};
 use crate::tune::{Collective, TuneCfg};
+
+thread_local! {
+    /// Reusable machine-relabeling scratch for the allocation-free
+    /// fingerprint walks ([`live_digest`], [`Fingerprint::matches`]):
+    /// grown once per thread, then reused — the concurrent cache's hit
+    /// path does zero heap allocation.
+    static RELABEL: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Hashable, equality-comparable key for one tuning decision.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -160,6 +170,26 @@ impl Fingerprint {
     /// Short stable digest for logs and reports (FNV-1a over the full
     /// key). Collisions here are cosmetic; the cache compares full keys.
     pub fn digest(&self) -> u64 {
+        self.fold(true)
+    }
+
+    /// Family digest: [`Fingerprint::digest`] with the payload size class
+    /// (`msg_bytes`) left out of the fold. Two fingerprints share a family
+    /// exactly when they differ *only* by message size — same canonical
+    /// topology, placement, collective (root included), and every model /
+    /// simulator / robustness / quotient knob. The warm-start index in
+    /// [`crate::tune::DecisionCache`] buckets entries by this digest so a
+    /// miss can borrow the winner from an adjacent size class.
+    pub fn family_digest(&self) -> u64 {
+        self.fold(false)
+    }
+
+    /// The payload size class this decision was tuned for.
+    pub fn msg_bytes(&self) -> u64 {
+        self.msg_bytes
+    }
+
+    fn fold(&self, include_msg: bool) -> u64 {
         let mut h = FNV_OFFSET;
         for &(c, n, s) in &self.machines {
             h = fnv(h, c as u64);
@@ -175,7 +205,9 @@ impl Fingerprint {
             h = fnv(h, m as u64);
         }
         h = fnv(h, collective_tag(self.collective));
-        h = fnv(h, self.msg_bytes);
+        if include_msg {
+            h = fnv(h, self.msg_bytes);
+        }
         h = fnv(h, self.duplex_half as u64);
         h = fnv(h, self.alpha_bits);
         h = fnv(h, self.byte_ext_bits);
@@ -190,6 +222,225 @@ impl Fingerprint {
         h = fnv(h, self.quotient.1 as u64);
         h
     }
+
+    /// Allocation-free equality against *live* tuning inputs: exactly
+    /// `self == &Fingerprint::new(cluster, placement, collective, cfg)`
+    /// without constructing the right-hand side. The concurrent cache's
+    /// hit path digests the live inputs with [`live_digest`], probes one
+    /// shard, and confirms the colliding entry with this walk — one hash
+    /// probe, zero allocation.
+    pub fn matches(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        collective: Collective,
+        cfg: &TuneCfg,
+    ) -> bool {
+        // Cheap scalar knobs first: almost every mismatch dies here.
+        if self.collective != collective
+            || self.msg_bytes != cfg.msg_bytes
+            || self.duplex_half
+                != matches!(cfg.model.duplex, crate::model::Duplex::Half)
+            || self.alpha_bits != cfg.model.alpha.to_bits()
+            || self.byte_ext_bits != cfg.model.byte_ext.to_bits()
+            || self.byte_int_bits != cfg.model.byte_int.to_bits()
+            || self.shortlist != cfg.shortlist
+            || self.profile != cfg.profile_digest
+            || self.robustness
+                != (
+                    cfg.robustness.draws,
+                    cfg.robustness.seed,
+                    cfg.robustness.factor.to_bits(),
+                )
+            || self.quotient != (cfg.quotient, cfg.quotient_sim_cap)
+            || self.sim_bits != sim_digest(&cfg.sim)
+        {
+            return false;
+        }
+        // Machine specs, in machine order.
+        if self.machines.len() != cluster.num_machines() {
+            return false;
+        }
+        for (&(c, n, s), m) in self.machines.iter().zip(&cluster.machines) {
+            if c != m.cores || n != m.nics || s != m.speed.to_bits() {
+                return false;
+            }
+        }
+        // Interconnect: Cluster::new normalizes adjacency (sorted rows,
+        // deduped, symmetric), so the (a asc, b in row asc, a < b) walk
+        // streams the canonical sorted edge list directly.
+        match &cluster.interconnect {
+            Interconnect::FullSwitch => {
+                if !self.switch {
+                    return false;
+                }
+            }
+            Interconnect::Graph { adj } => {
+                if self.switch {
+                    return false;
+                }
+                let mut want = self.edges.iter();
+                for (a, row) in adj.iter().enumerate() {
+                    for &b in row {
+                        if a < b {
+                            match want.next() {
+                                Some(&(x, y)) if x == a && y == b => {}
+                                _ => return false,
+                            }
+                        }
+                    }
+                }
+                if want.next().is_some() {
+                    return false;
+                }
+            }
+        }
+        // Placement, replaying the machine-relabeling quotient when it
+        // applies (thread-local scratch; no allocation once warm).
+        if self.machine_of.len() != placement.num_ranks() {
+            return false;
+        }
+        if relabels(cluster, cfg) {
+            with_relabel(cluster.num_machines(), |relabel| {
+                let mut next = 0usize;
+                for (r, &want) in self.machine_of.iter().enumerate() {
+                    let m = placement.machine_of(r);
+                    if relabel[m] == usize::MAX {
+                        relabel[m] = next;
+                        next += 1;
+                    }
+                    if relabel[m] != want {
+                        return false;
+                    }
+                }
+                true
+            })
+        } else {
+            self.machine_of
+                .iter()
+                .enumerate()
+                .all(|(r, &m)| m == placement.machine_of(r))
+        }
+    }
+}
+
+/// Does the machine-relabeling quotient apply to this (cluster, cfg)
+/// pair? Mirrors the condition in [`Fingerprint::new`] exactly.
+fn relabels(cluster: &Cluster, cfg: &TuneCfg) -> bool {
+    cfg.sim.slowdown.is_empty()
+        && cfg.robustness.draws == 0
+        && matches!(
+            cluster.symmetry,
+            crate::topology::SymmetryClass::Uniform { .. }
+        )
+}
+
+/// Run `f` with a `usize::MAX`-filled relabel table of length `n`,
+/// reusing a thread-local scratch vector (zero allocation once warm).
+fn with_relabel<R>(n: usize, f: impl FnOnce(&mut [usize]) -> R) -> R {
+    RELABEL.with(|cell| {
+        let mut v = cell.borrow_mut();
+        v.clear();
+        v.resize(n, usize::MAX);
+        f(&mut v)
+    })
+}
+
+/// Digest the live tuning inputs without building a [`Fingerprint`]:
+/// bit-identical to `Fingerprint::new(...).digest()`, but allocation-free
+/// (the machine-relabeling quotient runs on a thread-local scratch). The
+/// concurrent decision cache uses this to pick a shard and probe it on
+/// the hit path.
+pub fn live_digest(
+    cluster: &Cluster,
+    placement: &Placement,
+    collective: Collective,
+    cfg: &TuneCfg,
+) -> u64 {
+    live_fold(cluster, placement, collective, cfg, true)
+}
+
+/// Family sibling of [`live_digest`]: bit-identical to
+/// `Fingerprint::new(...).family_digest()` without the allocation.
+pub fn live_family_digest(
+    cluster: &Cluster,
+    placement: &Placement,
+    collective: Collective,
+    cfg: &TuneCfg,
+) -> u64 {
+    live_fold(cluster, placement, collective, cfg, false)
+}
+
+fn live_fold(
+    cluster: &Cluster,
+    placement: &Placement,
+    collective: Collective,
+    cfg: &TuneCfg,
+    include_msg: bool,
+) -> u64 {
+    let mut h = FNV_OFFSET;
+    for m in &cluster.machines {
+        h = fnv(h, m.cores as u64);
+        h = fnv(h, m.nics as u64);
+        h = fnv(h, m.speed.to_bits());
+    }
+    let switch = match &cluster.interconnect {
+        Interconnect::FullSwitch => true,
+        Interconnect::Graph { adj } => {
+            // Normalized adjacency streams the sorted edge list (see
+            // `Fingerprint::matches`).
+            for (a, row) in adj.iter().enumerate() {
+                for &b in row {
+                    if a < b {
+                        h = fnv(h, a as u64);
+                        h = fnv(h, b as u64);
+                    }
+                }
+            }
+            false
+        }
+    };
+    h = fnv(h, switch as u64);
+    let num_ranks = placement.num_ranks();
+    if relabels(cluster, cfg) {
+        h = with_relabel(cluster.num_machines(), |relabel| {
+            let mut h = h;
+            let mut next = 0usize;
+            for r in 0..num_ranks {
+                let m = placement.machine_of(r);
+                if relabel[m] == usize::MAX {
+                    relabel[m] = next;
+                    next += 1;
+                }
+                h = fnv(h, relabel[m] as u64);
+            }
+            h
+        });
+    } else {
+        for r in 0..num_ranks {
+            h = fnv(h, placement.machine_of(r) as u64);
+        }
+    }
+    h = fnv(h, collective_tag(collective));
+    if include_msg {
+        h = fnv(h, cfg.msg_bytes);
+    }
+    h = fnv(
+        h,
+        matches!(cfg.model.duplex, crate::model::Duplex::Half) as u64,
+    );
+    h = fnv(h, cfg.model.alpha.to_bits());
+    h = fnv(h, cfg.model.byte_ext.to_bits());
+    h = fnv(h, cfg.model.byte_int.to_bits());
+    h = fnv(h, sim_digest(&cfg.sim));
+    h = fnv(h, cfg.shortlist as u64);
+    h = fnv(h, cfg.profile_digest);
+    h = fnv(h, cfg.robustness.draws as u64);
+    h = fnv(h, cfg.robustness.seed);
+    h = fnv(h, cfg.robustness.factor.to_bits());
+    h = fnv(h, cfg.quotient as u64);
+    h = fnv(h, cfg.quotient_sim_cap as u64);
+    h
 }
 
 /// FNV-1a offset basis — start value for every digest in the crate.
@@ -453,7 +704,7 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a.digest(), b.digest());
 
-        let mut cache = crate::tune::DecisionCache::new();
+        let cache = crate::tune::DecisionCache::new();
         cache.get_or_tune(&cl, &block, coll, &cfg).unwrap();
         cache.get_or_tune(&cl, &perm, coll, &cfg).unwrap();
         let s = cache.stats();
@@ -524,6 +775,106 @@ mod tests {
         let mut b = a.clone();
         b.rounds.last_mut().unwrap().xfers.pop();
         assert_ne!(schedule_digest(&a), schedule_digest(&b));
+    }
+
+    #[test]
+    fn live_walks_mirror_the_constructed_key() {
+        // live_digest / live_family_digest / matches must agree with the
+        // allocating path (`Fingerprint::new` + digest/family_digest/==)
+        // across relabeling (uniform grid), verbatim (irregular line,
+        // straggler physics, robustness draws) and both placements.
+        let mut strag = TuneCfg::default();
+        strag.sim = strag.sim.with_slowdown(0, 2.0);
+        let cfgs = vec![
+            TuneCfg::default(),
+            TuneCfg::default().with_msg_bytes(1 << 20),
+            TuneCfg::default().with_robustness(2, 9, 8.0),
+            strag,
+        ];
+        let clusters =
+            vec![switched(3, 4, 2), switched(2, 2, 1), crate::topology::line(3, 2, 1)];
+        let colls = [
+            Collective::Allreduce,
+            Collective::Broadcast { root: 1 },
+            Collective::AllToAll,
+        ];
+        for cl in &clusters {
+            for pl in [Placement::block(cl), Placement::round_robin(cl)] {
+                for &coll in &colls {
+                    for cfg in &cfgs {
+                        let fp = Fingerprint::new(cl, &pl, coll, cfg);
+                        assert_eq!(fp.digest(), live_digest(cl, &pl, coll, cfg));
+                        assert_eq!(
+                            fp.family_digest(),
+                            live_family_digest(cl, &pl, coll, cfg)
+                        );
+                        assert!(fp.matches(cl, &pl, coll, cfg));
+                    }
+                }
+            }
+        }
+        // And a matched negative for every ingredient class: op, size,
+        // shape, interconnect kind.
+        let cl = switched(3, 4, 2);
+        let pl = Placement::block(&cl);
+        let base = Fingerprint::new(&cl, &pl, Collective::Allreduce, &TuneCfg::default());
+        assert!(!base.matches(&cl, &pl, Collective::AllToAll, &TuneCfg::default()));
+        assert!(!base.matches(
+            &cl,
+            &pl,
+            Collective::Allreduce,
+            &TuneCfg::default().with_msg_bytes(1 << 20)
+        ));
+        let bigger = switched(4, 4, 2);
+        assert!(!base.matches(
+            &bigger,
+            &Placement::block(&bigger),
+            Collective::Allreduce,
+            &TuneCfg::default()
+        ));
+        let line = crate::topology::line(3, 4, 2);
+        assert!(!base.matches(
+            &line,
+            &Placement::block(&line),
+            Collective::Allreduce,
+            &TuneCfg::default()
+        ));
+    }
+
+    #[test]
+    fn family_digest_is_size_invariant_and_nothing_else() {
+        let cl = switched(3, 4, 2);
+        let pl = Placement::block(&cl);
+        let at = |bytes: u64| {
+            Fingerprint::new(
+                &cl,
+                &pl,
+                Collective::Allreduce,
+                &TuneCfg::default().with_msg_bytes(bytes),
+            )
+        };
+        let small = at(1 << 10);
+        let large = at(1 << 26);
+        assert_ne!(small, large);
+        assert_ne!(small.digest(), large.digest());
+        assert_eq!(small.family_digest(), large.family_digest());
+        assert_eq!(small.msg_bytes(), 1 << 10);
+        // Any non-size ingredient splits the family.
+        let other_coll = Fingerprint::new(
+            &cl,
+            &pl,
+            Collective::Broadcast { root: 0 },
+            &TuneCfg::default().with_msg_bytes(1 << 10),
+        );
+        assert_ne!(small.family_digest(), other_coll.family_digest());
+        let cl2 = switched(4, 4, 2);
+        let other_shape = Fingerprint::new(
+            &cl2,
+            &Placement::block(&cl2),
+            Collective::Allreduce,
+            &TuneCfg::default().with_msg_bytes(1 << 10),
+        );
+        assert_ne!(small.family_digest(), other_shape.family_digest());
     }
 
     #[test]

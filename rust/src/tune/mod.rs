@@ -43,8 +43,12 @@
 //!        ▼
 //!  Decision ──▶ DecisionCache      keyed by canonical Fingerprint
 //!                                  (size class included, relabeling-
-//!                                  invariant on uniform grids); repeat
-//!                                  lookups are one hash probe
+//!                                  invariant on uniform grids); sharded
+//!                                  + RwLocked for concurrent serving —
+//!                                  a repeat lookup is one read-locked
+//!                                  hash probe, zero allocation, and a
+//!                                  miss warm-starts from the nearest
+//!                                  cached size class in its family
 //! ```
 //!
 //! Contract: the selected schedule's simulated time never exceeds the
@@ -78,26 +82,33 @@ pub mod fingerprint;
 pub mod registry;
 pub mod selector;
 
-pub use cache::{CacheStats, DecisionCache};
-pub use fingerprint::Fingerprint;
+pub use cache::{CacheConfig, CacheStats, DecisionCache};
+pub use fingerprint::{live_digest, live_family_digest, Fingerprint};
 pub use registry::{
     analytic_cost, candidates_for, flat_baseline, has_analytic, CandidateId,
     Collective, SegBase, SEGMENT_SWEEP,
 };
-pub use selector::{select, select_many, Decision, Robustness, TuneCfg};
+pub use selector::{
+    select, select_many, select_many_seeded, select_seeded, Decision, Robustness,
+    TuneCfg,
+};
 
-use std::sync::Mutex;
+use std::sync::Arc;
 
 use crate::sched::Schedule;
 use crate::topology::{Cluster, Placement};
 
 /// Thread-safe autotuner: a [`TuneCfg`] plus a shared [`DecisionCache`].
 /// Stateless with respect to topology, so one instance can serve any
-/// number of clusters/placements.
+/// number of clusters/placements — and, since the cache is sharded and
+/// internally synchronized, any number of querying threads: concurrent
+/// hits take one shard's read lock each (no exclusive lock, no global
+/// serialization point), and decisions come back as [`Arc<Decision>`] so
+/// no lock is held while a caller materializes or executes a schedule.
 #[derive(Debug)]
 pub struct Tuned {
     pub cfg: TuneCfg,
-    cache: Mutex<DecisionCache>,
+    cache: DecisionCache,
 }
 
 impl Default for Tuned {
@@ -108,7 +119,13 @@ impl Default for Tuned {
 
 impl Tuned {
     pub fn new(cfg: TuneCfg) -> Self {
-        Self { cfg, cache: Mutex::new(DecisionCache::new()) }
+        Self { cfg, cache: DecisionCache::new() }
+    }
+
+    /// Facade with explicit cache shape (shard count, capacity bound) —
+    /// serving deployments and the traffic bench.
+    pub fn with_cache(cfg: TuneCfg, cache: CacheConfig) -> Self {
+        Self { cfg, cache: DecisionCache::with_config(cache) }
     }
 
     /// The tuned schedule for `collective` on this topology (cached).
@@ -126,25 +143,48 @@ impl Tuned {
             .materialize(cluster, placement, &self.cfg)
     }
 
-    /// The full tuning decision (cached), cloned out of the cache.
+    /// The full tuning decision, shared straight out of the cache.
     pub fn decision(
         &self,
         cluster: &Cluster,
         placement: &Placement,
         collective: Collective,
-    ) -> crate::Result<Decision> {
-        let mut cache = self.cache.lock().expect("tune cache poisoned");
-        Ok(cache.get_or_tune(cluster, placement, collective, &self.cfg)?.clone())
+    ) -> crate::Result<Arc<Decision>> {
+        self.cache.get_or_tune(cluster, placement, collective, &self.cfg)
+    }
+
+    /// [`Tuned::decision`] at an explicit payload size, overriding
+    /// [`TuneCfg::msg_bytes`] for this query only. This is the
+    /// tuning-as-a-service entry point for size-varied traffic: every
+    /// size class keeps its own cache entry, and a miss warm-starts from
+    /// the nearest cached neighbor in the same family.
+    pub fn decision_sized(
+        &self,
+        cluster: &Cluster,
+        placement: &Placement,
+        collective: Collective,
+        msg_bytes: u64,
+    ) -> crate::Result<Arc<Decision>> {
+        if msg_bytes == self.cfg.msg_bytes {
+            return self.decision(cluster, placement, collective);
+        }
+        let cfg = self.cfg.clone().with_msg_bytes(msg_bytes);
+        self.cache.get_or_tune(cluster, placement, collective, &cfg)
     }
 
     /// Drop the cached decision for one fingerprint (online re-planning
     /// invalidates decisions tuned for a topology that no longer exists).
     pub fn invalidate(&self, fp: &Fingerprint) -> bool {
-        self.cache.lock().expect("tune cache poisoned").invalidate(fp)
+        self.cache.invalidate(fp)
+    }
+
+    /// Drop every cached decision and reset every counter.
+    pub fn clear(&self) {
+        self.cache.clear()
     }
 
     pub fn stats(&self) -> CacheStats {
-        self.cache.lock().expect("tune cache poisoned").stats()
+        self.cache.stats()
     }
 }
 
@@ -163,6 +203,31 @@ mod tests {
         assert_eq!(a, b);
         let s = tuner.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn facade_sized_queries_and_clear() {
+        let tuner = Tuned::default();
+        let cl = switched(4, 4, 2);
+        let pl = Placement::block(&cl);
+        let small =
+            tuner.decision_sized(&cl, &pl, Collective::Allreduce, 4 << 10).unwrap();
+        let large =
+            tuner.decision_sized(&cl, &pl, Collective::Allreduce, 64 << 20).unwrap();
+        assert_eq!(small.schedule().msg.total_bytes, 4 << 10);
+        assert_eq!(large.schedule().msg.total_bytes, 64 << 20);
+        let s = tuner.stats();
+        assert_eq!((s.misses, s.entries), (2, 2));
+        assert_eq!(s.warm_hits, 1, "second size class warm-starts off the first");
+
+        // Clearing empties the cache but never invalidates handed-out
+        // Arcs; the next query is a cold miss again.
+        tuner.clear();
+        let s = tuner.stats();
+        assert_eq!((s.hits, s.misses, s.entries, s.warm_hits), (0, 0, 0, 0));
+        assert_eq!(small.schedule().msg.total_bytes, 4 << 10);
+        tuner.decision_sized(&cl, &pl, Collective::Allreduce, 4 << 10).unwrap();
+        assert_eq!(tuner.stats().misses, 1);
     }
 
     #[test]

@@ -515,6 +515,44 @@ pub fn select(
     Ok(decisions.pop().expect("one collective in, one decision out"))
 }
 
+/// [`select`] with a warm-start hint: `warm` (typically the winning
+/// candidate of a neighboring size class, supplied by the decision
+/// cache's warm index) is ranked first through stage 1 and moved to the
+/// front of the stage-2 pool. The hint changes *ordering only* — pool
+/// membership, every simulated time, and the audited counters are
+/// untouched, and the winner is the argmin under a strict total order
+/// (sim time, model cost, candidate label — labels are unique within a
+/// collective), which is invariant under pool permutation. So:
+///
+/// > **A warm-started decision is bit-identical, field by field, to the
+/// > cold decision** (`warm_start_matches_cold` in `tests/prop_tune.rs`
+/// > enforces this differentially).
+///
+/// A hint naming a candidate that is not applicable on this topology is
+/// silently ignored — selection falls back to the plain registry sweep.
+pub fn select_seeded(
+    cluster: &Cluster,
+    placement: &Placement,
+    collective: Collective,
+    cfg: &TuneCfg,
+    warm: Option<CandidateId>,
+) -> crate::Result<Decision> {
+    let mut decisions =
+        select_many_seeded(cluster, placement, &[collective], &[warm], cfg)?;
+    Ok(decisions.pop().expect("one collective in, one decision out"))
+}
+
+/// Move the hinted candidate (when present) to the front of a slice of
+/// keyed entries. Result-invariant by the strict-total-order argmin (see
+/// [`select_seeded`]); applied to stage-1 job lists and stage-2 pools.
+fn seed_front<T>(entries: &mut [T], hint: Option<CandidateId>, id_of: impl Fn(&T) -> CandidateId) {
+    if let Some(h) = hint {
+        if let Some(p) = entries.iter().position(|e| id_of(e) == h) {
+            entries.swap(0, p);
+        }
+    }
+}
+
 /// Batched selection: tune several collectives on one topology in a
 /// single pass. The topology context is compiled once, all candidates
 /// across all collectives are priced in one (possibly parallel) stage-1
@@ -528,6 +566,24 @@ pub fn select_many(
     collectives: &[Collective],
     cfg: &TuneCfg,
 ) -> crate::Result<Vec<Decision>> {
+    select_many_seeded(cluster, placement, collectives, &[], cfg)
+}
+
+/// [`select_many`] with per-collective warm-start hints (see
+/// [`select_seeded`] for the ordering-only contract). `hints` is either
+/// empty (no hints) or one `Option<CandidateId>` per collective.
+pub fn select_many_seeded(
+    cluster: &Cluster,
+    placement: &Placement,
+    collectives: &[Collective],
+    hints: &[Option<CandidateId>],
+    cfg: &TuneCfg,
+) -> crate::Result<Vec<Decision>> {
+    assert!(
+        hints.is_empty() || hints.len() == collectives.len(),
+        "one warm hint per collective (or none at all)"
+    );
+    let hint = |ci: usize| hints.get(ci).copied().flatten();
     let ctx = TopoCtx::new(cluster, placement);
 
     // Plan each collective, then enumerate every (collective, candidate)
@@ -539,8 +595,9 @@ pub fn select_many(
     let mut plans: Vec<Plan> = Vec::with_capacity(collectives.len());
     let mut considered: Vec<usize> = Vec::with_capacity(collectives.len());
     let mut baselines: Vec<Option<CandidateId>> = Vec::with_capacity(collectives.len());
-    for &coll in collectives {
-        let ids = candidates_for(coll, cluster, placement);
+    for (ci, &coll) in collectives.iter().enumerate() {
+        let mut ids = candidates_for(coll, cluster, placement);
+        seed_front(&mut ids, hint(ci), |&id| id);
         if ids.is_empty() {
             anyhow::bail!(
                 "no applicable schedule builder for {} on this topology \
@@ -556,7 +613,8 @@ pub fn select_many(
         let plan = match quotient_grid(cluster, placement, coll, cfg)
             .and_then(|grid| quotient_rank(grid, &ids, baseline, cfg).map(|p| (grid, p)))
         {
-            Some((grid, pool)) if grid.num_ranks() <= cfg.quotient_sim_cap => {
+            Some((grid, mut pool)) if grid.num_ranks() <= cfg.quotient_sim_cap => {
+                seed_front(&mut pool, hint(ci), |e| e.0);
                 jobs.extend(pool.iter().map(|(id, _)| *id));
                 Plan::Pool
             }
@@ -635,6 +693,9 @@ pub fn select_many(
                 }
             }
         }
+        // Warm hint: front-of-pool, membership untouched (result-invariant
+        // — see `select_seeded`).
+        seed_front(&mut pool, hint(ci), |e| e.0);
         pools.push(pool);
     }
 
@@ -699,9 +760,11 @@ pub fn select_many(
     let mut decisions = Vec::with_capacity(collectives.len());
     for (ci, mut pool) in pools.into_iter().enumerate() {
         if let Plan::Representative { grid, pool: apool } = &plans[ci] {
+            let mut apool = apool.clone();
+            seed_front(&mut apool, hint(ci), |e| e.0);
             decisions.push(decide_representative(
                 *grid,
-                apool,
+                &apool,
                 baselines[ci],
                 considered[ci],
                 cfg,

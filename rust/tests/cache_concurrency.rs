@@ -1,0 +1,244 @@
+//! Concurrency stress tests for the sharded decision cache (satellite of
+//! the tuning-as-a-service PR): many threads hammering one
+//! [`DecisionCache`] / [`Tuned`] must observe exactly the decisions a
+//! single-threaded run would, no matter how the races land.
+//!
+//! The determinism argument being exercised: selection is a pure
+//! function of (topology, collective, cfg), so when two threads race to
+//! tune the same fingerprint both compute bit-identical decisions and
+//! the insert path's double-probe makes the loser adopt the winner's
+//! entry. These tests would catch torn decisions, lost inserts, counter
+//! drift, and eviction/invalidation races.
+
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::Arc;
+
+use mcomm::topology::{switched, Cluster, Placement};
+use mcomm::tune::{
+    CacheConfig, Collective, Decision, DecisionCache, Fingerprint, TuneCfg,
+};
+use mcomm::util::Rng;
+
+const THREADS: usize = 8;
+
+/// The overlapping query universe: small topologies (tunes stay cheap)
+/// crossed with collectives and two payload size classes.
+fn universe() -> Vec<(Cluster, Placement, Collective, TuneCfg)> {
+    let mut out = Vec::new();
+    for (m, c) in [(2usize, 2usize), (3, 2), (2, 4)] {
+        let cl = switched(m, c, 1);
+        let pl = Placement::block(&cl);
+        for coll in [Collective::Broadcast { root: 0 }, Collective::Allreduce] {
+            for msg_bytes in [4u64 << 10, 64 << 10] {
+                let cfg = TuneCfg::default().with_msg_bytes(msg_bytes);
+                out.push((cl.clone(), pl.clone(), coll, cfg));
+            }
+        }
+    }
+    out
+}
+
+/// Bit-exact decision equality: every field, floats compared by bits.
+fn assert_identical(got: &Decision, want: &Decision, ctx: &str) {
+    assert_eq!(got.choice, want.choice, "{ctx}: choice");
+    assert_eq!(got.schedule, want.schedule, "{ctx}: schedule");
+    assert_eq!(
+        got.model_cost.to_bits(),
+        want.model_cost.to_bits(),
+        "{ctx}: model_cost"
+    );
+    assert_eq!(got.sim_time.to_bits(), want.sim_time.to_bits(), "{ctx}: sim_time");
+    assert_eq!(
+        got.baseline_sim.map(f64::to_bits),
+        want.baseline_sim.map(f64::to_bits),
+        "{ctx}: baseline_sim"
+    );
+    assert_eq!(
+        got.robust_sim.map(f64::to_bits),
+        want.robust_sim.map(f64::to_bits),
+        "{ctx}: robust_sim"
+    );
+    assert_eq!(
+        (got.considered, got.simulated),
+        (want.considered, want.simulated),
+        "{ctx}: candidate counts"
+    );
+}
+
+#[test]
+fn concurrent_get_or_tune_is_bit_identical_to_single_threaded() {
+    let uni = universe();
+    // Single-threaded reference: one cold tune per key.
+    let reference: Vec<Arc<Decision>> = {
+        let cache = DecisionCache::new();
+        uni.iter()
+            .map(|(cl, pl, coll, cfg)| cache.get_or_tune(cl, pl, *coll, cfg).unwrap())
+            .collect()
+    };
+
+    let cache = DecisionCache::new();
+    let queries_per_thread = 60;
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let cache = &cache;
+            let uni = &uni;
+            let reference = &reference;
+            s.spawn(move || {
+                let mut rng = Rng::seed_from_u64(0xD1CE + t as u64);
+                for q in 0..queries_per_thread {
+                    // First lap: stride the universe so every key is
+                    // queried by every thread (maximal overlap, full
+                    // coverage); then random Zipf-free hammering.
+                    let i = if q < uni.len() {
+                        (q + t) % uni.len()
+                    } else {
+                        rng.gen_range(0..uni.len())
+                    };
+                    let (cl, pl, coll, cfg) = &uni[i];
+                    let d = cache.get_or_tune(cl, pl, *coll, cfg).unwrap();
+                    assert_identical(&d, &reference[i], "racing get_or_tune");
+                }
+            });
+        }
+    });
+
+    let s = cache.stats();
+    assert_eq!(
+        s.hits + s.misses,
+        THREADS * queries_per_thread,
+        "every query is either a hit or a miss"
+    );
+    assert_eq!(s.entries, uni.len(), "exactly one live entry per key");
+    assert!(
+        s.misses >= uni.len(),
+        "each key misses at least once ({} keys, {} misses)",
+        uni.len(),
+        s.misses
+    );
+    assert_eq!(s.evictions, 0, "default capacity never evicts here");
+    assert_eq!(s.per_shard.iter().sum::<usize>(), s.entries);
+
+    // Post-quiescence, every key is resident and identical to the
+    // reference (no lost inserts, no torn entries).
+    for ((cl, pl, coll, cfg), want) in uni.iter().zip(&reference) {
+        let fp = Fingerprint::new(cl, pl, *coll, cfg);
+        let d = cache.lookup(&fp).expect("key resident after the stampede");
+        assert_identical(&d, want, "post-quiescence lookup");
+    }
+}
+
+#[test]
+fn concurrent_eviction_never_starves_the_returning_thread() {
+    // Capacity far below the working set: every thread keeps evicting
+    // everyone else's entries. The contract under that churn: each call
+    // still returns the right (bit-identical) decision, and the entry a
+    // call just inserted was resident when the call returned (eviction
+    // runs before insertion, so a thread can never victimize the entry
+    // it is about to return).
+    let uni = universe();
+    let reference: Vec<Arc<Decision>> = {
+        let cache = DecisionCache::new();
+        uni.iter()
+            .map(|(cl, pl, coll, cfg)| cache.get_or_tune(cl, pl, *coll, cfg).unwrap())
+            .collect()
+    };
+
+    let cache = DecisionCache::with_config(CacheConfig { shards: 2, capacity: 4 });
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let cache = &cache;
+            let uni = &uni;
+            let reference = &reference;
+            s.spawn(move || {
+                let mut rng = Rng::seed_from_u64(0xE71C + t as u64);
+                for _ in 0..40 {
+                    let i = rng.gen_range(0..uni.len());
+                    let (cl, pl, coll, cfg) = &uni[i];
+                    let d = cache.get_or_tune(cl, pl, *coll, cfg).unwrap();
+                    assert_identical(&d, &reference[i], "eviction-pressure query");
+                }
+            });
+        }
+    });
+
+    let s = cache.stats();
+    assert!(s.entries <= 4, "capacity bound holds: {} entries", s.entries);
+    assert!(s.evictions > 0, "working set exceeds capacity: churn expected");
+    // Every slab insert either grew the cache or evicted a victim; a
+    // miss that lost the double-tune race adopts the winner's entry
+    // without inserting, so misses bounds the sum from above.
+    assert!(
+        s.misses >= s.evictions + s.entries + s.invalidations,
+        "occupancy reconciles with the counters: {s:?}"
+    );
+}
+
+#[test]
+fn invalidate_under_contention_stays_coherent() {
+    let uni = universe();
+    let reference: Vec<Arc<Decision>> = {
+        let cache = DecisionCache::new();
+        uni.iter()
+            .map(|(cl, pl, coll, cfg)| cache.get_or_tune(cl, pl, *coll, cfg).unwrap())
+            .collect()
+    };
+    let fps: Vec<Fingerprint> = uni
+        .iter()
+        .map(|(cl, pl, coll, cfg)| Fingerprint::new(cl, pl, *coll, cfg))
+        .collect();
+
+    let cache = DecisionCache::new();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for t in 0..THREADS - 1 {
+            let cache = &cache;
+            let uni = &uni;
+            let reference = &reference;
+            let stop = &stop;
+            s.spawn(move || {
+                let mut rng = Rng::seed_from_u64(0x1117 + t as u64);
+                let mut n = 0usize;
+                // Keep querying until the invalidator finishes, with a
+                // floor so the test exercises contention even if the
+                // invalidator wins the scheduling lottery.
+                while n < 30 || !stop.load(Relaxed) {
+                    let i = rng.gen_range(0..uni.len());
+                    let (cl, pl, coll, cfg) = &uni[i];
+                    let d = cache.get_or_tune(cl, pl, *coll, cfg).unwrap();
+                    assert_identical(&d, &reference[i], "query under invalidation");
+                    n += 1;
+                }
+            });
+        }
+        let cache = &cache;
+        let fps = &fps;
+        let stop = &stop;
+        s.spawn(move || {
+            let mut rng = Rng::seed_from_u64(0xDEAD);
+            for _ in 0..60 {
+                let fp = &fps[rng.gen_range(0..fps.len())];
+                // May or may not find the entry resident; both are legal.
+                cache.invalidate(fp);
+                std::thread::yield_now();
+            }
+            stop.store(true, Relaxed);
+        });
+    });
+
+    let s = cache.stats();
+    assert_eq!(s.per_shard.iter().sum::<usize>(), s.entries);
+    assert!(s.entries <= uni.len());
+    // Conservation: every slab insert is a miss (racing misses that
+    // adopted an existing entry inserted nothing), nothing evicts at
+    // default capacity, and only successful invalidations removed.
+    assert_eq!(s.evictions, 0);
+    assert!(
+        s.entries + s.invalidations <= s.misses,
+        "occupancy reconciles with the counters: {s:?}"
+    );
+    // The cache still serves every key correctly after the storm.
+    for ((cl, pl, coll, cfg), want) in uni.iter().zip(&reference) {
+        let d = cache.get_or_tune(cl, pl, *coll, cfg).unwrap();
+        assert_identical(&d, want, "post-storm query");
+    }
+}

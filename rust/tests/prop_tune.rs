@@ -202,7 +202,7 @@ fn robust_pick_degrades_no_worse_than_clean_pick() {
 #[test]
 fn cache_hits_on_repeated_fingerprint() {
     let cfg = TuneCfg::default();
-    let mut cache = DecisionCache::new();
+    let cache = DecisionCache::new();
     for seed in 0..10u64 {
         let cl = random_switched(seed);
         let pl = Placement::block(&cl);
@@ -222,12 +222,102 @@ fn cache_hits_on_repeated_fingerprint() {
     assert_eq!((stats.hits, stats.misses), (20, 10));
 }
 
+/// Warm-start differential property (the serving-layer guarantee): a
+/// seeded `select` is bit-identical to a cold `select`, field by field,
+/// *whatever* candidate is hinted — the hint only permutes the stage-2
+/// pool, and the winner is the argmin under a strict total order. Sweeps
+/// randomized topologies/sizes through every applicable hint, both
+/// placements (quotient-eligible block and quotient-ineligible
+/// round-robin), robust scoring, and both sides of the
+/// `quotient_sim_cap` boundary.
+#[test]
+fn warm_started_select_is_bit_identical_to_cold() {
+    fn assert_seeded_matches_cold(
+        cl: &Cluster,
+        pl: &Placement,
+        coll: Collective,
+        cfg: &TuneCfg,
+        ctx: &str,
+    ) {
+        let cold = tune::select(cl, pl, coll, cfg).unwrap();
+        for hint in tune::candidates_for(coll, cl, pl) {
+            let ctx = format!("{ctx}, hint {}", hint.label());
+            let warm = tune::select_seeded(cl, pl, coll, cfg, Some(hint)).unwrap();
+            assert_eq!(cold.choice, warm.choice, "{ctx}");
+            assert_eq!(cold.schedule, warm.schedule, "{ctx}");
+            assert_eq!(cold.model_cost.to_bits(), warm.model_cost.to_bits(), "{ctx}");
+            assert_eq!(cold.sim_time.to_bits(), warm.sim_time.to_bits(), "{ctx}");
+            assert_eq!(
+                cold.baseline_sim.map(f64::to_bits),
+                warm.baseline_sim.map(f64::to_bits),
+                "{ctx}"
+            );
+            assert_eq!(
+                cold.robust_sim.map(f64::to_bits),
+                warm.robust_sim.map(f64::to_bits),
+                "{ctx}"
+            );
+            assert_eq!(
+                (cold.considered, cold.simulated),
+                (warm.considered, warm.simulated),
+                "{ctx}"
+            );
+        }
+        // A hint from a foreign collective (never applicable here) is a
+        // silent no-op fallback, not an error.
+        let foreign = Collective::Gather { root: 0 };
+        if coll != foreign {
+            let alien = tune::candidates_for(foreign, cl, pl)
+                .into_iter()
+                .find(|id| !tune::candidates_for(coll, cl, pl).contains(id));
+            if let Some(alien) = alien {
+                let warm = tune::select_seeded(cl, pl, coll, cfg, Some(alien)).unwrap();
+                assert_eq!(cold.choice, warm.choice, "{ctx}: alien hint");
+                assert_eq!(cold.schedule, warm.schedule, "{ctx}: alien hint");
+            }
+        }
+    }
+
+    for seed in 0..6u64 {
+        let cl = random_switched(seed);
+        let mut rng = Rng::seed_from_u64(seed ^ 0xA11);
+        let msg = 1u64 << (9 + rng.gen_range(0..14));
+        let cfg = TuneCfg::default().with_msg_bytes(msg);
+        for pl in [Placement::block(&cl), Placement::round_robin(&cl)] {
+            for coll in [
+                Collective::Broadcast { root: 0 },
+                Collective::Allreduce,
+                Collective::AllToAll,
+            ] {
+                let ctx = format!("seed {seed}, {} B, {}", msg, coll.name());
+                assert_seeded_matches_cold(&cl, &pl, coll, &cfg, &ctx);
+            }
+        }
+    }
+
+    // Robust scoring changes the argmin tuple, not its order-invariance.
+    let cl = switched(4, 4, 2);
+    let pl = Placement::block(&cl);
+    let robust = TuneCfg::default().with_robustness(2, 7, 8.0);
+    assert_seeded_matches_cold(&cl, &pl, Collective::Allreduce, &robust, "robust");
+
+    // The quotient_sim_cap boundary: the same 8x4 grid tuned below the
+    // cap (pool materialized, schedule carried) and above it
+    // (representative confirmation, schedule = None).
+    let cl = switched(8, 4, 2);
+    let pl = Placement::block(&cl);
+    assert_seeded_matches_cold(&cl, &pl, Collective::Allreduce, &TuneCfg::default(), "below cap");
+    let mut above = TuneCfg::default();
+    above.quotient_sim_cap = 16;
+    assert_seeded_matches_cold(&cl, &pl, Collective::Allreduce, &above, "above cap");
+}
+
 /// Distinct topologies must not collide: tuning 2 different shapes yields
 /// 2 cache entries even when machine/core counts only differ slightly.
 #[test]
 fn cache_misses_across_topologies() {
     let cfg = TuneCfg::default();
-    let mut cache = DecisionCache::new();
+    let cache = DecisionCache::new();
     for (m, c, k) in [(2usize, 2usize, 1usize), (2, 2, 2), (2, 3, 1), (3, 2, 1)] {
         let cl = switched(m, c, k);
         let pl = Placement::block(&cl);
